@@ -1,0 +1,60 @@
+//! Quickstart: simulate DGL vs HopGNN on a small dataset and print the
+//! comparison — the 30-second tour of the system.
+//!
+//!     cargo run --release --example quickstart
+
+use hopgnn::cluster::TransferKind;
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::{run_strategy, StrategyKind};
+use hopgnn::graph::datasets::load;
+use hopgnn::util::table::{fmt_bytes, fmt_secs, Table};
+
+fn main() {
+    // arxiv-s: 60k-vertex community-structured stand-in for OGB-Arxiv
+    let dataset = load("arxiv-s");
+    println!(
+        "loaded {}: {} vertices, {} edges, {}-d features ({} total)",
+        dataset.name,
+        dataset.graph.num_vertices(),
+        dataset.graph.num_edges(),
+        dataset.feat_dim,
+        fmt_bytes(dataset.feature_volume_bytes()),
+    );
+
+    let cfg = RunConfig {
+        dataset: "arxiv-s".into(),
+        batch_size: 1024,
+        num_servers: 4,
+        epochs: 4,
+        max_iterations: Some(6),
+        vmax: RunConfig::full_sim_vmax(3, 10),
+        ..Default::default()
+    };
+
+    let mut table = Table::new([
+        "system", "epoch time", "feature bytes", "miss rate", "GPU busy",
+    ]);
+    for kind in [
+        StrategyKind::Dgl,
+        StrategyKind::P3,
+        StrategyKind::Naive,
+        StrategyKind::HopGnn,
+    ] {
+        let m = run_strategy(&dataset, &cfg, kind);
+        table.row([
+            kind.name().to_string(),
+            fmt_secs(m.epoch_time),
+            fmt_bytes(m.bytes(TransferKind::Feature)),
+            format!("{:.1}%", m.miss_rate() * 100.0),
+            format!("{:.0}%", m.gpu_busy_fraction * 100.0),
+        ]);
+    }
+    println!("\nGCN(128), 4 simulated servers, 10 GbE model:\n");
+    println!("{}", table.render());
+    println!(
+        "HopGNN reverses the model-centric paradigm: models migrate to the\n\
+         servers that home the features (micrographs, §5.1), remote fetches\n\
+         are pre-gathered once per iteration (§5.2), and time steps merge\n\
+         adaptively (§5.3)."
+    );
+}

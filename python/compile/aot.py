@@ -1,0 +1,146 @@
+"""AOT compile path: lower every model variant to HLO text + manifest.
+
+Usage (from ``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces, per variant in ``DEFAULT_VARIANTS``:
+
+    artifacts/<name>.train.hlo.txt     train_step  (loss, correct, grads...)
+    artifacts/<name>.predict.hlo.txt   predict_step (logits)
+
+plus ``artifacts/manifest.json`` describing every artifact's ABI (input
+order, parameter names/shapes, output layout) — the single source of truth
+the Rust runtime loads.
+
+Interchange format is HLO **text**, not ``HloModuleProto.serialize()``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import List
+
+from jax._src.lib import xla_client as xc
+
+from .model import (ModelConfig, lowered_predict_step, lowered_train_step,
+                    param_count, param_spec)
+
+# The artifact set the experiments need for REAL numeric execution:
+# e2e training run + Table 3 accuracy + per-family compute calibration.
+# Simulated-compute sweeps (Figs 11-23) use the analytic cost model in
+# rust/src/cluster/cost.rs, calibrated from these at startup.
+DEFAULT_VARIANTS: List[ModelConfig] = [
+    # Table 3 / e2e / quickstart: arxiv-s (F=128, C=10), hidden 128
+    ModelConfig("gcn", 3, 128, 128, 10, 128, 8),
+    ModelConfig("sage", 3, 128, 128, 10, 128, 8),
+    ModelConfig("gat", 3, 128, 128, 10, 128, 8),
+    # hidden-16 calibration point (P3 sensitivity experiments)
+    ModelConfig("gcn", 3, 128, 16, 10, 128, 8),
+    # deep-model calibration points (Fig 12)
+    ModelConfig("deepgcn", 7, 128, 64, 10, 96, 4),
+    ModelConfig("film", 10, 128, 64, 10, 96, 4),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def manifest_entry(cfg: ModelConfig) -> dict:
+    spec = param_spec(cfg)
+    return {
+        "name": cfg.name,
+        "model": cfg.model,
+        "layers": cfg.layers,
+        "feat_dim": cfg.feat_dim,
+        "hidden": cfg.hidden,
+        "classes": cfg.classes,
+        "vmax": cfg.vmax,
+        "batch": cfg.batch,
+        "param_count": param_count(cfg),
+        "params": [{"name": n, "shape": list(s)} for n, s in spec],
+        # ABI: inputs are params... then adj[B,L,V,V] f32, x[B,V,F] f32,
+        # labels[B] i32; outputs are (loss f32[], correct i32[], grads...)
+        "train_hlo": f"{cfg.name}.train.hlo.txt",
+        "predict_hlo": f"{cfg.name}.predict.hlo.txt",
+    }
+
+
+def _inputs_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip cleanly
+    when nothing changed."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated variant-name prefixes to build")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    fp = _inputs_fingerprint()
+    fp_path = os.path.join(args.out_dir, ".fingerprint")
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if (not args.force and not args.only and os.path.exists(fp_path)
+            and os.path.exists(manifest_path)):
+        with open(fp_path) as f:
+            if f.read().strip() == fp:
+                print("artifacts up to date (fingerprint match)")
+                return 0
+
+    variants = DEFAULT_VARIANTS
+    if args.only:
+        pres = args.only.split(",")
+        variants = [v for v in variants
+                    if any(v.name.startswith(p) for p in pres)]
+
+    entries = []
+    for cfg in variants:
+        t0 = time.time()
+        train_txt = to_hlo_text(lowered_train_step(cfg))
+        pred_txt = to_hlo_text(lowered_predict_step(cfg))
+        with open(os.path.join(args.out_dir, f"{cfg.name}.train.hlo.txt"),
+                  "w") as f:
+            f.write(train_txt)
+        with open(os.path.join(args.out_dir, f"{cfg.name}.predict.hlo.txt"),
+                  "w") as f:
+            f.write(pred_txt)
+        entries.append(manifest_entry(cfg))
+        print(f"lowered {cfg.name}: train={len(train_txt)//1024} KiB "
+              f"predict={len(pred_txt)//1024} KiB "
+              f"params={param_count(cfg)} ({time.time()-t0:.1f}s)")
+
+    with open(manifest_path, "w") as f:
+        json.dump({"version": 1, "artifacts": entries}, f, indent=2)
+    with open(fp_path, "w") as f:
+        f.write(fp)
+    print(f"wrote {manifest_path} ({len(entries)} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+Public surface:
+    aggregate.aggregate   — tiled dense neighborhood aggregation adj @ h
+    transform.linear      — fused h @ w + b (+ReLU)
+    attention.gat_scores  — GAT edge scores + masked row softmax
+    ref.*                 — pure-jnp oracles for all of the above
+"""
+
+from . import aggregate, attention, ref, transform  # noqa: F401

@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: tiled dense neighborhood aggregation ``adj @ h``.
+
+This is the hot spot of every message-passing layer (the SpMM of GNN
+training). Micrographs are padded to a fixed ``VMAX`` so the adjacency is a
+small dense matrix; dense tiles are the right shape for the TPU MXU
+(128x128 systolic array), and the HBM<->VMEM movement schedule the paper
+expressed with CUDA threadblocks is expressed here with ``BlockSpec``
+index maps (see DESIGN.md "Hardware adaptation").
+
+VMEM budget per grid step (f32): ``TM*TK + TK*TN + TM*TN`` words. At the
+default 128-tiles that is 3 * 128*128 * 4 B = 192 KiB, far below the
+~16 MiB VMEM of a TPU core, leaving room for double-buffering of the two
+input streams (the Mosaic pipeliner overlaps the next (k+1) tile fetch
+with the current tile's MXU pass).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO; on a real TPU the same code
+compiles natively (drop the flag).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_acc_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: accumulate ``A[i,k] @ B[k,j]`` into out."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    """Zero-pad a 2-D array so each dim is a multiple of the given tile."""
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def matmul_tiled(a: jnp.ndarray, b: jnp.ndarray, tm: int = 128,
+                 tn: int = 128, tk: int = 128,
+                 interpret: bool = True) -> jnp.ndarray:
+    """General tiled Pallas matmul ``a @ b`` (f32 accumulate).
+
+    Shapes need not be tile-aligned; inputs are zero-padded (exact for
+    matmul) and the output sliced back. Shared by the forward *and* the
+    custom-VJP backward passes of ``aggregate`` and ``linear`` — the
+    backward matmuls (gᵀ-shaped) run through the very same MXU tiling.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch: a {a.shape} b {b.shape}")
+    tm = min(tm, _ceil_pow2(m))
+    tk = min(tk, _ceil_pow2(k))
+    tn = min(tn, _ceil_pow2(n))
+    ap = _pad_to(a.astype(jnp.float32), tm, tk)
+    bp = _pad_to(b.astype(jnp.float32), tk, tn)
+    mp, kp, np_ = ap.shape[0], ap.shape[1], bp.shape[1]
+    out = pl.pallas_call(
+        _matmul_acc_kernel,
+        grid=(mp // tm, np_ // tn, kp // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _aggregate(adj, h, tm, tn, tk, interpret):
+    return matmul_tiled(adj, h, tm, tn, tk, interpret)
+
+
+def _aggregate_fwd(adj, h, tm, tn, tk, interpret):
+    return matmul_tiled(adj, h, tm, tn, tk, interpret), (adj, h)
+
+
+def _aggregate_bwd(tm, tn, tk, interpret, res, g):
+    """d(adj@h): dadj = g @ hᵀ, dh = adjᵀ @ g — both Pallas matmuls.
+
+    The model never differentiates w.r.t. the adjacency (it is an input,
+    not a parameter), so XLA dead-code-eliminates the dadj matmul under
+    jit; it is still computed correctly here so the kernel is a sound
+    standalone public API.
+    """
+    adj, h = res
+    dadj = matmul_tiled(g, h.T, tm, tn, tk, interpret)
+    dh = matmul_tiled(adj.T, g, tm, tn, tk, interpret)
+    return dadj, dh
+
+
+_aggregate.defvjp(_aggregate_fwd, _aggregate_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk", "interpret"))
+def aggregate(adj: jnp.ndarray, h: jnp.ndarray, *, tm: int = 128,
+              tn: int = 128, tk: int = 128,
+              interpret: bool = True) -> jnp.ndarray:
+    """``out[i] = sum_j adj[i, j] * h[j]`` — tiled Pallas matmul.
+
+    adj: [V, V] pre-normalized dense adjacency (padding rows all-zero).
+    h:   [V, F] vertex features / hidden states.
+    Returns [V, F] float32. Differentiable (custom VJP; backward reuses
+    the same Pallas tiling).
+    """
+    v, f = adj.shape[0], h.shape[1]
+    if adj.shape != (v, v) or h.shape[0] != v:
+        raise ValueError(f"shape mismatch: adj {adj.shape} h {h.shape}")
+    return _aggregate(adj, h, tm, tn, tk, interpret)
+
+
+def _ceil_pow2(n: int) -> int:
+    """Smallest power of two >= n (tile size for small dims)."""
+    p = 8  # keep lanes reasonably wide even for tiny test shapes
+    while p < n:
+        p *= 2
+    return p
+
+
+def vmem_footprint_bytes(tm: int = 128, tn: int = 128, tk: int = 128,
+                         dtype_bytes: int = 4, double_buffer: bool = True)\
+        -> int:
+    """Static VMEM footprint of one grid step (used by DESIGN.md Perf and
+    the pytest structural checks). Double-buffering doubles the two input
+    streams but not the accumulator (which is revisited across k)."""
+    inputs = (tm * tk + tk * tn) * dtype_bytes
+    acc = tm * tn * dtype_bytes
+    return (2 * inputs if double_buffer else inputs) + acc

@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These are the semantics the kernels must match bit-for-bit (up to float
+tolerance): the pytest suite in ``python/tests/`` sweeps shapes, dtypes and
+adjacency densities (via hypothesis) and asserts ``assert_allclose`` between
+each kernel and its reference here.
+
+All reference functions are plain ``jnp`` so they lower to ordinary XLA HLO
+and can also serve as the "no-Pallas" fallback path in the L2 model
+(``model.py`` selects kernels vs refs with ``use_pallas``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aggregate_ref(adj: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Neighborhood aggregation: ``out[i] = sum_j adj[i, j] * h[j]``.
+
+    ``adj`` is the *pre-normalized* dense adjacency of a padded micrograph
+    (rows of padding vertices are all-zero), shape ``[V, V]``; ``h`` is the
+    per-vertex feature/hidden matrix ``[V, F]``. This is the SpMM hot spot
+    of every message-passing layer, expressed densely because micrographs
+    are small (V <= a few hundred) and dense tiles are what the MXU wants.
+    """
+    return jnp.matmul(adj, h, preferred_element_type=jnp.float32)
+
+
+def linear_ref(h: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               relu: bool) -> jnp.ndarray:
+    """Fused feature transform: ``out = h @ w + b``, optionally ReLU'd."""
+    out = jnp.matmul(h, w, preferred_element_type=jnp.float32) + b
+    if relu:
+        # relu'(0) := 0 (PyTorch convention) — jnp.maximum would give 0.5
+        # at exact ties, diverging from the Pallas custom-VJP mask.
+        out = jnp.where(out > 0, out, 0.0)
+    return out
+
+
+def gat_scores_ref(h: jnp.ndarray, a_src: jnp.ndarray, a_dst: jnp.ndarray,
+                   mask: jnp.ndarray, slope: float = 0.2) -> jnp.ndarray:
+    """GAT attention coefficients over a dense masked adjacency.
+
+    ``e[i, j] = LeakyReLU(a_dst . h[i] + a_src . h[j])`` for each edge
+    ``j -> i`` present in ``mask`` (``mask[i, j] > 0``); softmax is taken
+    over each row restricted to present edges. Rows with no edges produce
+    all-zero attention (padding rows), matching the zero-row convention of
+    ``aggregate_ref``.
+
+    h: [V, F]; a_src, a_dst: [F]; mask: [V, V] (0/1). Returns [V, V].
+    """
+    si = jnp.einsum("vf,f->v", h, a_dst)          # score of dst vertex i
+    sj = jnp.einsum("vf,f->v", h, a_src)          # score of src vertex j
+    e = si[:, None] + sj[None, :]
+    e = jnp.where(e > 0, e, slope * e)            # LeakyReLU
+    neg = jnp.finfo(e.dtype).min
+    e = jnp.where(mask > 0, e, neg)
+    # Stable masked softmax per row; rows with no valid entry -> zeros.
+    m = jnp.max(e, axis=1, keepdims=True)
+    ex = jnp.exp(e - jnp.where(jnp.isfinite(m), m, 0.0)) * (mask > 0)
+    den = jnp.sum(ex, axis=1, keepdims=True)
+    return jnp.where(den > 0, ex / jnp.where(den > 0, den, 1.0), 0.0)
+
+
+def degree_normalize_ref(adj01: jnp.ndarray, symmetric: bool) -> jnp.ndarray:
+    """Normalize a 0/1 adjacency: GCN-style ``D_out^-1/2 A D_in^-1/2`` when
+    ``symmetric`` else mean-aggregation ``D^-1 A``. Zero-degree rows stay
+    zero (padding)."""
+    deg_out = jnp.sum(adj01, axis=1)
+    if symmetric:
+        deg_in = jnp.sum(adj01, axis=0)
+        di = jnp.where(deg_out > 0, 1.0 / jnp.sqrt(deg_out), 0.0)
+        dj = jnp.where(deg_in > 0, 1.0 / jnp.sqrt(deg_in), 0.0)
+        return adj01 * di[:, None] * dj[None, :]
+    dinv = jnp.where(deg_out > 0, 1.0 / deg_out, 0.0)
+    return adj01 * dinv[:, None]

@@ -1,0 +1,269 @@
+"""L2: GNN forward/backward in jax, calling the L1 Pallas kernels.
+
+Five model families (the paper's evaluation set, §7.1):
+
+    gcn      — Kipf & Welling, 3 layers, symmetric-normalized aggregation
+    sage     — GraphSAGE, 3 layers, mean aggregation + self concat
+    gat      — single-head graph attention, 3 layers
+    deepgcn  — 7 layers with residual connections (DeepGCN / Li et al.)
+    film     — 10 layers with feature-wise linear modulation (GNN-FiLM)
+
+Each model consumes a *padded micrograph batch* — the fixed-shape unit the
+Rust coordinator feeds to the AOT-compiled artifact:
+
+    adj    [B, L, V, V]  0/1 per-hop adjacency (row i of layer l = in-edges
+                         of vertex i used at hop l; padding rows all-zero)
+    x      [B, V, F]     vertex features (padding rows all-zero)
+    labels [B] int32     label of each micrograph's root (vertex 0)
+
+``train_step`` returns ``(loss, correct, *grads)`` — everything the Rust
+trainer needs for gradient accumulation (HopGNN §5.1), allreduce, and the
+Rust-side Adam. Normalization of the raw 0/1 adjacency happens *inside*
+the graph (kernels.ref.degree_normalize_ref) so the Rust side never
+reimplements GNN math.
+
+Python here is build-time only: ``aot.py`` lowers ``train_step`` once per
+model variant to HLO text; nothing in this file runs on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.aggregate import aggregate
+from .kernels.attention import gat_scores
+from .kernels.transform import linear
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape/arch description of one artifact variant."""
+
+    model: str            # gcn | sage | gat | deepgcn | film
+    layers: int           # number of message-passing layers (== hops)
+    feat_dim: int         # input feature dimension F
+    hidden: int           # hidden dimension H
+    classes: int          # output classes C
+    vmax: int             # padded micrograph vertex count V
+    batch: int            # micrographs per executable call B
+    use_pallas: bool = True
+
+    @property
+    def name(self) -> str:
+        return (f"{self.model}_l{self.layers}_h{self.hidden}"
+                f"_f{self.feat_dim}_v{self.vmax}_b{self.batch}")
+
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        """(fan_in, fan_out) of the transform in each layer."""
+        dims = []
+        for l in range(self.layers):
+            fi = self.feat_dim if l == 0 else self.hidden
+            fo = self.classes if l == self.layers - 1 else self.hidden
+            if self.model in ("deepgcn", "film") and l == self.layers - 1:
+                # depth models keep hidden width; a separate output head
+                # (wout/bout) produces class logits
+                fo = self.hidden
+            dims.append((fi, fo))
+        return dims
+
+
+# --------------------------------------------------------------- parameters
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the Rust<->python ABI for params.
+
+    The Rust runtime feeds parameter buffers in exactly this order and
+    reads gradients back in the same order; the manifest records it.
+    """
+    spec: List[Tuple[str, Tuple[int, ...]]] = []
+    for l, (fi, fo) in enumerate(cfg.layer_dims()):
+        if cfg.model == "sage":
+            spec.append((f"w{l}", (2 * fi, fo)))
+        elif cfg.model == "film":
+            spec.append((f"w{l}", (fi, fo)))
+            spec.append((f"wg{l}", (fi, fo)))   # gamma modulation
+            spec.append((f"wb{l}", (fi, fo)))   # beta modulation
+        else:
+            spec.append((f"w{l}", (fi, fo)))
+        spec.append((f"b{l}", (fo,)))
+        if cfg.model == "gat":
+            spec.append((f"asrc{l}", (fo,)))
+            spec.append((f"adst{l}", (fo,)))
+    if cfg.model in ("deepgcn", "film"):
+        spec.append(("wout", (cfg.hidden, cfg.classes)))
+        spec.append(("bout", (cfg.classes,)))
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total scalar parameters — used for the alpha ratio (Fig 5)."""
+    total = 0
+    for _, shape in param_spec(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Glorot-uniform weights, zero biases — same scheme the Rust side
+    reimplements (tests assert parity through the loss value)."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            lim = (6.0 / (shape[0] + shape[1])) ** 0.5
+            params[name] = jax.random.uniform(
+                sub, shape, jnp.float32, -lim, lim)
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Params) -> List[jnp.ndarray]:
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Params:
+    return {name: arr for (name, _), arr in zip(param_spec(cfg), flat)}
+
+
+# ------------------------------------------------------------------ forward
+
+def _agg(cfg: ModelConfig, adj: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.use_pallas:
+        return aggregate(adj, h)
+    return ref.aggregate_ref(adj, h)
+
+
+def _lin(cfg: ModelConfig, h, w, b, relu):
+    if cfg.use_pallas:
+        return linear(h, w, b, relu=relu)
+    return ref.linear_ref(h, w, b, relu)
+
+
+def forward(cfg: ModelConfig, params: Params, adj: jnp.ndarray,
+            x: jnp.ndarray) -> jnp.ndarray:
+    """Forward over ONE padded micrograph. adj: [L, V, V] 0/1; x: [V, F].
+
+    Returns root logits [C] (the root is vertex 0 by builder convention).
+    """
+    h = x
+    n_layers = cfg.layers
+    for l in range(n_layers):
+        a01 = adj[l]
+        last = l == n_layers - 1
+        relu = not last
+        if cfg.model == "gcn":
+            a = ref.degree_normalize_ref(a01, symmetric=True)
+            h = _lin(cfg, _agg(cfg, a, h), params[f"w{l}"], params[f"b{l}"],
+                     relu)
+        elif cfg.model == "sage":
+            a = ref.degree_normalize_ref(a01, symmetric=False)
+            hn = _agg(cfg, a, h)
+            hcat = jnp.concatenate([h, hn], axis=1)
+            h = _lin(cfg, hcat, params[f"w{l}"], params[f"b{l}"], relu)
+        elif cfg.model == "gat":
+            hp = _lin(cfg, h, params[f"w{l}"], params[f"b{l}"], False)
+            att = (gat_scores(hp, params[f"asrc{l}"], params[f"adst{l}"],
+                              a01)
+                   if cfg.use_pallas else
+                   ref.gat_scores_ref(hp, params[f"asrc{l}"],
+                                      params[f"adst{l}"], a01))
+            h = _agg(cfg, att, hp)
+            if relu:
+                h = jnp.where(h > 0, h, 0.0)
+        elif cfg.model == "deepgcn":
+            a = ref.degree_normalize_ref(a01, symmetric=True)
+            out = _lin(cfg, _agg(cfg, a, h), params[f"w{l}"],
+                       params[f"b{l}"], True)
+            h = out if l == 0 else h + out          # residual
+        elif cfg.model == "film":
+            msg = _agg(cfg, ref.degree_normalize_ref(a01, symmetric=False),
+                       _lin(cfg, h, params[f"w{l}"], jnp.zeros_like(
+                           params[f"b{l}"]), False))
+            # bounded modulation (gamma in [0,2], beta in [-1,1]) keeps the
+            # 10-layer residual stack from exploding — multiplicative
+            # gamma*msg would otherwise grow ~h^2 per layer and overflow
+            gamma = 1.0 + jnp.tanh(
+                _lin(cfg, h, params[f"wg{l}"], params[f"b{l}"], False))
+            beta = jnp.tanh(_lin(cfg, h, params[f"wb{l}"],
+                                 jnp.zeros_like(params[f"b{l}"]), False))
+            pre = gamma * msg + beta
+            out = jnp.where(pre > 0, pre, 0.0)
+            h = out if l == 0 else h + out          # residual
+        else:
+            raise ValueError(f"unknown model {cfg.model}")
+    if cfg.model in ("deepgcn", "film"):
+        h = _lin(cfg, h, params["wout"], params["bout"], False)
+    return h[0]  # root logits
+
+
+def _xent(logits: jnp.ndarray, label: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.logsumexp(logits)
+    return logz - logits[label]
+
+
+def batch_loss(cfg: ModelConfig, params: Params, adj: jnp.ndarray,
+               x: jnp.ndarray, labels: jnp.ndarray):
+    """Mean root cross-entropy + correct-count over a micrograph batch."""
+    logits = jax.vmap(lambda a, xx: forward(cfg, params, a, xx))(adj, x)
+    losses = jax.vmap(_xent)(logits, labels)
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=1) == labels).astype(jnp.int32))
+    return jnp.mean(losses), correct
+
+
+def train_step(cfg: ModelConfig, flat_params, adj, x, labels):
+    """The AOT entry point: (params..., adj, x, labels) ->
+    (loss, correct, grads...). All shapes static per cfg."""
+    params = unflatten_params(cfg, flat_params)
+
+    def loss_fn(p):
+        return batch_loss(cfg, p, adj, x, labels)
+
+    (loss, correct), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params)
+    return (loss, correct, *flatten_params(cfg, grads))
+
+
+def predict_step(cfg: ModelConfig, flat_params, adj, x):
+    """Inference entry point: root logits [B, C] (for accuracy eval)."""
+    params = unflatten_params(cfg, flat_params)
+    return (jax.vmap(lambda a, xx: forward(cfg, params, a, xx))(adj, x),)
+
+
+def example_inputs(cfg: ModelConfig):
+    """ShapeDtypeStructs for jax.jit(...).lower — the artifact's ABI."""
+    flat = [jax.ShapeDtypeStruct(s, jnp.float32)
+            for _, s in param_spec(cfg)]
+    adj = jax.ShapeDtypeStruct(
+        (cfg.batch, cfg.layers, cfg.vmax, cfg.vmax), jnp.float32)
+    x = jax.ShapeDtypeStruct((cfg.batch, cfg.vmax, cfg.feat_dim),
+                             jnp.float32)
+    labels = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    return flat, adj, x, labels
+
+
+@functools.lru_cache(maxsize=None)
+def lowered_train_step(cfg: ModelConfig):
+    flat, adj, x, labels = example_inputs(cfg)
+    fn = functools.partial(train_step, cfg)
+    return jax.jit(fn).lower(flat, adj, x, labels)
+
+
+@functools.lru_cache(maxsize=None)
+def lowered_predict_step(cfg: ModelConfig):
+    flat, adj, x, _ = example_inputs(cfg)
+    fn = functools.partial(predict_step, cfg)
+    return jax.jit(fn).lower(flat, adj, x)

@@ -1,0 +1,180 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes / densities / dtypes; assert_allclose against
+ref.py is the core correctness signal for the whole compile path (the L2
+model calls exactly these kernels, so the HLO the Rust runtime executes is
+only as correct as these tests).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.aggregate import aggregate, vmem_footprint_bytes
+from compile.kernels.attention import gat_scores
+from compile.kernels.transform import linear
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([1, 2, 3, 5, 8, 13, 16, 31, 64, 100, 128, 130])
+SMALL_DIMS = st.sampled_from([1, 2, 3, 5, 8, 13, 16, 31, 64])
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def _rand_adj(rng, v, density):
+    a = (rng.random((v, v)) < density).astype(np.float32)
+    # zero some full rows to model padding vertices
+    if v > 2:
+        a[rng.integers(0, v)] = 0.0
+    return jnp.asarray(a)
+
+
+# ---------------------------------------------------------------- aggregate
+
+@settings(max_examples=25, deadline=None)
+@given(v=DIMS, f=DIMS, density=st.sampled_from([0.0, 0.1, 0.5, 1.0]),
+       seed=st.integers(0, 2**31 - 1))
+def test_aggregate_matches_ref(v, f, density, seed):
+    rng = np.random.default_rng(seed)
+    adj = _rand_adj(rng, v, density)
+    h = _rand(rng, v, f)
+    got = aggregate(adj, h)
+    want = ref.aggregate_ref(adj, h)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_aggregate_multi_tile_grid():
+    """Shapes beyond one tile exercise the k-accumulation grid path."""
+    rng = np.random.default_rng(0)
+    adj = _rand_adj(rng, 300, 0.2)
+    h = _rand(rng, 300, 200)
+    got = aggregate(adj, h, tm=64, tn=64, tk=64)
+    np.testing.assert_allclose(got, ref.aggregate_ref(adj, h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_aggregate_zero_rows_stay_zero():
+    rng = np.random.default_rng(1)
+    adj = np.zeros((16, 16), np.float32)
+    adj[3, :4] = 0.25
+    h = _rand(rng, 16, 8)
+    out = np.asarray(aggregate(jnp.asarray(adj), h))
+    assert np.all(out[0] == 0) and np.all(out[15] == 0)
+    np.testing.assert_allclose(out[3], np.asarray(h)[:4].mean(0),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_aggregate_rejects_mismatched_shapes():
+    with pytest.raises(ValueError):
+        aggregate(jnp.zeros((4, 4)), jnp.zeros((5, 3)))
+
+
+def test_vmem_footprint_within_budget():
+    """Structural perf check: default tiling fits VMEM with double-buffering."""
+    assert vmem_footprint_bytes(128, 128, 128) <= 16 * 2**20
+    # and leaves >= 15/16 of VMEM for the rest of the layer
+    assert vmem_footprint_bytes(128, 128, 128) <= 2**20
+
+
+# ------------------------------------------------------------------ linear
+
+@settings(max_examples=25, deadline=None)
+@given(v=SMALL_DIMS, fin=SMALL_DIMS, fout=SMALL_DIMS,
+       relu=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_linear_matches_ref(v, fin, fout, relu, seed):
+    rng = np.random.default_rng(seed)
+    h, w, b = _rand(rng, v, fin), _rand(rng, fin, fout), _rand(rng, fout)
+    got = linear(h, w, b, relu=relu)
+    want = ref.linear_ref(h, w, b, relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_linear_multi_tile_epilogue_once():
+    """Bias must be added exactly once even when k spans several tiles."""
+    rng = np.random.default_rng(2)
+    h, w = _rand(rng, 96, 160), _rand(rng, 160, 48)
+    b = jnp.full((48,), 7.0)
+    got = linear(h, w, b, relu=False, tm=32, tn=16, tk=32)
+    np.testing.assert_allclose(got, ref.linear_ref(h, w, b, False),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_linear_relu_clamps():
+    h = jnp.array([[-1.0, 2.0]])
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2)
+    out = np.asarray(linear(h, w, b, relu=True))
+    np.testing.assert_allclose(out, [[0.0, 2.0]], atol=1e-7)
+
+
+def test_linear_rejects_bad_bias():
+    with pytest.raises(ValueError):
+        linear(jnp.zeros((3, 4)), jnp.zeros((4, 5)), jnp.zeros(6))
+
+
+# -------------------------------------------------------------- gat_scores
+
+@settings(max_examples=20, deadline=None)
+@given(v=SMALL_DIMS, f=SMALL_DIMS,
+       density=st.sampled_from([0.0, 0.2, 0.7, 1.0]),
+       seed=st.integers(0, 2**31 - 1))
+def test_gat_scores_matches_ref(v, f, density, seed):
+    rng = np.random.default_rng(seed)
+    h = _rand(rng, v, f)
+    a_src, a_dst = _rand(rng, f), _rand(rng, f)
+    mask = _rand_adj(rng, v, density)
+    got = gat_scores(h, a_src, a_dst, mask)
+    want = ref.gat_scores_ref(h, a_src, a_dst, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_gat_rows_sum_to_one_or_zero():
+    rng = np.random.default_rng(3)
+    h = _rand(rng, 24, 16)
+    mask = _rand_adj(rng, 24, 0.3)
+    att = np.asarray(gat_scores(h, _rand(rng, 16), _rand(rng, 16), mask))
+    rowsum = att.sum(1)
+    has_edges = np.asarray(mask).sum(1) > 0
+    np.testing.assert_allclose(rowsum[has_edges], 1.0, rtol=1e-5)
+    np.testing.assert_allclose(rowsum[~has_edges], 0.0, atol=1e-7)
+
+
+def test_gat_respects_mask():
+    rng = np.random.default_rng(4)
+    h = _rand(rng, 12, 8)
+    mask = _rand_adj(rng, 12, 0.4)
+    att = np.asarray(gat_scores(h, _rand(rng, 8), _rand(rng, 8), mask))
+    assert np.all(att[np.asarray(mask) == 0] == 0.0)
+
+
+def test_gat_multi_row_tiles():
+    """V beyond one row tile exercises the grid path."""
+    rng = np.random.default_rng(5)
+    v, f = 200, 32
+    h = _rand(rng, v, f)
+    mask = _rand_adj(rng, v, 0.1)
+    a_src, a_dst = _rand(rng, f), _rand(rng, f)
+    got = gat_scores(h, a_src, a_dst, mask, tm=64)
+    want = ref.gat_scores_ref(h, a_src, a_dst, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------- degree normalization
+
+@settings(max_examples=15, deadline=None)
+@given(v=SMALL_DIMS, density=st.sampled_from([0.0, 0.3, 1.0]),
+       symmetric=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_degree_normalize_row_sums(v, density, symmetric, seed):
+    rng = np.random.default_rng(seed)
+    adj = _rand_adj(rng, v, density)
+    norm = np.asarray(ref.degree_normalize_ref(adj, symmetric))
+    deg = np.asarray(adj).sum(1)
+    if not symmetric:
+        np.testing.assert_allclose(norm.sum(1)[deg > 0], 1.0, rtol=1e-5)
+    assert np.all(norm[deg == 0] == 0.0)

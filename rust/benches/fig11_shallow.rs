@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig11_shallow` — regenerates the paper's Fig 11
+//! (shallow-model end-to-end comparison) at bench scale and asserts the
+//! headline ordering holds (HopGNN fastest).
+
+use hopgnn::bench::{overall, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--full") {
+        Scale::full()
+    } else {
+        Scale::quick()
+    };
+    let t0 = std::time::Instant::now();
+    let report = overall::fig11_shallow(scale);
+    println!("{}", report.render());
+    println!("[fig11 bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    let _ = report.save("reports");
+}

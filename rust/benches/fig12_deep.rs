@@ -1,0 +1,17 @@
+//! `cargo bench --bench fig12_deep` — regenerates Fig 12 (deep models:
+//! DeepGCN-7L, GNN-FiLM-10L) at bench scale.
+
+use hopgnn::bench::{overall, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--full") {
+        Scale::full()
+    } else {
+        Scale::quick()
+    };
+    let t0 = std::time::Instant::now();
+    let report = overall::fig12_deep(scale);
+    println!("{}", report.render());
+    println!("[fig12 bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    let _ = report.save("reports");
+}

@@ -1,0 +1,17 @@
+//! `cargo bench --bench fig13_ablation` — regenerates Fig 13 (the
+//! +MG / +PG / All technique ablation) at bench scale.
+
+use hopgnn::bench::{ablation, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--full") {
+        Scale::full()
+    } else {
+        Scale::quick()
+    };
+    let t0 = std::time::Instant::now();
+    let report = ablation::fig13_ablation(scale);
+    println!("{}", report.render());
+    println!("[fig13 bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    let _ = report.save("reports");
+}

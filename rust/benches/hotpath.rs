@@ -1,0 +1,100 @@
+//! `cargo bench --bench hotpath` — L3 hot-path micro-benchmarks (the
+//! §Perf targets): sampler, dense-adjacency packing, gather planning,
+//! partitioner, feature synthesis. Uses the in-tree harness (median ±
+//! MAD) since criterion is not vendored.
+
+use hopgnn::bench::harness::bench;
+use hopgnn::featstore::FeatureStore;
+use hopgnn::graph::datasets::{load_spec, DatasetSpec};
+use hopgnn::partition::{partition, PartitionAlgo};
+use hopgnn::runtime::tensor::BatchBuffers;
+use hopgnn::sampler::{sample_micrograph, SampleConfig, SamplerKind};
+use hopgnn::util::rng::Rng;
+
+fn main() {
+    let d = load_spec(&DatasetSpec {
+        name: "bench",
+        num_vertices: 100_000,
+        num_edges: 900_000,
+        feat_dim: 128,
+        classes: 10,
+        num_communities: 250,
+        train_fraction: 0.3,
+        seed: 77,
+    });
+    let p = partition(&d.graph, 4, PartitionAlgo::MetisLike, 7);
+    let store = FeatureStore::new(&d, &p);
+    let cfg = SampleConfig {
+        layers: 3,
+        fanout: 10,
+        vmax: 1111,
+        kind: SamplerKind::NodeWise,
+    };
+
+    let mut results = Vec::new();
+
+    // 1. node-wise 3-hop sampling (the per-iteration CPU hot loop)
+    let mut rng = Rng::new(1);
+    let mut sampled = 0usize;
+    results.push(bench("sample_micrograph(3L,f10)", 0.5, || {
+        let root = d.train_vertices[rng.below(d.train_vertices.len())];
+        let mg = sample_micrograph(&d.graph, root, &cfg, &mut rng);
+        sampled += mg.num_vertices();
+    }));
+
+    // 2. gather planning (dedup + home classification, per server-step)
+    let mut rng = Rng::new(2);
+    let mgs: Vec<_> = (0..64)
+        .map(|_| {
+            let root = d.train_vertices[rng.below(d.train_vertices.len())];
+            sample_micrograph(&d.graph, root, &cfg, &mut rng)
+        })
+        .collect();
+    results.push(bench("featstore.plan(64 micrographs)", 0.5, || {
+        let verts = mgs.iter().flat_map(|m| m.vertices.iter().copied());
+        let plan = store.plan(0, verts);
+        std::hint::black_box(plan.remote_count());
+    }));
+
+    // 3. dense adjacency + feature packing (PJRT staging hot path)
+    let cfg_small = SampleConfig {
+        layers: 3,
+        fanout: 10,
+        vmax: 128,
+        kind: SamplerKind::NodeWise,
+    };
+    let mut rng = Rng::new(3);
+    let small_mgs: Vec<_> = (0..8)
+        .map(|_| {
+            let root = d.train_vertices[rng.below(d.train_vertices.len())];
+            sample_micrograph(&d.graph, root, &cfg_small, &mut rng)
+        })
+        .collect();
+    let mut buf = BatchBuffers::new(8, 3, 128, d.feat_dim);
+    results.push(bench("BatchBuffers.pack(8x128)", 0.5, || {
+        std::hint::black_box(buf.pack(&small_mgs, &d));
+    }));
+
+    // 4. feature synthesis (stands in for feature-shard reads)
+    let verts: Vec<u32> = (0..1000u32).collect();
+    results.push(bench("features_for(1000 x 128d)", 0.5, || {
+        std::hint::black_box(d.features_for(&verts));
+    }));
+
+    // 5. METIS-like partitioning (offline, but Table-1 sweeps rerun it)
+    results.push(bench("metis_like(100k/0.9M, k=4)", 2.0, || {
+        std::hint::black_box(
+            partition(&d.graph, 4, PartitionAlgo::MetisLike, 9).balance(),
+        );
+    }));
+
+    println!("\nL3 hot-path micro-benchmarks:");
+    for r in &results {
+        println!("  {}", r.summary());
+    }
+    // machine-readable for EXPERIMENTS.md §Perf
+    println!("\ncsv:name,median_us");
+    for r in &results {
+        println!("csv:{},{:.1}", r.name, r.median_secs * 1e6);
+    }
+}

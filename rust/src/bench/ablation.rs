@@ -1,0 +1,239 @@
+//! Ablation experiments: Fig 13 (+MG/+PG/All), Fig 14 (miss rate),
+//! Fig 15 (gather time), Fig 16 (pre-gathering), Fig 17 (merging
+//! trajectory), Fig 18 (merge selection vs random).
+
+use super::{Report, Scale};
+use crate::cluster::ModelFamily;
+use crate::config::RunConfig;
+use crate::coordinator::hopgnn::HopGnn;
+use super::cache;
+use crate::coordinator::{SimEnv, Strategy, StrategyKind};
+use crate::metrics::EpochMetrics;
+use crate::util::table::{fmt_secs, Table};
+
+fn cfg_for(scale: Scale, ds: &str, model: ModelFamily) -> RunConfig {
+    RunConfig {
+        dataset: ds.into(),
+        model,
+        layers: model.default_layers(),
+        batch_size: scale.batch,
+        epochs: scale.epochs,
+        max_iterations: scale.max_iterations,
+        vmax: RunConfig::full_sim_vmax(model.default_layers(), 10),
+        fanout: 10,
+        ..Default::default()
+    }
+}
+
+/// Fig 13: each technique's incremental speedup over DGL.
+pub fn fig13_ablation(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig13",
+        "incremental techniques vs DGL (paper: +MG biggest, then +PG, then merging)",
+    );
+    let datasets = if scale.quick {
+        vec!["products-s"]
+    } else {
+        vec!["products-s", "uk-s"]
+    };
+    let mut t = Table::new([
+        "dataset", "model", "DGL", "+MG", "+PG", "All", "All speedup",
+    ]);
+    for ds in &datasets {
+        for model in [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat] {
+            let cfg = cfg_for(scale, ds, model);
+            let dgl = cache::run(&cfg, StrategyKind::Dgl);
+            let mg = cache::run(&cfg, StrategyKind::HopGnnMgOnly);
+            let pg = cache::run(&cfg, StrategyKind::HopGnnMgPg);
+            let all = cache::run(&cfg, StrategyKind::HopGnn);
+            t.row([
+                ds.to_string(),
+                model.name().to_string(),
+                fmt_secs(dgl.epoch_time),
+                fmt_secs(mg.epoch_time),
+                fmt_secs(pg.epoch_time),
+                fmt_secs(all.epoch_time),
+                format!("{:.2}x", dgl.epoch_time / all.epoch_time),
+            ]);
+        }
+    }
+    r.section("epoch time as techniques stack", t);
+    r.note("paper Fig 13: up to 2.14x (Products) / 2.72x (UK) for All vs DGL");
+    r
+}
+
+/// Fig 14: feature-gathering miss rates, DGL vs +MG.
+pub fn fig14_missrate(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig14",
+        "remote-feature miss rate (paper: 76.5% avg -> 23.3% avg)",
+    );
+    let mut t = Table::new(["dataset", "DGL miss%", "+MG miss%"]);
+    let datasets = if scale.quick {
+        vec!["arxiv-s", "products-s"]
+    } else {
+        vec!["arxiv-s", "products-s", "uk-s", "in-s"]
+    };
+    let (mut dgl_sum, mut mg_sum, mut n) = (0.0, 0.0, 0);
+    for ds in &datasets {
+        let cfg = cfg_for(scale, ds, ModelFamily::Gcn);
+        let dgl = cache::run(&cfg, StrategyKind::Dgl);
+        let mg = cache::run(&cfg, StrategyKind::HopGnnMgOnly);
+        dgl_sum += dgl.miss_rate();
+        mg_sum += mg.miss_rate();
+        n += 1;
+        t.row([
+            ds.to_string(),
+            format!("{:.1}", dgl.miss_rate() * 100.0),
+            format!("{:.1}", mg.miss_rate() * 100.0),
+        ]);
+    }
+    r.section("miss rate by dataset", t);
+    r.note(format!(
+        "averages: DGL {:.1}% vs +MG {:.1}% (paper: 76.5% vs 23.3%)",
+        dgl_sum / n as f64 * 100.0,
+        mg_sum / n as f64 * 100.0
+    ));
+    r
+}
+
+/// Fig 15: remote feature gathering time with/without MG (Products).
+pub fn fig15_gather_time(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig15",
+        "remote gather time, DGL vs +MG (paper: 2.3x reduction on avg)",
+    );
+    let mut t = Table::new(["model", "DGL gather", "+MG gather", "reduction"]);
+    for model in [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat] {
+        let cfg = cfg_for(scale, "products-s", model);
+        let dgl = cache::run(&cfg, StrategyKind::Dgl);
+        let mg = cache::run(&cfg, StrategyKind::HopGnnMgOnly);
+        t.row([
+            model.name().to_string(),
+            fmt_secs(dgl.time_gather),
+            fmt_secs(mg.time_gather),
+            format!("{:.2}x", dgl.time_gather / mg.time_gather.max(1e-12)),
+        ]);
+    }
+    r.section("per-epoch gather time on products-s", t);
+    r
+}
+
+/// Fig 16: pre-gathering reduces remote requests & transferred vertices.
+pub fn fig16_pregather(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig16",
+        "pre-gathering effect (paper: requests -1.9x, misses -1.4x)",
+    );
+    let mut t = Table::new([
+        "dataset", "metric", "+MG", "+PG", "reduction",
+    ]);
+    let datasets = if scale.quick {
+        vec!["products-s"]
+    } else {
+        vec!["products-s", "uk-s"]
+    };
+    for ds in &datasets {
+        let cfg = cfg_for(scale, ds, ModelFamily::Gcn);
+        let mg = cache::run(&cfg, StrategyKind::HopGnnMgOnly);
+        let pg = cache::run(&cfg, StrategyKind::HopGnnMgPg);
+        t.row([
+            ds.to_string(),
+            "remote requests".into(),
+            mg.remote_requests.to_string(),
+            pg.remote_requests.to_string(),
+            format!(
+                "{:.2}x",
+                mg.remote_requests as f64 / pg.remote_requests.max(1) as f64
+            ),
+        ]);
+        t.row([
+            ds.to_string(),
+            "remote vertices".into(),
+            mg.remote_vertices.to_string(),
+            pg.remote_vertices.to_string(),
+            format!(
+                "{:.2}x",
+                mg.remote_vertices as f64 / pg.remote_vertices.max(1) as f64
+            ),
+        ]);
+    }
+    r.section("per-epoch remote fetch counters", t);
+    r
+}
+
+/// The paper's software stack (python DGL + PyTorch distributed + gRPC)
+/// pays multi-millisecond per-time-step orchestration overheads — the
+/// very costs merging (§5.3) trades against locality. Our default cost
+/// model reflects a leaner Rust runtime where those overheads are small
+/// (and the controller correctly refuses to merge); these two
+/// experiments use the paper-stack constants so the §5.3 dynamics are
+/// visible. Documented in EXPERIMENTS.md.
+fn pytorch_stack_costs(cfg: &mut RunConfig) {
+    cfg.cost.t_launch = 0.5e-3;
+    cfg.cost.t_sync = 6.0e-3;
+}
+
+/// Fig 17: merging trajectory — epoch time & time steps per epoch.
+pub fn fig17_merging(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig17",
+        "micrograph merging trajectory (paper: 4 -> 3 -> 2 steps, settles at 3)",
+    );
+    let d = cache::dataset("products-s");
+    let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gat);
+    pytorch_stack_costs(&mut cfg);
+    cfg.epochs = if scale.quick { 4 } else { 6 };
+    let mut env = SimEnv::new(&d, cfg.clone());
+    let mut strat = HopGnn::full();
+    let epochs: Vec<EpochMetrics> = strat.run(&mut env, cfg.epochs);
+    let mut t = Table::new(["epoch", "time steps/iter", "epoch time"]);
+    for (i, e) in epochs.iter().enumerate() {
+        t.row([
+            i.to_string(),
+            format!("{:.0}", e.time_steps_per_iter),
+            fmt_secs(e.epoch_time),
+        ]);
+    }
+    r.section("GAT on products-s, 4 servers", t);
+    r.note("the controller merges while epoch time improves, then reverts once and freezes (§5.3)");
+    r
+}
+
+/// Fig 18: merge-step selection — min-load vs random.
+pub fn fig18_merge_selection(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig18",
+        "merge selection scheme (paper: min-load beats random 1.4-1.9x)",
+    );
+    let datasets = if scale.quick {
+        vec!["products-s"]
+    } else {
+        vec!["products-s", "in-s"]
+    };
+    let mut t = Table::new(["dataset", "MinLoad", "Random(RD)", "ratio"]);
+    for ds in &datasets {
+        let d = cache::dataset(ds);
+        let mut cfg = cfg_for(scale, ds, ModelFamily::Gcn);
+        pytorch_stack_costs(&mut cfg);
+        cfg.epochs = if scale.quick { 4 } else { 6 };
+
+        let mut env = SimEnv::new(&d, cfg.clone());
+        let min_epochs = HopGnn::full().run(&mut env, cfg.epochs);
+        let min_time = min_epochs.last().unwrap().epoch_time;
+
+        let mut env = SimEnv::new(&d, cfg.clone());
+        let rd_epochs = HopGnn::random_merge().run(&mut env, cfg.epochs);
+        let rd_time = rd_epochs.last().unwrap().epoch_time;
+
+        t.row([
+            ds.to_string(),
+            fmt_secs(min_time),
+            fmt_secs(rd_time),
+            format!("{:.2}x", rd_time / min_time),
+        ]);
+    }
+    r.section("steady-state epoch time by selection scheme", t);
+    r.note("random merging unbalances per-step load across servers (paper Fig 18b)");
+    r
+}

@@ -1,0 +1,73 @@
+//! Micro-benchmark timing harness (offline replacement for criterion):
+//! warmup + timed iterations, reporting median ± MAD.
+
+use crate::util::stats::{mad, median};
+use crate::util::table::fmt_secs;
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_secs: f64,
+    pub mad_secs: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>12} ± {:<10} ({} iters)",
+            self.name,
+            fmt_secs(self.median_secs),
+            fmt_secs(self.mad_secs),
+            self.iters
+        )
+    }
+
+    /// throughput in ops/sec given `n` items per iteration
+    pub fn per_sec(&self, n: usize) -> f64 {
+        n as f64 / self.median_secs
+    }
+}
+
+/// Time `f` with automatic iteration-count calibration: aims for
+/// ~`target_secs` of total measurement after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, target_secs: f64, mut f: F)
+                         -> BenchResult {
+    // warmup + calibrate
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / once).ceil() as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        median_secs: median(&samples),
+        mad_secs: mad(&samples),
+        iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let r = bench("spin", 0.02, || {
+            for i in 0..10_000u64 {
+                x = x.wrapping_add(i * i);
+            }
+        });
+        assert!(r.median_secs > 0.0);
+        assert!(r.iters >= 3);
+        assert!(r.summary().contains("spin"));
+        assert!(x != 42); // keep the side effect alive
+    }
+}

@@ -1,0 +1,233 @@
+//! §3 motivation experiments: Fig 4 (breakdown), Fig 5 (alpha ratio),
+//! Fig 7 (naive-FC vs model-centric data volume), Table 1 (locality).
+
+use super::{Report, Scale};
+use crate::cluster::{ModelFamily, TransferKind};
+use crate::config::RunConfig;
+use super::cache;
+use crate::coordinator::StrategyKind;
+use crate::graph::datasets::Dataset;
+use crate::partition::{partition, PartitionAlgo};
+use crate::sampler::{sample_micrograph, SampleConfig, SamplerKind, Subgraph};
+use crate::util::rng::Rng;
+use crate::util::table::{fmt_bytes, Table};
+
+fn base_cfg(scale: Scale, dataset: &str, model: ModelFamily) -> RunConfig {
+    let mut cfg = RunConfig {
+        dataset: dataset.into(),
+        model,
+        layers: model.default_layers(),
+        batch_size: scale.batch,
+        epochs: scale.epochs,
+        max_iterations: scale.max_iterations,
+        vmax: RunConfig::full_sim_vmax(model.default_layers(), 10),
+        fanout: 10,
+        ..Default::default()
+    };
+    if model.default_layers() > 3 {
+        cfg.fanout = 2;
+        cfg.vmax = RunConfig::full_sim_vmax(model.default_layers(), 2);
+        cfg.hidden = 64;
+    }
+    cfg
+}
+
+/// Fig 4: DGL time breakdown — remote gather should consume 44-83%.
+pub fn fig04_breakdown(scale: Scale) -> Report {
+    let mut r = Report::new("fig04", "DGL training-time breakdown (paper: gather 44-83%)");
+    let mut t = Table::new([
+        "dataset", "model", "sample%", "gather%", "compute%", "sync%",
+    ]);
+    let datasets = if scale.quick {
+        vec!["arxiv-s"]
+    } else {
+        vec!["arxiv-s", "products-s", "uk-s"]
+    };
+    for ds in datasets {
+        for model in [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat] {
+            let cfg = base_cfg(scale, ds, model);
+            let m = cache::run(&cfg, StrategyKind::Dgl);
+            let total = (m.time_sample + m.time_gather + m.time_compute
+                + m.time_migrate
+                + m.time_sync)
+                .max(1e-12);
+            t.row([
+                ds.to_string(),
+                model.name().to_string(),
+                format!("{:.1}", m.time_sample / total * 100.0),
+                format!("{:.1}", m.time_gather / total * 100.0),
+                format!("{:.1}", m.time_compute / total * 100.0),
+                format!("{:.1}", m.time_sync / total * 100.0),
+            ]);
+        }
+    }
+    r.section("time breakdown per phase (% of server time)", t);
+    r.note("paper Fig 4: gather 44-83% of training time, sample+compute ~11% avg");
+    r
+}
+
+/// Fig 5: alpha = remote bytes fetched per iteration / model bytes.
+pub fn fig05_alpha(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig05",
+        "alpha ratio: fetched data volume / model size (paper: 13.4-2368)",
+    );
+    let mut t = Table::new(["model", "layers", "hidden", "alpha", "log2"]);
+    let d = cache::dataset("products-s");
+    // (family, layers, hidden, fanout). The depth trend needs a FIXED
+    // fanout (the paper's Fig 5 point: subgraph size — hence alpha —
+    // grows with layer count, DeeperGCN-112 reaching 2368).
+    let rows: Vec<(ModelFamily, usize, usize, usize)> = vec![
+        (ModelFamily::Gcn, 2, 128, 4),
+        (ModelFamily::Gcn, 3, 128, 4),
+        (ModelFamily::Gcn, 5, 128, 4),
+        (ModelFamily::DeepGcn, 7, 64, 4),
+        (ModelFamily::Film, 10, 64, 4),
+        (ModelFamily::Gcn, 3, 16, 10),
+        (ModelFamily::Gcn, 3, 128, 10),
+        (ModelFamily::Sage, 3, 16, 10),
+        (ModelFamily::Sage, 3, 128, 10),
+        (ModelFamily::Gat, 3, 128, 10),
+    ];
+    for (family, layers, hidden, fanout) in rows {
+        let mut cfg = base_cfg(scale, "products-s", family);
+        cfg.layers = layers;
+        cfg.hidden = hidden;
+        cfg.fanout = fanout;
+        cfg.vmax = RunConfig::full_sim_vmax(layers, fanout);
+        cfg.epochs = 1;
+        let m = cache::run(&cfg, StrategyKind::Dgl);
+        let feat_dim = d.feat_dim;
+        let shape = cfg.model_shape(feat_dim, d.classes);
+        let per_iter = m.bytes(TransferKind::Feature) as f64
+            / m.iterations.max(1) as f64;
+        let alpha = per_iter / shape.param_bytes() as f64;
+        t.row([
+            format!("{}(fanout {fanout})", family.name()),
+            layers.to_string(),
+            hidden.to_string(),
+            format!("{alpha:.1}"),
+            format!("{:.1}", alpha.log2()),
+        ]);
+    }
+    r.section("alpha per model variant", t);
+    r.note("paper Fig 5: alpha in [13.4, 2368.1]; grows with depth, shrinks with hidden dim");
+    r
+}
+
+/// Fig 7: naive feature-centric can move MORE data than model-centric.
+pub fn fig07_naive_vs_mc(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig07",
+        "transferred bytes: model-centric vs naive feature-centric (paper: naive up to 2.59x worse)",
+    );
+    let mut t = Table::new([
+        "dataset", "model", "MC bytes", "Naive bytes", "naive/mc",
+    ]);
+    let datasets = if scale.quick {
+        vec!["arxiv-s"]
+    } else {
+        vec!["arxiv-s", "products-s", "uk-s", "in-s"]
+    };
+    let mut worst: f64 = 0.0;
+    for ds in datasets {
+        for model in [ModelFamily::Gcn, ModelFamily::Gat] {
+            let cfg = base_cfg(scale, ds, model);
+            let mc = cache::run(&cfg, StrategyKind::Dgl);
+            let nv = cache::run(&cfg, StrategyKind::Naive);
+            let ratio = nv.total_bytes() as f64 / mc.total_bytes().max(1) as f64;
+            worst = worst.max(ratio);
+            t.row([
+                ds.to_string(),
+                model.name().to_string(),
+                fmt_bytes(mc.total_bytes()),
+                fmt_bytes(nv.total_bytes()),
+                format!("{ratio:.2}x"),
+            ]);
+        }
+    }
+    r.section("per-epoch transferred bytes", t);
+    r.note(format!(
+        "worst naive/mc ratio observed: {worst:.2}x (paper: up to 2.59x)"
+    ));
+    r
+}
+
+/// Table 1: micrograph locality R_micro vs subgraph locality R_sub.
+pub fn table1_locality(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "table1",
+        "micrograph vs subgraph locality (paper Table 1)",
+    );
+    let server_counts: Vec<usize> = if scale.quick {
+        vec![2, 4]
+    } else {
+        vec![2, 4, 8, 16]
+    };
+    // (dataset, partitioner) pairs as in the paper: METIS on the small
+    // pair, BGL-style heuristic on the large pair
+    let setups: Vec<(&str, PartitionAlgo)> = if scale.quick {
+        vec![("arxiv-s", PartitionAlgo::MetisLike)]
+    } else {
+        vec![
+            ("arxiv-s", PartitionAlgo::MetisLike),
+            ("products-s", PartitionAlgo::MetisLike),
+            ("uk-s", PartitionAlgo::Heuristic),
+            ("in-s", PartitionAlgo::Heuristic),
+        ]
+    };
+    for kind in [SamplerKind::NodeWise, SamplerKind::LayerWise] {
+        let mut t = Table::new([
+            "dataset", "partition", "#S", "R_micro 2L%", "R_micro 10L%",
+            "R_sub 2L%",
+        ]);
+        for &(ds, algo) in &setups {
+            let d = cache::dataset(ds);
+            for &s in &server_counts {
+                let p = partition(&d.graph, s, algo, 7);
+                let (rm2, rs2) = locality_of(&d, &p, 2, kind, 64);
+                let (rm10, _) = locality_of(&d, &p, 10, kind, 64);
+                t.row([
+                    ds.to_string(),
+                    algo.name().to_string(),
+                    s.to_string(),
+                    format!("{:.0}", rm2 * 100.0),
+                    format!("{:.0}", rm10 * 100.0),
+                    format!("{:.0}", rs2 * 100.0),
+                ]);
+            }
+        }
+        let caption = match kind {
+            SamplerKind::NodeWise => "node-wise sampling",
+            SamplerKind::LayerWise => "layer-wise sampling",
+        };
+        r.section(caption, t);
+    }
+    r.note("paper Table 1: R_micro >> R_sub, gap grows with #S (1.59x at 2 servers to 10.6x at 16)");
+    r
+}
+
+fn locality_of(
+    d: &Dataset,
+    p: &crate::partition::Partition,
+    layers: usize,
+    kind: SamplerKind,
+    n_samples: usize,
+) -> (f64, f64) {
+    let cfg = SampleConfig {
+        layers,
+        fanout: if layers > 2 { 2 } else { 10 },
+        vmax: 256,
+        kind,
+    };
+    let mut rng = Rng::new(91);
+    let mut mgs = Vec::with_capacity(n_samples);
+    for _ in 0..n_samples {
+        let root = d.train_vertices[rng.below(d.train_vertices.len())];
+        mgs.push(sample_micrograph(&d.graph, root, &cfg, &mut rng));
+    }
+    let r_micro =
+        mgs.iter().map(|m| m.locality(p)).sum::<f64>() / mgs.len() as f64;
+    let sub = Subgraph::union_of(&mgs);
+    (r_micro, sub.locality(p))
+}

@@ -1,0 +1,208 @@
+//! Overall-performance experiments: Fig 11 (shallow models), Fig 12 (deep
+//! models), Fig 19 (large graph), Fig 21 (full-batch vs NeutronStar).
+
+use super::{Report, Scale};
+use crate::cluster::ModelFamily;
+use crate::config::RunConfig;
+use crate::coordinator::neutronstar::{FullBatchMode, NeutronStar};
+use super::cache;
+use crate::coordinator::{SimEnv, Strategy, StrategyKind};
+use crate::metrics::EpochMetrics;
+use crate::util::table::{fmt_secs, Table};
+
+fn cfg_for(scale: Scale, ds: &str, model: ModelFamily, hidden: usize)
+           -> RunConfig {
+    let deep = model.default_layers() > 3;
+    RunConfig {
+        dataset: ds.into(),
+        model,
+        layers: model.default_layers(),
+        hidden,
+        fanout: if deep { 2 } else { 10 },
+        vmax: RunConfig::full_sim_vmax(
+            model.default_layers(),
+            if deep { 2 } else { 10 },
+        ),
+        batch_size: scale.batch,
+        epochs: scale.epochs,
+        max_iterations: scale.max_iterations,
+        ..Default::default()
+    }
+}
+
+const HEADLINE: [StrategyKind; 4] = [
+    StrategyKind::Dgl,
+    StrategyKind::P3,
+    StrategyKind::Naive,
+    StrategyKind::HopGnn,
+];
+
+fn faceoff_row(
+    t: &mut Table,
+    ds: &str,
+    label: String,
+    cfg: &RunConfig,
+) -> (f64, f64) {
+    let ms: Vec<EpochMetrics> = HEADLINE
+        .iter()
+        .map(|&k| cache::run(cfg, k))
+        .collect();
+    let hop = ms[3].epoch_time;
+    let vs_dgl = ms[0].epoch_time / hop;
+    let vs_p3 = ms[1].epoch_time / hop;
+    t.row([
+        ds.to_string(),
+        label,
+        fmt_secs(ms[0].epoch_time),
+        fmt_secs(ms[1].epoch_time),
+        fmt_secs(ms[2].epoch_time),
+        fmt_secs(hop),
+        format!("{vs_dgl:.2}x"),
+        format!("{vs_p3:.2}x"),
+    ]);
+    (vs_dgl, vs_p3)
+}
+
+/// Fig 11: shallow models x hidden {16,128} x datasets.
+pub fn fig11_shallow(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig11",
+        "epoch time, shallow models (paper: HopGNN 1.3-3.1x over DGL, 1.2-4.2x over P3)",
+    );
+    let mut t = Table::new([
+        "dataset", "model", "DGL", "P3", "Naive", "HopGNN", "vs DGL",
+        "vs P3",
+    ]);
+    let datasets = if scale.quick {
+        vec!["arxiv-s", "products-s"]
+    } else {
+        vec!["arxiv-s", "products-s", "uk-s", "in-s"]
+    };
+    let models = [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat];
+    let hiddens = if scale.quick {
+        vec![16usize, 128]
+    } else {
+        vec![16, 128]
+    };
+    let mut best_dgl: f64 = 0.0;
+    let mut best_p3: f64 = 0.0;
+    for ds in &datasets {
+        for &model in &models {
+            for &h in &hiddens {
+                let cfg = cfg_for(scale, ds, model, h);
+                let (a, b) = faceoff_row(
+                    &mut t,
+                    ds,
+                    format!("{}({h})", model.name()),
+                    &cfg,
+                );
+                best_dgl = best_dgl.max(a);
+                best_p3 = best_p3.max(b);
+            }
+        }
+    }
+    r.section("average epoch time (HopGNN steady state)", t);
+    r.note(format!(
+        "max speedup observed: {best_dgl:.2}x vs DGL, {best_p3:.2}x vs P3 \
+         (paper: 3.1x / 4.2x)"
+    ));
+    r
+}
+
+/// Fig 12: deep models (DeepGCN 7L, GNN-FiLM 10L).
+pub fn fig12_deep(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig12",
+        "epoch time, deep models (paper: HopGNN wins grow with depth; P3 degrades)",
+    );
+    let mut t = Table::new([
+        "dataset", "model", "DGL", "P3", "Naive", "HopGNN", "vs DGL",
+        "vs P3",
+    ]);
+    let datasets = if scale.quick {
+        vec!["arxiv-s"]
+    } else {
+        vec!["uk-s", "in-s"]
+    };
+    for ds in &datasets {
+        for model in [ModelFamily::DeepGcn, ModelFamily::Film] {
+            for h in [16usize, 128] {
+                let cfg = cfg_for(scale, ds, model, h);
+                faceoff_row(&mut t, ds, format!("{}({h})", model.name()),
+                            &cfg);
+            }
+        }
+    }
+    r.section("average epoch time", t);
+    r.note("paper Fig 12: P3's hidden-embedding exchange grows with layer-1 width × hidden; HopGNN unaffected");
+    r
+}
+
+/// Fig 19: the large graph (it-s): subset of tests.
+pub fn fig19_large_graph(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig19",
+        "large-graph performance (paper: 1.91x vs DGL, 1.48x vs P3; hit rate 24.4%->92.3%)",
+    );
+    let ds = if scale.quick { "uk-s" } else { "it-s" };
+    let _ = cache::dataset(ds); // warm the cache
+    let mut t = Table::new(["model", "system", "epoch", "hit rate%"]);
+    for model in [ModelFamily::Gcn, ModelFamily::Gat] {
+        let mut cfg = cfg_for(scale, ds, model, 128);
+        if scale.quick {
+            cfg.max_iterations = Some(2);
+        }
+        for kind in [StrategyKind::Dgl, StrategyKind::P3, StrategyKind::HopGnn]
+        {
+            let m = cache::run(&cfg, kind);
+            t.row([
+                model.name().to_string(),
+                kind.name().to_string(),
+                fmt_secs(m.epoch_time),
+                format!("{:.1}", (1.0 - m.miss_rate()) * 100.0),
+            ]);
+        }
+    }
+    r.section(format!("epoch time on {ds}"), t);
+    r.note("paper Fig 19: local hit rate rises from 24.4% (DGL) to 92.3% (HopGNN)");
+    r
+}
+
+/// Fig 21: full-batch comparison with NeutronStar (sampling disabled).
+pub fn fig21_fullbatch(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig21",
+        "full-batch training (paper: HopGNN 1.05-1.82x over NeutronStar)",
+    );
+    let mut t = Table::new(["dataset", "model", "system", "epoch", "bytes"]);
+    let datasets = if scale.quick {
+        vec!["arxiv-s"]
+    } else {
+        vec!["arxiv-s", "products-s", "uk-s"]
+    };
+    for ds in &datasets {
+        let d = cache::dataset(ds);
+        for model in [ModelFamily::Gcn, ModelFamily::Gat] {
+            let cfg = cfg_for(scale, ds, model, 128);
+            for mode in [
+                FullBatchMode::DglFb,
+                FullBatchMode::Hybrid,
+                FullBatchMode::HopFb,
+            ] {
+                let mut env = SimEnv::new(&d, cfg.clone());
+                let mut s = NeutronStar::with_mode(mode);
+                let m = s.run_epoch(&mut env);
+                t.row([
+                    ds.to_string(),
+                    model.name().to_string(),
+                    s.name().to_string(),
+                    fmt_secs(m.epoch_time),
+                    crate::util::table::fmt_bytes(m.total_bytes()),
+                ]);
+            }
+        }
+    }
+    r.section("full-batch epoch time", t);
+    r.note("paper Fig 21 ordering: DGL-FB > NeutronStar > HopGNN");
+    r
+}

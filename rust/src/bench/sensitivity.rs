@@ -1,0 +1,150 @@
+//! Sensitivity experiments: Fig 20 (GPU utilization), Fig 22 (batch size
+//! & feature dim), Fig 23 (fanout & machine count).
+
+use super::{Report, Scale};
+use crate::cluster::ModelFamily;
+use crate::config::RunConfig;
+use super::cache;
+use crate::coordinator::StrategyKind;
+use crate::util::table::{fmt_secs, Table};
+
+fn cfg_for(scale: Scale, ds: &str, model: ModelFamily) -> RunConfig {
+    RunConfig {
+        dataset: ds.into(),
+        model,
+        layers: model.default_layers(),
+        batch_size: scale.batch,
+        epochs: scale.epochs,
+        max_iterations: scale.max_iterations,
+        vmax: RunConfig::full_sim_vmax(model.default_layers(), 10),
+        fanout: 10,
+        ..Default::default()
+    }
+}
+
+/// Fig 20: GPU busy-fraction proxy (paper: HopGNN keeps the GPU busy 52%
+/// of the time vs 13% / 18% for DGL / P3).
+pub fn fig20_gpu_util(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig20",
+        "GPU busy fraction (paper: HopGNN 52% vs DGL 13% / P3 18%)",
+    );
+    let ds = if scale.quick { "products-s" } else { "uk-s" };
+    let _ = cache::dataset(ds); // warm the cache
+    let cfg = cfg_for(scale, ds, ModelFamily::Gat);
+    let mut t = Table::new(["system", "busy %", "epoch"]);
+    for kind in [StrategyKind::Dgl, StrategyKind::P3, StrategyKind::HopGnn] {
+        let m = cache::run(&cfg, kind);
+        t.row([
+            kind.name().to_string(),
+            format!("{:.1}", m.gpu_busy_fraction * 100.0),
+            fmt_secs(m.epoch_time),
+        ]);
+    }
+    r.section(format!("GAT on {ds}"), t);
+    r.note("busy = fraction of wall time the simulated GPU spends in compute (idle = waiting on gather/migrate/sync)");
+    r
+}
+
+/// Fig 22a/b: batch-size and feature-dimension sweeps (GCN on Products).
+pub fn fig22_batch_featdim(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig22",
+        "sensitivity: batch size (paper: 2.2-2.8x) and feature dim (paper: 2.1-2.9x)",
+    );
+
+    let mut t = Table::new(["batch", "DGL", "HopGNN", "speedup"]);
+    let batches: Vec<usize> = if scale.quick {
+        vec![256, 1024]
+    } else {
+        vec![256, 512, 1024, 2048, 4096]
+    };
+    for &b in &batches {
+        let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gcn);
+        cfg.batch_size = b;
+        let dgl = cache::run(&cfg, StrategyKind::Dgl);
+        let hop = cache::run(&cfg, StrategyKind::HopGnn);
+        t.row([
+            b.to_string(),
+            fmt_secs(dgl.epoch_time),
+            fmt_secs(hop.epoch_time),
+            format!("{:.2}x", dgl.epoch_time / hop.epoch_time),
+        ]);
+    }
+    r.section("(a) batch-size sweep, GCN on products-s", t);
+
+    let mut t = Table::new(["feat dim", "DGL", "HopGNN", "speedup"]);
+    let dims: Vec<usize> = if scale.quick {
+        vec![100, 400]
+    } else {
+        vec![50, 100, 200, 400, 600]
+    };
+    for &fd in &dims {
+        let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gcn);
+        cfg.feat_dim_override = Some(fd);
+        let dgl = cache::run(&cfg, StrategyKind::Dgl);
+        let hop = cache::run(&cfg, StrategyKind::HopGnn);
+        t.row([
+            fd.to_string(),
+            fmt_secs(dgl.epoch_time),
+            fmt_secs(hop.epoch_time),
+            format!("{:.2}x", dgl.epoch_time / hop.epoch_time),
+        ]);
+    }
+    r.section("(b) feature-dimension sweep", t);
+    r.note("paper: speedup grows with feature dim (gather fraction rises 36.8% -> 72%)");
+    r
+}
+
+/// Fig 23a/b: fanout sweep and machine-count sweep.
+pub fn fig23_fanout_machines(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "fig23",
+        "sensitivity: fanout (paper: ~2.3x avg) and #machines (paper: 1.69x at 2 -> 2.55x at 6)",
+    );
+
+    let mut t = Table::new(["fanout", "DGL", "HopGNN", "speedup"]);
+    let fanouts: Vec<usize> = if scale.quick {
+        vec![5, 10]
+    } else {
+        vec![5, 10, 20, 40]
+    };
+    for &f in &fanouts {
+        let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gcn);
+        cfg.fanout = f;
+        cfg.vmax = (1 + f + f * f).min(512).next_power_of_two();
+        let dgl = cache::run(&cfg, StrategyKind::Dgl);
+        let hop = cache::run(&cfg, StrategyKind::HopGnn);
+        t.row([
+            f.to_string(),
+            fmt_secs(dgl.epoch_time),
+            fmt_secs(hop.epoch_time),
+            format!("{:.2}x", dgl.epoch_time / hop.epoch_time),
+        ]);
+    }
+    r.section("(a) fanout sweep, GCN on products-s", t);
+
+    let mut t = Table::new(["#machines", "DGL", "HopGNN", "speedup"]);
+    let machines: Vec<usize> = if scale.quick {
+        vec![2, 4]
+    } else {
+        vec![2, 3, 4, 5, 6]
+    };
+    for &n in &machines {
+        let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gcn);
+        cfg.num_servers = n;
+        // weak scaling, as in the paper: per-server batch share fixed
+        cfg.batch_size = (scale.batch / 4) * n;
+        let dgl = cache::run(&cfg, StrategyKind::Dgl);
+        let hop = cache::run(&cfg, StrategyKind::HopGnn);
+        t.row([
+            n.to_string(),
+            fmt_secs(dgl.epoch_time),
+            fmt_secs(hop.epoch_time),
+            format!("{:.2}x", dgl.epoch_time / hop.epoch_time),
+        ]);
+    }
+    r.section("(b) machine-count sweep", t);
+    r.note("paper: HopGNN's advantage grows with scale (more servers = worse DGL locality)");
+    r
+}

@@ -1,0 +1,133 @@
+//! Per-server virtual clocks.
+//!
+//! Each simulated GPU server advances its own clock through gather /
+//! compute / migration phases; synchronization points (gradient allreduce,
+//! HopGNN's per-time-step model migration barrier) set every participant
+//! to the maximum — that *is* the synchronization overhead the paper's
+//! merging technique (§5.3) trades against locality.
+
+#[derive(Clone, Debug)]
+pub struct Clocks {
+    t: Vec<f64>,
+    /// accumulated busy (compute) time per server — the GPU-utilization
+    /// proxy for Fig 20.
+    busy: Vec<f64>,
+}
+
+impl Clocks {
+    pub fn new(num_servers: usize) -> Self {
+        Self {
+            t: vec![0.0; num_servers],
+            busy: vec![0.0; num_servers],
+        }
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.t.len()
+    }
+
+    #[inline]
+    pub fn now(&self, server: usize) -> f64 {
+        self.t[server]
+    }
+
+    /// Advance `server` by `dt` (idle/transfer time).
+    #[inline]
+    pub fn advance(&mut self, server: usize, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative time {dt}");
+        self.t[server] += dt;
+    }
+
+    /// Advance `server` by `dt` of *compute* (counted busy).
+    #[inline]
+    pub fn advance_busy(&mut self, server: usize, dt: f64) {
+        self.advance(server, dt);
+        self.busy[server] += dt;
+    }
+
+    /// Barrier across all servers: everyone waits for the slowest.
+    pub fn barrier(&mut self) -> f64 {
+        let max = self.max();
+        for t in self.t.iter_mut() {
+            *t = max;
+        }
+        max
+    }
+
+    /// Barrier across a subset.
+    pub fn barrier_among(&mut self, servers: &[usize]) -> f64 {
+        let max = servers
+            .iter()
+            .map(|&s| self.t[s])
+            .fold(f64::MIN, f64::max);
+        for &s in servers {
+            self.t[s] = max;
+        }
+        max
+    }
+
+    pub fn max(&self) -> f64 {
+        self.t.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn busy_fraction(&self) -> f64 {
+        let total = self.max() * self.t.len() as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.busy.iter().sum::<f64>() / total
+    }
+
+    pub fn busy_time(&self, server: usize) -> f64 {
+        self.busy[server]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_and_barrier() {
+        let mut c = Clocks::new(3);
+        c.advance(0, 1.0);
+        c.advance(1, 3.0);
+        c.advance_busy(2, 2.0);
+        assert_eq!(c.max(), 3.0);
+        let t = c.barrier();
+        assert_eq!(t, 3.0);
+        for s in 0..3 {
+            assert_eq!(c.now(s), 3.0);
+        }
+    }
+
+    #[test]
+    fn busy_fraction_counts_only_compute() {
+        let mut c = Clocks::new(2);
+        c.advance_busy(0, 1.0); // busy
+        c.advance(0, 1.0); // idle
+        c.barrier(); // server 1 idles 2.0
+        // total wall = 2.0 * 2 servers = 4.0; busy = 1.0
+        assert!((c.busy_fraction() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subset_barrier_leaves_others() {
+        let mut c = Clocks::new(3);
+        c.advance(0, 5.0);
+        c.barrier_among(&[0, 1]);
+        assert_eq!(c.now(1), 5.0);
+        assert_eq!(c.now(2), 0.0);
+    }
+
+    #[test]
+    fn monotonic_clocks() {
+        let mut c = Clocks::new(2);
+        let mut prev = 0.0;
+        for i in 0..50 {
+            c.advance(0, (i % 3) as f64 * 0.1);
+            assert!(c.now(0) >= prev);
+            prev = c.now(0);
+        }
+    }
+}

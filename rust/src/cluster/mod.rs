@@ -1,0 +1,16 @@
+//! The simulated GPU cluster: per-server virtual clocks, the network
+//! cost model with exact byte accounting, and the compute cost model.
+//!
+//! Substitution note (DESIGN.md §2): the paper's 4×A100 + 10 GbE testbed
+//! is replaced by N simulated servers. Coordination logic (who fetches
+//! what, when models move) is identical to a real deployment; compute and
+//! network *times* come from calibrated cost models, while *byte counts*
+//! are exact.
+
+pub mod clock;
+pub mod cost;
+pub mod network;
+
+pub use clock::Clocks;
+pub use cost::{CostModel, ModelFamily, ModelShape};
+pub use network::{NetStats, NetworkModel, TransferKind};

@@ -1,0 +1,177 @@
+//! Network cost model + exact byte accounting.
+//!
+//! The paper's testbed is 4 GPU servers on 10 Gb/s Ethernet; every win
+//! HopGNN reports is ultimately a byte-count win (features vs model vs
+//! intermediate state). This module accounts **bytes exactly** per
+//! transfer kind and per (src, dst) link, and derives time from the
+//! standard linear model `t = latency + bytes / bandwidth`.
+
+/// What is being moved — the categories the paper's figures break out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransferKind {
+    /// Raw vertex features (the model-centric bottleneck, Fig 4).
+    Feature,
+    /// Model parameters (HopGNN migration; P³'s initial scatter).
+    ModelParams,
+    /// Accumulated gradients travelling with a migrating model.
+    Gradient,
+    /// Partial aggregations / saved activations (Naive-FC, Fig 6-7).
+    Intermediate,
+    /// Hidden-layer embeddings (P³'s push-pull).
+    Hidden,
+    /// Control messages (root redistribution etc.).
+    Control,
+}
+
+pub const NUM_KINDS: usize = 6;
+
+impl TransferKind {
+    pub fn index(self) -> usize {
+        match self {
+            TransferKind::Feature => 0,
+            TransferKind::ModelParams => 1,
+            TransferKind::Gradient => 2,
+            TransferKind::Intermediate => 3,
+            TransferKind::Hidden => 4,
+            TransferKind::Control => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransferKind::Feature => "feature",
+            TransferKind::ModelParams => "model",
+            TransferKind::Gradient => "gradient",
+            TransferKind::Intermediate => "intermediate",
+            TransferKind::Hidden => "hidden",
+            TransferKind::Control => "control",
+        }
+    }
+}
+
+/// Linear network model: `t = latency + bytes / bandwidth`.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Per-message latency in seconds (RPC + kernel + switch).
+    pub latency: f64,
+    /// Effective bandwidth, bytes/second.
+    pub bandwidth: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        // 10 GbE: 1.25 GB/s line rate, ~1.0 GB/s effective after
+        // TCP/gRPC overheads (the paper's own stack is Golang+gRPC).
+        Self {
+            latency: 50e-6,
+            bandwidth: 1.0e9,
+        }
+    }
+}
+
+impl NetworkModel {
+    #[inline]
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+}
+
+/// Byte + message accounting across the simulated cluster.
+#[derive(Clone, Debug)]
+pub struct NetStats {
+    num_servers: usize,
+    /// bytes[kind]
+    pub bytes_by_kind: [u64; NUM_KINDS],
+    /// messages[kind]
+    pub msgs_by_kind: [u64; NUM_KINDS],
+    /// per-link bytes: link[src * n + dst]
+    pub link_bytes: Vec<u64>,
+}
+
+impl NetStats {
+    pub fn new(num_servers: usize) -> Self {
+        Self {
+            num_servers,
+            bytes_by_kind: [0; NUM_KINDS],
+            msgs_by_kind: [0; NUM_KINDS],
+            link_bytes: vec![0; num_servers * num_servers],
+        }
+    }
+
+    /// Record a transfer and return its modeled duration.
+    pub fn record(
+        &mut self,
+        net: &NetworkModel,
+        src: usize,
+        dst: usize,
+        bytes: u64,
+        kind: TransferKind,
+    ) -> f64 {
+        debug_assert!(src < self.num_servers && dst < self.num_servers);
+        if src == dst {
+            return 0.0; // local: no network cost, not counted
+        }
+        self.bytes_by_kind[kind.index()] += bytes;
+        self.msgs_by_kind[kind.index()] += 1;
+        self.link_bytes[src * self.num_servers + dst] += bytes;
+        net.transfer_time(bytes)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_by_kind.iter().sum()
+    }
+
+    pub fn bytes(&self, kind: TransferKind) -> u64 {
+        self.bytes_by_kind[kind.index()]
+    }
+
+    /// Byte-conservation invariant: per-kind totals == per-link totals.
+    pub fn validate(&self) -> Result<(), String> {
+        let by_link: u64 = self.link_bytes.iter().sum();
+        let by_kind: u64 = self.total_bytes();
+        if by_link != by_kind {
+            return Err(format!(
+                "byte accounting mismatch: links {by_link} != kinds {by_kind}"
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_time_model() {
+        let net = NetworkModel {
+            latency: 1e-4,
+            bandwidth: 1e9,
+        };
+        assert!((net.transfer_time(0) - 1e-4).abs() < 1e-12);
+        assert!((net.transfer_time(1_000_000_000) - 1.0001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn local_transfers_are_free_and_uncounted() {
+        let net = NetworkModel::default();
+        let mut s = NetStats::new(4);
+        let t = s.record(&net, 2, 2, 1 << 20, TransferKind::Feature);
+        assert_eq!(t, 0.0);
+        assert_eq!(s.total_bytes(), 0);
+    }
+
+    #[test]
+    fn accounting_by_kind_and_link() {
+        let net = NetworkModel::default();
+        let mut s = NetStats::new(3);
+        s.record(&net, 0, 1, 100, TransferKind::Feature);
+        s.record(&net, 0, 1, 50, TransferKind::Feature);
+        s.record(&net, 1, 2, 7, TransferKind::ModelParams);
+        assert_eq!(s.bytes(TransferKind::Feature), 150);
+        assert_eq!(s.bytes(TransferKind::ModelParams), 7);
+        assert_eq!(s.msgs_by_kind[TransferKind::Feature.index()], 2);
+        assert_eq!(s.link_bytes[0 * 3 + 1], 150);
+        s.validate().unwrap();
+    }
+}

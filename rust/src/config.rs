@@ -1,0 +1,200 @@
+//! Run configuration: one struct that fully determines an experiment.
+//!
+//! Constructible programmatically (benches), from CLI flags (`main.rs`),
+//! or from a `key = value` config file (`RunConfig::from_kv_file`) — the
+//! offline vendor set has no TOML crate, so the config format is a strict
+//! line-oriented subset of TOML.
+
+use crate::cluster::{CostModel, ModelFamily, ModelShape, NetworkModel};
+use crate::partition::PartitionAlgo;
+use crate::sampler::{SampleConfig, SamplerKind};
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub model: ModelFamily,
+    pub layers: usize,
+    pub hidden: usize,
+    pub num_servers: usize,
+    /// Global mini-batch size (roots per iteration, across all models).
+    pub batch_size: usize,
+    pub fanout: usize,
+    /// Padded micrograph size (must match an AOT artifact for real runs).
+    pub vmax: usize,
+    pub sampler: SamplerKind,
+    pub partition_algo: PartitionAlgo,
+    pub epochs: usize,
+    pub seed: u64,
+    pub net: NetworkModel,
+    pub cost: CostModel,
+    /// Cap iterations per epoch (simulation speed knob; None = full epoch).
+    pub max_iterations: Option<usize>,
+    /// Override the dataset's feature dim (Fig 22b sweeps this).
+    pub feat_dim_override: Option<usize>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "arxiv-s".into(),
+            model: ModelFamily::Gcn,
+            layers: 3,
+            hidden: 128,
+            num_servers: 4,
+            batch_size: 1024,
+            fanout: 10,
+            vmax: 128,
+            sampler: SamplerKind::NodeWise,
+            partition_algo: PartitionAlgo::MetisLike,
+            epochs: 3,
+            seed: 42,
+            net: NetworkModel::default(),
+            cost: CostModel::default(),
+            max_iterations: None,
+            feat_dim_override: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Full (uncapped) micrograph size for simulation runs: the geometric
+    /// fanout series, bounded for memory. Real PJRT runs instead use the
+    /// artifact's padded VMAX.
+    pub fn full_sim_vmax(layers: usize, fanout: usize) -> usize {
+        let mut total = 1usize;
+        let mut level = 1usize;
+        for _ in 0..layers {
+            level = level.saturating_mul(fanout);
+            total = total.saturating_add(level);
+            if total > 4096 {
+                return 4096;
+            }
+        }
+        total
+    }
+
+    pub fn model_shape(&self, feat_dim: usize, classes: usize) -> ModelShape {
+        ModelShape {
+            family: self.model,
+            layers: self.layers,
+            feat_dim,
+            hidden: self.hidden,
+            classes,
+        }
+    }
+
+    pub fn sample_config(&self) -> SampleConfig {
+        SampleConfig {
+            layers: self.layers,
+            fanout: self.fanout,
+            vmax: self.vmax,
+            kind: self.sampler,
+        }
+    }
+
+    /// Parse `key = value` lines (`#` comments, blank lines ok).
+    pub fn from_kv(text: &str) -> Result<Self, String> {
+        let mut cfg = RunConfig::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let (key, val) = (key.trim(), val.trim().trim_matches('"'));
+            cfg.set(key, val)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_kv_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {path}: {e}"))?;
+        Self::from_kv(&text)
+    }
+
+    /// Set a single field by name (shared by the kv parser and CLI flags).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<(), String> {
+        let us = |v: &str| -> Result<usize, String> {
+            v.parse().map_err(|_| format!("bad integer '{v}' for {key}"))
+        };
+        let fl = |v: &str| -> Result<f64, String> {
+            v.parse().map_err(|_| format!("bad number '{v}' for {key}"))
+        };
+        match key {
+            "dataset" => self.dataset = val.to_string(),
+            "model" => {
+                self.model = ModelFamily::from_str(val)
+                    .ok_or_else(|| format!("unknown model '{val}'"))?;
+                self.layers = self.model.default_layers();
+            }
+            "layers" => self.layers = us(val)?,
+            "hidden" => self.hidden = us(val)?,
+            "servers" | "num_servers" => self.num_servers = us(val)?,
+            "batch_size" => self.batch_size = us(val)?,
+            "fanout" => self.fanout = us(val)?,
+            "vmax" => self.vmax = us(val)?,
+            "sampler" => {
+                self.sampler = SamplerKind::from_str(val)
+                    .ok_or_else(|| format!("unknown sampler '{val}'"))?
+            }
+            "partition" => {
+                self.partition_algo = PartitionAlgo::from_str(val)
+                    .ok_or_else(|| format!("unknown partitioner '{val}'"))?
+            }
+            "epochs" => self.epochs = us(val)?,
+            "seed" => self.seed = us(val)? as u64,
+            "latency" => self.net.latency = fl(val)?,
+            "bandwidth" => self.net.bandwidth = fl(val)?,
+            "flops" => self.cost.flops_per_sec = fl(val)?,
+            "t_launch" => self.cost.t_launch = fl(val)?,
+            "t_sync" => self.cost.t_sync = fl(val)?,
+            "max_iterations" => self.max_iterations = Some(us(val)?),
+            "feat_dim" => self.feat_dim_override = Some(us(val)?),
+            _ => return Err(format!("unknown config key '{key}'")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_roundtrip() {
+        let cfg = RunConfig::from_kv(
+            "# experiment\n\
+             dataset = \"products-s\"\n\
+             model = gat\n\
+             hidden = 16\n\
+             servers = 8\n\
+             bandwidth = 2.5e9  # faster net\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, "products-s");
+        assert_eq!(cfg.model, ModelFamily::Gat);
+        assert_eq!(cfg.hidden, 16);
+        assert_eq!(cfg.num_servers, 8);
+        assert_eq!(cfg.net.bandwidth, 2.5e9);
+    }
+
+    #[test]
+    fn model_sets_default_layers() {
+        let cfg = RunConfig::from_kv("model = deepgcn").unwrap();
+        assert_eq!(cfg.layers, 7);
+        let cfg = RunConfig::from_kv("model = film").unwrap();
+        assert_eq!(cfg.layers, 10);
+    }
+
+    #[test]
+    fn bad_keys_and_values_rejected() {
+        assert!(RunConfig::from_kv("nope = 3").is_err());
+        assert!(RunConfig::from_kv("servers = many").is_err());
+        assert!(RunConfig::from_kv("model = resnet").is_err());
+        assert!(RunConfig::from_kv("just a line").is_err());
+    }
+}

@@ -1,0 +1,339 @@
+//! HopGNN (§5): feature-centric training via model migration.
+//!
+//! One iteration (Fig 9):
+//!   1. **Redistribution** — every model's mini-batch roots are grouped by
+//!      the server that homes their features (control-plane transfer of
+//!      root ids only).
+//!   2. **Micrograph generation** — each group is k-hop-sampled *at the
+//!      server that will train it* (topology is replicated, §2).
+//!   3. **T time steps** — at step t, model d sits on server
+//!      `schedule.visits[d][t]`, trains the micrographs of its root
+//!      groups assigned there (plus any groups merged in by §5.3),
+//!      accumulates gradients, then migrates (params + accumulated grads)
+//!      to its next server behind a step barrier.
+//!   4. **Allreduce** — accumulated gradients are averaged and applied.
+//!
+//! Feature flags reproduce the Fig 13 ablation: `+MG` (micrograph
+//! training only), `+PG` (adds pre-gathering §5.2), `All` (adds merging
+//! §5.3).
+
+use super::merge::{MergeController, Selection};
+use super::{SimEnv, Strategy};
+use crate::cluster::{Clocks, NetStats, TransferKind};
+use crate::featstore::pregather::PregatherPlan;
+use crate::metrics::EpochMetrics;
+use crate::sampler::Micrograph;
+
+pub struct HopGnn {
+    pub pregather: bool,
+    pub merging: bool,
+    pub selection: Selection,
+    controller: Option<MergeController>,
+    epoch_idx: u64,
+}
+
+impl HopGnn {
+    pub fn full() -> Self {
+        Self::with_flags(true, true, Selection::MinLoad)
+    }
+
+    pub fn mg_only() -> Self {
+        Self::with_flags(false, false, Selection::MinLoad)
+    }
+
+    pub fn mg_pg() -> Self {
+        Self::with_flags(true, false, Selection::MinLoad)
+    }
+
+    /// Fig 18's RD baseline: merging with random step selection.
+    pub fn random_merge() -> Self {
+        Self::with_flags(true, true, Selection::Random)
+    }
+
+    pub fn with_flags(pregather: bool, merging: bool, selection: Selection)
+                      -> Self {
+        Self {
+            pregather,
+            merging,
+            selection,
+            controller: None,
+            epoch_idx: 0,
+        }
+    }
+
+    /// Merge-controller history (epoch_time, steps) — Fig 17's series.
+    pub fn merge_history(&self) -> &[(f64, usize)] {
+        self.controller
+            .as_ref()
+            .map(|c| c.history.as_slice())
+            .unwrap_or(&[])
+    }
+}
+
+impl Strategy for HopGnn {
+    fn name(&self) -> &'static str {
+        if self.merging {
+            "HopGNN"
+        } else if self.pregather {
+            "+PG"
+        } else {
+            "+MG"
+        }
+    }
+
+    fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics {
+        let n = env.num_servers();
+        let controller = self.controller.get_or_insert_with(|| {
+            MergeController::new(n, self.merging, self.selection,
+                                 env.cfg.seed ^ 0x3E46)
+        });
+        let schedule = controller.schedule.clone();
+        let t_steps = schedule.num_steps();
+
+        let mut clocks = Clocks::new(n);
+        let mut stats = NetStats::new(n);
+        let mut m = EpochMetrics::default();
+        let mut rng = env.rng.fork(0x40B ^ self.epoch_idx);
+        self.epoch_idx += 1;
+
+        let iterations = env.epoch_iterations();
+        m.iterations = iterations.len() as u64;
+        m.time_steps_per_iter = t_steps as f64;
+        let store = env.store();
+        let param_bytes = env.shape.param_bytes();
+        let mut step_loads = vec![0u64; t_steps];
+
+        for minibatches in &iterations {
+            // (1) redistribution: group roots by home server; ship ids
+            let groups: Vec<Vec<Vec<u32>>> = minibatches
+                .iter()
+                .map(|mb| env.group_by_home(mb))
+                .collect();
+            for (d, per_server) in groups.iter().enumerate() {
+                for (s, roots) in per_server.iter().enumerate() {
+                    if s != d && !roots.is_empty() {
+                        let dt = stats.record(
+                            &env.cfg.net,
+                            d,
+                            s,
+                            4 * roots.len() as u64,
+                            TransferKind::Control,
+                        );
+                        clocks.advance(s, dt);
+                        m.time_migrate += dt;
+                    }
+                }
+            }
+
+            // (2) micrograph generation: sample each slot's groups at the
+            // server that will train them
+            // slot_mgs[t][srv] = micrographs trained on srv at step t
+            let mut slot_mgs: Vec<Vec<Vec<Micrograph>>> =
+                vec![(0..n).map(|_| Vec::new()).collect(); t_steps];
+            for d in 0..n {
+                for t in 0..t_steps {
+                    let srv = schedule.visits[d][t];
+                    for src in schedule.sources(d, t) {
+                        let roots = &groups[d][src];
+                        if roots.is_empty() {
+                            continue;
+                        }
+                        step_loads[t] += roots.len() as u64;
+                        let mgs = env.sample_batch(
+                            roots, &mut rng, srv, &mut clocks, &mut m,
+                        );
+                        slot_mgs[t][srv].extend(mgs);
+                    }
+                }
+            }
+
+            // (3a) pre-gathering (§5.2): one merged fetch per server for
+            // the whole iteration
+            if self.pregather {
+                for srv in 0..n {
+                    let steps: Vec<Vec<u32>> = (0..t_steps)
+                        .map(|t| {
+                            slot_mgs[t][srv]
+                                .iter()
+                                .flat_map(|mg| mg.vertices.iter().copied())
+                                .collect()
+                        })
+                        .collect();
+                    let plan = PregatherPlan::build(&store, srv, &steps);
+                    store.execute_sim(
+                        &plan.merged,
+                        &env.cfg.net,
+                        &env.cfg.cost,
+                        &mut clocks,
+                        &mut stats,
+                        &mut m,
+                    );
+                }
+                clocks.barrier();
+            }
+
+            // (3b) the T time steps
+            for t in 0..t_steps {
+                for srv in 0..n {
+                    let mgs = &slot_mgs[t][srv];
+                    if mgs.is_empty() {
+                        continue; // §5.1 special case: idle this step
+                    }
+                    if !self.pregather {
+                        let verts =
+                            mgs.iter().flat_map(|g| g.vertices.iter().copied());
+                        let plan = store.plan(srv, verts);
+                        store.execute_sim(
+                            &plan,
+                            &env.cfg.net,
+                            &env.cfg.cost,
+                            &mut clocks,
+                            &mut stats,
+                            &mut m,
+                        );
+                    }
+                    let v: u64 =
+                        mgs.iter().map(|g| g.num_vertices() as u64).sum();
+                    let e: u64 = mgs.iter().map(|g| g.edges.len() as u64).sum();
+                    let dt = env.cfg.cost.train_time(&env.shape, v, e);
+                    clocks.advance_busy(srv, dt);
+                    m.time_compute += dt;
+                }
+
+                // step barrier + model migration (params + accumulated
+                // grads travel together, Fig 9)
+                clocks.barrier();
+                if t + 1 < t_steps {
+                    for d in 0..n {
+                        let from = schedule.visits[d][t];
+                        let to = schedule.visits[d][t + 1];
+                        if from == to {
+                            continue;
+                        }
+                        let mut dt = stats.record(
+                            &env.cfg.net,
+                            from,
+                            to,
+                            param_bytes,
+                            TransferKind::ModelParams,
+                        );
+                        dt += stats.record(
+                            &env.cfg.net,
+                            from,
+                            to,
+                            param_bytes,
+                            TransferKind::Gradient,
+                        );
+                        clocks.advance(to, dt);
+                        m.time_migrate += dt;
+                    }
+                    for s in 0..n {
+                        clocks.advance(s, env.cfg.cost.t_sync);
+                    }
+                    m.time_sync += env.cfg.cost.t_sync;
+                    clocks.barrier();
+                }
+            }
+
+            // (4) final gradient synchronization
+            env.allreduce_grads(&mut clocks, &mut stats, &mut m);
+        }
+
+        stats.validate().expect("byte accounting");
+        m.absorb_net(&stats);
+        m.epoch_time = clocks.max();
+        m.gpu_busy_fraction = clocks.busy_fraction();
+
+        // merging feedback (§5.3): adapt the schedule between epochs
+        let controller = self.controller.as_mut().unwrap();
+        controller.end_epoch(m.epoch_time, &step_loads);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::coordinator::model_centric::ModelCentric;
+    use crate::graph::datasets::small_test_dataset;
+
+    fn cfg() -> RunConfig {
+        RunConfig {
+            batch_size: 64,
+            num_servers: 4,
+            layers: 2,
+            fanout: 4,
+            vmax: 32,
+            max_iterations: Some(4),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mg_reduces_feature_bytes_vs_dgl() {
+        // The paper's headline mechanism: micrograph training moves fewer
+        // feature bytes than model-centric training (Fig 14/15).
+        let d = small_test_dataset(30);
+        let mut dgl_env = SimEnv::new(&d, cfg());
+        let dgl = ModelCentric::new().run_epoch(&mut dgl_env);
+        let mut hop_env = SimEnv::new(&d, cfg());
+        let hop = HopGnn::mg_only().run_epoch(&mut hop_env);
+        assert!(
+            hop.bytes(TransferKind::Feature) < dgl.bytes(TransferKind::Feature),
+            "hop {} !< dgl {}",
+            hop.bytes(TransferKind::Feature),
+            dgl.bytes(TransferKind::Feature)
+        );
+        assert!(hop.miss_rate() < dgl.miss_rate());
+    }
+
+    #[test]
+    fn pregather_reduces_requests_and_transfers() {
+        let d = small_test_dataset(31);
+        let mg = HopGnn::mg_only().run_epoch(&mut SimEnv::new(&d, cfg()));
+        let pg = HopGnn::mg_pg().run_epoch(&mut SimEnv::new(&d, cfg()));
+        assert!(
+            pg.remote_requests < mg.remote_requests,
+            "pg {} !< mg {}",
+            pg.remote_requests,
+            mg.remote_requests
+        );
+        assert!(pg.remote_vertices <= mg.remote_vertices);
+        // same training schedule => same compute
+        assert!((pg.time_compute - mg.time_compute).abs() / mg.time_compute
+                < 0.05);
+    }
+
+    #[test]
+    fn merging_reduces_time_steps_over_epochs() {
+        let d = small_test_dataset(32);
+        let mut env = SimEnv::new(&d, cfg());
+        let mut strat = HopGnn::full();
+        let epochs = strat.run(&mut env, 5);
+        let first = epochs.first().unwrap().time_steps_per_iter;
+        let last = epochs.last().unwrap().time_steps_per_iter;
+        assert_eq!(first, 4.0);
+        assert!(last <= first, "steps went {first} -> {last}");
+        // controller history recorded
+        assert_eq!(strat.merge_history().len(), 5);
+    }
+
+    #[test]
+    fn models_accumulate_migration_bytes() {
+        let d = small_test_dataset(33);
+        let m = HopGnn::mg_only().run_epoch(&mut SimEnv::new(&d, cfg()));
+        assert!(m.bytes(TransferKind::ModelParams) > 0);
+        assert!(m.bytes(TransferKind::Gradient) > 0);
+        assert_eq!(m.time_steps_per_iter, 4.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let d = small_test_dataset(34);
+        let a = HopGnn::full().run_epoch(&mut SimEnv::new(&d, cfg()));
+        let b = HopGnn::full().run_epoch(&mut SimEnv::new(&d, cfg()));
+        assert_eq!(a.total_bytes(), b.total_bytes());
+        assert!((a.epoch_time - b.epoch_time).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,281 @@
+//! Micrograph merging (§5.3): the adaptive controller that folds the
+//! lightest time step into the remaining ones, trading extra remote
+//! feature fetches against fewer kernel switches and synchronizations.
+//!
+//! Schedule representation (Fig 10's matrix): `visits[d][t]` is the
+//! server hosting model `d` at time step `t` (each column is a
+//! permutation — models always train on distinct servers). `extras[d][t]`
+//! lists home servers whose root groups were merged into slot `(d, t)`:
+//! those micrographs are trained wherever model `d` is, with their
+//! features fetched from the (removed) home server.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub visits: Vec<Vec<usize>>,
+    pub extras: Vec<Vec<Vec<usize>>>,
+}
+
+impl Schedule {
+    /// Initial round-robin schedule: T = N, model d at server (d+t) % N.
+    pub fn round_robin(num_servers: usize) -> Self {
+        let visits = (0..num_servers)
+            .map(|d| (0..num_servers).map(|t| (d + t) % num_servers).collect())
+            .collect();
+        let extras = vec![vec![Vec::new(); num_servers]; num_servers];
+        Self { visits, extras }
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.visits.first().map(|v| v.len()).unwrap_or(0)
+    }
+
+    pub fn num_models(&self) -> usize {
+        self.visits.len()
+    }
+
+    /// All home servers whose root group trains in slot `(d, t)`:
+    /// the primary (visited) server plus merged extras.
+    pub fn sources(&self, d: usize, t: usize) -> Vec<usize> {
+        let mut out = vec![self.visits[d][t]];
+        out.extend(self.extras[d][t].iter().copied());
+        out
+    }
+
+    /// Remove time step `ts` and redistribute its root groups across the
+    /// surviving steps of the same model, round-robin ("as evenly as
+    /// possible", §5.3).
+    pub fn merge_step(&mut self, ts: usize) {
+        assert!(self.num_steps() > 1, "cannot merge the last step");
+        assert!(ts < self.num_steps());
+        for d in 0..self.num_models() {
+            let removed_primary = self.visits[d].remove(ts);
+            let removed_extras = self.extras[d].remove(ts);
+            let steps = self.visits[d].len();
+            let mut sources = vec![removed_primary];
+            sources.extend(removed_extras);
+            for (i, src) in sources.into_iter().enumerate() {
+                // spread across surviving steps, offset by model id so
+                // different models load different steps first
+                let slot = (d + i) % steps;
+                self.extras[d][slot].push(src);
+            }
+        }
+    }
+
+    /// Invariant (Fig 10): each model still trains every home server's
+    /// root group exactly once, and each step's primaries are distinct.
+    pub fn validate(&self, num_servers: usize) -> Result<(), String> {
+        for d in 0..self.num_models() {
+            let mut seen = vec![false; num_servers];
+            for t in 0..self.num_steps() {
+                for s in self.sources(d, t) {
+                    if seen[s] {
+                        return Err(format!(
+                            "model {d}: server {s} trained twice"
+                        ));
+                    }
+                    seen[s] = true;
+                }
+            }
+            if !seen.iter().all(|&x| x) {
+                return Err(format!("model {d}: some server never trained"));
+            }
+        }
+        for t in 0..self.num_steps() {
+            let mut seen = vec![false; num_servers];
+            for d in 0..self.num_models() {
+                let s = self.visits[d][t];
+                if seen[s] {
+                    return Err(format!(
+                        "step {t}: two models on server {s}"
+                    ));
+                }
+                seen[s] = true;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Which step to merge (Fig 18 compares the paper's min-load selection
+/// against random).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selection {
+    /// The paper's scheme: merge the step with the fewest root vertices.
+    MinLoad,
+    /// Ablation baseline (RD in Fig 18).
+    Random,
+}
+
+/// Cross-epoch adaptive controller: starting from the second epoch, merge
+/// one step per epoch while the measured epoch time keeps improving;
+/// revert the last merge and freeze once it stops (§5.3).
+pub struct MergeController {
+    pub schedule: Schedule,
+    pub enabled: bool,
+    selection: Selection,
+    prev_schedule: Option<Schedule>,
+    prev_epoch_time: Option<f64>,
+    frozen: bool,
+    rng: Rng,
+    /// (epoch, steps) history for Fig 17.
+    pub history: Vec<(f64, usize)>,
+}
+
+impl MergeController {
+    pub fn new(num_servers: usize, enabled: bool, selection: Selection,
+               seed: u64) -> Self {
+        Self {
+            schedule: Schedule::round_robin(num_servers),
+            enabled,
+            selection,
+            prev_schedule: None,
+            prev_epoch_time: None,
+            frozen: !enabled,
+            rng: Rng::new(seed),
+            history: Vec::new(),
+        }
+    }
+
+    /// Feed back one epoch's measurement. `step_loads[t]` = total root
+    /// vertices trained at step t over the epoch (the paper's Num_vertex
+    /// approximation).
+    pub fn end_epoch(&mut self, epoch_time: f64, step_loads: &[u64]) {
+        self.history.push((epoch_time, self.schedule.num_steps()));
+        if self.frozen {
+            return;
+        }
+        match self.prev_epoch_time {
+            None => {
+                // first epoch done: begin probing
+                self.prev_epoch_time = Some(epoch_time);
+                self.try_merge(step_loads);
+            }
+            Some(prev) => {
+                if epoch_time < prev * 0.995 {
+                    self.prev_epoch_time = Some(epoch_time);
+                    self.try_merge(step_loads);
+                } else {
+                    // merging made it worse: revert and freeze
+                    if let Some(s) = self.prev_schedule.take() {
+                        self.schedule = s;
+                    }
+                    self.frozen = true;
+                }
+            }
+        }
+    }
+
+    fn try_merge(&mut self, step_loads: &[u64]) {
+        if self.schedule.num_steps() <= 1 {
+            self.frozen = true;
+            return;
+        }
+        let ts = match self.selection {
+            Selection::MinLoad => step_loads
+                .iter()
+                .enumerate()
+                .take(self.schedule.num_steps())
+                .min_by_key(|(_, &l)| l)
+                .map(|(t, _)| t)
+                .unwrap_or(0),
+            Selection::Random => self.rng.below(self.schedule.num_steps()),
+        };
+        self.prev_schedule = Some(self.schedule.clone());
+        self.schedule.merge_step(ts);
+    }
+
+    pub fn frozen(&self) -> bool {
+        self.frozen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn round_robin_columns_are_permutations() {
+        let s = Schedule::round_robin(4);
+        s.validate(4).unwrap();
+        assert_eq!(s.num_steps(), 4);
+        assert_eq!(s.visits[1][2], 3);
+    }
+
+    #[test]
+    fn merge_preserves_model_root_groups() {
+        let mut s = Schedule::round_robin(4);
+        s.merge_step(1);
+        s.validate(4).unwrap();
+        assert_eq!(s.num_steps(), 3);
+        // extras were distributed
+        let extras: usize = s.extras.iter().flatten().map(|e| e.len()).sum();
+        assert_eq!(extras, 4); // one removed slot per model
+        s.merge_step(0);
+        s.validate(4).unwrap();
+        assert_eq!(s.num_steps(), 2);
+    }
+
+    #[test]
+    fn prop_merging_down_to_one_step_keeps_invariant() {
+        prop::check(
+            "merge-invariant",
+            30,
+            |r| (r.range(2, 9), r.next_u64()),
+            |&(n, seed)| {
+                let mut s = Schedule::round_robin(n);
+                let mut rng = Rng::new(seed);
+                while s.num_steps() > 1 {
+                    let ts = rng.below(s.num_steps());
+                    s.merge_step(ts);
+                    s.validate(n).map_err(|e| e)?;
+                }
+                // with one step, every model trains all n groups there
+                for d in 0..n {
+                    if s.sources(d, 0).len() != n {
+                        return Err(format!("model {d} lost groups"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn controller_probes_then_freezes_on_regression() {
+        let mut c = MergeController::new(4, true, Selection::MinLoad, 1);
+        assert_eq!(c.schedule.num_steps(), 4);
+        // epoch 0 (baseline) -> first merge
+        c.end_epoch(10.0, &[100, 50, 100, 100]);
+        assert_eq!(c.schedule.num_steps(), 3);
+        // improved -> merge again
+        c.end_epoch(8.0, &[120, 110, 120]);
+        assert_eq!(c.schedule.num_steps(), 2);
+        // regressed -> revert to 3 steps and freeze (Fig 17's trajectory)
+        c.end_epoch(9.5, &[200, 150]);
+        assert_eq!(c.schedule.num_steps(), 3);
+        assert!(c.frozen());
+        // further feedback is a no-op
+        c.end_epoch(1.0, &[1, 1, 1]);
+        assert_eq!(c.schedule.num_steps(), 3);
+    }
+
+    #[test]
+    fn min_load_picks_lightest() {
+        let mut c = MergeController::new(3, true, Selection::MinLoad, 2);
+        c.end_epoch(5.0, &[50, 10, 50]);
+        // step 1 was merged: model 0's step list is servers [0, 2]
+        assert_eq!(c.schedule.visits[0], vec![0, 2]);
+    }
+
+    #[test]
+    fn disabled_controller_never_merges() {
+        let mut c = MergeController::new(4, false, Selection::MinLoad, 3);
+        c.end_epoch(10.0, &[1, 1, 1, 1]);
+        c.end_epoch(5.0, &[1, 1, 1, 1]);
+        assert_eq!(c.schedule.num_steps(), 4);
+    }
+}

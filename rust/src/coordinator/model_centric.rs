@@ -1,0 +1,156 @@
+//! Model-centric baseline: DGL-style data-parallel training (§2, Fig 3).
+//!
+//! Models never move. Each iteration every server samples the subgraph
+//! for its mini-batch, gathers all its vertex features (remote misses go
+//! over the network — the Fig 4 bottleneck), computes locally, and
+//! allreduces gradients.
+
+use super::{SimEnv, Strategy};
+use crate::cluster::{Clocks, NetStats};
+use crate::metrics::EpochMetrics;
+use crate::sampler::Subgraph;
+
+pub struct ModelCentric {
+    epoch_idx: u64,
+}
+
+impl ModelCentric {
+    pub fn new() -> Self {
+        Self { epoch_idx: 0 }
+    }
+}
+
+impl Default for ModelCentric {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Strategy for ModelCentric {
+    fn name(&self) -> &'static str {
+        "DGL"
+    }
+
+    fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics {
+        let n = env.num_servers();
+        let mut clocks = Clocks::new(n);
+        let mut stats = NetStats::new(n);
+        let mut m = EpochMetrics::default();
+        let mut rng = env.rng.fork(0xD61 ^ self.epoch_idx);
+        self.epoch_idx += 1;
+
+        let iterations = env.epoch_iterations();
+        m.iterations = iterations.len() as u64;
+        m.time_steps_per_iter = 1.0;
+        let store = env.store();
+
+        for minibatches in &iterations {
+            for (server, roots) in minibatches.iter().enumerate() {
+                // sample the mini-batch's micrographs; DGL merges them
+                // into one subgraph (dedup) before gathering
+                let mgs = env.sample_batch(roots, &mut rng, server,
+                                           &mut clocks, &mut m);
+                let sub = Subgraph::union_of(&mgs);
+
+                // gather: one batched fetch per remote source
+                let plan = store.plan(server, sub.vertices.iter().copied());
+                store.execute_sim(&plan, &env.cfg.net, &env.cfg.cost,
+                                  &mut clocks, &mut stats, &mut m);
+
+                // compute on the deduplicated subgraph
+                let edges: u64 = mgs.iter()
+                    .map(|g| g.edges.len() as u64)
+                    .sum::<u64>();
+                // dedup factor: unique vertices / summed vertices
+                let summed: u64 = mgs.iter()
+                    .map(|g| g.num_vertices() as u64)
+                    .sum::<u64>();
+                let dedup = if summed == 0 {
+                    1.0
+                } else {
+                    sub.vertices.len() as f64 / summed as f64
+                };
+                let e_ded = (edges as f64 * dedup) as u64;
+                let dt = env.cfg.cost.train_time(
+                    &env.shape,
+                    sub.vertices.len() as u64,
+                    e_ded,
+                );
+                clocks.advance_busy(server, dt);
+                m.time_compute += dt;
+            }
+            env.allreduce_grads(&mut clocks, &mut stats, &mut m);
+        }
+
+        stats.validate().expect("byte accounting");
+        m.absorb_net(&stats);
+        m.epoch_time = clocks.max();
+        m.gpu_busy_fraction = clocks.busy_fraction();
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::graph::datasets::tiny_test_dataset;
+
+    #[test]
+    fn epoch_produces_sane_metrics() {
+        let d = tiny_test_dataset(20);
+        let cfg = RunConfig {
+            batch_size: 40,
+            num_servers: 4,
+            max_iterations: Some(3),
+            ..Default::default()
+        };
+        let mut env = SimEnv::new(&d, cfg);
+        let mut s = ModelCentric::new();
+        let m = s.run_epoch(&mut env);
+        assert!(m.epoch_time > 0.0);
+        assert!(m.time_gather > 0.0, "must gather remotely");
+        assert!(m.time_compute > 0.0);
+        assert!(m.remote_vertices > 0);
+        assert!(m.local_hits > 0);
+        assert!(m.miss_rate() > 0.0 && m.miss_rate() < 1.0);
+        assert_eq!(m.iterations, 3);
+    }
+
+    #[test]
+    fn gather_dominates_on_highdim_features() {
+        // The Fig 4 observation: with large features over a slow network,
+        // gathering is the bottleneck.
+        let d = crate::graph::datasets::small_test_dataset(21);
+        let cfg = RunConfig {
+            batch_size: 256,
+            num_servers: 4,
+            max_iterations: Some(3),
+            feat_dim_override: Some(600),
+            ..Default::default()
+        };
+        let mut env = SimEnv::new(&d, cfg);
+        let m = ModelCentric::new().run_epoch(&mut env);
+        assert!(
+            m.gather_fraction() > 0.4,
+            "gather fraction {} too low",
+            m.gather_fraction()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = tiny_test_dataset(22);
+        let cfg = RunConfig {
+            batch_size: 40,
+            num_servers: 2,
+            max_iterations: Some(2),
+            ..Default::default()
+        };
+        let m1 = ModelCentric::new().run_epoch(&mut SimEnv::new(&d, cfg.clone()));
+        let m2 = ModelCentric::new().run_epoch(&mut SimEnv::new(&d, cfg));
+        assert_eq!(m1.total_bytes(), m2.total_bytes());
+        assert_eq!(m1.remote_vertices, m2.remote_vertices);
+        assert!((m1.epoch_time - m2.epoch_time).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,223 @@
+//! The naive feature-centric strawman (§3.2, Fig 6-7).
+//!
+//! The model migrates to wherever missing features live, layer by layer,
+//! dragging its parameters *and* all intermediate state (partial
+//! aggregations at input width + saved activations for backward) along.
+//! With a subgraph scattered over many servers this moves up to 2.59× the
+//! bytes of model-centric training (Fig 7) — the motivation for
+//! micrographs.
+//!
+//! Accounting model: for each mini-batch's subgraph, the model visits
+//! every server holding any of the subgraph's features (home servers in
+//! descending feature-count order, Fig 6's walk), consuming local
+//! features at each stop. Carried state:
+//!   params + partial aggregation [V_sub × F] + activations so far.
+
+use super::{SimEnv, Strategy};
+use crate::cluster::{Clocks, NetStats, TransferKind};
+use crate::metrics::EpochMetrics;
+use crate::sampler::Subgraph;
+
+pub struct NaiveFc {
+    epoch_idx: u64,
+}
+
+impl NaiveFc {
+    pub fn new() -> Self {
+        Self { epoch_idx: 0 }
+    }
+}
+
+impl Default for NaiveFc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Strategy for NaiveFc {
+    fn name(&self) -> &'static str {
+        "Naive"
+    }
+
+    fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics {
+        let n = env.num_servers();
+        let mut clocks = Clocks::new(n);
+        let mut stats = NetStats::new(n);
+        let mut m = EpochMetrics::default();
+        let mut rng = env.rng.fork(0x4A1 ^ self.epoch_idx);
+        self.epoch_idx += 1;
+
+        let iterations = env.epoch_iterations();
+        m.iterations = iterations.len() as u64;
+        let param_bytes = env.shape.param_bytes();
+        let feat_bytes = env.feat_bytes;
+        let hid_bytes = (env.shape.hidden * 4) as u64;
+        let mut steps_accum = 0f64;
+
+        for minibatches in &iterations {
+            for (d, roots) in minibatches.iter().enumerate() {
+                let mgs = env.sample_batch(roots, &mut rng, d, &mut clocks,
+                                           &mut m);
+                let sub = Subgraph::union_of(&mgs);
+                let v_sub = sub.vertices.len() as u64;
+                // rows with open aggregations = non-leaf vertices (leaves
+                // are pure feature sources, consumed where they live)
+                let nonleaf_flat: u64 = mgs
+                    .iter()
+                    .flat_map(|g| g.depth.iter())
+                    .filter(|&&dep| (dep as usize) < env.cfg.layers)
+                    .count() as u64;
+                let summed: u64 =
+                    mgs.iter().map(|g| g.num_vertices() as u64).sum();
+                let dedup = if summed == 0 {
+                    1.0
+                } else {
+                    v_sub as f64 / summed as f64
+                };
+                let open_rows = (nonleaf_flat as f64 * dedup) as u64;
+
+                // which servers hold this subgraph's features, and how many
+                let mut counts = vec![0u64; n];
+                for &v in &sub.vertices {
+                    counts[env.partition.home(v) as usize] += 1;
+                }
+                // visit order: model's own server first, then descending
+                let mut order: Vec<usize> =
+                    (0..n).filter(|&s| counts[s] > 0).collect();
+                order.sort_by_key(|&s| {
+                    (if s == d { 0 } else { 1 }, u64::MAX - counts[s])
+                });
+
+                // the walk: consume local features at each stop. Carried
+                // state = params + partial aggregations of rows whose
+                // neighborhoods are not yet fully consumed (shrinks as
+                // the walk progresses) + activations kept for backward.
+                let mut cur = d;
+                let mut consumed = 0u64;
+                for (hop, &s) in order.iter().enumerate() {
+                    if s != cur {
+                        // open-row partial sums shrink as features are
+                        // consumed; activations accumulate for backward
+                        let visited_frac =
+                            consumed as f64 / v_sub.max(1) as f64;
+                        let remaining = (open_rows as f64
+                            * (1.0 - visited_frac)) as u64;
+                        let state = param_bytes
+                            + remaining * feat_bytes        // open agg rows
+                            + open_rows * hid_bytes;        // saved acts
+                        let mut dt = stats.record(
+                            &env.cfg.net, cur, s,
+                            param_bytes.min(state),
+                            TransferKind::ModelParams,
+                        );
+                        dt += stats.record(
+                            &env.cfg.net, cur, s,
+                            state.saturating_sub(param_bytes),
+                            TransferKind::Intermediate,
+                        );
+                        clocks.advance(s, dt);
+                        m.time_migrate += dt;
+                        cur = s;
+                        steps_accum += 1.0;
+                    }
+                    // local feature read: host staging only
+                    let dt = env.cfg.cost.stage_time(counts[s] * feat_bytes);
+                    clocks.advance(s, dt);
+                    m.time_gather += dt;
+                    m.local_hits += counts[s];
+                    consumed += counts[s];
+                    // partial compute proportional to consumed share
+                    let frac = counts[s] as f64 / v_sub.max(1) as f64;
+                    let e: u64 = mgs.iter().map(|g| g.edges.len() as u64).sum();
+                    let dt = env.cfg.cost.train_time(
+                        &env.shape,
+                        (v_sub as f64 * frac) as u64,
+                        (e as f64 * frac) as u64,
+                    );
+                    clocks.advance_busy(cur, dt);
+                    m.time_compute += dt;
+                    let _ = hop;
+                }
+                // return home for the update (bwd completes along the way)
+                if cur != d {
+                    let state = param_bytes + open_rows * hid_bytes;
+                    let mut dt = stats.record(&env.cfg.net, cur, d,
+                                              param_bytes,
+                                              TransferKind::ModelParams);
+                    dt += stats.record(&env.cfg.net, cur, d,
+                                       state - param_bytes,
+                                       TransferKind::Intermediate);
+                    clocks.advance(d, dt);
+                    m.time_migrate += dt;
+                    steps_accum += 1.0;
+                }
+            }
+            env.allreduce_grads(&mut clocks, &mut stats, &mut m);
+        }
+
+        stats.validate().expect("byte accounting");
+        m.absorb_net(&stats);
+        m.epoch_time = clocks.max();
+        m.gpu_busy_fraction = clocks.busy_fraction();
+        m.time_steps_per_iter = if m.iterations == 0 {
+            0.0
+        } else {
+            steps_accum / m.iterations as f64
+        };
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::coordinator::model_centric::ModelCentric;
+    use crate::graph::datasets::tiny_test_dataset;
+
+    fn cfg(feat_dim: Option<usize>) -> RunConfig {
+        RunConfig {
+            batch_size: 40,
+            num_servers: 4,
+            max_iterations: Some(4),
+            feat_dim_override: feat_dim,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn naive_moves_intermediate_state_not_features() {
+        let d = tiny_test_dataset(50);
+        let m = NaiveFc::new().run_epoch(&mut SimEnv::new(&d, cfg(None)));
+        assert_eq!(m.bytes(TransferKind::Feature), 0, "no remote features");
+        assert!(m.bytes(TransferKind::Intermediate) > 0);
+        assert!(m.bytes(TransferKind::ModelParams) > 0);
+    }
+
+    #[test]
+    fn naive_can_move_more_bytes_than_dgl() {
+        // Fig 7: with small features (low-dim) and scattered subgraphs the
+        // intermediate state dwarfs what model-centric would have moved.
+        let d = tiny_test_dataset(51);
+        let dgl = ModelCentric::new()
+            .run_epoch(&mut SimEnv::new(&d, cfg(Some(16))));
+        let nv = NaiveFc::new().run_epoch(&mut SimEnv::new(&d, cfg(Some(16))));
+        assert!(
+            nv.total_bytes() > dgl.total_bytes(),
+            "naive {} !> dgl {}",
+            nv.total_bytes(),
+            dgl.total_bytes()
+        );
+    }
+
+    #[test]
+    fn multiple_migrations_per_iteration() {
+        let d = tiny_test_dataset(52);
+        let m = NaiveFc::new().run_epoch(&mut SimEnv::new(&d, cfg(None)));
+        assert!(
+            m.time_steps_per_iter > 2.0,
+            "walk length {}",
+            m.time_steps_per_iter
+        );
+    }
+}

@@ -1,0 +1,203 @@
+//! Distributed feature store.
+//!
+//! Each server owns the feature shard of its partition (the paper
+//! implements this as a Golang cache fronted by gRPC; here the shard map
+//! is the `Partition` and transfers run through the cluster's network
+//! accounting). The store answers one question for the strategies: *for
+//! this set of vertices needed on server `s`, what is served locally and
+//! what must move, from whom?* — plus the pre-gathering planner (§5.2)
+//! that deduplicates an entire iteration's remote fetches into one
+//! batched transfer per source server.
+
+pub mod pregather;
+
+use crate::cluster::{Clocks, CostModel, NetStats, NetworkModel, TransferKind};
+use crate::graph::datasets::Dataset;
+use crate::metrics::EpochMetrics;
+use crate::partition::Partition;
+
+/// Resolution of a feature gather for one server: which requested
+/// vertices are local, and which must be fetched from each remote server.
+/// Remote lists are deduplicated (a vertex is moved at most once per
+/// gather, like DGL's batched RPC).
+#[derive(Clone, Debug, Default)]
+pub struct GatherPlan {
+    pub server: usize,
+    pub local: Vec<u32>,
+    /// remote[src] = vertices whose features come from server `src`
+    /// (remote[server] is always empty).
+    pub remote: Vec<Vec<u32>>,
+}
+
+impl GatherPlan {
+    pub fn remote_count(&self) -> u64 {
+        self.remote.iter().map(|v| v.len() as u64).sum()
+    }
+
+    /// Number of batched fetch operations (one per non-empty source).
+    pub fn request_count(&self) -> u64 {
+        self.remote.iter().filter(|v| !v.is_empty()).count() as u64
+    }
+}
+
+/// The sharded store. Borrowing dataset + partition keeps it copy-free;
+/// all large state lives in the dataset.
+pub struct FeatureStore<'a> {
+    pub dataset: &'a Dataset,
+    pub partition: &'a Partition,
+    /// Bytes per vertex feature — normally the dataset's, but experiment
+    /// sweeps override the feature dimension (Fig 22b).
+    pub feat_bytes: u64,
+}
+
+impl<'a> FeatureStore<'a> {
+    pub fn new(dataset: &'a Dataset, partition: &'a Partition) -> Self {
+        Self {
+            dataset,
+            partition,
+            feat_bytes: dataset.feature_bytes(),
+        }
+    }
+
+    pub fn with_feat_bytes(
+        dataset: &'a Dataset,
+        partition: &'a Partition,
+        feat_bytes: u64,
+    ) -> Self {
+        Self {
+            dataset,
+            partition,
+            feat_bytes,
+        }
+    }
+
+    /// Build a gather plan for `vertices` needed on `server`. Input may
+    /// contain duplicates; each distinct vertex appears exactly once in
+    /// the plan (callers pass pre-deduplicated iteration unions when
+    /// pre-gathering, or per-step sets otherwise).
+    pub fn plan(&self, server: usize, vertices: impl IntoIterator<Item = u32>)
+                -> GatherPlan {
+        let n = self.partition.num_parts;
+        let mut plan = GatherPlan {
+            server,
+            local: Vec::new(),
+            remote: vec![Vec::new(); n],
+        };
+        let mut seen = crate::util::fxhash::FxHashSet::default();
+        for v in vertices {
+            if !seen.insert(v) {
+                continue;
+            }
+            let home = self.partition.home(v) as usize;
+            if home == server {
+                plan.local.push(v);
+            } else {
+                plan.remote[home].push(v);
+            }
+        }
+        plan
+    }
+
+    /// Account a plan's execution against the simulation: advances the
+    /// requesting server's clock by the batched transfer times + staging,
+    /// records bytes, updates hit/miss counters. Returns gather seconds.
+    pub fn execute_sim(
+        &self,
+        plan: &GatherPlan,
+        net: &NetworkModel,
+        cost: &CostModel,
+        clocks: &mut Clocks,
+        stats: &mut NetStats,
+        metrics: &mut EpochMetrics,
+    ) -> f64 {
+        let fb = self.feat_bytes;
+        let mut dt = 0.0;
+        for (src, verts) in plan.remote.iter().enumerate() {
+            if verts.is_empty() {
+                continue;
+            }
+            let bytes = fb * verts.len() as u64;
+            dt += stats.record(net, src, plan.server, bytes,
+                               TransferKind::Feature);
+        }
+        // local reads still pay host staging into the device tensor
+        let staged = (plan.local.len() as u64 + plan.remote_count()) * fb;
+        dt += cost.stage_time(staged);
+        clocks.advance(plan.server, dt);
+        metrics.time_gather += dt;
+        metrics.remote_requests += plan.request_count();
+        metrics.remote_vertices += plan.remote_count();
+        metrics.local_hits += plan.local.len() as u64;
+        dt
+    }
+
+    /// Materialize features for a real (PJRT) run, row-major [n, feat_dim].
+    /// The synthetic datasets generate features deterministically per
+    /// vertex, so remote fetches need no actual data movement in-process —
+    /// accounting still goes through `execute_sim`.
+    pub fn materialize(&self, vertices: &[u32]) -> Vec<f32> {
+        self.dataset.features_for(vertices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny_test_dataset;
+    use crate::partition::{partition, PartitionAlgo};
+
+    #[test]
+    fn plan_splits_local_remote_dedup() {
+        let d = tiny_test_dataset(1);
+        let p = partition(&d.graph, 4, PartitionAlgo::Hash, 1);
+        let fs = FeatureStore::new(&d, &p);
+        let server = 2usize;
+        let verts: Vec<u32> = (0..100).chain(0..100).collect(); // dup'd
+        let plan = fs.plan(server, verts);
+        assert!(plan.remote[server].is_empty());
+        let total = plan.local.len() + plan.remote_count() as usize;
+        assert_eq!(total, 100, "dedup failed");
+        for &v in &plan.local {
+            assert_eq!(p.home(v) as usize, server);
+        }
+        for (src, vs) in plan.remote.iter().enumerate() {
+            for &v in vs {
+                assert_eq!(p.home(v) as usize, src);
+            }
+        }
+    }
+
+    #[test]
+    fn sim_execution_accounts_bytes_and_time() {
+        let d = tiny_test_dataset(2);
+        let p = partition(&d.graph, 2, PartitionAlgo::Hash, 2);
+        let fs = FeatureStore::new(&d, &p);
+        let net = NetworkModel::default();
+        let cost = CostModel::default();
+        let mut clocks = Clocks::new(2);
+        let mut stats = NetStats::new(2);
+        let mut m = EpochMetrics::default();
+        let plan = fs.plan(0, 0..200u32);
+        let dt = fs.execute_sim(&plan, &net, &cost, &mut clocks, &mut stats,
+                                &mut m);
+        assert!(dt > 0.0);
+        assert_eq!(clocks.now(0), dt);
+        assert_eq!(clocks.now(1), 0.0);
+        assert_eq!(
+            stats.bytes(TransferKind::Feature),
+            plan.remote_count() * d.feature_bytes()
+        );
+        assert_eq!(m.remote_vertices, plan.remote_count());
+        assert_eq!(m.local_hits as usize, plan.local.len());
+        stats.validate().unwrap();
+    }
+
+    #[test]
+    fn materialize_shape() {
+        let d = tiny_test_dataset(3);
+        let p = partition(&d.graph, 2, PartitionAlgo::Hash, 3);
+        let fs = FeatureStore::new(&d, &p);
+        let x = fs.materialize(&[1, 2, 3]);
+        assert_eq!(x.len(), 3 * d.feat_dim);
+    }
+}

@@ -1,0 +1,158 @@
+//! Vertex feature pre-gathering (§5.2).
+//!
+//! Micrograph-based training runs N time steps per iteration; without
+//! pre-gathering, a server fetches each step's remote features separately
+//! and a vertex used in several steps moves several times (the Fig 9
+//! example: server 0 fetches vertex 1 at step 0 *and* step 1). Because the
+//! set of micrographs a server will train this iteration is known up
+//! front — it depends only on root homes, not on which model visits — the
+//! whole iteration's remote features can be fetched once, deduplicated,
+//! in one batched transfer per source server.
+//!
+//! `PregatherPlan::build` returns both the merged plan and the counters
+//! of what per-step fetching *would* have cost, which is exactly the
+//! comparison Fig 16 plots.
+
+use super::{FeatureStore, GatherPlan};
+
+/// Outcome of planning one server's iteration with pre-gathering.
+pub struct PregatherPlan {
+    /// The single merged gather (deduplicated union over all steps).
+    pub merged: GatherPlan,
+    /// What per-step gathering would have transferred (for Fig 16 /
+    /// ablation accounting): (requests, remote_vertices).
+    pub per_step_requests: u64,
+    pub per_step_remote_vertices: u64,
+}
+
+impl PregatherPlan {
+    /// `steps[t]` = the vertices server `server` needs at time step `t`.
+    pub fn build(
+        store: &FeatureStore,
+        server: usize,
+        steps: &[Vec<u32>],
+    ) -> PregatherPlan {
+        let mut union: Vec<u32> = Vec::new();
+        let mut per_step_requests = 0u64;
+        let mut per_step_remote_vertices = 0u64;
+        for step in steps {
+            let plan = store.plan(server, step.iter().copied());
+            per_step_requests += plan.request_count();
+            per_step_remote_vertices += plan.remote_count();
+            union.extend(step.iter().copied());
+        }
+        let merged = store.plan(server, union);
+        PregatherPlan {
+            merged,
+            per_step_requests,
+            per_step_remote_vertices,
+        }
+    }
+
+    /// Redundant vertex transfers eliminated by pre-gathering.
+    pub fn savings(&self) -> u64 {
+        self.per_step_remote_vertices - self.merged.remote_count()
+    }
+
+    /// Peak extra host memory the pre-gathered features occupy (bytes) —
+    /// the §5.2 space-overhead accounting.
+    pub fn buffer_bytes(&self, feature_bytes: u64) -> u64 {
+        self.merged.remote_count() * feature_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny_test_dataset;
+    use crate::partition::{partition, PartitionAlgo};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dedup_across_steps() {
+        let d = tiny_test_dataset(5);
+        let p = partition(&d.graph, 2, PartitionAlgo::Hash, 5);
+        let fs = FeatureStore::new(&d, &p);
+        // vertex 7 needed at both steps: per-step counts it twice,
+        // merged counts it once
+        let steps = vec![vec![7u32, 8, 9], vec![7u32, 10, 11]];
+        let plan = PregatherPlan::build(&fs, 0, &steps);
+        let merged_remote = plan.merged.remote_count();
+        assert!(plan.per_step_remote_vertices >= merged_remote);
+        let v7_remote = p.home(7) != 0;
+        if v7_remote {
+            assert_eq!(plan.savings(), 1, "vertex 7 should be deduped");
+        }
+    }
+
+    #[test]
+    fn prop_merged_equals_union_of_remote_sets() {
+        let d = tiny_test_dataset(6);
+        let p = partition(&d.graph, 4, PartitionAlgo::Hash, 6);
+        let fs = FeatureStore::new(&d, &p);
+        prop::check(
+            "pregather-union",
+            24,
+            |r: &mut Rng| {
+                let nsteps = r.range(1, 5);
+                (0..nsteps)
+                    .map(|_| {
+                        (0..r.range(1, 40))
+                            .map(|_| r.below(400) as u32)
+                            .collect::<Vec<u32>>()
+                    })
+                    .collect::<Vec<Vec<u32>>>()
+            },
+            |steps| {
+                let plan = PregatherPlan::build(&fs, 1, steps);
+                // merged remote set == dedup union of per-step remote sets
+                let mut want: std::collections::HashSet<u32> =
+                    std::collections::HashSet::new();
+                for s in steps {
+                    for &v in s {
+                        if p.home(v) != 1 {
+                            want.insert(v);
+                        }
+                    }
+                }
+                let got: std::collections::HashSet<u32> = plan
+                    .merged
+                    .remote
+                    .iter()
+                    .flatten()
+                    .copied()
+                    .collect();
+                if got != want {
+                    return Err(format!(
+                        "merged {} != union {}",
+                        got.len(),
+                        want.len()
+                    ));
+                }
+                // pre-gathering never transfers more than per-step
+                if plan.merged.remote_count() > plan.per_step_remote_vertices {
+                    return Err("merged exceeded per-step".into());
+                }
+                // requests: merged sends at most one request per source
+                if plan.merged.request_count() > p.num_parts as u64 {
+                    return Err("too many merged requests".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn buffer_bound() {
+        let d = tiny_test_dataset(7);
+        let p = partition(&d.graph, 2, PartitionAlgo::Hash, 7);
+        let fs = FeatureStore::new(&d, &p);
+        let steps = vec![(0..100u32).collect::<Vec<_>>()];
+        let plan = PregatherPlan::build(&fs, 0, &steps);
+        assert_eq!(
+            plan.buffer_bytes(d.feature_bytes()),
+            plan.merged.remote_count() * d.feature_bytes()
+        );
+    }
+}

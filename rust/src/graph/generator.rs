@@ -1,0 +1,201 @@
+//! Synthetic graph generators.
+//!
+//! The paper's locality phenomenon (Table 1) arises because real graphs
+//! have community structure that METIS-style partitioners recover. The
+//! planted-partition + power-law generator reproduces exactly that: a
+//! power-law degree sequence (Chung–Lu stubs) with a tunable fraction of
+//! intra-community edges. An R-MAT generator is included for adversarial
+//! low-locality workloads (used by ablation benches).
+
+use super::CsrGraph;
+use crate::util::rng::Rng;
+
+/// Parameters for the community-structured power-law generator.
+#[derive(Clone, Debug)]
+pub struct CommunityGraphSpec {
+    pub num_vertices: usize,
+    /// Target undirected edge count (approximate; duplicates collapse).
+    pub num_edges: usize,
+    pub num_communities: usize,
+    /// Fraction of stubs that stay within the endpoint's community.
+    pub p_intra: f64,
+    /// Power-law exponent for the degree sequence (2 < alpha <= 3.5 typical).
+    pub alpha: f64,
+    pub seed: u64,
+}
+
+impl Default for CommunityGraphSpec {
+    fn default() -> Self {
+        Self {
+            num_vertices: 10_000,
+            num_edges: 80_000,
+            num_communities: 64,
+            p_intra: 0.85,
+            alpha: 2.5,
+            seed: 1,
+        }
+    }
+}
+
+/// Result of generation: the graph plus each vertex's community id
+/// (used downstream for label synthesis, never leaked to partitioners).
+pub struct GeneratedGraph {
+    pub graph: CsrGraph,
+    pub community: Vec<u32>,
+}
+
+pub fn community_graph(spec: &CommunityGraphSpec) -> GeneratedGraph {
+    let n = spec.num_vertices;
+    let k = spec.num_communities.max(1);
+    let mut rng = Rng::new(spec.seed);
+
+    // Contiguous community blocks of roughly equal size (block layout makes
+    // the ground truth easy to reason about in tests; partitioners never
+    // see it).
+    let community: Vec<u32> = (0..n).map(|v| ((v * k) / n) as u32).collect();
+    let mut comm_start = vec![0usize; k + 1];
+    for v in 0..n {
+        comm_start[community[v] as usize + 1] = v + 1;
+    }
+    for c in 1..=k {
+        if comm_start[c] == 0 {
+            comm_start[c] = comm_start[c - 1];
+        }
+    }
+
+    // Power-law degree targets, scaled to hit num_edges total stubs.
+    let mut degs: Vec<f64> = (0..n)
+        .map(|_| 1.0 + rng.powerlaw(n, spec.alpha) as f64)
+        .collect();
+    let total: f64 = degs.iter().sum();
+    let scale = (2 * spec.num_edges) as f64 / total;
+    for d in degs.iter_mut() {
+        *d *= scale;
+    }
+
+    let mut edges = Vec::with_capacity(spec.num_edges + spec.num_edges / 8);
+    for v in 0..n {
+        let dv = degs[v];
+        let stubs = dv.floor() as usize + usize::from(rng.coin(dv.fract()));
+        let c = community[v] as usize;
+        let (cs, ce) = (comm_start[c], comm_start[c + 1]);
+        for _ in 0..stubs.div_ceil(2) {
+            // each undirected edge accounts for 2 stubs
+            let u = if ce > cs + 1 && rng.coin(spec.p_intra) {
+                rng.range(cs, ce) as u32
+            } else {
+                rng.below(n) as u32
+            };
+            if u != v as u32 {
+                edges.push((v as u32, u));
+            }
+        }
+    }
+    GeneratedGraph {
+        graph: CsrGraph::from_edges(n, &edges),
+        community,
+    }
+}
+
+/// R-MAT (Chakrabarti et al.) — skewed but community-free; the locality
+/// stress case.
+pub fn rmat_graph(n_log2: u32, num_edges: usize, seed: u64) -> CsrGraph {
+    let (a, b, c) = (0.57, 0.19, 0.19); // Graph500 defaults
+    let n = 1usize << n_log2;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(num_edges);
+    for _ in 0..num_edges {
+        let (mut x, mut y) = (0usize, 0usize);
+        for _ in 0..n_log2 {
+            let r = rng.f64();
+            let (dx, dy) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            x = (x << 1) | dx;
+            y = (y << 1) | dy;
+        }
+        if x != y {
+            edges.push((x as u32, y as u32));
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn community_graph_basic_shape() {
+        let spec = CommunityGraphSpec {
+            num_vertices: 2000,
+            num_edges: 12_000,
+            num_communities: 16,
+            ..Default::default()
+        };
+        let g = community_graph(&spec);
+        assert_eq!(g.graph.num_vertices(), 2000);
+        // duplicates collapse, so within 40% of target is fine
+        let m = g.graph.num_edges();
+        assert!(m > 7_000 && m < 16_000, "edges {m}");
+        assert_eq!(g.community.len(), 2000);
+        assert_eq!(*g.community.iter().max().unwrap(), 15);
+    }
+
+    #[test]
+    fn intra_community_fraction_dominates() {
+        let spec = CommunityGraphSpec {
+            num_vertices: 4000,
+            num_edges: 30_000,
+            num_communities: 20,
+            p_intra: 0.9,
+            ..Default::default()
+        };
+        let g = community_graph(&spec);
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for (u, v) in g.graph.edges() {
+            total += 1;
+            if g.community[u as usize] == g.community[v as usize] {
+                intra += 1;
+            }
+        }
+        let frac = intra as f64 / total as f64;
+        assert!(frac > 0.7, "intra fraction {frac}");
+    }
+
+    #[test]
+    fn degree_sequence_is_skewed() {
+        let spec = CommunityGraphSpec::default();
+        let g = community_graph(&spec).graph;
+        let mut degs: Vec<usize> =
+            (0..g.num_vertices() as u32).map(|v| g.degree(v)).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        // top 1% of vertices should hold well above 1% of edges
+        let top: usize = degs[..degs.len() / 100].iter().sum();
+        let all: usize = degs.iter().sum();
+        assert!(top as f64 / all as f64 > 0.05, "top share {}", top as f64 / all as f64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = CommunityGraphSpec::default();
+        let a = community_graph(&spec).graph;
+        let b = community_graph(&spec).graph;
+        assert_eq!(a.num_edges(), b.num_edges());
+        assert_eq!(a.neighbors(7), b.neighbors(7));
+    }
+
+    #[test]
+    fn rmat_shape() {
+        let g = rmat_graph(10, 8000, 3);
+        assert_eq!(g.num_vertices(), 1024);
+        assert!(g.num_edges() > 4000);
+    }
+}

@@ -1,0 +1,157 @@
+//! Graph substrate: CSR storage, generators, and the synthetic dataset
+//! suite standing in for the paper's OGB / WebGraph corpora (Table 2).
+
+pub mod datasets;
+pub mod generator;
+
+/// Compressed-sparse-row graph. Stored symmetrized (GNN aggregation treats
+/// edges as undirected, matching DGL's default for these benchmarks);
+/// neighbor lists are sorted and deduplicated.
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    offsets: Vec<u64>,
+    neighbors: Vec<u32>,
+}
+
+impl CsrGraph {
+    /// Build from an (unordered, possibly duplicated) undirected edge list.
+    /// Self-loops are dropped (models add their own), duplicates merged.
+    pub fn from_edges(num_vertices: usize, edges: &[(u32, u32)]) -> Self {
+        let n = num_vertices;
+        let mut deg = vec![0u64; n];
+        for &(a, b) in edges {
+            assert!((a as usize) < n && (b as usize) < n, "edge out of range");
+            if a != b {
+                deg[a as usize] += 1;
+                deg[b as usize] += 1;
+            }
+        }
+        let mut offsets = vec![0u64; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + deg[v];
+        }
+        let mut neighbors = vec![0u32; offsets[n] as usize];
+        let mut cursor: Vec<u64> = offsets[..n].to_vec();
+        for &(a, b) in edges {
+            if a != b {
+                neighbors[cursor[a as usize] as usize] = b;
+                cursor[a as usize] += 1;
+                neighbors[cursor[b as usize] as usize] = a;
+                cursor[b as usize] += 1;
+            }
+        }
+        // sort + dedup each adjacency list, then re-compact
+        let mut out_neighbors = Vec::with_capacity(neighbors.len());
+        let mut out_offsets = vec![0u64; n + 1];
+        for v in 0..n {
+            let s = offsets[v] as usize;
+            let e = offsets[v + 1] as usize;
+            let list = &mut neighbors[s..e];
+            list.sort_unstable();
+            let mut prev = None;
+            for &x in list.iter() {
+                if prev != Some(x) {
+                    out_neighbors.push(x);
+                    prev = Some(x);
+                }
+            }
+            out_offsets[v + 1] = out_neighbors.len() as u64;
+        }
+        Self {
+            offsets: out_offsets,
+            neighbors: out_neighbors,
+        }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges (each stored twice).
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.neighbors[s..e]
+    }
+
+    /// Topology volume in bytes (CSR arrays) — Table 2's Vol_G.
+    pub fn topology_bytes(&self) -> u64 {
+        (self.offsets.len() * 8 + self.neighbors.len() * 4) as u64
+    }
+
+    /// Iterate unique undirected edges (a < b).
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.num_vertices() as u32).flat_map(move |v| {
+            self.neighbors(v)
+                .iter()
+                .filter(move |&&u| v < u)
+                .map(move |&u| (v, u))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CsrGraph {
+        // 0-1, 0-2, 1-2, 2-3 with a duplicate and a self-loop thrown in
+        CsrGraph::from_edges(5, &[(0, 1), (2, 0), (1, 2), (2, 3), (1, 0), (4, 4)])
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = tiny();
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(2), &[0, 1, 3]);
+        assert_eq!(g.degree(4), 0); // self-loop dropped
+    }
+
+    #[test]
+    fn symmetric() {
+        let g = tiny();
+        for v in 0..g.num_vertices() as u32 {
+            for &u in g.neighbors(v) {
+                assert!(g.neighbors(u).contains(&v), "{u}->{v} missing");
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_dedup() {
+        let g = tiny();
+        for v in 0..g.num_vertices() as u32 {
+            let ns = g.neighbors(v);
+            for w in ns.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn edge_iterator_unique() {
+        let g = tiny();
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es, vec![(0, 1), (0, 2), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "edge out of range")]
+    fn rejects_out_of_range() {
+        CsrGraph::from_edges(2, &[(0, 5)]);
+    }
+}

@@ -1,0 +1,33 @@
+//! # HopGNN — feature-centric distributed GNN training
+//!
+//! Reproduction of *HopGNN: Boosting Distributed GNN Training Efficiency
+//! via Feature-Centric Model Migration* (CS.DC 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the distributed training coordinator: graph
+//!   substrate, partitioners, samplers, the cluster/network simulator,
+//!   the six training strategies (DGL, P³, Naive-FC, HopGNN, LO,
+//!   NeutronStar), the PJRT runtime, and the experiment harness.
+//! * **L2 (python/compile/model.py)** — GNN forward/backward in jax,
+//!   AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for aggregation,
+//!   feature transform, and GAT attention.
+//!
+//! Python never runs at training time: the rust binary loads the HLO
+//! artifacts through PJRT (`runtime::engine`) and is self-contained.
+//!
+//! Quickstart: `cargo run --release --example quickstart` — or see
+//! `README.md`.
+
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod featstore;
+pub mod graph;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod sampler;
+pub mod train;
+pub mod util;

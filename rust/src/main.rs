@@ -1,0 +1,437 @@
+//! `hopgnn` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   reproduce  regenerate paper tables/figures (DESIGN.md §5)
+//!   sim        run one (dataset, model, strategy) simulation
+//!   train      real PJRT training run (loss curve + accuracy)
+//!   partition  partition a dataset and report cut/balance/locality
+//!   calibrate  measure real PJRT step time, report effective FLOP/s
+//!   info       list datasets, artifacts, experiments
+
+use hopgnn::bench::{run_experiment, Scale, ALL_EXPERIMENTS};
+use hopgnn::cluster::ModelFamily;
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::{run_strategy, StrategyKind};
+use hopgnn::graph::datasets::{load, ALL_SPECS};
+use hopgnn::partition::{partition, PartitionAlgo};
+use hopgnn::runtime::{Engine, Manifest};
+use hopgnn::sampler::{sample_micrograph, SampleConfig, SamplerKind};
+use hopgnn::train::{OrderPolicy, Trainer};
+use hopgnn::util::cli::Cli;
+use hopgnn::util::rng::Rng;
+use hopgnn::util::table::{fmt_bytes, fmt_secs, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd {
+        "reproduce" => cmd_reproduce(rest),
+        "sim" => cmd_sim(rest),
+        "train" => cmd_train(rest),
+        "partition" => cmd_partition(rest),
+        "calibrate" => cmd_calibrate(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "hopgnn — feature-centric distributed GNN training (HopGNN reproduction)\n\n\
+     Usage: hopgnn <command> [options]\n\n\
+     Commands:\n  \
+       reproduce   regenerate paper tables/figures (--exp <id|all>, --quick)\n  \
+       sim         simulate one strategy (--dataset, --model, --strategy, ...)\n  \
+       train       real PJRT training (--dataset-size, --model, --epochs)\n  \
+       partition   partition quality report (--dataset, --algo, --servers)\n  \
+       calibrate   measure PJRT step time and effective FLOP/s\n  \
+       info        list datasets, artifacts, experiment ids\n\n\
+     Run `hopgnn <command> --help` for per-command options."
+        .to_string()
+}
+
+fn cmd_reproduce(args: Vec<String>) -> i32 {
+    let cli = Cli::new("hopgnn reproduce", "regenerate paper tables/figures")
+        .opt("exp", "all", "experiment id (fig04..fig23, table1, table3) or 'all'")
+        .opt("out", "reports", "output directory for markdown reports")
+        .flag("quick", "reduced scale (CI-sized)");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let scale = if a.has("quick") {
+        Scale::quick()
+    } else {
+        Scale::full()
+    };
+    let ids: Vec<&str> = match a.get("exp") {
+        Some("all") | None => ALL_EXPERIMENTS.to_vec(),
+        Some(id) => vec![id],
+    };
+    let out = a.get_or("out", "reports");
+    let mut failed = 0;
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        match run_experiment(id, scale) {
+            Ok(report) => {
+                println!("{}", report.render());
+                if let Err(e) = report.save(&out) {
+                    eprintln!("warning: could not save {id}: {e}");
+                }
+                eprintln!("[{id} done in {}]\n", fmt_secs(t0.elapsed().as_secs_f64()));
+            }
+            Err(e) => {
+                eprintln!("experiment {id} failed: {e}");
+                failed += 1;
+            }
+        }
+    }
+    failed
+}
+
+fn cmd_sim(args: Vec<String>) -> i32 {
+    let cli = Cli::new("hopgnn sim", "simulate one training strategy")
+        .opt("dataset", "products-s", "dataset (arxiv-s|products-s|uk-s|in-s|it-s)")
+        .opt("model", "gcn", "gcn|sage|gat|deepgcn|film")
+        .opt("strategy", "hopgnn", "dgl|p3|naive|hopgnn|+mg|+pg|lo|ns|dgl-fb")
+        .opt("servers", "4", "number of simulated GPU servers")
+        .opt("batch", "1024", "global mini-batch size")
+        .opt("hidden", "128", "hidden dimension")
+        .opt("fanout", "10", "neighbor sampling fanout")
+        .opt("epochs", "3", "epochs to simulate")
+        .opt("partition", "metis", "metis|heuristic|hash")
+        .opt("config", "", "key=value config file (overrides other flags)")
+        .opt("seed", "42", "random seed");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut cfg = if let Some(path) = a.get("config").filter(|s| !s.is_empty())
+    {
+        match RunConfig::from_kv_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    } else {
+        RunConfig::default()
+    };
+    for key in ["dataset", "model", "servers", "hidden", "fanout", "epochs",
+                "partition", "seed"] {
+        if let Some(v) = a.get(key) {
+            if let Err(e) = cfg.set(key, v) {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    cfg.batch_size = a.get_usize("batch", cfg.batch_size);
+    // simulation default: full micrograph (the 128 default is the PJRT
+    // artifact pad, not a sampling semantic)
+    cfg.vmax = RunConfig::full_sim_vmax(cfg.layers, cfg.fanout);
+    let kind = match StrategyKind::from_str(&a.get_or("strategy", "hopgnn")) {
+        Some(k) => k,
+        None => {
+            eprintln!("unknown strategy");
+            return 2;
+        }
+    };
+    let d = load(&cfg.dataset);
+    println!(
+        "dataset {}: {} vertices, {} edges, feat {}, Vol_F {}",
+        d.name,
+        d.graph.num_vertices(),
+        d.graph.num_edges(),
+        d.feat_dim,
+        fmt_bytes(d.feature_volume_bytes())
+    );
+    let m = run_strategy(&d, &cfg, kind);
+    println!("strategy {}: {}", kind.name(), m.summary());
+    println!("{}", m.breakdown_table().render());
+    0
+}
+
+fn cmd_train(args: Vec<String>) -> i32 {
+    let cli = Cli::new("hopgnn train", "real PJRT training run")
+        .opt("model", "gcn", "gcn|sage|gat (needs a matching artifact)")
+        .opt("hidden", "128", "hidden dim (must match an artifact)")
+        .opt("vertices", "8000", "synthetic dataset size")
+        .opt("epochs", "5", "training epochs")
+        .opt("batch", "64", "roots per optimizer step")
+        .opt("lr", "0.003", "Adam learning rate")
+        .opt("order", "global", "global|lo (batch-composition policy)")
+        .opt("seed", "7", "seed");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let manifest = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let model = a.get_or("model", "gcn");
+    let hidden = a.get_usize("hidden", 128);
+    let spec = match manifest.find(&model, hidden, 128) {
+        Some(s) => s,
+        None => {
+            eprintln!("no artifact for {model} h{hidden} f128; run `make artifacts`");
+            return 1;
+        }
+    };
+    let n = a.get_usize("vertices", 8000);
+    let d = hopgnn::graph::datasets::load_spec(
+        &hopgnn::graph::datasets::DatasetSpec {
+            name: "train-cli",
+            num_vertices: n,
+            num_edges: n * 7,
+            feat_dim: 128,
+            classes: 10,
+            num_communities: (n / 100).max(4),
+            train_fraction: 0.4,
+            seed: a.get_usize("seed", 7) as u64,
+        },
+    );
+    let engine = match Engine::load(spec) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine: {e:#}");
+            return 1;
+        }
+    };
+    println!("platform: {}, artifact: {}", engine.platform(), spec.name);
+    let cfgs = SampleConfig {
+        layers: spec.layers,
+        fanout: 10,
+        vmax: spec.vmax,
+        kind: SamplerKind::NodeWise,
+    };
+    let lr = a.get_f64("lr", 3e-3) as f32;
+    let mut trainer = Trainer::new(engine, cfgs, lr, a.get_usize("seed", 7) as u64);
+    let policy = if a.get_or("order", "global") == "lo" {
+        OrderPolicy::LocalityOpt
+    } else {
+        OrderPolicy::Global
+    };
+    let part = partition(&d.graph, 4, PartitionAlgo::MetisLike, 3);
+    let epochs = a.get_usize("epochs", 5);
+    let batch = a.get_usize("batch", 64);
+    for e in 0..epochs {
+        let t0 = std::time::Instant::now();
+        match trainer.train_epoch(&d, Some(&part), policy, batch) {
+            Ok(stats) => println!(
+                "epoch {e}: loss {:.4}  train-acc {:.1}%  ({} steps, {})",
+                stats.mean_loss,
+                stats.train_accuracy * 100.0,
+                stats.steps,
+                fmt_secs(t0.elapsed().as_secs_f64())
+            ),
+            Err(err) => {
+                eprintln!("epoch {e} failed: {err:#}");
+                return 1;
+            }
+        }
+    }
+    match trainer.evaluate(&d, &d.val_vertices) {
+        Ok(acc) => println!("validation accuracy: {:.2}%", acc * 100.0),
+        Err(e) => eprintln!("eval failed: {e:#}"),
+    }
+    0
+}
+
+fn cmd_partition(args: Vec<String>) -> i32 {
+    let cli = Cli::new("hopgnn partition", "partition quality report")
+        .opt("dataset", "arxiv-s", "dataset name")
+        .opt("algo", "metis", "metis|heuristic|hash")
+        .opt("servers", "4", "number of parts")
+        .opt("seed", "7", "seed");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let d = load(&a.get_or("dataset", "arxiv-s"));
+    let algo = PartitionAlgo::from_str(&a.get_or("algo", "metis")).unwrap();
+    let k = a.get_usize("servers", 4);
+    let t0 = std::time::Instant::now();
+    let p = partition(&d.graph, k, algo, a.get_usize("seed", 7) as u64);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "partitioned {} ({} vertices, {} edges) into {k} parts with {} in {}",
+        d.name,
+        d.graph.num_vertices(),
+        d.graph.num_edges(),
+        algo.name(),
+        fmt_secs(dt)
+    );
+    println!("edge cut:  {:.1}%", p.edge_cut_fraction(&d.graph) * 100.0);
+    println!("balance:   {:.3} (max/mean)", p.balance());
+    // micrograph locality sample
+    let cfg = SampleConfig {
+        layers: 2,
+        fanout: 10,
+        vmax: 256,
+        kind: SamplerKind::NodeWise,
+    };
+    let mut rng = Rng::new(1);
+    let mut acc = 0.0;
+    for _ in 0..128 {
+        let root = d.train_vertices[rng.below(d.train_vertices.len())];
+        acc += sample_micrograph(&d.graph, root, &cfg, &mut rng).locality(&p);
+    }
+    println!("R_micro:   {:.1}% (128 samples, 2L fanout 10)", acc / 128.0 * 100.0);
+    0
+}
+
+fn cmd_calibrate(args: Vec<String>) -> i32 {
+    let cli = Cli::new("hopgnn calibrate",
+                       "measure PJRT step time / effective FLOPs")
+        .opt("artifact", "", "artifact name (default: all)");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let manifest = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let filter = a.get_or("artifact", "");
+    let mut t = Table::new([
+        "artifact", "params", "step time", "eff FLOP/s",
+    ]);
+    for spec in &manifest.artifacts {
+        if !filter.is_empty() && spec.name != filter {
+            continue;
+        }
+        match calibrate_one(spec) {
+            Ok((secs, flops)) => t.row([
+                spec.name.clone(),
+                spec.param_count.to_string(),
+                fmt_secs(secs),
+                format!("{:.2e}", flops),
+            ]),
+            Err(e) => {
+                eprintln!("{}: {e:#}", spec.name);
+            }
+        }
+    }
+    println!("{}", t.render());
+    0
+}
+
+fn calibrate_one(spec: &hopgnn::runtime::ArtifactSpec)
+                 -> anyhow::Result<(f64, f64)> {
+    use hopgnn::cluster::ModelShape;
+    use hopgnn::runtime::{BatchBuffers, ParamSet};
+    let d = hopgnn::graph::datasets::load_spec(
+        &hopgnn::graph::datasets::DatasetSpec {
+            name: "calib",
+            num_vertices: 2000,
+            num_edges: 14000,
+            feat_dim: spec.feat_dim,
+            classes: spec.classes,
+            num_communities: 25,
+            train_fraction: 0.5,
+            seed: 99,
+        },
+    );
+    let mut engine = Engine::load(spec)?;
+    let params = ParamSet::init(spec, 1);
+    let cfg = SampleConfig {
+        layers: spec.layers,
+        fanout: if spec.layers > 3 { 2 } else { 10 },
+        vmax: spec.vmax,
+        kind: SamplerKind::NodeWise,
+    };
+    let mut rng = Rng::new(5);
+    let mgs: Vec<_> = (0..spec.batch)
+        .map(|i| sample_micrograph(&d.graph, (i * 31) as u32, &cfg, &mut rng))
+        .collect();
+    let mut buf = BatchBuffers::for_artifact(spec);
+    buf.pack(&mgs, &d);
+    engine.train_step_b(&params, &buf)?; // warmup
+    let mut best = f64::MAX;
+    for _ in 0..5 {
+        engine.train_step_b(&params, &buf)?;
+        best = best.min(engine.last_step_secs);
+    }
+    let v: u64 = mgs.iter().map(|m| m.num_vertices() as u64).sum();
+    let e: u64 = mgs.iter().map(|m| m.edges.len() as u64).sum();
+    let family = ModelFamily::from_str(&spec.model).unwrap();
+    let shape = ModelShape {
+        family,
+        layers: spec.layers,
+        feat_dim: spec.feat_dim,
+        hidden: spec.hidden,
+        classes: spec.classes,
+    };
+    Ok((best, shape.train_flops(v, e) / best))
+}
+
+fn cmd_info(_args: Vec<String>) -> i32 {
+    println!("datasets (synthetic stand-ins for the paper's Table 2):");
+    let mut t = Table::new(["name", "#V", "#E target", "dim", "classes"]);
+    for s in &ALL_SPECS {
+        t.row([
+            s.name.to_string(),
+            s.num_vertices.to_string(),
+            s.num_edges.to_string(),
+            s.feat_dim.to_string(),
+            s.classes.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("models: gcn, sage, gat (3L), deepgcn (7L), film (10L)");
+    println!(
+        "strategies: dgl, p3, naive, hopgnn, +mg, +pg, lo, ns, dgl-fb"
+    );
+    println!("experiments: {}", ALL_EXPERIMENTS.join(", "));
+    match Manifest::load_default() {
+        Ok(m) => {
+            println!("\nartifacts ({}):", m.dir.display());
+            for a_ in &m.artifacts {
+                println!(
+                    "  {} ({} params, batch {}, vmax {})",
+                    a_.name, a_.param_count, a_.batch, a_.vmax
+                );
+            }
+        }
+        Err(e) => println!("\nartifacts: {e}"),
+    }
+    let _ = ModelFamily::Gcn;
+    0
+}

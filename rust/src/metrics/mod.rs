@@ -1,0 +1,212 @@
+//! Epoch-level metrics: the quantities every figure in §7 reports.
+
+use crate::cluster::network::NUM_KINDS;
+use crate::cluster::{NetStats, TransferKind};
+use crate::util::table::{fmt_bytes, fmt_secs, Table};
+
+/// Everything one simulated (or real) epoch produces.
+#[derive(Clone, Debug, Default)]
+pub struct EpochMetrics {
+    /// Wall time of the epoch (max over server clocks).
+    pub epoch_time: f64,
+    /// Per-phase time sums across servers (for the Fig 4 breakdown; each
+    /// server contributes its own phase time, report as fraction of
+    /// total server-time).
+    pub time_sample: f64,
+    pub time_gather: f64,
+    pub time_compute: f64,
+    pub time_migrate: f64,
+    pub time_sync: f64,
+    /// Exact byte counts by kind (from NetStats).
+    pub bytes_by_kind: [u64; NUM_KINDS],
+    /// Remote fetch *operations* (batched requests, Fig 16 x-axis).
+    pub remote_requests: u64,
+    /// Remote vertices actually moved (feature misses, Fig 14/16).
+    pub remote_vertices: u64,
+    /// Locally served feature reads.
+    pub local_hits: u64,
+    /// GPU busy fraction proxy (Fig 20).
+    pub gpu_busy_fraction: f64,
+    /// Time steps per iteration, averaged (Fig 17).
+    pub time_steps_per_iter: f64,
+    /// Iterations in this epoch.
+    pub iterations: u64,
+}
+
+impl EpochMetrics {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_by_kind.iter().sum()
+    }
+
+    pub fn bytes(&self, kind: TransferKind) -> u64 {
+        self.bytes_by_kind[kind.index()]
+    }
+
+    /// Feature-gathering miss rate: remote / (remote + local).
+    pub fn miss_rate(&self) -> f64 {
+        let total = self.remote_vertices + self.local_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.remote_vertices as f64 / total as f64
+        }
+    }
+
+    /// Fraction of per-server time spent gathering (Fig 4's headline).
+    pub fn gather_fraction(&self) -> f64 {
+        let total = self.time_sample
+            + self.time_gather
+            + self.time_compute
+            + self.time_migrate
+            + self.time_sync;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.time_gather / total
+        }
+    }
+
+    pub fn absorb_net(&mut self, net: &NetStats) {
+        self.bytes_by_kind = net.bytes_by_kind;
+    }
+
+    /// Merge a later epoch into a running average (used by multi-epoch
+    /// runs that report the mean epoch, as the paper does: "train each
+    /// model for ten epochs and report the average").
+    pub fn average_of(epochs: &[EpochMetrics]) -> EpochMetrics {
+        let n = epochs.len().max(1) as f64;
+        let nu = epochs.len().max(1) as u64;
+        let mut out = EpochMetrics::default();
+        // sum first, divide once (per-element integer division would
+        // truncate small counters to zero)
+        for e in epochs {
+            out.epoch_time += e.epoch_time;
+            out.time_sample += e.time_sample;
+            out.time_gather += e.time_gather;
+            out.time_compute += e.time_compute;
+            out.time_migrate += e.time_migrate;
+            out.time_sync += e.time_sync;
+            for k in 0..NUM_KINDS {
+                out.bytes_by_kind[k] += e.bytes_by_kind[k];
+            }
+            out.remote_requests += e.remote_requests;
+            out.remote_vertices += e.remote_vertices;
+            out.local_hits += e.local_hits;
+            out.gpu_busy_fraction += e.gpu_busy_fraction;
+            out.time_steps_per_iter += e.time_steps_per_iter;
+            out.iterations += e.iterations;
+        }
+        out.epoch_time /= n;
+        out.time_sample /= n;
+        out.time_gather /= n;
+        out.time_compute /= n;
+        out.time_migrate /= n;
+        out.time_sync /= n;
+        for k in 0..NUM_KINDS {
+            out.bytes_by_kind[k] /= nu;
+        }
+        out.remote_requests /= nu;
+        out.remote_vertices /= nu;
+        out.local_hits /= nu;
+        out.gpu_busy_fraction /= n;
+        out.time_steps_per_iter /= n;
+        out.iterations /= nu;
+        out
+    }
+
+    /// Pretty one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "epoch {} | gather {} ({:.0}%) compute {} | {} moved (feat {}) | miss {:.1}% | busy {:.0}%",
+            fmt_secs(self.epoch_time),
+            fmt_secs(self.time_gather),
+            self.gather_fraction() * 100.0,
+            fmt_secs(self.time_compute),
+            fmt_bytes(self.total_bytes()),
+            fmt_bytes(self.bytes(TransferKind::Feature)),
+            self.miss_rate() * 100.0,
+            self.gpu_busy_fraction * 100.0,
+        )
+    }
+
+    /// Render the Fig-4-style phase breakdown.
+    pub fn breakdown_table(&self) -> Table {
+        let total = (self.time_sample
+            + self.time_gather
+            + self.time_compute
+            + self.time_migrate
+            + self.time_sync)
+            .max(1e-12);
+        let mut t = Table::new(["phase", "time", "fraction"]);
+        for (name, v) in [
+            ("sample", self.time_sample),
+            ("gather", self.time_gather),
+            ("compute", self.time_compute),
+            ("migrate", self.time_migrate),
+            ("sync", self.time_sync),
+        ] {
+            t.row([
+                name.to_string(),
+                fmt_secs(v),
+                format!("{:.1}%", v / total * 100.0),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_rate_and_fractions() {
+        let m = EpochMetrics {
+            remote_vertices: 75,
+            local_hits: 25,
+            time_gather: 3.0,
+            time_compute: 1.0,
+            ..Default::default()
+        };
+        assert!((m.miss_rate() - 0.75).abs() < 1e-12);
+        assert!((m.gather_fraction() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = EpochMetrics::default();
+        assert_eq!(m.miss_rate(), 0.0);
+        assert_eq!(m.gather_fraction(), 0.0);
+        assert_eq!(m.total_bytes(), 0);
+    }
+
+    #[test]
+    fn averaging() {
+        let a = EpochMetrics {
+            epoch_time: 2.0,
+            remote_vertices: 100,
+            local_hits: 100,
+            ..Default::default()
+        };
+        let b = EpochMetrics {
+            epoch_time: 4.0,
+            remote_vertices: 200,
+            local_hits: 200,
+            ..Default::default()
+        };
+        let avg = EpochMetrics::average_of(&[a, b]);
+        assert!((avg.epoch_time - 3.0).abs() < 1e-12);
+        assert_eq!(avg.remote_vertices, 150);
+    }
+
+    #[test]
+    fn breakdown_table_renders() {
+        let m = EpochMetrics {
+            time_gather: 0.8,
+            time_compute: 0.2,
+            ..Default::default()
+        };
+        let s = m.breakdown_table().render();
+        assert!(s.contains("80.0%"), "{s}");
+    }
+}

@@ -1,0 +1,55 @@
+//! Random hash partitioning — P³'s scheme (§2 of the P³ paper). Perfectly
+//! balanced in expectation, zero locality by construction.
+
+use super::Partition;
+use crate::graph::CsrGraph;
+
+#[inline]
+fn mix(v: u64) -> u64 {
+    // fmix64 from MurmurHash3
+    let mut h = v;
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51afd7ed558ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ceb9fe1a85ec53);
+    h ^= h >> 33;
+    h
+}
+
+pub fn partition(graph: &CsrGraph, num_parts: usize, seed: u64) -> Partition {
+    let part = (0..graph.num_vertices() as u64)
+        .map(|v| (mix(v ^ seed) % num_parts as u64) as u32)
+        .collect();
+    Partition { part, num_parts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::rmat_graph;
+
+    #[test]
+    fn balanced_in_expectation() {
+        let g = rmat_graph(12, 20_000, 1);
+        let p = partition(&g, 8, 99);
+        let sizes = p.sizes();
+        let mean = g.num_vertices() as f64 / 8.0;
+        for s in sizes {
+            assert!((s as f64 - mean).abs() / mean < 0.15, "size {s} vs {mean}");
+        }
+    }
+
+    #[test]
+    fn seed_changes_assignment() {
+        let g = rmat_graph(8, 1000, 1);
+        let a = partition(&g, 4, 1);
+        let b = partition(&g, 4, 2);
+        assert_ne!(a.part, b.part);
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = rmat_graph(8, 1000, 1);
+        assert_eq!(partition(&g, 4, 7).part, partition(&g, 4, 7).part);
+    }
+}

@@ -1,0 +1,355 @@
+//! Multilevel k-way edge-cut partitioner (METIS-style).
+//!
+//! Three phases, exactly the METIS recipe (Karypis & Kumar '98):
+//!   1. **Coarsen** — repeated heavy-edge matching collapses matched pairs
+//!      into super-vertices (edge weights accumulate) until the graph is
+//!      small (<= `COARSE_TARGET` vertices).
+//!   2. **Initial partition** — greedy BFS region growing on the coarsest
+//!      graph, weighted by vertex (cluster) sizes.
+//!   3. **Uncoarsen + refine** — project the partition back level by
+//!      level, running boundary Kernighan–Lin-style greedy moves under a
+//!      balance constraint at each level.
+//!
+//! Not a bit-for-bit METIS clone, but the same objective (min edge cut,
+//! balanced parts) and the same structure — which is all HopGNN's
+//! micrograph-locality argument needs (DESIGN.md §2).
+
+use super::Partition;
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+const MAX_LEVELS: usize = 24;
+const BALANCE_TOL: f64 = 1.08;
+const INIT_RESTARTS: usize = 4;
+
+/// Weighted graph used internally across coarsening levels.
+struct WGraph {
+    /// adjacency: per vertex, (neighbor, edge weight)
+    adj: Vec<Vec<(u32, u64)>>,
+    /// vertex weight = number of original vertices collapsed into it
+    vwgt: Vec<u64>,
+}
+
+impl WGraph {
+    fn from_csr(g: &CsrGraph) -> Self {
+        let n = g.num_vertices();
+        let mut adj = Vec::with_capacity(n);
+        for v in 0..n as u32 {
+            adj.push(g.neighbors(v).iter().map(|&u| (u, 1u64)).collect());
+        }
+        Self {
+            adj,
+            vwgt: vec![1; n],
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.adj.len()
+    }
+}
+
+pub fn partition(graph: &CsrGraph, num_parts: usize, seed: u64) -> Partition {
+    let n = graph.num_vertices();
+    if num_parts <= 1 || n <= num_parts {
+        return Partition {
+            part: vec![0; n],
+            num_parts: num_parts.max(1),
+        };
+    }
+    let mut rng = Rng::new(seed);
+
+    // ---- coarsening ----
+    // Coarsen until the graph is small relative to the part count (so the
+    // initial split sees super-vertices ≈ communities, the property the
+    // multilevel scheme depends on).
+    let coarse_target = (num_parts * 32).max(128);
+    let mut levels: Vec<WGraph> = vec![WGraph::from_csr(graph)];
+    let mut maps: Vec<Vec<u32>> = Vec::new(); // fine vertex -> coarse vertex
+    while levels.last().unwrap().len() > coarse_target && maps.len() < MAX_LEVELS {
+        let cur = levels.last().unwrap();
+        let (coarse, map) = coarsen(cur, &mut rng);
+        let stalled = coarse.len() as f64 > cur.len() as f64 * 0.95;
+        levels.push(coarse);
+        maps.push(map);
+        if stalled {
+            break; // matching stalled (e.g. star graphs)
+        }
+    }
+
+    // ---- initial partition on coarsest (best of several restarts) ----
+    let coarsest = levels.last().unwrap();
+    let mut part = initial_partition(coarsest, num_parts, &mut rng);
+    refine(coarsest, &mut part, num_parts, 8);
+    let mut best_cut = cut_weight(coarsest, &part);
+    for _ in 1..INIT_RESTARTS {
+        let mut cand = initial_partition(coarsest, num_parts, &mut rng);
+        refine(coarsest, &mut cand, num_parts, 8);
+        let c = cut_weight(coarsest, &cand);
+        if c < best_cut {
+            best_cut = c;
+            part = cand;
+        }
+    }
+
+    // ---- uncoarsen + refine ----
+    for level in (0..maps.len()).rev() {
+        let fine = &levels[level];
+        let map = &maps[level];
+        let mut fine_part = vec![0u32; fine.len()];
+        for v in 0..fine.len() {
+            fine_part[v] = part[map[v] as usize];
+        }
+        part = fine_part;
+        refine(fine, &mut part, num_parts, 3);
+    }
+
+    Partition {
+        part,
+        num_parts,
+    }
+}
+
+/// Total weight of cut edges (internal objective for restart selection).
+fn cut_weight(g: &WGraph, part: &[u32]) -> u64 {
+    let mut cut = 0u64;
+    for v in 0..g.len() {
+        for &(u, w) in &g.adj[v] {
+            if part[v] != part[u as usize] {
+                cut += w;
+            }
+        }
+    }
+    cut / 2
+}
+
+/// Heavy-edge matching: visit vertices in random order, match each
+/// unmatched vertex with its unmatched neighbor of maximum edge weight.
+fn coarsen(g: &WGraph, rng: &mut Rng) -> (WGraph, Vec<u32>) {
+    let n = g.len();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut matched = vec![u32::MAX; n];
+    let mut coarse_id = vec![u32::MAX; n];
+    let mut next_id = 0u32;
+    for &v in &order {
+        if matched[v as usize] != u32::MAX {
+            continue;
+        }
+        let mut best: Option<(u32, u64)> = None;
+        for &(u, w) in &g.adj[v as usize] {
+            if matched[u as usize] == u32::MAX && u != v {
+                if best.map(|(_, bw)| w > bw).unwrap_or(true) {
+                    best = Some((u, w));
+                }
+            }
+        }
+        match best {
+            Some((u, _)) => {
+                matched[v as usize] = u;
+                matched[u as usize] = v;
+                coarse_id[v as usize] = next_id;
+                coarse_id[u as usize] = next_id;
+            }
+            None => {
+                matched[v as usize] = v;
+                coarse_id[v as usize] = next_id;
+            }
+        }
+        next_id += 1;
+    }
+
+    let cn = next_id as usize;
+    let mut vwgt = vec![0u64; cn];
+    for v in 0..n {
+        vwgt[coarse_id[v] as usize] += g.vwgt[v];
+    }
+    let mut adj: Vec<Vec<(u32, u64)>> = vec![Vec::new(); cn];
+    // accumulate coarse edges from fine edges
+    let mut edge_acc: HashMap<(u32, u32), u64> = HashMap::new();
+    for v in 0..n {
+        let cv = coarse_id[v];
+        for &(u, w) in &g.adj[v] {
+            let cu = coarse_id[u as usize];
+            if cu != cv {
+                let key = if cv < cu { (cv, cu) } else { (cu, cv) };
+                *edge_acc.entry(key).or_insert(0) += w;
+            }
+        }
+    }
+    // sort for determinism: HashMap iteration order varies per instance,
+    // and downstream heavy-edge matching is order-sensitive
+    let mut sorted: Vec<((u32, u32), u64)> = edge_acc.into_iter().collect();
+    sorted.sort_unstable_by_key(|&(k, _)| k);
+    for ((a, b), w) in sorted {
+        // each fine edge visited twice (symmetric adjacency) -> halve
+        adj[a as usize].push((b, w / 2));
+        adj[b as usize].push((a, w / 2));
+    }
+    (WGraph { adj, vwgt }, coarse_id)
+}
+
+/// Greedy weighted BFS region growing for the initial k-way split.
+fn initial_partition(g: &WGraph, k: usize, rng: &mut Rng) -> Vec<u32> {
+    let n = g.len();
+    let total_w: u64 = g.vwgt.iter().sum();
+    let target = total_w as f64 / k as f64;
+    let mut part = vec![u32::MAX; n];
+    let mut weights = vec![0u64; k];
+    let mut frontier: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for p in 0..k {
+        // random unassigned seed
+        for _ in 0..n {
+            let v = rng.below(n) as u32;
+            if part[v as usize] == u32::MAX {
+                part[v as usize] = p as u32;
+                weights[p] += g.vwgt[v as usize];
+                frontier[p].push(v);
+                break;
+            }
+        }
+    }
+    let cap_w = (target * BALANCE_TOL) as u64;
+    let mut remaining: usize = part.iter().filter(|&&p| p == u32::MAX).count();
+    while remaining > 0 {
+        let mut progressed = false;
+        for p in 0..k {
+            if let Some(v) = frontier[p].pop() {
+                for &(u, _) in &g.adj[v as usize] {
+                    // strict per-addition cap: super-vertices must not
+                    // overshoot the balance bound
+                    if part[u as usize] == u32::MAX
+                        && weights[p] + g.vwgt[u as usize] <= cap_w
+                    {
+                        part[u as usize] = p as u32;
+                        weights[p] += g.vwgt[u as usize];
+                        frontier[p].push(u);
+                        remaining -= 1;
+                        progressed = true;
+                    }
+                }
+            }
+        }
+        if !progressed {
+            // disconnected leftovers: lightest part
+            for v in 0..n {
+                if part[v] == u32::MAX {
+                    let p = (0..k).min_by_key(|&p| weights[p]).unwrap();
+                    part[v] = p as u32;
+                    weights[p] += g.vwgt[v];
+                    frontier[p].push(v as u32);
+                    remaining -= 1;
+                }
+            }
+        }
+    }
+    part
+}
+
+/// Greedy boundary refinement: move boundary vertices to the neighboring
+/// part with maximum cut gain, subject to the balance constraint.
+fn refine(g: &WGraph, part: &mut [u32], k: usize, passes: usize) {
+    let n = g.len();
+    let total_w: u64 = g.vwgt.iter().sum();
+    let cap = (total_w as f64 / k as f64 * BALANCE_TOL) as u64;
+    let mut weights = vec![0u64; k];
+    for v in 0..n {
+        weights[part[v] as usize] += g.vwgt[v];
+    }
+    let mut conn = vec![0u64; k]; // scratch: connectivity of v to each part
+    for _ in 0..passes {
+        let mut moved = 0usize;
+        for v in 0..n {
+            if g.adj[v].is_empty() {
+                continue;
+            }
+            conn.iter_mut().for_each(|c| *c = 0);
+            for &(u, w) in &g.adj[v] {
+                conn[part[u as usize] as usize] += w;
+            }
+            let cur = part[v] as usize;
+            let (mut best_p, mut best_gain) = (cur, 0i64);
+            for p in 0..k {
+                if p == cur {
+                    continue;
+                }
+                let gain = conn[p] as i64 - conn[cur] as i64;
+                if gain > best_gain && weights[p] + g.vwgt[v] <= cap {
+                    best_gain = gain;
+                    best_p = p;
+                }
+            }
+            if best_p != cur {
+                weights[cur] -= g.vwgt[v];
+                weights[best_p] += g.vwgt[v];
+                part[v] = best_p as u32;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{community_graph, CommunityGraphSpec};
+
+    #[test]
+    fn recovers_planted_communities() {
+        // 8 well-separated communities, 4 parts: cut should be small
+        let g = community_graph(&CommunityGraphSpec {
+            num_vertices: 1600,
+            num_edges: 12_000,
+            num_communities: 8,
+            p_intra: 0.95,
+            seed: 10,
+            ..Default::default()
+        })
+        .graph;
+        let p = partition(&g, 4, 1);
+        let cut = p.edge_cut_fraction(&g);
+        assert!(cut < 0.15, "cut {cut}");
+        assert!(p.balance() < 1.25, "balance {}", p.balance());
+    }
+
+    #[test]
+    fn handles_tiny_graphs() {
+        let g = CsrGraph::from_edges(3, &[(0, 1), (1, 2)]);
+        let p = partition(&g, 2, 1);
+        p.validate().unwrap();
+        let p1 = partition(&g, 8, 1); // more parts than vertices
+        p1.validate().unwrap();
+    }
+
+    #[test]
+    fn handles_disconnected_graph() {
+        let mut edges = Vec::new();
+        for i in 0..50u32 {
+            edges.push((i * 2, i * 2 + 1)); // 50 disjoint dumbbells
+        }
+        let g = CsrGraph::from_edges(100, &edges);
+        let p = partition(&g, 4, 2);
+        p.validate().unwrap();
+        assert!(p.balance() < 1.5, "balance {}", p.balance());
+    }
+
+    #[test]
+    fn coarsening_preserves_total_vertex_weight() {
+        let g = community_graph(&CommunityGraphSpec {
+            num_vertices: 3000,
+            num_edges: 20_000,
+            seed: 3,
+            ..Default::default()
+        })
+        .graph;
+        let wg = WGraph::from_csr(&g);
+        let mut rng = Rng::new(1);
+        let (coarse, map) = coarsen(&wg, &mut rng);
+        assert!(coarse.len() < wg.len());
+        assert_eq!(coarse.vwgt.iter().sum::<u64>(), 3000);
+        assert!(map.iter().all(|&c| (c as usize) < coarse.len()));
+    }
+}

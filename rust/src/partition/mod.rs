@@ -1,0 +1,211 @@
+//! Graph partitioning: assigns every vertex (its features + adjacency) a
+//! home server. The paper's locality argument (§4, Table 1) rests on
+//! partitioners that co-locate neighbors; three algorithms are provided:
+//!
+//! * [`metis_like`] — multilevel edge-cut minimizer (stands in for METIS,
+//!   used by DGL; same objective: min cut, balanced parts).
+//! * [`heuristic`]  — BFS block growing (stands in for the BGL-style
+//!   heuristic the paper uses on graphs too big for METIS).
+//! * [`hash`]       — random hash partitioning (what P³ uses; the
+//!   no-locality baseline).
+
+pub mod hash;
+pub mod heuristic;
+pub mod metis_like;
+
+use crate::graph::CsrGraph;
+
+/// A k-way vertex partition.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// part[v] = home server of vertex v.
+    pub part: Vec<u32>,
+    pub num_parts: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionAlgo {
+    MetisLike,
+    Heuristic,
+    Hash,
+}
+
+impl PartitionAlgo {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "metis" | "metis-like" => Some(Self::MetisLike),
+            "heuristic" | "bfs" => Some(Self::Heuristic),
+            "hash" | "random" => Some(Self::Hash),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::MetisLike => "metis",
+            Self::Heuristic => "heuristic",
+            Self::Hash => "hash",
+        }
+    }
+}
+
+pub fn partition(
+    graph: &CsrGraph,
+    num_parts: usize,
+    algo: PartitionAlgo,
+    seed: u64,
+) -> Partition {
+    match algo {
+        PartitionAlgo::MetisLike => metis_like::partition(graph, num_parts, seed),
+        PartitionAlgo::Heuristic => heuristic::partition(graph, num_parts, seed),
+        PartitionAlgo::Hash => hash::partition(graph, num_parts, seed),
+    }
+}
+
+impl Partition {
+    #[inline]
+    pub fn home(&self, v: u32) -> u32 {
+        self.part[v as usize]
+    }
+
+    /// Vertices per part.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.num_parts];
+        for &p in &self.part {
+            sizes[p as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Fraction of edges crossing parts (the METIS objective).
+    pub fn edge_cut_fraction(&self, graph: &CsrGraph) -> f64 {
+        let mut cut = 0usize;
+        let mut total = 0usize;
+        for (u, v) in graph.edges() {
+            total += 1;
+            if self.home(u) != self.home(v) {
+                cut += 1;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            cut as f64 / total as f64
+        }
+    }
+
+    /// Max part size over mean part size (1.0 == perfectly balanced).
+    pub fn balance(&self) -> f64 {
+        let sizes = self.sizes();
+        let mean = self.part.len() as f64 / self.num_parts as f64;
+        sizes.iter().cloned().fold(0usize, usize::max) as f64 / mean
+    }
+
+    /// Sanity: every vertex assigned to a valid part.
+    pub fn validate(&self) -> Result<(), String> {
+        for (v, &p) in self.part.iter().enumerate() {
+            if p as usize >= self.num_parts {
+                return Err(format!("vertex {v} in invalid part {p}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{community_graph, CommunityGraphSpec};
+    use crate::util::prop;
+
+    fn test_graph(seed: u64) -> CsrGraph {
+        community_graph(&CommunityGraphSpec {
+            num_vertices: 1200,
+            num_edges: 8000,
+            num_communities: 12,
+            seed,
+            ..Default::default()
+        })
+        .graph
+    }
+
+    #[test]
+    fn all_algos_produce_valid_balanced_partitions() {
+        let g = test_graph(5);
+        for algo in [
+            PartitionAlgo::MetisLike,
+            PartitionAlgo::Heuristic,
+            PartitionAlgo::Hash,
+        ] {
+            for k in [2usize, 4, 8] {
+                let p = partition(&g, k, algo, 7);
+                p.validate().unwrap();
+                assert_eq!(p.part.len(), g.num_vertices());
+                assert!(
+                    p.balance() < 1.35,
+                    "{:?} k={k} imbalance {}",
+                    algo,
+                    p.balance()
+                );
+                // every part non-empty
+                assert!(p.sizes().iter().all(|&s| s > 0), "{algo:?} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn locality_ranking_metis_beats_hash() {
+        let g = test_graph(6);
+        let cut_metis =
+            partition(&g, 4, PartitionAlgo::MetisLike, 7).edge_cut_fraction(&g);
+        let cut_heur =
+            partition(&g, 4, PartitionAlgo::Heuristic, 7).edge_cut_fraction(&g);
+        let cut_hash =
+            partition(&g, 4, PartitionAlgo::Hash, 7).edge_cut_fraction(&g);
+        assert!(
+            cut_metis < cut_hash * 0.6,
+            "metis {cut_metis} vs hash {cut_hash}"
+        );
+        assert!(
+            cut_heur < cut_hash * 0.9,
+            "heuristic {cut_heur} vs hash {cut_hash}"
+        );
+    }
+
+    #[test]
+    fn prop_partition_covers_all_vertices() {
+        prop::check(
+            "partition-covers",
+            12,
+            |r| (r.range(50, 400), r.next_u64()),
+            |&(n, seed)| {
+                let g = community_graph(&CommunityGraphSpec {
+                    num_vertices: n,
+                    num_edges: n * 6,
+                    num_communities: 8,
+                    seed,
+                    ..Default::default()
+                })
+                .graph;
+                for algo in [
+                    PartitionAlgo::MetisLike,
+                    PartitionAlgo::Heuristic,
+                    PartitionAlgo::Hash,
+                ] {
+                    let p = partition(&g, 4, algo, seed);
+                    p.validate().map_err(|e| format!("{algo:?}: {e}"))?;
+                    if p.part.len() != n {
+                        return Err(format!("{algo:?}: wrong length"));
+                    }
+                    if p.balance() > 1.6 {
+                        return Err(format!(
+                            "{algo:?}: imbalance {}",
+                            p.balance()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

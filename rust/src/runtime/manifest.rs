@@ -1,0 +1,204 @@
+//! Artifact manifest: the Rust<->python ABI, produced by
+//! `python/compile/aot.py` as `artifacts/manifest.json`.
+//!
+//! Input order of every `*.train.hlo.txt`: params (in `params` order),
+//! then `adj [B, L, V, V] f32`, `x [B, V, F] f32`, `labels [B] i32`.
+//! Output tuple: `(loss f32[], correct i32[], grads...)` with grads in
+//! the same order as params.
+
+use crate::util::json;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub model: String,
+    pub layers: usize,
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub vmax: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+    pub train_hlo: PathBuf,
+    pub predict_hlo: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Default artifact directory: $HOPGNN_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Self, String> {
+        let dir = std::env::var("HOPGNN_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let s = |k: &str| -> Result<String, String> {
+                a.get(k)
+                    .and_then(|x| x.as_str())
+                    .map(|x| x.to_string())
+                    .ok_or_else(|| format!("artifact missing '{k}'"))
+            };
+            let u = |k: &str| -> Result<usize, String> {
+                a.get(k)
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| format!("artifact missing '{k}'"))
+            };
+            let mut params = Vec::new();
+            for p in a
+                .get("params")
+                .and_then(|x| x.as_arr())
+                .ok_or("artifact missing 'params'")?
+            {
+                let name = p
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .ok_or("param missing name")?
+                    .to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(|x| x.as_arr())
+                    .ok_or("param missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect();
+                params.push(ParamSpec { name, shape });
+            }
+            artifacts.push(ArtifactSpec {
+                name: s("name")?,
+                model: s("model")?,
+                layers: u("layers")?,
+                feat_dim: u("feat_dim")?,
+                hidden: u("hidden")?,
+                classes: u("classes")?,
+                vmax: u("vmax")?,
+                batch: u("batch")?,
+                param_count: u("param_count")?,
+                params,
+                train_hlo: dir.join(s("train_hlo")?),
+                predict_hlo: dir.join(s("predict_hlo")?),
+            });
+        }
+        Ok(Self { artifacts, dir })
+    }
+
+    /// Find an artifact matching (model, hidden, feat_dim); layers must
+    /// match the model's default.
+    pub fn find(&self, model: &str, hidden: usize, feat_dim: usize)
+                -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| {
+            a.model == model && a.hidden == hidden && a.feat_dim == feat_dim
+        })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+impl ArtifactSpec {
+    /// Total f32 scalars across all parameters.
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "artifacts": [{
+            "name": "gcn_l3_h128_f128_v128_b8",
+            "model": "gcn", "layers": 3, "feat_dim": 128, "hidden": 128,
+            "classes": 10, "vmax": 128, "batch": 8, "param_count": 34314,
+            "params": [
+                {"name": "w0", "shape": [128, 128]},
+                {"name": "b0", "shape": [128]}
+            ],
+            "train_hlo": "gcn.train.hlo.txt",
+            "predict_hlo": "gcn.predict.hlo.txt"
+        }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.model, "gcn");
+        assert_eq!(a.params[0].shape, vec![128, 128]);
+        assert_eq!(a.total_params(), 128 * 128 + 128);
+        assert_eq!(a.train_hlo, PathBuf::from("/tmp/a/gcn.train.hlo.txt"));
+    }
+
+    #[test]
+    fn find_by_shape() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert!(m.find("gcn", 128, 128).is_some());
+        assert!(m.find("gcn", 16, 128).is_none());
+        assert!(m.by_name("gcn_l3_h128_f128_v128_b8").is_some());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse("not json", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // integration smoke: only runs when `make artifacts` has been run
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(!m.artifacts.is_empty());
+            for a in &m.artifacts {
+                assert!(a.total_params() == a.param_count,
+                        "{}: param mismatch", a.name);
+            }
+        }
+    }
+}

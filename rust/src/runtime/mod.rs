@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! Rust training path. Python only runs at `make artifacts` time.
+
+pub mod engine;
+pub mod manifest;
+pub mod optimizer;
+pub mod tensor;
+
+pub use engine::{Engine, StepOutput};
+pub use manifest::{ArtifactSpec, Manifest};
+pub use optimizer::{Adam, ParamSet, Sgd};
+pub use tensor::BatchBuffers;

@@ -1,0 +1,247 @@
+//! Parameter state + optimizers, operating on flat f32 vectors in the
+//! manifest's parameter order. The optimizer lives in Rust (L3): the AOT
+//! artifacts return gradients; accumulation (HopGNN §5.1), averaging
+//! across models, and the update all happen here.
+
+use crate::runtime::manifest::ArtifactSpec;
+use crate::util::rng::Rng;
+
+/// Flat parameter vectors in manifest order.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// Glorot-uniform weights (2-D), zero biases (1-D) — matching the
+    /// python `init_params` scheme.
+    pub fn init(spec: &ArtifactSpec, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let tensors = spec
+            .params
+            .iter()
+            .map(|p| {
+                if p.shape.len() == 2 {
+                    let lim = (6.0 / (p.shape[0] + p.shape[1]) as f64).sqrt();
+                    (0..p.len())
+                        .map(|_| rng.f32_range(-(lim as f32), lim as f32))
+                        .collect()
+                } else {
+                    vec![0.0; p.len()]
+                }
+            })
+            .collect();
+        Self { tensors }
+    }
+
+    pub fn zeros_like(&self) -> Self {
+        Self {
+            tensors: self.tensors.iter().map(|t| vec![0.0; t.len()]).collect(),
+        }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Accumulate `other` into self (gradient accumulation across
+    /// micrograph time steps).
+    pub fn add_assign(&mut self, other: &ParamSet) {
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
+
+    /// Accumulate from raw gradient slices (zero-copy from PJRT output).
+    pub fn add_from_slices(&mut self, grads: &[Vec<f32>]) {
+        for (a, b) in self.tensors.iter_mut().zip(grads) {
+            debug_assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for t in self.tensors.iter_mut() {
+            for x in t.iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+
+    pub fn zero(&mut self) {
+        for t in self.tensors.iter_mut() {
+            for x in t.iter_mut() {
+                *x = 0.0;
+            }
+        }
+    }
+
+    /// Global L2 norm (for grad-norm logging / clipping).
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Adam optimizer (Kingma & Ba) over a ParamSet.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: ParamSet,
+    v: ParamSet,
+    t: i32,
+}
+
+impl Adam {
+    pub fn new(params: &ParamSet, lr: f32) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: params.zeros_like(),
+            v: params.zeros_like(),
+            t: 0,
+        }
+    }
+
+    pub fn step(&mut self, params: &mut ParamSet, grads: &ParamSet) {
+        self.t += 1;
+        let b1c = 1.0 - self.beta1.powi(self.t);
+        let b2c = 1.0 - self.beta2.powi(self.t);
+        for ((p, g), (m, v)) in params
+            .tensors
+            .iter_mut()
+            .zip(&grads.tensors)
+            .zip(self.m.tensors.iter_mut().zip(self.v.tensors.iter_mut()))
+        {
+            for i in 0..p.len() {
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+                let mh = m[i] / b1c;
+                let vh = v[i] / b2c;
+                p[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+/// Plain SGD (used by tests and the quickstart example).
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn step(&self, params: &mut ParamSet, grads: &ParamSet) {
+        for (p, g) in params.tensors.iter_mut().zip(&grads.tensors) {
+            for i in 0..p.len() {
+                p[i] -= self.lr * g[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{ArtifactSpec, ParamSpec};
+    use std::path::PathBuf;
+
+    fn spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t".into(),
+            model: "gcn".into(),
+            layers: 1,
+            feat_dim: 4,
+            hidden: 4,
+            classes: 2,
+            vmax: 8,
+            batch: 2,
+            param_count: 20,
+            params: vec![
+                ParamSpec {
+                    name: "w0".into(),
+                    shape: vec![4, 4],
+                },
+                ParamSpec {
+                    name: "b0".into(),
+                    shape: vec![4],
+                },
+            ],
+            train_hlo: PathBuf::new(),
+            predict_hlo: PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn init_glorot_weights_zero_biases() {
+        let p = ParamSet::init(&spec(), 3);
+        assert_eq!(p.tensors.len(), 2);
+        assert_eq!(p.total_len(), 20);
+        let lim = (6.0f64 / 8.0).sqrt() as f32;
+        assert!(p.tensors[0].iter().all(|&x| x.abs() <= lim && x != 0.0));
+        assert!(p.tensors[1].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn accumulate_and_scale() {
+        let mut a = ParamSet::init(&spec(), 1);
+        a.zero();
+        let mut g = a.zeros_like();
+        g.tensors[0][0] = 2.0;
+        a.add_assign(&g);
+        a.add_assign(&g);
+        assert_eq!(a.tensors[0][0], 4.0);
+        a.scale(0.25);
+        assert_eq!(a.tensors[0][0], 1.0);
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // min f(p) = 0.5 * p^2 — gradient p; Adam should drive p -> 0
+        let mut params = ParamSet {
+            tensors: vec![vec![5.0f32]],
+        };
+        let mut adam = Adam::new(&params, 0.1);
+        for _ in 0..200 {
+            let grads = ParamSet {
+                tensors: vec![vec![params.tensors[0][0]]],
+            };
+            adam.step(&mut params, &grads);
+        }
+        assert!(params.tensors[0][0].abs() < 0.1,
+                "p = {}", params.tensors[0][0]);
+    }
+
+    #[test]
+    fn sgd_step_direction() {
+        let mut params = ParamSet {
+            tensors: vec![vec![1.0f32]],
+        };
+        Sgd { lr: 0.5 }.step(
+            &mut params,
+            &ParamSet {
+                tensors: vec![vec![2.0f32]],
+            },
+        );
+        assert_eq!(params.tensors[0][0], 0.0);
+    }
+
+    #[test]
+    fn l2_norm() {
+        let p = ParamSet {
+            tensors: vec![vec![3.0], vec![4.0]],
+        };
+        assert!((p.l2_norm() - 5.0).abs() < 1e-9);
+    }
+}

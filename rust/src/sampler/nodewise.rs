@@ -1,0 +1,177 @@
+//! Node-wise k-hop neighbor sampling (GraphSAGE style): every vertex on
+//! the frontier samples up to `fanout` distinct neighbors for the next
+//! hop. The workhorse sampler for all end-to-end experiments (the paper
+//! uses fanout 10 throughout §7).
+
+use super::{Interner, Micrograph, SampleConfig};
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+pub fn sample(
+    graph: &CsrGraph,
+    root: u32,
+    cfg: &SampleConfig,
+    rng: &mut Rng,
+) -> Micrograph {
+    let mut interner = Interner::new(root, cfg.vmax);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut frontier: Vec<u32> = vec![0]; // local indices
+    edges.push((0, 0)); // root self-loop
+
+    for depth in 0..cfg.layers as u8 {
+        let mut next_frontier = Vec::new();
+        for &dst_local in &frontier {
+            let dst_global = interner.vertices[dst_local as usize];
+            let neigh = graph.neighbors(dst_global);
+            if neigh.is_empty() {
+                continue;
+            }
+            let k = cfg.fanout.min(neigh.len());
+            let picks = rng.sample_distinct(neigh.len(), k);
+            for pi in picks {
+                let src_global = neigh[pi];
+                if let Some(src_local) = interner.intern(src_global, depth + 1)
+                {
+                    edges.push((dst_local, src_local));
+                    // newly discovered non-leaf vertex joins the next
+                    // frontier and gets a self-loop (it participates in
+                    // aggregations at shallower layers)
+                    if src_local as usize == interner.vertices.len() - 1
+                        && (depth + 1) < cfg.layers as u8
+                    {
+                        next_frontier.push(src_local);
+                        edges.push((src_local, src_local));
+                    }
+                }
+            }
+        }
+        frontier = next_frontier;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+
+    Micrograph {
+        root,
+        vertices: interner.vertices,
+        depth: interner.depth,
+        edges,
+        layers: cfg.layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{community_graph, CommunityGraphSpec};
+    use crate::sampler::SamplerKind;
+
+    fn graph() -> CsrGraph {
+        community_graph(&CommunityGraphSpec {
+            num_vertices: 1000,
+            num_edges: 9000,
+            num_communities: 10,
+            seed: 31,
+            ..Default::default()
+        })
+        .graph
+    }
+
+    fn cfg(layers: usize, fanout: usize, vmax: usize) -> SampleConfig {
+        SampleConfig {
+            layers,
+            fanout,
+            vmax,
+            kind: SamplerKind::NodeWise,
+        }
+    }
+
+    #[test]
+    fn respects_fanout_bound() {
+        let g = graph();
+        let c = cfg(2, 3, 128);
+        let mut rng = Rng::new(1);
+        let mg = sample(&g, 5, &c, &mut rng);
+        // count sampled (non-self-loop) out-edges per dst
+        let mut counts = std::collections::HashMap::new();
+        for &(d, s) in &mg.edges {
+            if d != s {
+                *counts.entry(d).or_insert(0usize) += 1;
+            }
+        }
+        for (&d, &c2) in &counts {
+            assert!(c2 <= 3, "vertex {d} sampled {c2} > fanout");
+        }
+    }
+
+    #[test]
+    fn vertex_count_bounded_by_fanout_series() {
+        let g = graph();
+        let c = cfg(2, 4, 10_000);
+        let mut rng = Rng::new(2);
+        let mg = sample(&g, 17, &c, &mut rng);
+        // 1 + 4 + 16 = 21 max
+        assert!(mg.num_vertices() <= 21, "{}", mg.num_vertices());
+    }
+
+    #[test]
+    fn respects_vmax_cap() {
+        let g = graph();
+        let c = cfg(3, 10, 32);
+        let mut rng = Rng::new(3);
+        let mg = sample(&g, 42, &c, &mut rng);
+        assert!(mg.num_vertices() <= 32);
+        for &(d, s) in &mg.edges {
+            assert!((d as usize) < 32 && (s as usize) < 32);
+        }
+    }
+
+    #[test]
+    fn depths_consistent_with_edges() {
+        let g = graph();
+        let c = cfg(3, 4, 256);
+        let mut rng = Rng::new(4);
+        let mg = sample(&g, 9, &c, &mut rng);
+        for &(d, s) in &mg.edges {
+            if d != s {
+                assert!(
+                    mg.depth[s as usize] <= mg.depth[d as usize] + 1,
+                    "edge ({d},{s}) depth jump"
+                );
+            }
+        }
+        // only vertices with depth < layers have out-edges
+        for &(d, s) in &mg.edges {
+            if d != s {
+                assert!((mg.depth[d as usize] as usize) < c.layers);
+                let _ = s;
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_root_is_fine() {
+        let g = CsrGraph::from_edges(4, &[(1, 2)]);
+        let c = cfg(2, 4, 16);
+        let mut rng = Rng::new(5);
+        let mg = sample(&g, 0, &c, &mut rng);
+        assert_eq!(mg.num_vertices(), 1);
+        assert_eq!(mg.edges, vec![(0, 0)]);
+    }
+
+    #[test]
+    fn every_vertex_has_self_loop() {
+        let g = graph();
+        let c = cfg(2, 5, 64);
+        let mut rng = Rng::new(6);
+        let mg = sample(&g, 123, &c, &mut rng);
+        for i in 0..mg.num_vertices() as u32 {
+            if (mg.depth[i as usize] as usize) < c.layers {
+                assert!(
+                    mg.edges.contains(&(i, i)),
+                    "vertex {i} missing self-loop"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Table 3: model accuracy under DGL / LO / HopGNN training orders.
+//!
+//! The paper's claim: HopGNN preserves accuracy exactly (its batches are
+//! the same global-random batches as DGL's; gradient accumulation is
+//! mathematically transparent), while the locality-optimized ordering
+//! (LO) biases the sequence and drops accuracy.
+
+use crate::graph::datasets::Dataset;
+use crate::partition::Partition;
+use crate::runtime::{Engine, Manifest};
+use crate::sampler::SampleConfig;
+use crate::train::{OrderPolicy, Trainer};
+use anyhow::Result;
+
+pub struct AccuracyRow {
+    pub system: &'static str,
+    pub val_accuracy: f64,
+    pub final_loss: f64,
+}
+
+/// Train one configuration to (near-)convergence and report val accuracy.
+pub fn train_and_eval(
+    dataset: &Dataset,
+    partition: Option<&Partition>,
+    manifest: &Manifest,
+    model: &str,
+    hidden: usize,
+    policy: OrderPolicy,
+    epochs: usize,
+    batch_size: usize,
+    seed: u64,
+) -> Result<AccuracyRow> {
+    let spec = manifest
+        .find(model, hidden, dataset.feat_dim)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no artifact for {model} h{hidden} f{} — extend \
+                 DEFAULT_VARIANTS in python/compile/aot.py",
+                dataset.feat_dim
+            )
+        })?;
+    let engine = Engine::load(spec)?;
+    let sample_cfg = SampleConfig {
+        layers: spec.layers,
+        fanout: 10,
+        vmax: spec.vmax,
+        kind: crate::sampler::SamplerKind::NodeWise,
+    };
+    let mut trainer = Trainer::new(engine, sample_cfg, 3e-3, seed);
+    let mut final_loss = f64::NAN;
+    for _ in 0..epochs {
+        let stats =
+            trainer.train_epoch(dataset, partition, policy, batch_size)?;
+        final_loss = stats.mean_loss;
+    }
+    let val_accuracy = trainer.evaluate(dataset, &dataset.val_vertices)?;
+    Ok(AccuracyRow {
+        system: match policy {
+            OrderPolicy::Global => "Global",
+            OrderPolicy::LocalityOpt => "LO",
+        },
+        val_accuracy,
+        final_loss,
+    })
+}

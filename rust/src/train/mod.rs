@@ -1,0 +1,340 @@
+//! Real (PJRT-executed) training: the numeric counterpart of the
+//! simulated strategies. Used by the end-to-end example, Table 3
+//! (accuracy), and runtime cost calibration.
+//!
+//! One logical model is trained (data-parallel replicas are numerically
+//! identical after each allreduce, so a single parameter set is exact);
+//! what differs between order policies is the *composition of each
+//! iteration's mini-batch* — which is precisely the paper's accuracy
+//! argument (§5.1, §7.9):
+//!
+//! * `Global`  — DGL and HopGNN: every iteration draws uniformly from the
+//!   globally shuffled training set. (HopGNN redistributes *where* each
+//!   micrograph is trained, never *which* roots form the batch, and
+//!   gradient accumulation keeps the update identical — Table 3's "S".)
+//! * `LocalityOpt` — each server draws only from its own partition's
+//!   shard, cycling independently; shards are unequal so some vertices
+//!   are oversampled per epoch — the biased sequence that costs accuracy.
+
+pub mod accuracy;
+
+use crate::graph::datasets::Dataset;
+use crate::partition::Partition;
+use crate::runtime::{Adam, BatchBuffers, Engine, ParamSet};
+use crate::sampler::{sample_micrograph, Micrograph, SampleConfig};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrderPolicy {
+    /// Globally shuffled batches (DGL & HopGNN semantics).
+    Global,
+    /// Per-server local shards, independently cycled (LO semantics).
+    LocalityOpt,
+}
+
+pub struct EpochStats {
+    pub mean_loss: f64,
+    pub steps: usize,
+    pub train_accuracy: f64,
+}
+
+pub struct Trainer {
+    pub engine: Engine,
+    pub params: ParamSet,
+    pub opt: Adam,
+    buffers: BatchBuffers,
+    sample_cfg: SampleConfig,
+    rng: Rng,
+}
+
+impl Trainer {
+    pub fn new(engine: Engine, sample_cfg: SampleConfig, lr: f32,
+               seed: u64) -> Self {
+        let params = ParamSet::init(&engine.spec, seed);
+        let opt = Adam::new(&params, lr);
+        let buffers = BatchBuffers::for_artifact(&engine.spec);
+        Self {
+            engine,
+            params,
+            opt,
+            buffers,
+            sample_cfg,
+            rng: Rng::new(seed ^ 0x7A11),
+        }
+    }
+
+    /// Train one epoch; `batch_size` roots per optimizer step.
+    pub fn train_epoch(
+        &mut self,
+        dataset: &Dataset,
+        partition: Option<&Partition>,
+        policy: OrderPolicy,
+        batch_size: usize,
+    ) -> Result<EpochStats> {
+        let batches = self.plan_batches(dataset, partition, policy,
+                                        batch_size);
+        let mut total_loss = 0.0;
+        let mut total_correct = 0u64;
+        let mut total_seen = 0u64;
+        let mut grad_acc = self.params.zeros_like();
+
+        for batch_roots in &batches {
+            grad_acc.zero();
+            let mut micros = 0usize;
+            // HopGNN-style gradient accumulation: the batch is processed
+            // in fixed-size executable calls; gradients accumulate and
+            // the optimizer steps once per logical batch.
+            let b = self.engine.spec.batch;
+            let mut mgs: Vec<Micrograph> = Vec::with_capacity(b);
+            let mut chunks: Vec<Vec<Micrograph>> = Vec::new();
+            for &root in batch_roots {
+                mgs.push(sample_micrograph(
+                    &dataset.graph,
+                    root,
+                    &self.sample_cfg,
+                    &mut self.rng,
+                ));
+                if mgs.len() == b {
+                    chunks.push(std::mem::take(&mut mgs));
+                }
+            }
+            if !mgs.is_empty() {
+                // fill the ragged tail by repeating its head (padding
+                // slots would otherwise inject f(0) gradients)
+                let mut i = 0;
+                while mgs.len() < b {
+                    mgs.push(mgs[i % mgs.len().max(1)].clone());
+                    i += 1;
+                }
+                chunks.push(mgs);
+            }
+            for chunk in &chunks {
+                let packed = self.buffers.pack(chunk, dataset);
+                debug_assert_eq!(packed, b);
+                let out = self.engine.train_step_b(&self.params,
+                                                   &self.buffers)?;
+                total_loss += out.loss as f64 * b as f64;
+                total_correct += out.correct as u64;
+                total_seen += b as u64;
+                grad_acc.add_from_slices(&out.grads);
+                micros += b;
+            }
+            // average accumulated grads over executable calls (each call
+            // already returns a batch-mean gradient)
+            grad_acc.scale(1.0 / chunks.len().max(1) as f32);
+            self.opt.step(&mut self.params, &grad_acc);
+            let _ = micros;
+        }
+
+        Ok(EpochStats {
+            mean_loss: if total_seen == 0 {
+                0.0
+            } else {
+                total_loss / total_seen as f64
+            },
+            steps: batches.len(),
+            train_accuracy: if total_seen == 0 {
+                0.0
+            } else {
+                total_correct as f64 / total_seen as f64
+            },
+        })
+    }
+
+    /// Accuracy over a vertex set (validation / test).
+    pub fn evaluate(&mut self, dataset: &Dataset, vertices: &[u32])
+                    -> Result<f64> {
+        let b = self.engine.spec.batch;
+        let classes = self.engine.spec.classes;
+        let mut correct = 0u64;
+        let mut total = 0u64;
+        let mut mgs: Vec<Micrograph> = Vec::with_capacity(b);
+        let flush = |mgs: &mut Vec<Micrograph>,
+                         this: &mut Self|
+         -> Result<(u64, u64)> {
+            if mgs.is_empty() {
+                return Ok((0, 0));
+            }
+            let real = mgs.len();
+            let mut i = 0;
+            while mgs.len() < b {
+                mgs.push(mgs[i % real].clone());
+                i += 1;
+            }
+            this.buffers.pack(mgs, dataset);
+            let logits = this.engine.predict_b(&this.params, &this.buffers)?;
+            let mut c = 0u64;
+            for (k, mg) in mgs.iter().take(real).enumerate() {
+                let row = &logits[k * classes..(k + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                if pred == dataset.labels[mg.root as usize] as usize {
+                    c += 1;
+                }
+            }
+            mgs.clear();
+            Ok((c, real as u64))
+        };
+        for &v in vertices {
+            mgs.push(sample_micrograph(
+                &dataset.graph,
+                v,
+                &self.sample_cfg,
+                &mut self.rng,
+            ));
+            if mgs.len() == b {
+                let (c, t) = flush(&mut mgs, self)?;
+                correct += c;
+                total += t;
+            }
+        }
+        let (c, t) = flush(&mut mgs, self)?;
+        correct += c;
+        total += t;
+        Ok(if total == 0 {
+            0.0
+        } else {
+            correct as f64 / total as f64
+        })
+    }
+
+    /// Compose the epoch's batches according to the order policy.
+    fn plan_batches(
+        &mut self,
+        dataset: &Dataset,
+        partition: Option<&Partition>,
+        policy: OrderPolicy,
+        batch_size: usize,
+    ) -> Vec<Vec<u32>> {
+        match policy {
+            OrderPolicy::Global => {
+                let mut roots = dataset.train_vertices.clone();
+                self.rng.shuffle(&mut roots);
+                roots
+                    .chunks(batch_size)
+                    .filter(|c| c.len() == batch_size)
+                    .map(|c| c.to_vec())
+                    .collect()
+            }
+            OrderPolicy::LocalityOpt => {
+                let part = partition
+                    .expect("LocalityOpt needs a partition");
+                let n = part.num_parts;
+                // per-server local shards, each shuffled locally
+                let mut shards: Vec<Vec<u32>> = vec![Vec::new(); n];
+                for &r in &dataset.train_vertices {
+                    shards[part.home(r) as usize].push(r);
+                }
+                for s in shards.iter_mut() {
+                    self.rng.shuffle(s);
+                }
+                // iterations: as many as the GLOBAL count; each server
+                // contributes batch/n roots from its own shard, cycling
+                // (small shards wrap -> oversampling bias)
+                let iters = dataset.train_vertices.len() / batch_size;
+                let per = batch_size / n;
+                let mut cursors = vec![0usize; n];
+                let mut out = Vec::with_capacity(iters);
+                for _ in 0..iters {
+                    let mut batch = Vec::with_capacity(per * n);
+                    for s in 0..n {
+                        if shards[s].is_empty() {
+                            continue;
+                        }
+                        for _ in 0..per {
+                            batch.push(shards[s][cursors[s] % shards[s].len()]);
+                            cursors[s] += 1;
+                        }
+                    }
+                    if batch.len() == per * n {
+                        out.push(batch);
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny_test_dataset;
+    use crate::partition::{partition, PartitionAlgo};
+
+    // plan_batches is pure scheduling: test it without an Engine by
+    // exercising the policies through a standalone planner instance.
+    fn plan(
+        policy: OrderPolicy,
+        batch: usize,
+    ) -> (Vec<Vec<u32>>, Dataset) {
+        let d = tiny_test_dataset(90);
+        let p = partition(&d.graph, 4, PartitionAlgo::MetisLike, 1);
+        let mut rng = Rng::new(7);
+        // reimplement the tiny pure parts inline to avoid Engine deps
+        let batches = match policy {
+            OrderPolicy::Global => {
+                let mut roots = d.train_vertices.clone();
+                rng.shuffle(&mut roots);
+                roots
+                    .chunks(batch)
+                    .filter(|c| c.len() == batch)
+                    .map(|c| c.to_vec())
+                    .collect()
+            }
+            OrderPolicy::LocalityOpt => {
+                let mut shards: Vec<Vec<u32>> = vec![Vec::new(); 4];
+                for &r in &d.train_vertices {
+                    shards[p.home(r) as usize].push(r);
+                }
+                let iters = d.train_vertices.len() / batch;
+                let per = batch / 4;
+                let mut cursors = vec![0usize; 4];
+                let mut out = Vec::new();
+                for _ in 0..iters {
+                    let mut b = Vec::new();
+                    for s in 0..4 {
+                        if shards[s].is_empty() {
+                            continue;
+                        }
+                        for _ in 0..per {
+                            b.push(shards[s][cursors[s] % shards[s].len()]);
+                            cursors[s] += 1;
+                        }
+                    }
+                    out.push(b);
+                }
+                out
+            }
+        };
+        (batches, d)
+    }
+
+    #[test]
+    fn global_batches_cover_without_repeats() {
+        let (batches, d) = plan(OrderPolicy::Global, 20);
+        let flat: Vec<u32> = batches.iter().flatten().copied().collect();
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), flat.len(), "global batches must not repeat");
+        assert_eq!(flat.len(), (d.train_vertices.len() / 20) * 20);
+    }
+
+    #[test]
+    fn lo_batches_oversample_small_shards() {
+        let (batches, _) = plan(OrderPolicy::LocalityOpt, 20);
+        let flat: Vec<u32> = batches.iter().flatten().copied().collect();
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        let before = sorted.len();
+        sorted.dedup();
+        // unequal shards + cycling => some vertices appear twice
+        assert!(sorted.len() <= before, "dedup sanity");
+    }
+}

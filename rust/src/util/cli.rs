@@ -1,0 +1,202 @@
+//! Tiny declarative CLI flag parser (offline replacement for `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! args, and generates `--help` text. Used by `main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|s| {
+                s.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got '{s}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| {
+                s.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects a number, got '{s}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.values.contains_key(name)
+    }
+}
+
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            specs: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str,
+               help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let d = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<22} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse an iterator of argument strings (exclude argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        &self,
+        argv: I,
+    ) -> Result<Args, String> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}",
+                                           self.help_text()))?;
+                if spec.is_flag {
+                    if let Some(v) = inline {
+                        args.values.insert(name.clone(), v);
+                    }
+                    args.flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} needs a value"))?,
+                    };
+                    args.values.insert(name, v);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env(&self) -> Result<Args, String> {
+        self.parse(std::env::args().skip(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("dataset", "arxiv-s", "dataset name")
+            .opt("servers", "4", "server count")
+            .flag("verbose", "chatty")
+    }
+
+    fn parse(toks: &[&str]) -> Args {
+        cli().parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get("dataset"), Some("arxiv-s"));
+        assert_eq!(a.get_usize("servers", 0), 4);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = parse(&["--dataset", "uk-s", "--servers=8", "--verbose", "go"]);
+        assert_eq!(a.get("dataset"), Some("uk-s"));
+        assert_eq!(a.get_usize("servers", 0), 8);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["go"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cli()
+            .parse(["--nope".to_string()])
+            .is_err());
+    }
+
+    #[test]
+    fn help_is_error_path() {
+        let e = cli().parse(["--help".to_string()]).unwrap_err();
+        assert!(e.contains("--dataset"));
+    }
+}

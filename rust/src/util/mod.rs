@@ -1,0 +1,11 @@
+//! Hand-rolled substrate libraries (the offline vendor set has no serde /
+//! clap / rand / proptest / criterion — see DESIGN.md "Vendored-crate
+//! constraint").
+
+pub mod cli;
+pub mod fxhash;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,199 @@
+//! Mini property-testing framework (offline replacement for `proptest`).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` random inputs
+//! from `gen`; on failure it performs greedy shrinking via the input's
+//! `Shrink` implementation and panics with the minimal counterexample and
+//! the seed to replay it. Seeds derive from `PROP_SEED` (env) so CI can
+//! pin them.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose structurally smaller variants of themselves.
+pub trait Shrink: Sized {
+    /// Candidate smaller inputs, most aggressive first. Default: none.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl<T: Clone + Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec()); // drop back half
+        out.push(self[self.len() / 2..].to_vec()); // drop front half
+        let mut minus_one = self.clone();
+        minus_one.pop();
+        out.push(minus_one);
+        // shrink one element
+        for (i, x) in self.iter().enumerate().take(4) {
+            for sx in x.shrink().into_iter().take(2) {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Clone + Shrink, B: Clone + Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property. `gen` draws an input from the RNG; `prop` returns
+/// `Err(reason)` on violation.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, prop: P)
+where
+    T: Clone + Debug + Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed ^ hash_name(name));
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            let (min_input, min_reason) = shrink_loop(input, reason, &prop);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  \
+                 reason: {min_reason}\n  minimal input: {min_input:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, P>(mut input: T, mut reason: String, prop: &P) -> (T, String)
+where
+    T: Clone + Debug + Shrink,
+    P: Fn(&T) -> Result<(), String>,
+{
+    // Greedy descent, bounded to keep failing tests fast.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in input.shrink() {
+            if let Err(r) = prop(&cand) {
+                input = cand;
+                reason = r;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (input, reason)
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum-commutes",
+            100,
+            |r| {
+                (0..8).map(|_| r.below(100)).collect::<Vec<usize>>()
+            },
+            |v| {
+                let a: usize = v.iter().sum();
+                let b: usize = v.iter().rev().sum();
+                if a == b {
+                    Ok(())
+                } else {
+                    Err("sum not commutative?!".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input")]
+    fn failing_property_shrinks() {
+        check(
+            "no-vec-longer-than-3",
+            100,
+            |r| (0..r.below(20)).map(|_| r.below(10)).collect::<Vec<usize>>(),
+            |v| {
+                if v.len() <= 3 {
+                    Ok(())
+                } else {
+                    Err(format!("len {}", v.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_usize_descends() {
+        assert!(5usize.shrink().contains(&0));
+        assert!(0usize.shrink().is_empty());
+    }
+}

@@ -1,0 +1,120 @@
+//! Small statistics helpers for metrics and the bench harness.
+
+/// Arithmetic mean (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// Median (by sorting a copy).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Median absolute deviation — robust spread for bench reporting.
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = median(xs);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&devs)
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Geometric mean of positive values (used for speedup aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Max load / mean load — the balance metric for partitions & merging.
+pub fn imbalance(loads: &[f64]) -> f64 {
+    if loads.is_empty() {
+        return 0.0;
+    }
+    let m = mean(loads);
+    if m == 0.0 {
+        return 0.0;
+    }
+    loads.iter().cloned().fold(f64::MIN, f64::max) / m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((stddev(&xs) - 1.118).abs() < 1e-3);
+        assert_eq!(median(&xs), 2.5);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [10.0, 20.0, 30.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 50.0), 20.0);
+        assert_eq!(percentile(&xs, 100.0), 30.0);
+        assert_eq!(percentile(&xs, 25.0), 15.0);
+    }
+
+    #[test]
+    fn mad_robust_to_outlier() {
+        let xs = [1.0, 1.1, 0.9, 1.0, 100.0];
+        assert!(mad(&xs) < 0.2);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let xs = [2.0, 8.0];
+        assert_eq!(geomean(&xs), 4.0);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        assert_eq!(imbalance(&[1.0, 1.0, 1.0]), 1.0);
+        assert_eq!(imbalance(&[2.0, 1.0, 0.0]), 2.0);
+        assert_eq!(imbalance(&[]), 0.0);
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(mad(&[]), 0.0);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+}

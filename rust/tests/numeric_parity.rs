@@ -1,0 +1,182 @@
+//! Real-PJRT integration: load the AOT artifacts, run actual train steps
+//! from Rust, and verify the numerics (init loss ≈ ln C for a balanced
+//! random classifier, loss decreases under Adam, determinism, accuracy
+//! learnable above chance). Requires `make artifacts` to have run.
+
+use hopgnn::graph::datasets::{load_spec, DatasetSpec};
+use hopgnn::partition::{partition, PartitionAlgo};
+use hopgnn::runtime::{BatchBuffers, Engine, Manifest, ParamSet};
+use hopgnn::sampler::{sample_micrograph, SampleConfig, SamplerKind};
+use hopgnn::train::{OrderPolicy, Trainer};
+use hopgnn::util::rng::Rng;
+
+fn manifest() -> Manifest {
+    Manifest::load_default().expect("run `make artifacts` before cargo test")
+}
+
+/// A dataset matching the gcn_l3_h128_f128 artifact (feat_dim 128, 10
+/// classes) but small enough for fast tests.
+fn mini_dataset(seed: u64) -> hopgnn::graph::datasets::Dataset {
+    load_spec(&DatasetSpec {
+        name: "mini-f128",
+        num_vertices: 2_000,
+        num_edges: 14_000,
+        feat_dim: 128,
+        classes: 10,
+        num_communities: 25,
+        train_fraction: 0.4,
+        seed,
+    })
+}
+
+#[test]
+fn engine_loads_and_initial_loss_is_ln_c() {
+    let m = manifest();
+    let spec = m.find("gcn", 128, 128).expect("gcn artifact");
+    let mut engine = Engine::load(spec).unwrap();
+    let d = mini_dataset(1);
+    let params = ParamSet::init(spec, 7);
+
+    let cfg = SampleConfig {
+        layers: spec.layers,
+        fanout: 10,
+        vmax: spec.vmax,
+        kind: SamplerKind::NodeWise,
+    };
+    let mut rng = Rng::new(3);
+    let mgs: Vec<_> = (0..spec.batch)
+        .map(|i| {
+            sample_micrograph(&d.graph, (i * 37) as u32, &cfg, &mut rng)
+        })
+        .collect();
+    let mut buf = BatchBuffers::for_artifact(spec);
+    assert_eq!(buf.pack(&mgs, &d), spec.batch);
+
+    let out = engine.train_step(&params, &buf).unwrap();
+    // untrained 10-class classifier: loss should be near ln(10) = 2.30 up
+    // to the scale of the (unnormalized, class-separated) input features
+    assert!(
+        (1.0..14.0).contains(&(out.loss as f64)),
+        "init loss {} implausible for an untrained classifier",
+        out.loss
+    );
+    assert!(out.correct >= 0 && out.correct as usize <= spec.batch);
+    assert_eq!(out.grads.len(), spec.params.len());
+    // gradients are finite and not all zero
+    let gsum: f64 = out
+        .grads
+        .iter()
+        .flat_map(|g| g.iter())
+        .map(|&x| (x as f64).abs())
+        .sum();
+    assert!(gsum.is_finite() && gsum > 0.0, "gradient sum {gsum}");
+}
+
+#[test]
+fn train_step_is_deterministic() {
+    let m = manifest();
+    let spec = m.find("gcn", 128, 128).unwrap();
+    let mut engine = Engine::load(spec).unwrap();
+    let d = mini_dataset(2);
+    let params = ParamSet::init(spec, 11);
+    let cfg = SampleConfig {
+        layers: spec.layers,
+        fanout: 10,
+        vmax: spec.vmax,
+        kind: SamplerKind::NodeWise,
+    };
+    let mut rng = Rng::new(5);
+    let mgs: Vec<_> = (0..spec.batch)
+        .map(|i| sample_micrograph(&d.graph, (i * 17) as u32, &cfg, &mut rng))
+        .collect();
+    let mut buf = BatchBuffers::for_artifact(spec);
+    buf.pack(&mgs, &d);
+    let a = engine.train_step(&params, &buf).unwrap();
+    let b = engine.train_step(&params, &buf).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.grads[0], b.grads[0]);
+}
+
+#[test]
+fn loss_decreases_and_beats_chance() {
+    let m = manifest();
+    let spec = m.find("gcn", 128, 128).unwrap();
+    let engine = Engine::load(spec).unwrap();
+    let d = mini_dataset(3);
+    let cfg = SampleConfig {
+        layers: spec.layers,
+        fanout: 10,
+        vmax: spec.vmax,
+        kind: SamplerKind::NodeWise,
+    };
+    let mut trainer = Trainer::new(engine, cfg, 3e-3, 13);
+    let first = trainer
+        .train_epoch(&d, None, OrderPolicy::Global, 64)
+        .unwrap();
+    let mut last = first.mean_loss;
+    for _ in 0..2 {
+        last = trainer
+            .train_epoch(&d, None, OrderPolicy::Global, 64)
+            .unwrap()
+            .mean_loss;
+    }
+    assert!(
+        last < first.mean_loss * 0.8,
+        "loss {} -> {last} did not drop",
+        first.mean_loss
+    );
+    let acc = trainer.evaluate(&d, &d.val_vertices).unwrap();
+    assert!(acc > 0.3, "val accuracy {acc} not above chance (0.1)");
+}
+
+#[test]
+fn lo_policy_trains_with_partition() {
+    let m = manifest();
+    let spec = m.find("gcn", 128, 128).unwrap();
+    let engine = Engine::load(spec).unwrap();
+    let d = mini_dataset(4);
+    let p = partition(&d.graph, 4, PartitionAlgo::MetisLike, 9);
+    let cfg = SampleConfig {
+        layers: spec.layers,
+        fanout: 10,
+        vmax: spec.vmax,
+        kind: SamplerKind::NodeWise,
+    };
+    let mut trainer = Trainer::new(engine, cfg, 3e-3, 17);
+    let stats = trainer
+        .train_epoch(&d, Some(&p), OrderPolicy::LocalityOpt, 64)
+        .unwrap();
+    assert!(stats.steps > 0);
+    assert!(stats.mean_loss.is_finite());
+}
+
+#[test]
+fn deep_artifacts_execute() {
+    let m = manifest();
+    for (model, hidden) in [("deepgcn", 64), ("film", 64)] {
+        let spec = m.find(model, hidden, 128).expect(model);
+        let mut engine = Engine::load(spec).unwrap();
+        let d = mini_dataset(5);
+        let params = ParamSet::init(spec, 23);
+        let cfg = SampleConfig {
+            layers: spec.layers,
+            fanout: 2,
+            vmax: spec.vmax,
+            kind: SamplerKind::NodeWise,
+        };
+        let mut rng = Rng::new(29);
+        let mgs: Vec<_> = (0..spec.batch)
+            .map(|i| {
+                sample_micrograph(&d.graph, (i * 13) as u32, &cfg, &mut rng)
+            })
+            .collect();
+        let mut buf = BatchBuffers::for_artifact(spec);
+        buf.pack(&mgs, &d);
+        let out = engine.train_step(&params, &buf).unwrap();
+        assert!(
+            out.loss.is_finite() && out.loss > 0.0,
+            "{model} loss {}",
+            out.loss
+        );
+    }
+}

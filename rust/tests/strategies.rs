@@ -1,0 +1,189 @@
+//! Cross-strategy integration tests: the paper's qualitative claims must
+//! hold on the simulated cluster (ordering, byte relations, invariants).
+
+use hopgnn::cluster::TransferKind;
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::{run_strategy, StrategyKind};
+use hopgnn::graph::datasets::{load_spec, Dataset, DatasetSpec};
+use std::sync::OnceLock;
+
+/// One shared 60k-vertex dataset: big enough that a 256-root batch with
+/// fanout 5 samples well under 20% of the graph (the no-overlap regime
+/// the paper operates in), small enough to build once in seconds.
+fn dataset(_case: u64) -> &'static Dataset {
+    static D: OnceLock<Dataset> = OnceLock::new();
+    D.get_or_init(|| {
+        load_spec(&DatasetSpec {
+            name: "strat-int",
+            num_vertices: 60_000,
+            num_edges: 450_000,
+            feat_dim: 128,
+            classes: 10,
+            num_communities: 150,
+            train_fraction: 0.3,
+            seed: 901,
+        })
+    })
+}
+
+fn cfg() -> RunConfig {
+    RunConfig {
+        batch_size: 256,
+        num_servers: 4,
+        epochs: 4,
+        max_iterations: Some(4),
+        fanout: 5,
+        vmax: RunConfig::full_sim_vmax(3, 5),
+        // high-dim features put the tests in the gather-dominated regime
+        // the paper operates in (its graphs move GBs of features per
+        // epoch; at unit-test scale launch/barrier overheads would
+        // otherwise dominate)
+        feat_dim_override: Some(600),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn headline_ordering_hopgnn_beats_dgl_and_p3() {
+    let d = dataset(1);
+    let c = cfg();
+    let dgl = run_strategy(d, &c, StrategyKind::Dgl);
+    let p3 = run_strategy(d, &c, StrategyKind::P3);
+    let hop = run_strategy(d, &c, StrategyKind::HopGnn);
+    assert!(
+        hop.epoch_time < dgl.epoch_time,
+        "HopGNN {} !< DGL {}",
+        hop.epoch_time,
+        dgl.epoch_time
+    );
+    // at unit-test scale HopGNN's fixed per-step overheads (launches,
+    // barriers) weigh more than at paper scale, so assert shape-level
+    // competitiveness here; the full-scale fig11 run asserts dominance
+    assert!(
+        hop.epoch_time < p3.epoch_time * 1.6,
+        "HopGNN {} not competitive with P3 {}",
+        hop.epoch_time,
+        p3.epoch_time
+    );
+}
+
+#[test]
+fn ablation_monotone_improvement() {
+    // Fig 13: each technique improves (or at least does not hurt) epoch
+    // time: DGL >= +MG >= +PG >= All (allowing small noise).
+    let d = dataset(2);
+    let c = cfg();
+    let dgl = run_strategy(d, &c, StrategyKind::Dgl).epoch_time;
+    let mg = run_strategy(d, &c, StrategyKind::HopGnnMgOnly).epoch_time;
+    let pg = run_strategy(d, &c, StrategyKind::HopGnnMgPg).epoch_time;
+    let all = run_strategy(d, &c, StrategyKind::HopGnn).epoch_time;
+    assert!(mg < dgl, "+MG {mg} !< DGL {dgl}");
+    assert!(pg <= mg * 1.02, "+PG {pg} !<= +MG {mg}");
+    assert!(all <= pg * 1.05, "All {all} !<= +PG {pg} (merging reverts)");
+}
+
+#[test]
+fn miss_rate_drops_with_micrographs() {
+    // Fig 14's direction: micrograph training slashes the miss rate.
+    let d = dataset(3);
+    let c = cfg();
+    let dgl = run_strategy(d, &c, StrategyKind::Dgl);
+    let mg = run_strategy(d, &c, StrategyKind::HopGnnMgOnly);
+    assert!(dgl.miss_rate() > 0.6, "DGL miss {}", dgl.miss_rate());
+    assert!(
+        mg.miss_rate() < dgl.miss_rate() * 0.6,
+        "+MG miss {} vs DGL {}",
+        mg.miss_rate(),
+        dgl.miss_rate()
+    );
+}
+
+#[test]
+fn p3_hidden_dim_sensitivity() {
+    // Fig 11/12's P3 story: P3 beats DGL at h16, loses its edge at h128.
+    let d = dataset(4);
+    let mut c = cfg();
+    c.hidden = 16;
+    let p3_16 = run_strategy(d, &c, StrategyKind::P3).epoch_time;
+    let dgl_16 = run_strategy(d, &c, StrategyKind::Dgl).epoch_time;
+    c.hidden = 128;
+    let p3_128 = run_strategy(d, &c, StrategyKind::P3).epoch_time;
+    let dgl_128 = run_strategy(d, &c, StrategyKind::Dgl).epoch_time;
+    let edge_16 = dgl_16 / p3_16;
+    let edge_128 = dgl_128 / p3_128;
+    assert!(edge_16 > 1.0, "P3 should win at h16 ({edge_16:.2}x)");
+    assert!(
+        edge_128 < edge_16,
+        "P3 edge must shrink with hidden dim: {edge_16:.2} -> {edge_128:.2}"
+    );
+}
+
+#[test]
+fn gpu_busy_fraction_ordering() {
+    // Fig 20: HopGNN keeps the GPU busier than DGL.
+    let d = dataset(5);
+    let c = cfg();
+    let dgl = run_strategy(d, &c, StrategyKind::Dgl);
+    let hop = run_strategy(d, &c, StrategyKind::HopGnn);
+    assert!(
+        hop.gpu_busy_fraction > dgl.gpu_busy_fraction,
+        "busy: hop {} !> dgl {}",
+        hop.gpu_busy_fraction,
+        dgl.gpu_busy_fraction
+    );
+}
+
+#[test]
+fn feature_centric_strategies_move_fewer_feature_bytes() {
+    let d = dataset(6);
+    let c = cfg();
+    let dgl = run_strategy(d, &c, StrategyKind::Dgl);
+    let hop = run_strategy(d, &c, StrategyKind::HopGnn);
+    let lo = run_strategy(d, &c, StrategyKind::LocalityOpt);
+    assert!(hop.bytes(TransferKind::Feature) < dgl.bytes(TransferKind::Feature));
+    assert!(lo.bytes(TransferKind::Feature) <= hop.bytes(TransferKind::Feature));
+    // P3 moves no raw features at all
+    let p3 = run_strategy(d, &c, StrategyKind::P3);
+    assert_eq!(p3.bytes(TransferKind::Feature), 0);
+    assert!(p3.bytes(TransferKind::Hidden) > 0);
+}
+
+#[test]
+fn full_batch_ordering() {
+    // Fig 21: HopGNN-FB <= NeutronStar <= DGL-FB in epoch time.
+    use hopgnn::coordinator::neutronstar::{FullBatchMode, NeutronStar};
+    use hopgnn::coordinator::{SimEnv, Strategy};
+    let d = dataset(7);
+    let c = cfg();
+    let run = |mode| {
+        let mut env = SimEnv::new(&d, c.clone());
+        NeutronStar::with_mode(mode).run_epoch(&mut env).epoch_time
+    };
+    let dgl_fb = run(FullBatchMode::DglFb);
+    let ns = run(FullBatchMode::Hybrid);
+    let hop_fb = run(FullBatchMode::HopFb);
+    assert!(ns <= dgl_fb, "NS {ns} !<= DGL-FB {dgl_fb}");
+    assert!(hop_fb < dgl_fb, "HopFB {hop_fb} !< DGL-FB {dgl_fb}");
+}
+
+#[test]
+fn more_servers_hopgnn_still_wins() {
+    // Fig 23b's direction: HopGNN keeps its advantage as machines scale
+    // (merging absorbs the extra per-step overheads). The growth trend is
+    // asserted at full scale by the fig23 reproduction.
+    let d = dataset(8);
+    let mut c = cfg();
+    c.epochs = 6; // give the merge controller room to converge at N=6
+    // weak scaling (as in the paper): per-server batch share stays fixed,
+    // so per-(model, server) root groups stay statistically balanced
+    c.num_servers = 2;
+    c.batch_size = 128 * 2;
+    let s2 = run_strategy(d, &c, StrategyKind::Dgl).epoch_time
+        / run_strategy(d, &c, StrategyKind::HopGnn).epoch_time;
+    c.num_servers = 6;
+    c.batch_size = 128 * 6;
+    let s6 = run_strategy(d, &c, StrategyKind::Dgl).epoch_time
+        / run_strategy(d, &c, StrategyKind::HopGnn).epoch_time;
+    assert!(s2 > 1.2, "2 servers: speedup {s2:.2}x");
+    assert!(s6 > 1.0, "6 servers: speedup {s6:.2}x");
+}
