@@ -15,12 +15,12 @@ use hopgnn::sampler::{SampleConfig, SamplerKind};
 use hopgnn::train::{OrderPolicy, Trainer};
 use hopgnn::util::table::fmt_secs;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hopgnn::util::error::Result<()> {
     let manifest = Manifest::load_default()
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .map_err(hopgnn::util::error::Error::msg)?;
     let spec = manifest
         .find("gcn", 128, 128)
-        .ok_or_else(|| anyhow::anyhow!("gcn artifact missing — run `make artifacts`"))?;
+        .ok_or_else(|| hopgnn::err!("gcn artifact missing — run `make artifacts`"))?;
 
     // a 12k-vertex community graph (128-d features, 10 classes), the
     // largest that trains in a couple of minutes on the CPU PJRT backend
@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
     }
     let final_val = trainer.evaluate(&d, &d.val_vertices)?;
     println!("\nfinal validation accuracy: {:.2}%", final_val * 100.0);
-    anyhow::ensure!(final_val > 0.5, "training failed to beat 50%");
+    hopgnn::ensure!(final_val > 0.5, "training failed to beat 50%");
     println!("e2e OK: all three layers compose (Pallas kernels -> jax fwd/bwd -> HLO -> PJRT -> rust trainer)");
     Ok(())
 }

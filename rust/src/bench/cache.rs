@@ -69,7 +69,7 @@ pub fn run(cfg: &RunConfig, kind: StrategyKind) -> EpochMetrics {
     // HopGNN adapts its schedule across epochs (merging probe); report
     // the final (frozen) epoch as steady state, like the paper's
     // "remainder of the training" framing in Fig 17.
-    let steady = if per_epoch.len() > 2 && kind == StrategyKind::HopGnn {
+    let steady = if per_epoch.len() > 2 && kind.adapts_across_epochs() {
         &per_epoch[per_epoch.len() - 1..]
     } else {
         &per_epoch[..]

@@ -8,6 +8,7 @@ pub mod cache;
 pub mod harness;
 pub mod motivation;
 pub mod overall;
+pub mod overlap;
 pub mod sensitivity;
 pub mod table3;
 
@@ -97,7 +98,7 @@ impl Scale {
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig04", "fig05", "fig07", "table1", "fig11", "fig12", "fig13",
     "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-    "fig21", "fig22", "fig23", "table3",
+    "fig21", "fig22", "fig23", "table3", "overlap",
 ];
 
 /// Dispatch one experiment by id.
@@ -121,6 +122,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> Result<Report, String> {
         "fig22" => Ok(sensitivity::fig22_batch_featdim(scale)),
         "fig23" => Ok(sensitivity::fig23_fanout_machines(scale)),
         "table3" => table3::table3_accuracy(scale),
+        "overlap" => Ok(overlap::overlap_sweep(scale)),
         _ => Err(format!(
             "unknown experiment '{id}'; known: {}",
             ALL_EXPERIMENTS.join(", ")

@@ -45,6 +45,27 @@ impl Clocks {
         self.busy[server] += dt;
     }
 
+    /// Lane-safe accounting: overwrite `server`'s clock with the final
+    /// time computed by a concurrent lane executor. The lane starts
+    /// from `now(server)` and only accumulates, so `t` never rewinds.
+    #[inline]
+    pub fn set(&mut self, server: usize, t: f64) {
+        debug_assert!(
+            t >= self.t[server],
+            "lane clock rewind: {t} < {}",
+            self.t[server]
+        );
+        self.t[server] = t;
+    }
+
+    /// Lane-safe accounting: fold a lane's accumulated busy (compute)
+    /// seconds into `server`'s busy counter.
+    #[inline]
+    pub fn add_busy(&mut self, server: usize, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative busy {dt}");
+        self.busy[server] += dt;
+    }
+
     /// Barrier across all servers: everyone waits for the slowest.
     pub fn barrier(&mut self) -> f64 {
         let max = self.max();
@@ -118,6 +139,19 @@ mod tests {
         c.barrier_among(&[0, 1]);
         assert_eq!(c.now(1), 5.0);
         assert_eq!(c.now(2), 0.0);
+    }
+
+    #[test]
+    fn lane_set_and_add_busy() {
+        let mut c = Clocks::new(2);
+        c.advance(0, 1.0);
+        // a lane resumed from now(0)=1.0 and accumulated to 3.5 with
+        // 1.5s of compute
+        c.set(0, 3.5);
+        c.add_busy(0, 1.5);
+        assert_eq!(c.now(0), 3.5);
+        assert_eq!(c.busy_time(0), 1.5);
+        assert_eq!(c.max(), 3.5);
     }
 
     #[test]

@@ -125,6 +125,22 @@ impl NetStats {
         self.bytes_by_kind[kind.index()]
     }
 
+    /// Fold another accounting delta into this one (lane-safe
+    /// reduction: per-server lane executors record into local NetStats,
+    /// merged in deterministic server order). All counters are exact
+    /// integer sums, so merge order never changes totals.
+    pub fn merge(&mut self, other: &NetStats) {
+        debug_assert_eq!(self.num_servers, other.num_servers);
+        for k in 0..NUM_KINDS {
+            self.bytes_by_kind[k] += other.bytes_by_kind[k];
+            self.msgs_by_kind[k] += other.msgs_by_kind[k];
+        }
+        for (dst, src) in self.link_bytes.iter_mut().zip(&other.link_bytes)
+        {
+            *dst += src;
+        }
+    }
+
     /// Byte-conservation invariant: per-kind totals == per-link totals.
     pub fn validate(&self) -> Result<(), String> {
         let by_link: u64 = self.link_bytes.iter().sum();
@@ -159,6 +175,21 @@ mod tests {
         let t = s.record(&net, 2, 2, 1 << 20, TransferKind::Feature);
         assert_eq!(t, 0.0);
         assert_eq!(s.total_bytes(), 0);
+    }
+
+    #[test]
+    fn merge_is_exact_sum() {
+        let net = NetworkModel::default();
+        let mut a = NetStats::new(2);
+        let mut b = NetStats::new(2);
+        a.record(&net, 0, 1, 100, TransferKind::Feature);
+        b.record(&net, 1, 0, 40, TransferKind::Gradient);
+        b.record(&net, 0, 1, 5, TransferKind::Feature);
+        a.merge(&b);
+        assert_eq!(a.bytes(TransferKind::Feature), 105);
+        assert_eq!(a.bytes(TransferKind::Gradient), 40);
+        assert_eq!(a.msgs_by_kind[TransferKind::Feature.index()], 2);
+        a.validate().unwrap();
     }
 
     #[test]

@@ -31,6 +31,14 @@ pub struct RunConfig {
     pub max_iterations: Option<usize>,
     /// Override the dataset's feature dim (Fig 22b sweeps this).
     pub feat_dim_override: Option<usize>,
+    /// Gather/compute overlap: async-flagged transfers hide behind
+    /// compute on the same server (the driver's pipelining model;
+    /// `bench/overlap.rs` sweeps it). Off = the strategies' historical
+    /// serial accounting, byte-for-byte and second-for-second.
+    pub overlap: bool,
+    /// Execute per-server op lanes on worker threads (bit-identical to
+    /// sequential execution; purely a wall-clock knob for big sweeps).
+    pub parallel_lanes: bool,
 }
 
 impl Default for RunConfig {
@@ -52,6 +60,8 @@ impl Default for RunConfig {
             cost: CostModel::default(),
             max_iterations: None,
             feat_dim_override: None,
+            overlap: false,
+            parallel_lanes: true,
         }
     }
 }
@@ -124,6 +134,13 @@ impl RunConfig {
         let fl = |v: &str| -> Result<f64, String> {
             v.parse().map_err(|_| format!("bad number '{v}' for {key}"))
         };
+        let bl = |v: &str| -> Result<bool, String> {
+            match v {
+                "true" | "1" | "on" | "yes" => Ok(true),
+                "false" | "0" | "off" | "no" => Ok(false),
+                _ => Err(format!("bad bool '{v}' for {key}")),
+            }
+        };
         match key {
             "dataset" => self.dataset = val.to_string(),
             "model" => {
@@ -154,6 +171,8 @@ impl RunConfig {
             "t_sync" => self.cost.t_sync = fl(val)?,
             "max_iterations" => self.max_iterations = Some(us(val)?),
             "feat_dim" => self.feat_dim_override = Some(us(val)?),
+            "overlap" => self.overlap = bl(val)?,
+            "parallel_lanes" | "parallel" => self.parallel_lanes = bl(val)?,
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -196,5 +215,19 @@ mod tests {
         assert!(RunConfig::from_kv("servers = many").is_err());
         assert!(RunConfig::from_kv("model = resnet").is_err());
         assert!(RunConfig::from_kv("just a line").is_err());
+        assert!(RunConfig::from_kv("overlap = maybe").is_err());
+    }
+
+    #[test]
+    fn driver_knobs_parse() {
+        let cfg = RunConfig::from_kv(
+            "overlap = true\nparallel_lanes = off\n",
+        )
+        .unwrap();
+        assert!(cfg.overlap);
+        assert!(!cfg.parallel_lanes);
+        let d = RunConfig::default();
+        assert!(!d.overlap, "overlap must default off (parity)");
+        assert!(d.parallel_lanes);
     }
 }

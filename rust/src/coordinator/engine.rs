@@ -1,0 +1,561 @@
+//! The shared epoch execution engine.
+//!
+//! [`EpochDriver::run`] executes a strategy-built [`Program`] against
+//! the cluster substrate — per-server [`Clocks`], exact [`NetStats`]
+//! byte accounting, and [`EpochMetrics`] — in one place. Strategies are
+//! pure schedule builders; everything that used to be six hand-rolled
+//! epoch loops (clock lifecycle, gather execution, migration timing,
+//! allreduce, validation) lives here.
+//!
+//! ## Parallel per-server simulation
+//!
+//! Each [`Item::Lanes`] executes one op lane per server. Lanes are
+//! independent by construction (an op only touches its own server's
+//! clock; byte records are pure sums), so the driver runs them on
+//! `std::thread::scope` workers when there is enough work to amortize
+//! the spawns, then reduces lane-local `NetStats`/metrics deltas in
+//! server order. The lane executor is the same function in both modes
+//! and the reduction order is fixed, so parallel execution is
+//! **bit-identical** to sequential execution — `deterministic` tests
+//! hold with lanes enabled.
+//!
+//! ## Gather/compute overlap
+//!
+//! With [`RunConfig::overlap`] enabled, transfer ops flagged
+//! `overlap: true` become *asynchronous*: their seconds accumulate in a
+//! per-lane pending buffer instead of the clock, and subsequent compute
+//! on the same lane drains (hides) the pending time — the steady-state
+//! pipelining idealization (P³'s push-pull behind compute, HopGNN's
+//! pre-gather as prefetch, RapidGNN-style deterministic fetch overlap).
+//! Whatever compute cannot hide is exposed to the clock at the next
+//! allreduce (gradient sync is a hard fence) or at epoch end. Byte
+//! accounting is unaffected: overlap changes *when* time is charged,
+//! never how many bytes move. With the knob off, every op is charged
+//! inline and the driver reproduces the historical eager loops'
+//! accounting exactly.
+
+use super::ops::{Item, Op, Phase, Program};
+use super::SimEnv;
+use crate::cluster::{Clocks, NetStats};
+use crate::featstore::FeatureStore;
+use crate::featstore::pregather::PregatherPlan;
+use crate::metrics::EpochMetrics;
+
+/// Minimum summed op weight in a lane set before the driver spawns
+/// worker threads (below this, sequential execution is faster).
+const PARALLEL_WORK_THRESHOLD: usize = 4096;
+
+/// One epoch's execution session. Strategies stream [`Program`]
+/// fragments (typically one per iteration) through [`Self::exec`] so
+/// the materialized op working set stays O(one iteration) — the same
+/// footprint the historical eager loops had — then close the session
+/// with [`Self::finish`]. [`Self::run`] is the one-shot convenience
+/// for a fully materialized program.
+pub struct EpochDriver<'e, 'a> {
+    env: &'e SimEnv<'a>,
+    store: FeatureStore<'e>,
+    clocks: Clocks,
+    stats: NetStats,
+    m: EpochMetrics,
+    /// Per-server asynchronous transfer time not yet hidden or exposed.
+    pending: Vec<f64>,
+    parallel_override: Option<bool>,
+}
+
+impl<'e, 'a> EpochDriver<'e, 'a> {
+    pub fn new(env: &'e SimEnv<'a>) -> Self {
+        Self::with_override(env, None)
+    }
+
+    /// `new` with the lane-parallelism decision forced (tests assert
+    /// bit-parity between the two modes through this entry point).
+    fn with_override(
+        env: &'e SimEnv<'a>,
+        parallel_override: Option<bool>,
+    ) -> Self {
+        let n = env.num_servers();
+        Self {
+            env,
+            store: env.store(),
+            clocks: Clocks::new(n),
+            stats: NetStats::new(n),
+            m: EpochMetrics::default(),
+            pending: vec![0.0f64; n],
+            parallel_override,
+        }
+    }
+
+    /// Execute one schedule fragment against the session state.
+    pub fn exec(&mut self, program: &Program) {
+        let n = self.env.num_servers();
+        debug_assert_eq!(n, program.num_servers, "program/env server count");
+        for item in &program.items {
+            match item {
+                Item::Lanes(lanes) => {
+                    let work: usize = lanes
+                        .iter()
+                        .flat_map(|l| l.iter().map(Op::weight))
+                        .sum();
+                    let active =
+                        lanes.iter().filter(|l| !l.is_empty()).count();
+                    let parallel = self.parallel_override.unwrap_or(
+                        self.env.cfg.parallel_lanes
+                            && work >= PARALLEL_WORK_THRESHOLD,
+                    ) && active > 1;
+                    exec_lanes(
+                        self.env,
+                        &self.store,
+                        lanes,
+                        parallel,
+                        &mut self.clocks,
+                        &mut self.stats,
+                        &mut self.m,
+                        &mut self.pending,
+                    );
+                }
+                Item::Barrier => {
+                    // async transfers keep flowing while a server waits
+                    // at the barrier: the idle gap up to the slowest
+                    // server absorbs pending transfer time. (With
+                    // overlap off, pending is always zero.)
+                    let max = self.clocks.max();
+                    for s in 0..n {
+                        let gap = max - self.clocks.now(s);
+                        let hide = self.pending[s].min(gap);
+                        if hide > 0.0 {
+                            self.pending[s] -= hide;
+                            self.m.time_overlap_hidden += hide;
+                        }
+                    }
+                    self.clocks.barrier();
+                }
+                Item::SyncAll => {
+                    for s in 0..n {
+                        self.clocks.advance(s, self.env.cfg.cost.t_sync);
+                    }
+                    self.m.time_sync += self.env.cfg.cost.t_sync;
+                }
+                Item::Allreduce => {
+                    // gradient sync is a hard fence: expose whatever
+                    // async transfer time compute and idle could not hide
+                    expose_pending(&mut self.clocks, &mut self.pending);
+                    self.env.allreduce_grads(
+                        &mut self.clocks,
+                        &mut self.stats,
+                        &mut self.m,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Close the session: expose leftover async time, validate byte
+    /// conservation, and return the epoch's metrics (times, exact
+    /// bytes, counters, busy fraction).
+    ///
+    /// The caller (strategy) still owns schedule-level metrics:
+    /// `iterations` and `time_steps_per_iter` are not known here.
+    pub fn finish(mut self) -> EpochMetrics {
+        expose_pending(&mut self.clocks, &mut self.pending);
+        self.stats.validate().expect("byte accounting");
+        self.m.absorb_net(&self.stats);
+        self.m.epoch_time = self.clocks.max();
+        self.m.gpu_busy_fraction = self.clocks.busy_fraction();
+        self.m
+    }
+
+    /// One-shot: execute `program` in a fresh session and finish.
+    pub fn run(env: &SimEnv, program: &Program) -> EpochMetrics {
+        Self::run_inner(env, program, None)
+    }
+
+    fn run_inner(
+        env: &SimEnv,
+        program: &Program,
+        parallel_override: Option<bool>,
+    ) -> EpochMetrics {
+        let mut driver = EpochDriver::with_override(env, parallel_override);
+        driver.exec(program);
+        driver.finish()
+    }
+}
+
+fn expose_pending(clocks: &mut Clocks, pending: &mut [f64]) {
+    for (s, p) in pending.iter_mut().enumerate() {
+        if *p > 0.0 {
+            clocks.advance(s, *p);
+            *p = 0.0;
+        }
+    }
+}
+
+/// Result of executing one lane: final clock, busy delta, remaining
+/// async-pending seconds, and lane-local accounting deltas.
+struct LaneOut {
+    t: f64,
+    busy_dt: f64,
+    pending: f64,
+    stats: NetStats,
+    m: EpochMetrics,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn exec_lanes(
+    env: &SimEnv,
+    store: &FeatureStore,
+    lanes: &[Vec<Op>],
+    parallel: bool,
+    clocks: &mut Clocks,
+    stats: &mut NetStats,
+    m: &mut EpochMetrics,
+    pending: &mut [f64],
+) {
+    let results: Vec<LaneOut> = if parallel {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = lanes
+                .iter()
+                .enumerate()
+                .map(|(s, ops)| {
+                    let t0 = clocks.now(s);
+                    let p0 = pending[s];
+                    scope.spawn(move || run_lane(env, store, s, ops, t0, p0))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("lane worker panicked"))
+                .collect()
+        })
+    } else {
+        lanes
+            .iter()
+            .enumerate()
+            .map(|(s, ops)| {
+                run_lane(env, store, s, ops, clocks.now(s), pending[s])
+            })
+            .collect()
+    };
+    // deterministic reduction: server order, independent of which lane
+    // finished first
+    for (s, r) in results.into_iter().enumerate() {
+        clocks.set(s, r.t);
+        clocks.add_busy(s, r.busy_dt);
+        stats.merge(&r.stats);
+        m.accumulate(&r.m);
+        pending[s] = r.pending;
+    }
+}
+
+/// Execute one server's ops starting from clock `t0` and async-pending
+/// `pending0`. Pure: reads only shared immutable state, writes only
+/// lane-local accumulators.
+fn run_lane(
+    env: &SimEnv,
+    store: &FeatureStore,
+    server: usize,
+    ops: &[Op],
+    t0: f64,
+    pending0: f64,
+) -> LaneOut {
+    let n = env.num_servers();
+    let cfg = &env.cfg;
+    let overlap_on = cfg.overlap;
+    let mut t = t0;
+    let mut busy_dt = 0.0f64;
+    let mut pending = pending0;
+    let mut stats = NetStats::new(n);
+    let mut m = EpochMetrics::default();
+
+    let charge_compute = |dt: f64,
+                          t: &mut f64,
+                          busy_dt: &mut f64,
+                          pending: &mut f64,
+                          m: &mut EpochMetrics| {
+        *t += dt;
+        *busy_dt += dt;
+        m.time_compute += dt;
+        if overlap_on && *pending > 0.0 {
+            // async transfers proceed while the GPU computes
+            let hidden = pending.min(dt);
+            *pending -= hidden;
+            m.time_overlap_hidden += hidden;
+        }
+    };
+
+    // one place decides whether transfer seconds go to the clock or
+    // the async-pending stream (Gather, GatherMerged, and Migrate all
+    // share these semantics)
+    let charge_transfer = |dt: f64,
+                           phase: Phase,
+                           async_ok: bool,
+                           t: &mut f64,
+                           pending: &mut f64,
+                           m: &mut EpochMetrics| {
+        phase_add(m, phase, dt);
+        if overlap_on && async_ok {
+            *pending += dt;
+        } else {
+            *t += dt;
+        }
+    };
+
+    for op in ops {
+        match op {
+            Op::Sample { vertices } => {
+                let dt = cfg.cost.sample_time(*vertices);
+                t += dt;
+                m.time_sample += dt;
+            }
+            Op::Gather { vertices, overlap } => {
+                let plan = store.plan(server, vertices.iter().copied());
+                let dt = store.sim_cost(
+                    &plan, &cfg.net, &cfg.cost, &mut stats, &mut m,
+                );
+                charge_transfer(dt, Phase::Gather, *overlap, &mut t,
+                                &mut pending, &mut m);
+            }
+            Op::GatherMerged { steps, overlap } => {
+                let plan = PregatherPlan::build(store, server, steps);
+                let dt = store.sim_cost(
+                    &plan.merged,
+                    &cfg.net,
+                    &cfg.cost,
+                    &mut stats,
+                    &mut m,
+                );
+                charge_transfer(dt, Phase::Gather, *overlap, &mut t,
+                                &mut pending, &mut m);
+            }
+            Op::Compute { v, e } => {
+                let dt = cfg.cost.train_time(&env.shape, *v, *e);
+                charge_compute(dt, &mut t, &mut busy_dt, &mut pending,
+                               &mut m);
+            }
+            Op::ComputeSecs { secs } => {
+                charge_compute(*secs, &mut t, &mut busy_dt, &mut pending,
+                               &mut m);
+            }
+            Op::Migrate {
+                from,
+                kind,
+                bytes,
+                phase,
+                overlap,
+            } => {
+                let dt =
+                    stats.record(&cfg.net, *from, server, *bytes, *kind);
+                charge_transfer(dt, *phase, *overlap, &mut t,
+                                &mut pending, &mut m);
+            }
+            Op::Host { secs, phase } => {
+                t += secs;
+                phase_add(&mut m, *phase, *secs);
+            }
+            Op::Tally {
+                remote_requests,
+                remote_vertices,
+                local_hits,
+            } => {
+                m.remote_requests += remote_requests;
+                m.remote_vertices += remote_vertices;
+                m.local_hits += local_hits;
+            }
+        }
+    }
+
+    LaneOut {
+        t,
+        busy_dt,
+        pending,
+        stats,
+        m,
+    }
+}
+
+fn phase_add(m: &mut EpochMetrics, phase: Phase, dt: f64) {
+    match phase {
+        Phase::Gather => m.time_gather += dt,
+        Phase::Migrate => m.time_migrate += dt,
+        Phase::Untimed => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TransferKind;
+    use crate::config::RunConfig;
+    use crate::coordinator::ops::ProgramBuilder;
+    use crate::graph::datasets::tiny_test_dataset;
+
+    fn env_with(overlap: bool, parallel: bool) -> RunConfig {
+        RunConfig {
+            num_servers: 4,
+            overlap,
+            parallel_lanes: parallel,
+            ..Default::default()
+        }
+    }
+
+    fn demo_program(n: usize) -> Program {
+        let mut b = ProgramBuilder::new(n);
+        for s in 0..n {
+            b.op(s, Op::Sample { vertices: 500 });
+            b.op(s, Op::Gather {
+                // tiny_test_dataset has 400 vertices; gather them all
+                vertices: (0..400u32).collect(),
+                overlap: true,
+            });
+            b.op(s, Op::Compute { v: 400, e: 2400 });
+        }
+        b.barrier();
+        for s in 0..n {
+            b.op(s, Op::Migrate {
+                from: (s + 1) % n,
+                kind: TransferKind::ModelParams,
+                bytes: 1 << 16,
+                phase: Phase::Migrate,
+                overlap: false,
+            });
+        }
+        b.allreduce();
+        b.finish()
+    }
+
+    #[test]
+    fn sequential_and_parallel_lanes_are_bit_identical() {
+        let d = tiny_test_dataset(200);
+        let prog = demo_program(4);
+        let env = SimEnv::new(&d, env_with(false, true));
+        let seq = EpochDriver::run_inner(&env, &prog, Some(false));
+        let par = EpochDriver::run_inner(&env, &prog, Some(true));
+        assert_eq!(seq.total_bytes(), par.total_bytes());
+        for k in 0..crate::cluster::network::NUM_KINDS {
+            assert_eq!(seq.bytes_by_kind[k], par.bytes_by_kind[k]);
+        }
+        assert_eq!(seq.epoch_time.to_bits(), par.epoch_time.to_bits());
+        assert_eq!(
+            seq.gpu_busy_fraction.to_bits(),
+            par.gpu_busy_fraction.to_bits()
+        );
+        assert_eq!(seq.time_gather.to_bits(), par.time_gather.to_bits());
+        assert_eq!(seq.remote_vertices, par.remote_vertices);
+        assert_eq!(seq.local_hits, par.local_hits);
+    }
+
+    #[test]
+    fn streaming_fragments_equal_one_program() {
+        // feeding the epoch as per-iteration fragments through exec()
+        // is bit-identical to one materialized program
+        let d = tiny_test_dataset(204);
+        let env = SimEnv::new(&d, env_with(false, false));
+        let one = EpochDriver::run(&env, &demo_program(4));
+
+        let mut frag_a = ProgramBuilder::new(4);
+        for s in 0..4 {
+            frag_a.op(s, Op::Sample { vertices: 500 });
+            frag_a.op(s, Op::Gather {
+                vertices: (0..400u32).collect(),
+                overlap: true,
+            });
+            frag_a.op(s, Op::Compute { v: 400, e: 2400 });
+        }
+        frag_a.barrier();
+        let mut frag_b = ProgramBuilder::new(4);
+        for s in 0..4 {
+            frag_b.op(s, Op::Migrate {
+                from: (s + 1) % 4,
+                kind: TransferKind::ModelParams,
+                bytes: 1 << 16,
+                phase: Phase::Migrate,
+                overlap: false,
+            });
+        }
+        frag_b.allreduce();
+        let mut driver = EpochDriver::new(&env);
+        driver.exec(&frag_a.finish());
+        driver.exec(&frag_b.finish());
+        let streamed = driver.finish();
+
+        assert_eq!(one.total_bytes(), streamed.total_bytes());
+        assert_eq!(one.epoch_time.to_bits(), streamed.epoch_time.to_bits());
+        assert_eq!(one.remote_vertices, streamed.remote_vertices);
+    }
+
+    #[test]
+    fn overlap_changes_time_not_bytes() {
+        let d = tiny_test_dataset(201);
+        let off_env = SimEnv::new(&d, env_with(false, false));
+        let off = EpochDriver::run(&off_env, &demo_program(4));
+        let on_env = SimEnv::new(&d, env_with(true, false));
+        let on = EpochDriver::run(&on_env, &demo_program(4));
+        assert_eq!(off.total_bytes(), on.total_bytes());
+        assert_eq!(off.remote_vertices, on.remote_vertices);
+        assert!(on.epoch_time <= off.epoch_time + 1e-15,
+                "overlap must not slow the epoch: {} > {}",
+                on.epoch_time, off.epoch_time);
+        assert!(on.time_overlap_hidden > 0.0, "some gather must hide");
+        // gather *work* is unchanged; only its exposure moved
+        assert!((on.time_gather - off.time_gather).abs() < 1e-15);
+    }
+
+    #[test]
+    fn unhidden_async_time_is_exposed_at_fences() {
+        // a program with a huge async gather and almost no compute:
+        // overlap cannot hide it, so epoch time must match serial
+        let d = tiny_test_dataset(202);
+        let mut b = ProgramBuilder::new(2);
+        b.op(0, Op::Gather {
+            vertices: (0..400u32).collect(),
+            overlap: true,
+        });
+        b.allreduce();
+        let prog = b.finish();
+        let off = EpochDriver::run(
+            &SimEnv::new(&d, RunConfig {
+                num_servers: 2,
+                overlap: false,
+                parallel_lanes: false,
+                ..Default::default()
+            }),
+            &prog,
+        );
+        let on = EpochDriver::run(
+            &SimEnv::new(&d, RunConfig {
+                num_servers: 2,
+                overlap: true,
+                parallel_lanes: false,
+                ..Default::default()
+            }),
+            &prog,
+        );
+        assert!((on.epoch_time - off.epoch_time).abs() < 1e-12,
+                "nothing to hide behind: {} vs {}",
+                on.epoch_time, off.epoch_time);
+        assert_eq!(on.time_overlap_hidden, 0.0);
+    }
+
+    #[test]
+    fn untimed_phase_charges_clock_but_no_metric() {
+        let d = tiny_test_dataset(203);
+        let mut b = ProgramBuilder::new(2);
+        b.op(1, Op::Migrate {
+            from: 0,
+            kind: TransferKind::Control,
+            bytes: 4096,
+            phase: Phase::Untimed,
+            overlap: false,
+        });
+        let prog = b.finish();
+        let env = SimEnv::new(&d, RunConfig {
+            num_servers: 2,
+            ..Default::default()
+        });
+        let m = EpochDriver::run(&env, &prog);
+        assert!(m.epoch_time > 0.0);
+        assert_eq!(m.bytes(TransferKind::Control), 4096);
+        let phases = m.time_sample + m.time_gather + m.time_compute
+            + m.time_migrate + m.time_sync;
+        assert_eq!(phases, 0.0);
+    }
+}

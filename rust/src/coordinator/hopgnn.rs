@@ -16,11 +16,19 @@
 //! Feature flags reproduce the Fig 13 ablation: `+MG` (micrograph
 //! training only), `+PG` (adds pre-gathering §5.2), `All` (adds merging
 //! §5.3).
+//!
+//! The builder emits one lane segment for redistribution + sampling +
+//! pre-gathering, then a (gather →) compute segment per time step with
+//! migration segments between steps. Feature gathers are overlap-
+//! eligible: with the driver's overlap mode on, the pre-gather becomes a
+//! true prefetch that streams in behind the step computes instead of
+//! blocking the iteration head — the principled version of §5.2's
+//! "gather once, early" idea.
 
 use super::merge::{MergeController, Selection};
-use super::{SimEnv, Strategy};
-use crate::cluster::{Clocks, NetStats, TransferKind};
-use crate::featstore::pregather::PregatherPlan;
+use super::ops::{Op, Phase, ProgramBuilder};
+use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};
+use crate::cluster::TransferKind;
 use crate::metrics::EpochMetrics;
 use crate::sampler::Micrograph;
 
@@ -46,6 +54,8 @@ impl HopGnn {
     }
 
     /// Fig 18's RD baseline: merging with random step selection.
+    /// Reachable end-to-end as `StrategyKind::HopGnnRandomMerge`
+    /// (`--strategy rd`).
     pub fn random_merge() -> Self {
         Self::with_flags(true, true, Selection::Random)
     }
@@ -90,20 +100,16 @@ impl Strategy for HopGnn {
         let schedule = controller.schedule.clone();
         let t_steps = schedule.num_steps();
 
-        let mut clocks = Clocks::new(n);
-        let mut stats = NetStats::new(n);
-        let mut m = EpochMetrics::default();
         let mut rng = env.rng.fork(0x40B ^ self.epoch_idx);
         self.epoch_idx += 1;
 
         let iterations = env.epoch_iterations();
-        m.iterations = iterations.len() as u64;
-        m.time_steps_per_iter = t_steps as f64;
-        let store = env.store();
         let param_bytes = env.shape.param_bytes();
         let mut step_loads = vec![0u64; t_steps];
+        let mut driver = EpochDriver::new(env);
 
         for minibatches in &iterations {
+            let mut b = ProgramBuilder::new(n);
             // (1) redistribution: group roots by home server; ship ids
             let groups: Vec<Vec<Vec<u32>>> = minibatches
                 .iter()
@@ -112,15 +118,13 @@ impl Strategy for HopGnn {
             for (d, per_server) in groups.iter().enumerate() {
                 for (s, roots) in per_server.iter().enumerate() {
                     if s != d && !roots.is_empty() {
-                        let dt = stats.record(
-                            &env.cfg.net,
-                            d,
-                            s,
-                            4 * roots.len() as u64,
-                            TransferKind::Control,
-                        );
-                        clocks.advance(s, dt);
-                        m.time_migrate += dt;
+                        b.op(s, Op::Migrate {
+                            from: d,
+                            kind: TransferKind::Control,
+                            bytes: 4 * roots.len() as u64,
+                            phase: Phase::Migrate,
+                            overlap: false,
+                        });
                     }
                 }
             }
@@ -130,18 +134,19 @@ impl Strategy for HopGnn {
             // slot_mgs[t][srv] = micrographs trained on srv at step t
             let mut slot_mgs: Vec<Vec<Vec<Micrograph>>> =
                 vec![(0..n).map(|_| Vec::new()).collect(); t_steps];
-            for d in 0..n {
-                for t in 0..t_steps {
+            for (d, per_server) in groups.iter().enumerate() {
+                for (t, loads) in step_loads.iter_mut().enumerate() {
                     let srv = schedule.visits[d][t];
                     for src in schedule.sources(d, t) {
-                        let roots = &groups[d][src];
+                        let roots = &per_server[src];
                         if roots.is_empty() {
                             continue;
                         }
-                        step_loads[t] += roots.len() as u64;
-                        let mgs = env.sample_batch(
-                            roots, &mut rng, srv, &mut clocks, &mut m,
-                        );
+                        *loads += roots.len() as u64;
+                        let mgs = env.sample_micrographs(roots, &mut rng);
+                        b.op(srv, Op::Sample {
+                            vertices: mg_vertices(&mgs),
+                        });
                         slot_mgs[t][srv].extend(mgs);
                     }
                 }
@@ -151,58 +156,48 @@ impl Strategy for HopGnn {
             // the whole iteration
             if self.pregather {
                 for srv in 0..n {
-                    let steps: Vec<Vec<u32>> = (0..t_steps)
-                        .map(|t| {
-                            slot_mgs[t][srv]
+                    let steps: Vec<Vec<u32>> = slot_mgs
+                        .iter()
+                        .map(|slots| {
+                            slots[srv]
                                 .iter()
                                 .flat_map(|mg| mg.vertices.iter().copied())
                                 .collect()
                         })
                         .collect();
-                    let plan = PregatherPlan::build(&store, srv, &steps);
-                    store.execute_sim(
-                        &plan.merged,
-                        &env.cfg.net,
-                        &env.cfg.cost,
-                        &mut clocks,
-                        &mut stats,
-                        &mut m,
-                    );
+                    b.op(srv, Op::GatherMerged {
+                        steps,
+                        overlap: true,
+                    });
                 }
-                clocks.barrier();
+                b.barrier();
             }
 
             // (3b) the T time steps
-            for t in 0..t_steps {
-                for srv in 0..n {
-                    let mgs = &slot_mgs[t][srv];
+            for (t, slots) in slot_mgs.iter().enumerate() {
+                for (srv, mgs) in slots.iter().enumerate() {
                     if mgs.is_empty() {
                         continue; // §5.1 special case: idle this step
                     }
                     if !self.pregather {
-                        let verts =
-                            mgs.iter().flat_map(|g| g.vertices.iter().copied());
-                        let plan = store.plan(srv, verts);
-                        store.execute_sim(
-                            &plan,
-                            &env.cfg.net,
-                            &env.cfg.cost,
-                            &mut clocks,
-                            &mut stats,
-                            &mut m,
-                        );
+                        let verts: Vec<u32> = mgs
+                            .iter()
+                            .flat_map(|g| g.vertices.iter().copied())
+                            .collect();
+                        b.op(srv, Op::Gather {
+                            vertices: verts,
+                            overlap: true,
+                        });
                     }
-                    let v: u64 =
-                        mgs.iter().map(|g| g.num_vertices() as u64).sum();
-                    let e: u64 = mgs.iter().map(|g| g.edges.len() as u64).sum();
-                    let dt = env.cfg.cost.train_time(&env.shape, v, e);
-                    clocks.advance_busy(srv, dt);
-                    m.time_compute += dt;
+                    b.op(srv, Op::Compute {
+                        v: mg_vertices(mgs),
+                        e: mg_edges(mgs),
+                    });
                 }
 
                 // step barrier + model migration (params + accumulated
                 // grads travel together, Fig 9)
-                clocks.barrier();
+                b.barrier();
                 if t + 1 < t_steps {
                     for d in 0..n {
                         let from = schedule.visits[d][t];
@@ -210,39 +205,34 @@ impl Strategy for HopGnn {
                         if from == to {
                             continue;
                         }
-                        let mut dt = stats.record(
-                            &env.cfg.net,
+                        b.op(to, Op::Migrate {
                             from,
-                            to,
-                            param_bytes,
-                            TransferKind::ModelParams,
-                        );
-                        dt += stats.record(
-                            &env.cfg.net,
+                            kind: TransferKind::ModelParams,
+                            bytes: param_bytes,
+                            phase: Phase::Migrate,
+                            overlap: false,
+                        });
+                        b.op(to, Op::Migrate {
                             from,
-                            to,
-                            param_bytes,
-                            TransferKind::Gradient,
-                        );
-                        clocks.advance(to, dt);
-                        m.time_migrate += dt;
+                            kind: TransferKind::Gradient,
+                            bytes: param_bytes,
+                            phase: Phase::Migrate,
+                            overlap: false,
+                        });
                     }
-                    for s in 0..n {
-                        clocks.advance(s, env.cfg.cost.t_sync);
-                    }
-                    m.time_sync += env.cfg.cost.t_sync;
-                    clocks.barrier();
+                    b.sync_all();
+                    b.barrier();
                 }
             }
 
             // (4) final gradient synchronization
-            env.allreduce_grads(&mut clocks, &mut stats, &mut m);
+            b.allreduce();
+            driver.exec(&b.finish());
         }
 
-        stats.validate().expect("byte accounting");
-        m.absorb_net(&stats);
-        m.epoch_time = clocks.max();
-        m.gpu_busy_fraction = clocks.busy_fraction();
+        let mut m = driver.finish();
+        m.iterations = iterations.len() as u64;
+        m.time_steps_per_iter = t_steps as f64;
 
         // merging feedback (§5.3): adapt the schedule between epochs
         let controller = self.controller.as_mut().unwrap();
@@ -335,5 +325,38 @@ mod tests {
         let b = HopGnn::full().run_epoch(&mut SimEnv::new(&d, cfg()));
         assert_eq!(a.total_bytes(), b.total_bytes());
         assert!((a.epoch_time - b.epoch_time).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_merge_is_reachable_and_adapts() {
+        let d = small_test_dataset(35);
+        let mut env = SimEnv::new(&d, cfg());
+        let mut strat = HopGnn::random_merge();
+        let epochs = strat.run(&mut env, 4);
+        assert_eq!(strat.merge_history().len(), 4);
+        // RD still merges (selection differs, mechanism identical)
+        let last_steps = epochs.last().unwrap().time_steps_per_iter;
+        assert!(last_steps <= 4.0);
+    }
+
+    #[test]
+    fn overlap_prefetches_the_pregather() {
+        let d = small_test_dataset(36);
+        let serial = HopGnn::mg_pg().run_epoch(&mut SimEnv::new(&d, cfg()));
+        let over = HopGnn::mg_pg().run_epoch(&mut SimEnv::new(
+            &d,
+            RunConfig {
+                overlap: true,
+                ..cfg()
+            },
+        ));
+        assert_eq!(serial.total_bytes(), over.total_bytes());
+        assert!(
+            over.epoch_time <= serial.epoch_time,
+            "overlap {} !<= serial {}",
+            over.epoch_time,
+            serial.epoch_time
+        );
+        assert!(over.time_overlap_hidden > 0.0, "prefetch must hide time");
     }
 }

@@ -8,8 +8,9 @@
 //! demonstrates. Included as the accuracy foil; its epoch time is a lower
 //! bound HopGNN approaches without the bias.
 
-use super::{SimEnv, Strategy};
-use crate::cluster::{Clocks, NetStats, TransferKind};
+use super::ops::{Op, Phase, ProgramBuilder};
+use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};
+use crate::cluster::TransferKind;
 use crate::metrics::EpochMetrics;
 
 pub struct LocalityOpt {
@@ -35,18 +36,14 @@ impl Strategy for LocalityOpt {
 
     fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics {
         let n = env.num_servers();
-        let mut clocks = Clocks::new(n);
-        let mut stats = NetStats::new(n);
-        let mut m = EpochMetrics::default();
         let mut rng = env.rng.fork(0x10C ^ self.epoch_idx);
         self.epoch_idx += 1;
 
         let iterations = env.epoch_iterations();
-        m.iterations = iterations.len() as u64;
-        m.time_steps_per_iter = 1.0;
-        let store = env.store();
+        let mut driver = EpochDriver::new(env);
 
         for minibatches in &iterations {
+            let mut b = ProgramBuilder::new(n);
             // redistribute ALL roots of the iteration by home server;
             // each server's local model trains whatever landed on it
             let all: Vec<u32> =
@@ -56,35 +53,38 @@ impl Strategy for LocalityOpt {
                 if roots.is_empty() {
                     continue;
                 }
-                // ship root ids (control plane)
-                let dt = stats.record(
-                    &env.cfg.net,
-                    (s + 1) % n, // scheduler side; only bytes matter
-                    s,
-                    4 * roots.len() as u64,
-                    TransferKind::Control,
-                );
-                clocks.advance(s, dt);
+                // ship root ids (control plane); scheduler side — only
+                // the bytes matter, so charge no phase time
+                b.op(s, Op::Migrate {
+                    from: (s + 1) % n,
+                    kind: TransferKind::Control,
+                    bytes: 4 * roots.len() as u64,
+                    phase: Phase::Untimed,
+                    overlap: false,
+                });
 
-                let mgs = env.sample_batch(roots, &mut rng, s, &mut clocks,
-                                           &mut m);
-                let verts = mgs.iter().flat_map(|g| g.vertices.iter().copied());
-                let plan = store.plan(s, verts);
-                store.execute_sim(&plan, &env.cfg.net, &env.cfg.cost,
-                                  &mut clocks, &mut stats, &mut m);
-                let v: u64 = mgs.iter().map(|g| g.num_vertices() as u64).sum();
-                let e: u64 = mgs.iter().map(|g| g.edges.len() as u64).sum();
-                let dt = env.cfg.cost.train_time(&env.shape, v, e);
-                clocks.advance_busy(s, dt);
-                m.time_compute += dt;
+                let mgs = env.sample_micrographs(roots, &mut rng);
+                b.op(s, Op::Sample {
+                    vertices: mg_vertices(&mgs),
+                });
+                let verts: Vec<u32> = mgs
+                    .iter()
+                    .flat_map(|g| g.vertices.iter().copied())
+                    .collect();
+                let (v, e) = (mg_vertices(&mgs), mg_edges(&mgs));
+                b.op(s, Op::Gather {
+                    vertices: verts,
+                    overlap: true,
+                });
+                b.op(s, Op::Compute { v, e });
             }
-            env.allreduce_grads(&mut clocks, &mut stats, &mut m);
+            b.allreduce();
+            driver.exec(&b.finish());
         }
 
-        stats.validate().expect("byte accounting");
-        m.absorb_net(&stats);
-        m.epoch_time = clocks.max();
-        m.gpu_busy_fraction = clocks.busy_fraction();
+        let mut m = driver.finish();
+        m.iterations = iterations.len() as u64;
+        m.time_steps_per_iter = 1.0;
         m
     }
 }

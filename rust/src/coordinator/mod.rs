@@ -1,27 +1,46 @@
 //! The distributed training coordinator — the paper's system layer.
 //!
-//! Six strategies over the same cluster substrate:
+//! ## Architecture: schedule builders over a shared execution engine
 //!
-//! | strategy            | paradigm        | paper role                  |
-//! |---------------------|-----------------|------------------------------|
-//! | [`model_centric`]   | features → model| DGL baseline                 |
-//! | [`p3`]              | hybrid parallel | P³ (state of the art)        |
-//! | [`naive_fc`]        | model → features| §3.2 strawman                |
-//! | [`hopgnn`]          | model → features| the contribution (§5)        |
-//! | [`locality_opt`]    | no migration    | LO, accuracy-compromising    |
-//! | [`neutronstar`]     | full-batch      | §7.7 comparison              |
+//! Every strategy is a *schedule builder*: it compiles its epoch into a
+//! typed per-server op stream ([`ops::Program`] — `Sample`, `Gather`,
+//! `Compute`, `Migrate`, `Barrier`, `Allreduce`, ...) and hands it to
+//! the shared [`engine::EpochDriver`], which executes the ops against
+//! the cluster substrate ([`crate::cluster::Clocks`] /
+//! [`crate::cluster::NetStats`] / [`crate::metrics::EpochMetrics`]) in
+//! one place. The driver owns the epoch lifecycle, runs independent
+//! per-server lanes on worker threads (bit-identical to sequential
+//! execution), and models gather/compute overlap when
+//! [`crate::config::RunConfig::overlap`] is on.
 //!
-//! Every strategy consumes a [`SimEnv`] and emits [`EpochMetrics`]; byte
-//! counts are exact, times come from the cluster cost models. The real
-//! (PJRT) trainer reuses the HopGNN/DGL/LO schedules — see `train/`.
+//! | strategy            | schedule it builds                          | paper role                |
+//! |---------------------|---------------------------------------------|---------------------------|
+//! | [`model_centric`]   | sample → gather → compute per server        | DGL baseline              |
+//! | [`p3`]              | MP layer-1 + hidden push-pull, then DP      | P³ (state of the art)     |
+//! | [`naive_fc`]        | model walk dragging intermediate state      | §3.2 strawman             |
+//! | [`hopgnn`]          | redistribute → pre-gather → T migration steps| the contribution (§5)    |
+//! | [`locality_opt`]    | redistribute only, no migration             | LO, accuracy-compromising |
+//! | [`neutronstar`]     | full-batch boundary exchange / hybrid       | §7.7 comparison           |
+//!
+//! Byte counts are exact (recorded per link and per
+//! [`crate::cluster::TransferKind`]); times come from the cluster cost
+//! models. With `overlap` off the op streams reproduce the historical
+//! eager per-strategy loops' accounting exactly — locked in by
+//! `tests/parity.rs`. The real (PJRT) trainer reuses the HopGNN/DGL/LO
+//! schedules — see `train/`.
 
+pub mod engine;
 pub mod hopgnn;
 pub mod locality_opt;
 pub mod merge;
 pub mod model_centric;
 pub mod naive_fc;
 pub mod neutronstar;
+pub mod ops;
 pub mod p3;
+
+pub use engine::EpochDriver;
+pub use ops::{Op, Phase, Program, ProgramBuilder};
 
 use crate::cluster::{Clocks, ModelShape, NetStats, TransferKind};
 use crate::config::RunConfig;
@@ -114,26 +133,19 @@ impl<'a> SimEnv<'a> {
         iters
     }
 
-    /// Sample micrographs for a root set; charges sampling time on
-    /// `server` and returns the micrographs.
-    pub fn sample_batch(
+    /// Sample micrographs for a root set. Pure with respect to the
+    /// simulation: time is charged by the [`Op::Sample`] op the builder
+    /// emits alongside (the driver owns all clocks).
+    pub fn sample_micrographs(
         &self,
         roots: &[u32],
         rng: &mut Rng,
-        server: usize,
-        clocks: &mut Clocks,
-        metrics: &mut EpochMetrics,
     ) -> Vec<Micrograph> {
         let scfg = self.cfg.sample_config();
-        let mgs: Vec<Micrograph> = roots
+        roots
             .iter()
             .map(|&r| sample_micrograph(&self.dataset.graph, r, &scfg, rng))
-            .collect();
-        let sampled: u64 = mgs.iter().map(|m| m.num_vertices() as u64).sum();
-        let dt = self.cfg.cost.sample_time(sampled);
-        clocks.advance(server, dt);
-        metrics.time_sample += dt;
-        mgs
+            .collect()
     }
 
     /// Ring allreduce of gradients across all servers (the iteration-end
@@ -150,7 +162,7 @@ impl<'a> SimEnv<'a> {
         if n > 1 {
             // ring: 2(n-1) rounds of pb/n chunks per server
             let chunk = pb / n as u64;
-            let mut dt_total = 0.0;
+            let mut dt_round = 0.0f64;
             for round in 0..2 * (n - 1) {
                 for s in 0..n {
                     let dst = (s + 1) % n;
@@ -162,21 +174,22 @@ impl<'a> SimEnv<'a> {
                         TransferKind::Gradient,
                     );
                     if round == 0 {
-                        // time: all rounds proceed in parallel across the
-                        // ring; total time = rounds * per-chunk time,
-                        // charged uniformly below.
-                        dt_total = t;
+                        // all links of a round proceed in parallel, so
+                        // the round costs its *slowest* link (they only
+                        // differ under heterogeneous networks); total
+                        // time = rounds x per-round time, charged
+                        // uniformly below.
+                        dt_round = dt_round.max(t);
                     }
                 }
             }
-            let per_server = dt_total * 2.0 * (n as f64 - 1.0);
+            let per_server = dt_round * 2.0 * (n as f64 - 1.0);
             for s in 0..n {
                 clocks.advance(s, per_server);
             }
             metrics.time_sync += per_server;
         }
-        let t = clocks.barrier();
-        let _ = t;
+        clocks.barrier();
         for s in 0..n {
             clocks.advance(s, self.cfg.cost.t_sync);
         }
@@ -193,8 +206,19 @@ impl<'a> SimEnv<'a> {
     }
 }
 
-/// A distributed training strategy: simulates epochs, keeps cross-epoch
-/// state (HopGNN's merge controller adapts between epochs).
+/// Summed vertex count across micrographs (pre-dedup).
+pub fn mg_vertices(mgs: &[Micrograph]) -> u64 {
+    mgs.iter().map(|m| m.num_vertices() as u64).sum()
+}
+
+/// Summed edge count across micrographs.
+pub fn mg_edges(mgs: &[Micrograph]) -> u64 {
+    mgs.iter().map(|m| m.edges.len() as u64).sum()
+}
+
+/// A distributed training strategy: builds one epoch's op-stream
+/// schedule, runs it through the shared [`EpochDriver`], and keeps
+/// cross-epoch state (HopGNN's merge controller adapts between epochs).
 pub trait Strategy {
     fn name(&self) -> &'static str;
     fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics;
@@ -214,10 +238,26 @@ pub enum StrategyKind {
     HopGnn,
     HopGnnMgOnly,
     HopGnnMgPg,
+    /// Fig 18's RD ablation: merging with random step selection.
+    HopGnnRandomMerge,
     LocalityOpt,
     NeutronStar,
     DglFullBatch,
 }
+
+/// Every selectable strategy, in presentation order (harness sweeps).
+pub const ALL_STRATEGY_KINDS: [StrategyKind; 10] = [
+    StrategyKind::Dgl,
+    StrategyKind::P3,
+    StrategyKind::Naive,
+    StrategyKind::HopGnn,
+    StrategyKind::HopGnnMgOnly,
+    StrategyKind::HopGnnMgPg,
+    StrategyKind::HopGnnRandomMerge,
+    StrategyKind::LocalityOpt,
+    StrategyKind::NeutronStar,
+    StrategyKind::DglFullBatch,
+];
 
 impl StrategyKind {
     pub fn from_str(s: &str) -> Option<Self> {
@@ -228,6 +268,7 @@ impl StrategyKind {
             "hopgnn" | "all" => Some(Self::HopGnn),
             "hopgnn-mg" | "+mg" => Some(Self::HopGnnMgOnly),
             "hopgnn-mg-pg" | "+pg" => Some(Self::HopGnnMgPg),
+            "hopgnn-rd" | "rd" => Some(Self::HopGnnRandomMerge),
             "lo" | "locality-opt" => Some(Self::LocalityOpt),
             "neutronstar" | "ns" => Some(Self::NeutronStar),
             "dgl-fb" => Some(Self::DglFullBatch),
@@ -243,6 +284,7 @@ impl StrategyKind {
             Self::HopGnn => "HopGNN",
             Self::HopGnnMgOnly => "+MG",
             Self::HopGnnMgPg => "+PG",
+            Self::HopGnnRandomMerge => "RD",
             Self::LocalityOpt => "LO",
             Self::NeutronStar => "NeutronStar",
             Self::DglFullBatch => "DGL-FB",
@@ -257,6 +299,9 @@ impl StrategyKind {
             Self::HopGnn => Box::new(hopgnn::HopGnn::full()),
             Self::HopGnnMgOnly => Box::new(hopgnn::HopGnn::mg_only()),
             Self::HopGnnMgPg => Box::new(hopgnn::HopGnn::mg_pg()),
+            Self::HopGnnRandomMerge => {
+                Box::new(hopgnn::HopGnn::random_merge())
+            }
             Self::LocalityOpt => Box::new(locality_opt::LocalityOpt::new()),
             Self::NeutronStar => {
                 Box::new(neutronstar::NeutronStar::new(false))
@@ -275,6 +320,12 @@ impl StrategyKind {
             _ => None,
         }
     }
+
+    /// Strategies whose merge controller adapts the schedule across
+    /// epochs (report the final frozen epoch as steady state).
+    pub fn adapts_across_epochs(&self) -> bool {
+        matches!(self, Self::HopGnn | Self::HopGnnRandomMerge)
+    }
 }
 
 /// Convenience: run a (strategy, config) pair end to end and return the
@@ -292,11 +343,10 @@ pub fn run_strategy(
     let mut env = SimEnv::new(dataset, cfg);
     let mut strat = kind.build();
     let per_epoch = strat.run(&mut env, epochs);
-    // skip epoch 0 when the strategy adapts (HopGNN's merging probe)
     // HopGNN adapts its schedule across epochs (merging probe); report
     // the final (frozen) epoch as steady state, like the paper's
     // "remainder of the training" framing in Fig 17.
-    let steady = if per_epoch.len() > 2 && kind == StrategyKind::HopGnn {
+    let steady = if per_epoch.len() > 2 && kind.adapts_across_epochs() {
         &per_epoch[per_epoch.len() - 1..]
     } else {
         &per_epoch[..]
@@ -371,12 +421,68 @@ mod tests {
     }
 
     #[test]
+    fn allreduce_ring_charges_slowest_link_per_round() {
+        // uniform network: per-round time equals any link's time; the
+        // max-over-links fix must not change the uniform-case total
+        let d = tiny_test_dataset(12);
+        let cfg = RunConfig {
+            num_servers: 4,
+            ..Default::default()
+        };
+        let env = SimEnv::new(&d, cfg);
+        let mut clocks = Clocks::new(4);
+        let mut stats = NetStats::new(4);
+        let mut m = EpochMetrics::default();
+        env.allreduce_grads(&mut clocks, &mut stats, &mut m);
+        let pb = env.shape.param_bytes();
+        let chunk = pb / 4;
+        let per_round = env.cfg.net.transfer_time(chunk);
+        let expect = per_round * 6.0 + env.cfg.cost.t_sync; // 2(n-1) rounds
+        assert!(
+            (clocks.now(0) - expect).abs() < 1e-12,
+            "ring time {} != expected {expect}",
+            clocks.now(0)
+        );
+        // ring moves 2(n-1) * n chunks in total
+        assert_eq!(stats.bytes(TransferKind::Gradient), chunk * 24);
+    }
+
+    #[test]
     fn strategy_kind_parsing() {
         assert_eq!(StrategyKind::from_str("dgl"), Some(StrategyKind::Dgl));
         assert_eq!(
             StrategyKind::from_str("hopgnn"),
             Some(StrategyKind::HopGnn)
         );
+        assert_eq!(
+            StrategyKind::from_str("rd"),
+            Some(StrategyKind::HopGnnRandomMerge)
+        );
+        assert_eq!(
+            StrategyKind::from_str("hopgnn-rd"),
+            Some(StrategyKind::HopGnnRandomMerge)
+        );
         assert_eq!(StrategyKind::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn every_kind_is_listed_and_buildable() {
+        for kind in ALL_STRATEGY_KINDS {
+            let s = kind.build();
+            assert!(!s.name().is_empty());
+            assert!(StrategyKind::from_str(match kind {
+                StrategyKind::Dgl => "dgl",
+                StrategyKind::P3 => "p3",
+                StrategyKind::Naive => "naive",
+                StrategyKind::HopGnn => "hopgnn",
+                StrategyKind::HopGnnMgOnly => "+mg",
+                StrategyKind::HopGnnMgPg => "+pg",
+                StrategyKind::HopGnnRandomMerge => "rd",
+                StrategyKind::LocalityOpt => "lo",
+                StrategyKind::NeutronStar => "ns",
+                StrategyKind::DglFullBatch => "dgl-fb",
+            })
+            .is_some());
+        }
     }
 }

@@ -3,10 +3,13 @@
 //! Models never move. Each iteration every server samples the subgraph
 //! for its mini-batch, gathers all its vertex features (remote misses go
 //! over the network — the Fig 4 bottleneck), computes locally, and
-//! allreduces gradients.
+//! allreduces gradients. The epoch compiles to one lane segment per
+//! iteration (sample → gather → compute on every server) followed by an
+//! allreduce; the gather is overlap-eligible, modeling DGL's prefetching
+//! dataloader when the driver's overlap mode is on.
 
-use super::{SimEnv, Strategy};
-use crate::cluster::{Clocks, NetStats};
+use super::ops::{Op, ProgramBuilder};
+use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};
 use crate::metrics::EpochMetrics;
 use crate::sampler::Subgraph;
 
@@ -33,59 +36,48 @@ impl Strategy for ModelCentric {
 
     fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics {
         let n = env.num_servers();
-        let mut clocks = Clocks::new(n);
-        let mut stats = NetStats::new(n);
-        let mut m = EpochMetrics::default();
         let mut rng = env.rng.fork(0xD61 ^ self.epoch_idx);
         self.epoch_idx += 1;
 
         let iterations = env.epoch_iterations();
-        m.iterations = iterations.len() as u64;
-        m.time_steps_per_iter = 1.0;
-        let store = env.store();
-
+        let mut driver = EpochDriver::new(env);
         for minibatches in &iterations {
+            let mut b = ProgramBuilder::new(n);
             for (server, roots) in minibatches.iter().enumerate() {
                 // sample the mini-batch's micrographs; DGL merges them
                 // into one subgraph (dedup) before gathering
-                let mgs = env.sample_batch(roots, &mut rng, server,
-                                           &mut clocks, &mut m);
+                let mgs = env.sample_micrographs(roots, &mut rng);
+                b.op(server, Op::Sample {
+                    vertices: mg_vertices(&mgs),
+                });
                 let sub = Subgraph::union_of(&mgs);
 
-                // gather: one batched fetch per remote source
-                let plan = store.plan(server, sub.vertices.iter().copied());
-                store.execute_sim(&plan, &env.cfg.net, &env.cfg.cost,
-                                  &mut clocks, &mut stats, &mut m);
-
-                // compute on the deduplicated subgraph
-                let edges: u64 = mgs.iter()
-                    .map(|g| g.edges.len() as u64)
-                    .sum::<u64>();
-                // dedup factor: unique vertices / summed vertices
-                let summed: u64 = mgs.iter()
-                    .map(|g| g.num_vertices() as u64)
-                    .sum::<u64>();
+                // compute on the deduplicated subgraph:
+                // dedup factor = unique vertices / summed vertices
+                let edges = mg_edges(&mgs);
+                let summed = mg_vertices(&mgs);
                 let dedup = if summed == 0 {
                     1.0
                 } else {
                     sub.vertices.len() as f64 / summed as f64
                 };
                 let e_ded = (edges as f64 * dedup) as u64;
-                let dt = env.cfg.cost.train_time(
-                    &env.shape,
-                    sub.vertices.len() as u64,
-                    e_ded,
-                );
-                clocks.advance_busy(server, dt);
-                m.time_compute += dt;
+                let v_uniq = sub.vertices.len() as u64;
+
+                // gather: one batched fetch per remote source
+                b.op(server, Op::Gather {
+                    vertices: sub.vertices,
+                    overlap: true,
+                });
+                b.op(server, Op::Compute { v: v_uniq, e: e_ded });
             }
-            env.allreduce_grads(&mut clocks, &mut stats, &mut m);
+            b.allreduce();
+            driver.exec(&b.finish());
         }
 
-        stats.validate().expect("byte accounting");
-        m.absorb_net(&stats);
-        m.epoch_time = clocks.max();
-        m.gpu_busy_fraction = clocks.busy_fraction();
+        let mut m = driver.finish();
+        m.iterations = iterations.len() as u64;
+        m.time_steps_per_iter = 1.0;
         m
     }
 }
@@ -152,5 +144,34 @@ mod tests {
         assert_eq!(m1.total_bytes(), m2.total_bytes());
         assert_eq!(m1.remote_vertices, m2.remote_vertices);
         assert!((m1.epoch_time - m2.epoch_time).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_hides_gather_behind_compute() {
+        let d = crate::graph::datasets::small_test_dataset(23);
+        let cfg = RunConfig {
+            batch_size: 256,
+            num_servers: 4,
+            max_iterations: Some(3),
+            feat_dim_override: Some(300),
+            ..Default::default()
+        };
+        let serial = ModelCentric::new()
+            .run_epoch(&mut SimEnv::new(&d, cfg.clone()));
+        let overlapped = ModelCentric::new().run_epoch(&mut SimEnv::new(
+            &d,
+            RunConfig {
+                overlap: true,
+                ..cfg
+            },
+        ));
+        assert_eq!(serial.total_bytes(), overlapped.total_bytes());
+        assert!(
+            overlapped.epoch_time < serial.epoch_time,
+            "overlap {} !< serial {}",
+            overlapped.epoch_time,
+            serial.epoch_time
+        );
+        assert!(overlapped.time_overlap_hidden > 0.0);
     }
 }

@@ -12,9 +12,15 @@
 //! descending feature-count order, Fig 6's walk), consuming local
 //! features at each stop. Carried state:
 //!   params + partial aggregation [V_sub × F] + activations so far.
+//!
+//! The walk is inherently serial — the model cannot compute at stop k+1
+//! before its state arrives from stop k — so none of its transfers are
+//! overlap-eligible; the op stream simply threads the migrations through
+//! the visited servers' lanes.
 
-use super::{SimEnv, Strategy};
-use crate::cluster::{Clocks, NetStats, TransferKind};
+use super::ops::{Op, Phase, ProgramBuilder};
+use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};
+use crate::cluster::TransferKind;
 use crate::metrics::EpochMetrics;
 use crate::sampler::Subgraph;
 
@@ -41,23 +47,23 @@ impl Strategy for NaiveFc {
 
     fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics {
         let n = env.num_servers();
-        let mut clocks = Clocks::new(n);
-        let mut stats = NetStats::new(n);
-        let mut m = EpochMetrics::default();
         let mut rng = env.rng.fork(0x4A1 ^ self.epoch_idx);
         self.epoch_idx += 1;
 
         let iterations = env.epoch_iterations();
-        m.iterations = iterations.len() as u64;
         let param_bytes = env.shape.param_bytes();
         let feat_bytes = env.feat_bytes;
         let hid_bytes = (env.shape.hidden * 4) as u64;
         let mut steps_accum = 0f64;
+        let mut driver = EpochDriver::new(env);
 
         for minibatches in &iterations {
+            let mut b = ProgramBuilder::new(n);
             for (d, roots) in minibatches.iter().enumerate() {
-                let mgs = env.sample_batch(roots, &mut rng, d, &mut clocks,
-                                           &mut m);
+                let mgs = env.sample_micrographs(roots, &mut rng);
+                b.op(d, Op::Sample {
+                    vertices: mg_vertices(&mgs),
+                });
                 let sub = Subgraph::union_of(&mgs);
                 let v_sub = sub.vertices.len() as u64;
                 // rows with open aggregations = non-leaf vertices (leaves
@@ -67,8 +73,7 @@ impl Strategy for NaiveFc {
                     .flat_map(|g| g.depth.iter())
                     .filter(|&&dep| (dep as usize) < env.cfg.layers)
                     .count() as u64;
-                let summed: u64 =
-                    mgs.iter().map(|g| g.num_vertices() as u64).sum();
+                let summed = mg_vertices(&mgs);
                 let dedup = if summed == 0 {
                     1.0
                 } else {
@@ -94,7 +99,8 @@ impl Strategy for NaiveFc {
                 // the walk progresses) + activations kept for backward.
                 let mut cur = d;
                 let mut consumed = 0u64;
-                for (hop, &s) in order.iter().enumerate() {
+                let e_total = mg_edges(&mgs);
+                for &s in &order {
                     if s != cur {
                         // open-row partial sums shrink as features are
                         // consumed; activations accumulate for backward
@@ -105,60 +111,67 @@ impl Strategy for NaiveFc {
                         let state = param_bytes
                             + remaining * feat_bytes        // open agg rows
                             + open_rows * hid_bytes;        // saved acts
-                        let mut dt = stats.record(
-                            &env.cfg.net, cur, s,
-                            param_bytes.min(state),
-                            TransferKind::ModelParams,
-                        );
-                        dt += stats.record(
-                            &env.cfg.net, cur, s,
-                            state.saturating_sub(param_bytes),
-                            TransferKind::Intermediate,
-                        );
-                        clocks.advance(s, dt);
-                        m.time_migrate += dt;
+                        b.op(s, Op::Migrate {
+                            from: cur,
+                            kind: TransferKind::ModelParams,
+                            bytes: param_bytes.min(state),
+                            phase: Phase::Migrate,
+                            overlap: false,
+                        });
+                        b.op(s, Op::Migrate {
+                            from: cur,
+                            kind: TransferKind::Intermediate,
+                            bytes: state.saturating_sub(param_bytes),
+                            phase: Phase::Migrate,
+                            overlap: false,
+                        });
                         cur = s;
                         steps_accum += 1.0;
                     }
                     // local feature read: host staging only
-                    let dt = env.cfg.cost.stage_time(counts[s] * feat_bytes);
-                    clocks.advance(s, dt);
-                    m.time_gather += dt;
-                    m.local_hits += counts[s];
+                    b.op(s, Op::Host {
+                        secs: env.cfg.cost.stage_time(counts[s] * feat_bytes),
+                        phase: Phase::Gather,
+                    });
+                    b.op(s, Op::Tally {
+                        remote_requests: 0,
+                        remote_vertices: 0,
+                        local_hits: counts[s],
+                    });
                     consumed += counts[s];
                     // partial compute proportional to consumed share
                     let frac = counts[s] as f64 / v_sub.max(1) as f64;
-                    let e: u64 = mgs.iter().map(|g| g.edges.len() as u64).sum();
-                    let dt = env.cfg.cost.train_time(
-                        &env.shape,
-                        (v_sub as f64 * frac) as u64,
-                        (e as f64 * frac) as u64,
-                    );
-                    clocks.advance_busy(cur, dt);
-                    m.time_compute += dt;
-                    let _ = hop;
+                    b.op(cur, Op::Compute {
+                        v: (v_sub as f64 * frac) as u64,
+                        e: (e_total as f64 * frac) as u64,
+                    });
                 }
                 // return home for the update (bwd completes along the way)
                 if cur != d {
                     let state = param_bytes + open_rows * hid_bytes;
-                    let mut dt = stats.record(&env.cfg.net, cur, d,
-                                              param_bytes,
-                                              TransferKind::ModelParams);
-                    dt += stats.record(&env.cfg.net, cur, d,
-                                       state - param_bytes,
-                                       TransferKind::Intermediate);
-                    clocks.advance(d, dt);
-                    m.time_migrate += dt;
+                    b.op(d, Op::Migrate {
+                        from: cur,
+                        kind: TransferKind::ModelParams,
+                        bytes: param_bytes,
+                        phase: Phase::Migrate,
+                        overlap: false,
+                    });
+                    b.op(d, Op::Migrate {
+                        from: cur,
+                        kind: TransferKind::Intermediate,
+                        bytes: state - param_bytes,
+                        phase: Phase::Migrate,
+                        overlap: false,
+                    });
                     steps_accum += 1.0;
                 }
             }
-            env.allreduce_grads(&mut clocks, &mut stats, &mut m);
+            b.allreduce();
+            driver.exec(&b.finish());
         }
 
-        stats.validate().expect("byte accounting");
-        m.absorb_net(&stats);
-        m.epoch_time = clocks.max();
-        m.gpu_busy_fraction = clocks.busy_fraction();
+        let mut m = driver.finish();
+        m.iterations = iterations.len() as u64;
         m.time_steps_per_iter = if m.iterations == 0 {
             0.0
         } else {
@@ -219,5 +232,23 @@ mod tests {
             "walk length {}",
             m.time_steps_per_iter
         );
+    }
+
+    #[test]
+    fn serial_walk_ignores_overlap_mode() {
+        // NaiveFc emits no overlap-eligible ops: enabling the knob must
+        // not change its epoch at all.
+        let d = tiny_test_dataset(53);
+        let base = NaiveFc::new().run_epoch(&mut SimEnv::new(&d, cfg(None)));
+        let over = NaiveFc::new().run_epoch(&mut SimEnv::new(
+            &d,
+            RunConfig {
+                overlap: true,
+                ..cfg(None)
+            },
+        ));
+        assert_eq!(base.total_bytes(), over.total_bytes());
+        assert_eq!(base.epoch_time.to_bits(), over.epoch_time.to_bits());
+        assert_eq!(over.time_overlap_hidden, 0.0);
     }
 }

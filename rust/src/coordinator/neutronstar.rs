@@ -17,9 +17,14 @@
 //!   fanout = full and one mega-micrograph per partition) — feature-
 //!   centric: models migrate between partitions, so only boundary raw
 //!   features move, once.
+//!
+//! Boundary fetches are overlap-eligible (they are known before the
+//! epoch starts — the full-batch analogue of a deterministic prefetch
+//! schedule); model migration and the per-layer barriers are not.
 
-use super::{SimEnv, Strategy};
-use crate::cluster::{Clocks, NetStats, TransferKind};
+use super::ops::{Op, Phase, ProgramBuilder};
+use super::{EpochDriver, SimEnv, Strategy};
+use crate::cluster::TransferKind;
 use crate::metrics::EpochMetrics;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,12 +70,6 @@ impl Strategy for NeutronStar {
 
     fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics {
         let n = env.num_servers();
-        let mut clocks = Clocks::new(n);
-        let mut stats = NetStats::new(n);
-        let mut m = EpochMetrics::default();
-        m.iterations = 1;
-        m.time_steps_per_iter = env.cfg.layers as f64;
-
         let g = &env.dataset.graph;
         let part = &env.partition;
         let feat_bytes = env.feat_bytes;
@@ -96,76 +95,83 @@ impl Strategy for NeutronStar {
             }
         }
 
+        let mut b = ProgramBuilder::new(n);
+        let mut steps_per_iter = layers as f64;
+
         if self.mode == FullBatchMode::HopFb {
             // feature-centric full batch: models migrate round-robin over
             // the N partition blocks; each block's boundary raw features
             // are fetched once per epoch (pre-gathered), then every model
             // computes the block locally during its visit.
             let param_bytes = env.shape.param_bytes();
-            m.time_steps_per_iter = n as f64;
+            steps_per_iter = n as f64;
             for s in 0..n {
                 let mut by_src = vec![0u64; n];
+                let mut remote = 0u64;
                 for &u in boundary[s].keys() {
                     by_src[part.home(u) as usize] += feat_bytes;
-                    m.remote_vertices += 1;
+                    remote += 1;
                 }
                 for (src, bytes) in by_src.iter().enumerate() {
                     if *bytes == 0 {
                         continue;
                     }
-                    let dt = stats.record(&env.cfg.net, src, s, *bytes,
-                                          TransferKind::Feature);
-                    clocks.advance(s, dt);
-                    m.time_gather += dt;
-                    m.remote_requests += 1;
+                    b.op(s, Op::Migrate {
+                        from: src,
+                        kind: TransferKind::Feature,
+                        bytes: *bytes,
+                        phase: Phase::Gather,
+                        overlap: true,
+                    });
+                    b.op(s, Op::Tally {
+                        remote_requests: 1,
+                        remote_vertices: 0,
+                        local_hits: 0,
+                    });
                 }
-                m.local_hits += local_v[s];
+                b.op(s, Op::Tally {
+                    remote_requests: 0,
+                    remote_vertices: remote,
+                    local_hits: local_v[s],
+                });
             }
             for t in 0..n {
                 for d in 0..n {
                     let s = (d + t) % n;
                     // each model trains its 1/N share of the block's
                     // roots during its visit
-                    let dt = env.cfg.cost.train_time(
-                        &env.shape,
-                        local_v[s] / n as u64,
-                        local_e[s] / n as u64,
-                    );
-                    clocks.advance_busy(s, dt);
-                    m.time_compute += dt;
+                    b.op(s, Op::Compute {
+                        v: local_v[s] / n as u64,
+                        e: local_e[s] / n as u64,
+                    });
                 }
-                clocks.barrier();
+                b.barrier();
                 if t + 1 < n {
                     for d in 0..n {
                         let from = (d + t) % n;
                         let to = (d + t + 1) % n;
-                        let dt = stats.record(&env.cfg.net, from, to,
-                                              2 * param_bytes,
-                                              TransferKind::ModelParams);
-                        clocks.advance(to, dt);
-                        m.time_migrate += dt;
+                        b.op(to, Op::Migrate {
+                            from,
+                            kind: TransferKind::ModelParams,
+                            bytes: 2 * param_bytes,
+                            phase: Phase::Migrate,
+                            overlap: false,
+                        });
                     }
-                    for s in 0..n {
-                        clocks.advance(s, env.cfg.cost.t_sync);
-                    }
-                    m.time_sync += env.cfg.cost.t_sync;
+                    b.sync_all();
                 }
             }
         } else {
             for s in 0..n {
-                // local compute over the partition block
-                let dt = env.cfg.cost.train_time(&env.shape, local_v[s],
-                                                 local_e[s]);
-                clocks.advance_busy(s, dt);
-                m.time_compute += dt;
-                m.local_hits += local_v[s];
-
-                // boundary handling
+                // boundary handling (decided up front; the fetches are
+                // emitted *before* the block compute so the driver's
+                // overlap mode can stream them in behind it)
                 let dgl_baseline = self.mode == FullBatchMode::DglFb;
                 let mut fetch_bytes_by_src = vec![0u64; n];
+                let mut remote = 0u64;
                 let mut recompute_v = 0u64;
                 let mut recompute_e = 0u64;
-                for (&u, &_uses) in &boundary[s] {
+                for &u in boundary[s].keys() {
                     let src = part.home(u) as usize;
                     // (a) communicate: embedding each layer, fwd+bwd
                     let comm = 2 * layers * hid_bytes;
@@ -177,57 +183,74 @@ impl Strategy for NeutronStar {
                         recompute_flops / env.cfg.cost.flops_per_sec;
                     // transfers are batched per source: amortized cost is
                     // bandwidth-only (latency paid once per source)
-                    let comm_cost_secs = comm as f64 / env.cfg.net.bandwidth;
-                    if dgl_baseline || comm_cost_secs <= recompute_cost_secs {
+                    let comm_cost_secs =
+                        comm as f64 / env.cfg.net.bandwidth;
+                    if dgl_baseline || comm_cost_secs <= recompute_cost_secs
+                    {
                         fetch_bytes_by_src[src] += comm;
-                        m.remote_vertices += 1;
+                        remote += 1;
                     } else {
                         // raw feature moves once; compute is duplicated
                         fetch_bytes_by_src[src] += feat_bytes;
                         recompute_v += 1;
                         recompute_e += deg;
-                        m.remote_vertices += 1;
+                        remote += 1;
                     }
                 }
+                let kind = if dgl_baseline {
+                    TransferKind::Hidden
+                } else {
+                    TransferKind::Feature
+                };
                 for (src, bytes) in fetch_bytes_by_src.iter().enumerate() {
                     if *bytes == 0 {
                         continue;
                     }
-                    let kind = if dgl_baseline {
-                        TransferKind::Hidden
-                    } else {
-                        TransferKind::Feature
-                    };
-                    let dt = stats.record(&env.cfg.net, src, s, *bytes, kind);
-                    clocks.advance(s, dt);
-                    m.time_gather += dt;
-                    m.remote_requests += 1;
+                    b.op(s, Op::Migrate {
+                        from: src,
+                        kind,
+                        bytes: *bytes,
+                        phase: Phase::Gather,
+                        overlap: true,
+                    });
+                    b.op(s, Op::Tally {
+                        remote_requests: 1,
+                        remote_vertices: 0,
+                        local_hits: 0,
+                    });
                 }
+                b.op(s, Op::Tally {
+                    remote_requests: 0,
+                    remote_vertices: remote,
+                    local_hits: local_v[s],
+                });
+
+                // local compute over the partition block
+                b.op(s, Op::Compute {
+                    v: local_v[s],
+                    e: local_e[s],
+                });
                 if recompute_v > 0 {
                     // incremental compute inside the same epoch executable
                     // — no extra kernel launches
-                    let dt = env.shape.train_flops(recompute_v, recompute_e)
-                        / env.cfg.cost.flops_per_sec;
-                    clocks.advance_busy(s, dt);
-                    m.time_compute += dt;
+                    b.op(s, Op::ComputeSecs {
+                        secs: env.shape.train_flops(recompute_v, recompute_e)
+                            / env.cfg.cost.flops_per_sec,
+                    });
                 }
             }
         }
 
         // per-layer barriers + final allreduce
         for _ in 0..layers {
-            clocks.barrier();
-            for s in 0..n {
-                clocks.advance(s, env.cfg.cost.t_sync);
-            }
-            m.time_sync += env.cfg.cost.t_sync;
+            b.barrier();
+            b.sync_all();
         }
-        env.allreduce_grads(&mut clocks, &mut stats, &mut m);
+        b.allreduce();
 
-        stats.validate().expect("byte accounting");
-        m.absorb_net(&stats);
-        m.epoch_time = clocks.max();
-        m.gpu_busy_fraction = clocks.busy_fraction();
+        let mut m = EpochDriver::run(env, &b.finish());
+        m.iterations = 1;
+        m.time_steps_per_iter = steps_per_iter;
         m
     }
 }

@@ -1,0 +1,261 @@
+//! The typed per-server op stream every strategy compiles to.
+//!
+//! A strategy no longer executes its epoch eagerly against the clocks;
+//! it emits [`Program`] fragments (typically one per iteration): a
+//! sequence of [`Item`]s, where each item is either a set of
+//! per-server op *lanes* (executed concurrently by the
+//! [`super::engine::EpochDriver`]) or a global synchronization point
+//! (barrier, per-step sync cost, gradient allreduce). Ops carry only
+//! data — vertex id lists, byte counts, FLOP-derived seconds — so the
+//! driver can execute lanes on worker threads with no shared mutable
+//! state and reduce the results deterministically.
+//!
+//! Design invariants:
+//!
+//! * Every op belongs to exactly one lane: the server whose clock its
+//!   time is charged to. Byte transfers name their remote peer via
+//!   `from`, so network accounting stays exact per (src, dst) link.
+//! * Within one `Item::Lanes`, lane order is execution order per
+//!   server; lanes never read another server's clock, so concurrent
+//!   execution is bit-identical to sequential execution.
+//! * Transfer ops flagged `overlap: true` *may* be hidden behind
+//!   compute on the same lane when [`crate::config::RunConfig::overlap`]
+//!   is enabled (see the driver for the exact semantics); with the knob
+//!   off they are charged inline, byte-for-byte and second-for-second
+//!   identical to the historical eager loops.
+
+use crate::cluster::TransferKind;
+
+/// Which epoch-metrics phase a transfer/host op's seconds are
+/// attributed to. Sampling, compute, and sync time always flow through
+/// their dedicated ops ([`Op::Sample`], [`Op::Compute`]/
+/// [`Op::ComputeSecs`], [`Item::SyncAll`]), so only the phases a
+/// `Migrate`/`Host` op can legitimately claim exist here.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Gather,
+    Migrate,
+    /// Clock time with no phase attribution (e.g. LO's control-plane
+    /// root shipping, which the eager loop never charged to a phase).
+    Untimed,
+}
+
+/// One unit of simulated work on a single server lane.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Charge sampling time for `vertices` sampled micrograph vertices.
+    Sample { vertices: u64 },
+    /// Gather features for `vertices` (duplicates allowed; the gather
+    /// plan deduplicates). Remote fetches are recorded per source link.
+    Gather { vertices: Vec<u32>, overlap: bool },
+    /// Iteration-level merged gather (§5.2 pre-gathering): one
+    /// deduplicated fetch for all `steps` of the iteration.
+    GatherMerged { steps: Vec<Vec<u32>>, overlap: bool },
+    /// GNN training compute over `v` vertices / `e` edges (busy time,
+    /// cost-model derived).
+    Compute { v: u64, e: u64 },
+    /// Pre-computed compute seconds (busy) — for strategies with custom
+    /// FLOP accounting (P³'s model-parallel phase).
+    ComputeSecs { secs: f64 },
+    /// Receive `bytes` of `kind` from server `from`; the transfer time
+    /// is charged to this lane and attributed to `phase`.
+    Migrate {
+        from: usize,
+        kind: TransferKind,
+        bytes: u64,
+        phase: Phase,
+        overlap: bool,
+    },
+    /// Host-side seconds (staging, CPU split/merge overheads).
+    Host { secs: f64, phase: Phase },
+    /// Metrics-only counters (no time, no bytes).
+    Tally {
+        remote_requests: u64,
+        remote_vertices: u64,
+        local_hits: u64,
+    },
+}
+
+impl Op {
+    /// Rough work weight used to decide whether parallel lane execution
+    /// is worth spawning threads for.
+    pub fn weight(&self) -> usize {
+        match self {
+            Op::Gather { vertices, .. } => vertices.len(),
+            Op::GatherMerged { steps, .. } => {
+                steps.iter().map(|s| s.len()).sum()
+            }
+            _ => 1,
+        }
+    }
+}
+
+/// One schedule element: concurrent per-server lanes or a global op.
+#[derive(Clone, Debug)]
+pub enum Item {
+    /// `lanes[s]` = ops executed (in order) on server `s`, concurrently
+    /// across servers.
+    Lanes(Vec<Vec<Op>>),
+    /// Align all clocks to the slowest server.
+    Barrier,
+    /// Charge the fixed synchronization cost `t_sync` to every server.
+    SyncAll,
+    /// Ring allreduce of gradients (the iteration-end sync every
+    /// strategy pays).
+    Allreduce,
+}
+
+/// A schedule fragment for `num_servers` servers. Strategies typically
+/// build one `Program` per iteration and stream the fragments through
+/// an [`super::engine::EpochDriver`] session, keeping the materialized
+/// op working set O(one iteration) rather than O(epoch).
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub num_servers: usize,
+    pub items: Vec<Item>,
+}
+
+impl Program {
+    /// Total ops across all lane items (introspection / tests).
+    pub fn num_ops(&self) -> usize {
+        self.items
+            .iter()
+            .map(|i| match i {
+                Item::Lanes(lanes) => {
+                    lanes.iter().map(|l| l.len()).sum::<usize>()
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Number of global synchronization items (barriers + syncs +
+    /// allreduces).
+    pub fn num_sync_points(&self) -> usize {
+        self.items
+            .iter()
+            .filter(|i| !matches!(i, Item::Lanes(_)))
+            .count()
+    }
+}
+
+/// Incremental [`Program`] construction: ops accumulate into the
+/// current lane set; any global item seals it.
+pub struct ProgramBuilder {
+    num_servers: usize,
+    items: Vec<Item>,
+    cur: Vec<Vec<Op>>,
+}
+
+impl ProgramBuilder {
+    pub fn new(num_servers: usize) -> Self {
+        Self {
+            num_servers,
+            items: Vec::new(),
+            cur: vec![Vec::new(); num_servers],
+        }
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.num_servers
+    }
+
+    /// Append `op` to server `server`'s current lane.
+    pub fn op(&mut self, server: usize, op: Op) {
+        debug_assert!(server < self.num_servers);
+        self.cur[server].push(op);
+    }
+
+    fn flush(&mut self) {
+        if self.cur.iter().any(|l| !l.is_empty()) {
+            let lanes = std::mem::replace(
+                &mut self.cur,
+                vec![Vec::new(); self.num_servers],
+            );
+            self.items.push(Item::Lanes(lanes));
+        }
+    }
+
+    pub fn barrier(&mut self) {
+        self.flush();
+        self.items.push(Item::Barrier);
+    }
+
+    pub fn sync_all(&mut self) {
+        self.flush();
+        self.items.push(Item::SyncAll);
+    }
+
+    pub fn allreduce(&mut self) {
+        self.flush();
+        self.items.push(Item::Allreduce);
+    }
+
+    pub fn finish(mut self) -> Program {
+        self.flush();
+        Program {
+            num_servers: self.num_servers,
+            items: self.items,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_seals_lanes_at_global_items() {
+        let mut b = ProgramBuilder::new(2);
+        b.op(0, Op::Sample { vertices: 10 });
+        b.op(1, Op::Compute { v: 5, e: 20 });
+        b.barrier();
+        b.op(0, Op::Host {
+            secs: 1e-3,
+            phase: Phase::Gather,
+        });
+        b.allreduce();
+        let p = b.finish();
+        assert_eq!(p.items.len(), 4); // lanes, barrier, lanes, allreduce
+        assert_eq!(p.num_ops(), 3);
+        assert_eq!(p.num_sync_points(), 2);
+        match &p.items[0] {
+            Item::Lanes(lanes) => {
+                assert_eq!(lanes[0].len(), 1);
+                assert_eq!(lanes[1].len(), 1);
+            }
+            other => panic!("expected lanes, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_lane_sets_are_not_emitted() {
+        let mut b = ProgramBuilder::new(3);
+        b.barrier();
+        b.barrier();
+        let p = b.finish();
+        assert_eq!(p.items.len(), 2);
+        assert!(p.items.iter().all(|i| matches!(i, Item::Barrier)));
+    }
+
+    #[test]
+    fn op_weights() {
+        assert_eq!(Op::Sample { vertices: 99 }.weight(), 1);
+        assert_eq!(
+            Op::Gather {
+                vertices: vec![1, 2, 3],
+                overlap: false
+            }
+            .weight(),
+            3
+        );
+        assert_eq!(
+            Op::GatherMerged {
+                steps: vec![vec![1, 2], vec![3]],
+                overlap: true
+            }
+            .weight(),
+            3
+        );
+    }
+}

@@ -14,9 +14,16 @@
 //! `hidden × layer-1 width`, not with the raw feature dimension — great
 //! at H=16, poor at H=128, and its layer-1 width grows with layer count
 //! (every sampled vertex below the top layer is a layer-1 destination).
+//!
+//! The op stream has two phases per iteration separated by a barrier:
+//! MP (layer-1 compute + hidden push-pull) and DP (upper layers +
+//! allreduce). The hidden exchange is overlap-eligible — P³'s design is
+//! exactly a pipelining argument, and with the driver's overlap mode on
+//! the push-pull hides behind compute.
 
-use super::{SimEnv, Strategy};
-use crate::cluster::{Clocks, NetStats, TransferKind};
+use super::ops::{Op, Phase, ProgramBuilder};
+use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};
+use crate::cluster::TransferKind;
 use crate::metrics::EpochMetrics;
 use crate::sampler::Subgraph;
 
@@ -43,26 +50,25 @@ impl Strategy for P3 {
 
     fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics {
         let n = env.num_servers();
-        let mut clocks = Clocks::new(n);
-        let mut stats = NetStats::new(n);
-        let mut m = EpochMetrics::default();
         let mut rng = env.rng.fork(0xb3 ^ self.epoch_idx);
         self.epoch_idx += 1;
 
         let iterations = env.epoch_iterations();
-        m.iterations = iterations.len() as u64;
-        m.time_steps_per_iter = 2.0; // MP phase + DP phase
         let hid_bytes = (env.shape.hidden * 4) as u64;
         let feat_dim = env.shape.feat_dim;
+        let mut driver = EpochDriver::new(env);
 
         for minibatches in &iterations {
+            let mut b = ProgramBuilder::new(n);
             // every server samples its own mini-batch subgraph
             let mut layer1_dsts: Vec<u64> = Vec::with_capacity(n);
             let mut sub_edges: Vec<u64> = Vec::with_capacity(n);
             let mut sub_verts: Vec<u64> = Vec::with_capacity(n);
             for (server, roots) in minibatches.iter().enumerate() {
-                let mgs = env.sample_batch(roots, &mut rng, server,
-                                           &mut clocks, &mut m);
+                let mgs = env.sample_micrographs(roots, &mut rng);
+                b.op(server, Op::Sample {
+                    vertices: mg_vertices(&mgs),
+                });
                 let sub = Subgraph::union_of(&mgs);
                 // layer-1 destinations: all vertices that receive an
                 // aggregation at the input layer = depth <= layers-1,
@@ -73,39 +79,38 @@ impl Strategy for P3 {
                     .flat_map(|g| g.depth.iter())
                     .filter(|&&d| (d as usize) < env.cfg.layers)
                     .count() as u64;
-                let summed: u64 =
-                    mgs.iter().map(|g| g.num_vertices() as u64).sum();
+                let summed = mg_vertices(&mgs);
                 let dedup = if summed == 0 {
                     1.0
                 } else {
                     sub.vertices.len() as f64 / summed as f64
                 };
-                let l1 = (l1_flat as f64 * dedup) as u64;
-                layer1_dsts.push(l1);
-                sub_edges.push(
-                    mgs.iter().map(|g| g.edges.len() as u64).sum::<u64>(),
-                );
+                layer1_dsts.push((l1_flat as f64 * dedup) as u64);
+                sub_edges.push(mg_edges(&mgs));
                 sub_verts.push(sub.vertices.len() as u64);
                 // P3 keeps feature slices resident: no raw-feature fetch,
                 // but the layer-1 input rows still count as local reads
-                m.local_hits += sub.vertices.len() as u64;
+                b.op(server, Op::Tally {
+                    remote_requests: 0,
+                    remote_vertices: 0,
+                    local_hits: sub.vertices.len() as u64,
+                });
             }
 
             // ---- phase 1: model-parallel layer 1 ----
             // each server computes the layer-1 partial for ALL mini-
             // batches over its F/N slice
+            let total_l1: u64 = layer1_dsts.iter().sum();
+            let total_edges: u64 = sub_edges.iter().sum();
             for server in 0..n {
-                let total_l1: u64 = layer1_dsts.iter().sum();
-                let total_edges: u64 = sub_edges.iter().sum();
                 // aggregation over slice + transform to H, fwd+bwd (x3)
                 let flops = 3.0
                     * (2.0 * total_edges as f64 * (feat_dim / n) as f64
                         + 2.0 * total_l1 as f64 * (feat_dim / n) as f64
                             * env.shape.hidden as f64);
-                let dt = flops / env.cfg.cost.flops_per_sec
+                let secs = flops / env.cfg.cost.flops_per_sec
                     + env.cfg.cost.t_launch * 4.0;
-                clocks.advance_busy(server, dt);
-                m.time_compute += dt;
+                b.op(server, Op::ComputeSecs { secs });
             }
             // reduce-scatter partial activations to owners: each server
             // receives (N-1) partials for its own layer-1 rows (fwd),
@@ -119,30 +124,44 @@ impl Strategy for P3 {
                         continue;
                     }
                     let per = bytes / (n as u64 - 1);
-                    let dt_f = stats.record(&env.cfg.net, peer, server, per,
-                                            TransferKind::Hidden);
-                    let dt_b = stats.record(&env.cfg.net, server, peer, per,
-                                            TransferKind::Hidden);
-                    clocks.advance(server, dt_f);
-                    clocks.advance(peer, dt_b);
-                    m.time_gather += dt_f + dt_b;
-                    m.remote_requests += 2;
+                    b.op(server, Op::Migrate {
+                        from: peer,
+                        kind: TransferKind::Hidden,
+                        bytes: per,
+                        phase: Phase::Gather,
+                        overlap: true,
+                    });
+                    b.op(peer, Op::Migrate {
+                        from: server,
+                        kind: TransferKind::Hidden,
+                        bytes: per,
+                        phase: Phase::Gather,
+                        overlap: true,
+                    });
+                    b.op(server, Op::Tally {
+                        remote_requests: 2,
+                        remote_vertices: 0,
+                        local_hits: 0,
+                    });
                 }
-                m.remote_vertices += rows * 2; // hidden rows moved fwd+bwd
+                // hidden rows moved fwd+bwd
+                b.op(server, Op::Tally {
+                    remote_requests: 0,
+                    remote_vertices: rows * 2,
+                    local_hits: 0,
+                });
                 // CPU-side split/merge of the N-way partial tensors: each
                 // of this server's rows is assembled from N partials (fwd)
                 // and its gradient re-sliced N ways (bwd)
-                let dt = env.cfg.cost.mp_row_overhead * (2 * rows) as f64;
-                clocks.advance(server, dt);
-                m.time_gather += dt;
+                b.op(server, Op::Host {
+                    secs: env.cfg.cost.mp_row_overhead * (2 * rows) as f64,
+                    phase: Phase::Gather,
+                });
             }
             // the MP phase pipeline: push-pull rounds synchronize all
             // servers before the data-parallel phase can start
-            clocks.barrier();
-            for s in 0..n {
-                clocks.advance(s, env.cfg.cost.t_sync);
-            }
-            m.time_sync += env.cfg.cost.t_sync;
+            b.barrier();
+            b.sync_all();
 
             // ---- phase 2: data-parallel layers >= 2 ----
             for server in 0..n {
@@ -151,21 +170,20 @@ impl Strategy for P3 {
                 // all layers minus the (already computed) first
                 let upper = env.shape.train_flops(v, e)
                     * ((env.cfg.layers - 1) as f64 / env.cfg.layers as f64);
-                let dt = upper / env.cfg.cost.flops_per_sec
+                let secs = upper / env.cfg.cost.flops_per_sec
                     + env.cfg.cost.launch_overhead(&env.shape);
-                clocks.advance_busy(server, dt);
-                m.time_compute += dt;
+                b.op(server, Op::ComputeSecs { secs });
             }
 
             // gradient sync for the data-parallel layers (layer-1 weights
             // are sharded and need no allreduce)
-            env.allreduce_grads(&mut clocks, &mut stats, &mut m);
+            b.allreduce();
+            driver.exec(&b.finish());
         }
 
-        stats.validate().expect("byte accounting");
-        m.absorb_net(&stats);
-        m.epoch_time = clocks.max();
-        m.gpu_busy_fraction = clocks.busy_fraction();
+        let mut m = driver.finish();
+        m.iterations = iterations.len() as u64;
+        m.time_steps_per_iter = 2.0; // MP phase + DP phase
         m
     }
 }
@@ -175,7 +193,6 @@ mod tests {
     use super::*;
     use crate::config::RunConfig;
     use crate::coordinator::model_centric::ModelCentric;
-    use crate::graph::datasets::tiny_test_dataset;
     use crate::partition::PartitionAlgo;
 
     fn cfg(hidden: usize, feat: Option<usize>) -> RunConfig {
@@ -226,5 +243,21 @@ mod tests {
             (6.0..10.0).contains(&ratio),
             "hidden bytes should scale ~8x, got {ratio}"
         );
+    }
+
+    #[test]
+    fn overlap_pipelines_the_push_pull() {
+        let d = crate::graph::datasets::small_test_dataset(63);
+        let serial = P3::new().run_epoch(&mut SimEnv::new(&d, cfg(64, None)));
+        let over = P3::new().run_epoch(&mut SimEnv::new(
+            &d,
+            RunConfig {
+                overlap: true,
+                ..cfg(64, None)
+            },
+        ));
+        assert_eq!(serial.total_bytes(), over.total_bytes());
+        assert!(over.epoch_time <= serial.epoch_time);
+        assert!(over.time_overlap_hidden > 0.0);
     }
 }

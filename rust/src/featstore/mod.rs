@@ -98,15 +98,18 @@ impl<'a> FeatureStore<'a> {
         plan
     }
 
-    /// Account a plan's execution against the simulation: advances the
-    /// requesting server's clock by the batched transfer times + staging,
-    /// records bytes, updates hit/miss counters. Returns gather seconds.
-    pub fn execute_sim(
+    /// Cost/accounting core shared by [`Self::execute_sim`] and the
+    /// coordinator's [`crate::coordinator::engine::EpochDriver`] lane
+    /// executor: records bytes + hit/miss counters and returns the
+    /// gather seconds (batched transfers + host staging) **without**
+    /// touching any clock or the `time_gather` phase — the caller
+    /// decides when (and whether) that time is exposed, which is what
+    /// makes gather/compute overlap expressible.
+    pub fn sim_cost(
         &self,
         plan: &GatherPlan,
         net: &NetworkModel,
         cost: &CostModel,
-        clocks: &mut Clocks,
         stats: &mut NetStats,
         metrics: &mut EpochMetrics,
     ) -> f64 {
@@ -123,11 +126,27 @@ impl<'a> FeatureStore<'a> {
         // local reads still pay host staging into the device tensor
         let staged = (plan.local.len() as u64 + plan.remote_count()) * fb;
         dt += cost.stage_time(staged);
-        clocks.advance(plan.server, dt);
-        metrics.time_gather += dt;
         metrics.remote_requests += plan.request_count();
         metrics.remote_vertices += plan.remote_count();
         metrics.local_hits += plan.local.len() as u64;
+        dt
+    }
+
+    /// Account a plan's execution against the simulation: advances the
+    /// requesting server's clock by the batched transfer times + staging,
+    /// records bytes, updates hit/miss counters. Returns gather seconds.
+    pub fn execute_sim(
+        &self,
+        plan: &GatherPlan,
+        net: &NetworkModel,
+        cost: &CostModel,
+        clocks: &mut Clocks,
+        stats: &mut NetStats,
+        metrics: &mut EpochMetrics,
+    ) -> f64 {
+        let dt = self.sim_cost(plan, net, cost, stats, metrics);
+        clocks.advance(plan.server, dt);
+        metrics.time_gather += dt;
         dt
     }
 

@@ -144,6 +144,88 @@ mod tests {
     }
 
     #[test]
+    fn cross_step_dedup_invariant() {
+        // A vertex fetched in step t is never re-fetched in step t+1 (or
+        // any later step): the merged plan lists every remote vertex
+        // exactly once, even when consecutive steps both need it.
+        let d = tiny_test_dataset(8);
+        let p = partition(&d.graph, 4, PartitionAlgo::Hash, 8);
+        let fs = FeatureStore::new(&d, &p);
+        // heavy consecutive-step overlap: each step shares half its
+        // vertices with the next
+        let steps: Vec<Vec<u32>> = (0..4u32)
+            .map(|t| (t * 20..t * 20 + 40).collect())
+            .collect();
+        let plan = PregatherPlan::build(&fs, 0, &steps);
+        let mut all_remote: Vec<u32> =
+            plan.merged.remote.iter().flatten().copied().collect();
+        let before = all_remote.len();
+        all_remote.sort_unstable();
+        all_remote.dedup();
+        assert_eq!(all_remote.len(), before, "merged plan re-fetches");
+        // every step-t vertex that reappears at t+1 was already covered
+        for t in 0..steps.len() - 1 {
+            for v in &steps[t] {
+                if steps[t + 1].contains(v) && p.home(*v) != 0 {
+                    assert_eq!(
+                        plan.merged
+                            .remote
+                            .iter()
+                            .flatten()
+                            .filter(|&&x| x == *v)
+                            .count(),
+                        1,
+                        "vertex {v} fetched at step {t} must not move \
+                         again at step {}",
+                        t + 1
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn byte_parity_per_step_vs_merged() {
+        // Exact byte accounting: per-step fetching moves
+        // per_step_remote_vertices * feat_bytes; the merged plan moves
+        // |union of remote sets| * feat_bytes; the difference is exactly
+        // savings() * feat_bytes.
+        let d = tiny_test_dataset(9);
+        let p = partition(&d.graph, 4, PartitionAlgo::Hash, 9);
+        let fs = FeatureStore::new(&d, &p);
+        let steps = vec![
+            (0..120u32).collect::<Vec<_>>(),
+            (60..180u32).collect::<Vec<_>>(),
+            (100..220u32).collect::<Vec<_>>(),
+        ];
+        let plan = PregatherPlan::build(&fs, 2, &steps);
+        let fb = d.feature_bytes();
+
+        // oracle: per-step remote totals and cross-step union
+        let mut per_step_total = 0u64;
+        let mut union: std::collections::HashSet<u32> =
+            std::collections::HashSet::new();
+        for step in &steps {
+            let mut seen: std::collections::HashSet<u32> =
+                std::collections::HashSet::new();
+            for &v in step {
+                if p.home(v) != 2 && seen.insert(v) {
+                    per_step_total += 1;
+                }
+            }
+            union.extend(seen);
+        }
+        assert_eq!(plan.per_step_remote_vertices, per_step_total);
+        assert_eq!(plan.merged.remote_count(), union.len() as u64);
+        // byte parity: per-step bytes == merged bytes + eliminated bytes
+        assert_eq!(
+            plan.per_step_remote_vertices * fb,
+            plan.merged.remote_count() * fb + plan.savings() * fb
+        );
+        assert_eq!(plan.buffer_bytes(fb), union.len() as u64 * fb);
+    }
+
+    #[test]
     fn buffer_bound() {
         let d = tiny_test_dataset(7);
         let p = partition(&d.graph, 2, PartitionAlgo::Hash, 7);

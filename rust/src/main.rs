@@ -109,7 +109,8 @@ fn cmd_sim(args: Vec<String>) -> i32 {
     let cli = Cli::new("hopgnn sim", "simulate one training strategy")
         .opt("dataset", "products-s", "dataset (arxiv-s|products-s|uk-s|in-s|it-s)")
         .opt("model", "gcn", "gcn|sage|gat|deepgcn|film")
-        .opt("strategy", "hopgnn", "dgl|p3|naive|hopgnn|+mg|+pg|lo|ns|dgl-fb")
+        .opt("strategy", "hopgnn",
+             "dgl|p3|naive|hopgnn|+mg|+pg|rd|lo|ns|dgl-fb")
         .opt("servers", "4", "number of simulated GPU servers")
         .opt("batch", "1024", "global mini-batch size")
         .opt("hidden", "128", "hidden dimension")
@@ -117,7 +118,9 @@ fn cmd_sim(args: Vec<String>) -> i32 {
         .opt("epochs", "3", "epochs to simulate")
         .opt("partition", "metis", "metis|heuristic|hash")
         .opt("config", "", "key=value config file (overrides other flags)")
-        .opt("seed", "42", "random seed");
+        .opt("seed", "42", "random seed")
+        .flag("overlap", "hide async gathers behind compute (pipelining)")
+        .flag("sequential", "disable parallel per-server op lanes");
     let a = match cli.parse(args) {
         Ok(a) => a,
         Err(e) => {
@@ -147,6 +150,12 @@ fn cmd_sim(args: Vec<String>) -> i32 {
         }
     }
     cfg.batch_size = a.get_usize("batch", cfg.batch_size);
+    if a.has("overlap") {
+        cfg.overlap = true;
+    }
+    if a.has("sequential") {
+        cfg.parallel_lanes = false;
+    }
     // simulation default: full micrograph (the 128 default is the PJRT
     // artifact pad, not a sampling semantic)
     cfg.vmax = RunConfig::full_sim_vmax(cfg.layers, cfg.fanout);
@@ -354,7 +363,7 @@ fn cmd_calibrate(args: Vec<String>) -> i32 {
 }
 
 fn calibrate_one(spec: &hopgnn::runtime::ArtifactSpec)
-                 -> anyhow::Result<(f64, f64)> {
+                 -> hopgnn::util::error::Result<(f64, f64)> {
     use hopgnn::cluster::ModelShape;
     use hopgnn::runtime::{BatchBuffers, ParamSet};
     let d = hopgnn::graph::datasets::load_spec(
@@ -417,7 +426,7 @@ fn cmd_info(_args: Vec<String>) -> i32 {
     println!("{}", t.render());
     println!("models: gcn, sage, gat (3L), deepgcn (7L), film (10L)");
     println!(
-        "strategies: dgl, p3, naive, hopgnn, +mg, +pg, lo, ns, dgl-fb"
+        "strategies: dgl, p3, naive, hopgnn, +mg, +pg, rd, lo, ns, dgl-fb"
     );
     println!("experiments: {}", ALL_EXPERIMENTS.join(", "));
     match Manifest::load_default() {

@@ -17,6 +17,11 @@ pub struct EpochMetrics {
     pub time_compute: f64,
     pub time_migrate: f64,
     pub time_sync: f64,
+    /// Async transfer seconds hidden behind compute by the driver's
+    /// overlap mode (0 when `RunConfig::overlap` is off). `time_gather`
+    /// still counts the full gather *work*; this records how much of it
+    /// never reached the critical path.
+    pub time_overlap_hidden: f64,
     /// Exact byte counts by kind (from NetStats).
     pub bytes_by_kind: [u64; NUM_KINDS],
     /// Remote fetch *operations* (batched requests, Fig 16 x-axis).
@@ -70,6 +75,30 @@ impl EpochMetrics {
         self.bytes_by_kind = net.bytes_by_kind;
     }
 
+    /// Fold another metrics delta into this one (every additive field).
+    /// Used by the epoch driver to reduce per-server lane deltas in
+    /// deterministic server order; derived fields (`epoch_time`,
+    /// `gpu_busy_fraction`) are zero in lane deltas and recomputed by
+    /// the driver at epoch end.
+    pub fn accumulate(&mut self, other: &EpochMetrics) {
+        self.epoch_time += other.epoch_time;
+        self.time_sample += other.time_sample;
+        self.time_gather += other.time_gather;
+        self.time_compute += other.time_compute;
+        self.time_migrate += other.time_migrate;
+        self.time_sync += other.time_sync;
+        self.time_overlap_hidden += other.time_overlap_hidden;
+        for k in 0..NUM_KINDS {
+            self.bytes_by_kind[k] += other.bytes_by_kind[k];
+        }
+        self.remote_requests += other.remote_requests;
+        self.remote_vertices += other.remote_vertices;
+        self.local_hits += other.local_hits;
+        self.gpu_busy_fraction += other.gpu_busy_fraction;
+        self.time_steps_per_iter += other.time_steps_per_iter;
+        self.iterations += other.iterations;
+    }
+
     /// Merge a later epoch into a running average (used by multi-epoch
     /// runs that report the mean epoch, as the paper does: "train each
     /// model for ten epochs and report the average").
@@ -80,21 +109,7 @@ impl EpochMetrics {
         // sum first, divide once (per-element integer division would
         // truncate small counters to zero)
         for e in epochs {
-            out.epoch_time += e.epoch_time;
-            out.time_sample += e.time_sample;
-            out.time_gather += e.time_gather;
-            out.time_compute += e.time_compute;
-            out.time_migrate += e.time_migrate;
-            out.time_sync += e.time_sync;
-            for k in 0..NUM_KINDS {
-                out.bytes_by_kind[k] += e.bytes_by_kind[k];
-            }
-            out.remote_requests += e.remote_requests;
-            out.remote_vertices += e.remote_vertices;
-            out.local_hits += e.local_hits;
-            out.gpu_busy_fraction += e.gpu_busy_fraction;
-            out.time_steps_per_iter += e.time_steps_per_iter;
-            out.iterations += e.iterations;
+            out.accumulate(e);
         }
         out.epoch_time /= n;
         out.time_sample /= n;
@@ -102,6 +117,7 @@ impl EpochMetrics {
         out.time_compute /= n;
         out.time_migrate /= n;
         out.time_sync /= n;
+        out.time_overlap_hidden /= n;
         for k in 0..NUM_KINDS {
             out.bytes_by_kind[k] /= nu;
         }

@@ -5,22 +5,16 @@
 //! Pattern follows /opt/xla-example/load_hlo: HLO *text* →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`.
+//!
+//! The real engine needs the vendored `xla` crate and is gated behind
+//! the `pjrt` cargo feature; the default build ships an API-compatible
+//! stub so the simulator, benches, and tests stay self-contained (the
+//! tier-1 gate runs with zero external dependencies).
 
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::optimizer::ParamSet;
-use crate::runtime::tensor::{f32_bytes, i32_bytes, BatchBuffers};
-use anyhow::{Context, Result};
-use std::time::Instant;
-
-/// One compiled artifact (train + predict executables).
-pub struct Engine {
-    pub spec: ArtifactSpec,
-    client: xla::PjRtClient,
-    train_exe: xla::PjRtLoadedExecutable,
-    predict_exe: xla::PjRtLoadedExecutable,
-    /// Wall time of the most recent train_step (for cost calibration).
-    pub last_step_secs: f64,
-}
+use crate::runtime::tensor::BatchBuffers;
+use crate::util::error::Result;
 
 /// Output of one train step.
 pub struct StepOutput {
@@ -29,210 +23,309 @@ pub struct StepOutput {
     pub grads: Vec<Vec<f32>>,
 }
 
-impl Engine {
-    /// Compile both executables for an artifact. Compilation happens once
-    /// per process (seconds); execution is then microseconds-to-
-    /// milliseconds per batch.
-    pub fn load(spec: &ArtifactSpec) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .context("PJRT CPU client")?;
-        let train_exe = compile(&client, spec.train_hlo.to_str().unwrap())
-            .with_context(|| format!("compiling {}", spec.name))?;
-        let predict_exe =
-            compile(&client, spec.predict_hlo.to_str().unwrap())
-                .with_context(|| format!("compiling {} predict", spec.name))?;
-        Ok(Self {
-            spec: spec.clone(),
-            client,
-            train_exe,
-            predict_exe,
-            last_step_secs: 0.0,
-        })
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Engine;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Engine;
+
+/// Default build: no PJRT. `Engine::load` fails with a clear message;
+/// everything that only *plans* training (samplers, batch packing, the
+/// whole simulator) keeps working.
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::*;
+
+    pub struct Engine {
+        pub spec: ArtifactSpec,
+        /// Wall time of the most recent train_step (for calibration).
+        pub last_step_secs: f64,
     }
 
-    /// Execute one train step: returns loss, correct count, and per-
-    /// parameter gradients (manifest order).
-    pub fn train_step(
-        &mut self,
-        params: &ParamSet,
-        batch: &BatchBuffers,
-    ) -> Result<StepOutput> {
-        let args = self.build_args(params, batch, true)?;
-        let t0 = Instant::now();
-        let result = self.train_exe.execute::<xla::Literal>(&args)?;
-        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
-        self.last_step_secs = t0.elapsed().as_secs_f64();
-        anyhow::ensure!(
-            tuple.len() == 2 + self.spec.params.len(),
-            "train output arity {} != {}",
-            tuple.len(),
-            2 + self.spec.params.len()
-        );
-        let loss: f32 = tuple[0].get_first_element()?;
-        let correct: i32 = tuple[1].get_first_element()?;
-        let mut grads = Vec::with_capacity(self.spec.params.len());
-        for (i, p) in self.spec.params.iter().enumerate() {
-            let g = tuple[2 + i].to_vec::<f32>()?;
-            anyhow::ensure!(g.len() == p.len(), "grad {} size", p.name);
-            grads.push(g);
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: this binary was \
+         built without the `pjrt` feature (the vendored `xla` crate is \
+         not part of the dependency-free build)";
+
+    impl Engine {
+        pub fn load(_spec: &ArtifactSpec) -> Result<Self> {
+            Err(crate::err!("{UNAVAILABLE}"))
         }
-        Ok(StepOutput {
-            loss,
-            correct,
-            grads,
-        })
-    }
 
-    /// `train_step` variant that stages inputs as PjRtBuffers and runs
-    /// `execute_b`. The vendored xla crate's `execute` (Literal path)
-    /// leaks the device-side input buffers it creates internally
-    /// (~input-size bytes per call, fatal over thousands of steps);
-    /// buffers we create ourselves are dropped deterministically.
-    pub fn train_step_b(
-        &mut self,
-        params: &ParamSet,
-        batch: &BatchBuffers,
-    ) -> Result<StepOutput> {
-        let bufs = self.build_buffers(params, batch, true)?;
-        let t0 = Instant::now();
-        let result = self.train_exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
-        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
-        self.last_step_secs = t0.elapsed().as_secs_f64();
-        drop(result);
-        drop(bufs);
-        anyhow::ensure!(
-            tuple.len() == 2 + self.spec.params.len(),
-            "train output arity {} != {}",
-            tuple.len(),
-            2 + self.spec.params.len()
-        );
-        let loss: f32 = tuple[0].get_first_element()?;
-        let correct: i32 = tuple[1].get_first_element()?;
-        let mut grads = Vec::with_capacity(self.spec.params.len());
-        for (i, p) in self.spec.params.iter().enumerate() {
-            let g = tuple[2 + i].to_vec::<f32>()?;
-            anyhow::ensure!(g.len() == p.len(), "grad {} size", p.name);
-            grads.push(g);
+        pub fn train_step(
+            &mut self,
+            _params: &ParamSet,
+            _batch: &BatchBuffers,
+        ) -> Result<StepOutput> {
+            Err(crate::err!("{UNAVAILABLE}"))
         }
-        Ok(StepOutput {
-            loss,
-            correct,
-            grads,
-        })
-    }
 
-    /// Predict via `execute_b` (leak-free input path, see train_step_b).
-    pub fn predict_b(
-        &self,
-        params: &ParamSet,
-        batch: &BatchBuffers,
-    ) -> Result<Vec<f32>> {
-        let bufs = self.build_buffers(params, batch, false)?;
-        let result = self.predict_exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
-        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
-        Ok(tuple[0].to_vec::<f32>()?)
-    }
-
-    fn build_buffers(
-        &self,
-        params: &ParamSet,
-        batch: &BatchBuffers,
-        with_labels: bool,
-    ) -> Result<Vec<xla::PjRtBuffer>> {
-        anyhow::ensure!(
-            params.tensors.len() == self.spec.params.len(),
-            "param arity mismatch"
-        );
-        let mut bufs = Vec::with_capacity(params.tensors.len() + 3);
-        for (t, p) in params.tensors.iter().zip(&self.spec.params) {
-            bufs.push(self.client.buffer_from_host_buffer::<f32>(
-                t, &p.shape, None,
-            )?);
+        pub fn train_step_b(
+            &mut self,
+            _params: &ParamSet,
+            _batch: &BatchBuffers,
+        ) -> Result<StepOutput> {
+            Err(crate::err!("{UNAVAILABLE}"))
         }
-        bufs.push(self.client.buffer_from_host_buffer::<f32>(
-            &batch.adj,
-            &batch.adj_dims(),
-            None,
-        )?);
-        bufs.push(self.client.buffer_from_host_buffer::<f32>(
-            &batch.x,
-            &batch.x_dims(),
-            None,
-        )?);
-        if with_labels {
-            bufs.push(self.client.buffer_from_host_buffer::<i32>(
-                &batch.labels,
-                &[batch.batch],
-                None,
-            )?);
-        }
-        Ok(bufs)
-    }
 
-    /// Root logits [B, C] for accuracy evaluation.
-    pub fn predict(
-        &self,
-        params: &ParamSet,
-        batch: &BatchBuffers,
-    ) -> Result<Vec<f32>> {
-        let args = self.build_args(params, batch, false)?;
-        let result = self.predict_exe.execute::<xla::Literal>(&args)?;
-        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
-        Ok(tuple[0].to_vec::<f32>()?)
-    }
-
-    fn build_args(
-        &self,
-        params: &ParamSet,
-        batch: &BatchBuffers,
-        with_labels: bool,
-    ) -> Result<Vec<xla::Literal>> {
-        anyhow::ensure!(
-            params.tensors.len() == self.spec.params.len(),
-            "param arity mismatch"
-        );
-        let mut args = Vec::with_capacity(params.tensors.len() + 3);
-        for (t, p) in params.tensors.iter().zip(&self.spec.params) {
-            args.push(xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                &p.shape,
-                f32_bytes(t),
-            )?);
+        pub fn predict(
+            &self,
+            _params: &ParamSet,
+            _batch: &BatchBuffers,
+        ) -> Result<Vec<f32>> {
+            Err(crate::err!("{UNAVAILABLE}"))
         }
-        args.push(xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32,
-            &batch.adj_dims(),
-            f32_bytes(&batch.adj),
-        )?);
-        args.push(xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32,
-            &batch.x_dims(),
-            f32_bytes(&batch.x),
-        )?);
-        if with_labels {
-            args.push(xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::S32,
-                &[batch.batch],
-                i32_bytes(&batch.labels),
-            )?);
-        }
-        Ok(args)
-    }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+        pub fn predict_b(
+            &self,
+            _params: &ParamSet,
+            _batch: &BatchBuffers,
+        ) -> Result<Vec<f32>> {
+            Err(crate::err!("{UNAVAILABLE}"))
+        }
+
+        pub fn platform(&self) -> String {
+            "none (pjrt feature disabled)".to_string()
+        }
     }
 }
 
-fn compile(
-    client: &xla::PjRtClient,
-    path: &str,
-) -> Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path)
-        .with_context(|| format!("parsing HLO text {path}"))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    Ok(client.compile(&comp)?)
+/// One compiled artifact (train + predict executables).
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use crate::runtime::tensor::{f32_bytes, i32_bytes};
+    use crate::util::error::{Context, Error};
+    use std::time::Instant;
+
+    impl From<xla::Error> for Error {
+        fn from(e: xla::Error) -> Self {
+            Error::msg(format!("{e}"))
+        }
+    }
+
+    pub struct Engine {
+        pub spec: ArtifactSpec,
+        client: xla::PjRtClient,
+        train_exe: xla::PjRtLoadedExecutable,
+        predict_exe: xla::PjRtLoadedExecutable,
+        /// Wall time of the most recent train_step (for cost calibration).
+        pub last_step_secs: f64,
+    }
+
+    impl Engine {
+        /// Compile both executables for an artifact. Compilation happens
+        /// once per process (seconds); execution is then microseconds-to-
+        /// milliseconds per batch.
+        pub fn load(spec: &ArtifactSpec) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            let train_exe =
+                compile(&client, spec.train_hlo.to_str().unwrap())
+                    .with_context(|| format!("compiling {}", spec.name))?;
+            let predict_exe =
+                compile(&client, spec.predict_hlo.to_str().unwrap())
+                    .with_context(|| {
+                        format!("compiling {} predict", spec.name)
+                    })?;
+            Ok(Self {
+                spec: spec.clone(),
+                client,
+                train_exe,
+                predict_exe,
+                last_step_secs: 0.0,
+            })
+        }
+
+        /// Execute one train step: returns loss, correct count, and per-
+        /// parameter gradients (manifest order).
+        pub fn train_step(
+            &mut self,
+            params: &ParamSet,
+            batch: &BatchBuffers,
+        ) -> Result<StepOutput> {
+            let args = self.build_args(params, batch, true)?;
+            let t0 = Instant::now();
+            let result = self.train_exe.execute::<xla::Literal>(&args)?;
+            let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+            self.last_step_secs = t0.elapsed().as_secs_f64();
+            crate::ensure!(
+                tuple.len() == 2 + self.spec.params.len(),
+                "train output arity {} != {}",
+                tuple.len(),
+                2 + self.spec.params.len()
+            );
+            let loss: f32 = tuple[0].get_first_element()?;
+            let correct: i32 = tuple[1].get_first_element()?;
+            let mut grads = Vec::with_capacity(self.spec.params.len());
+            for (i, p) in self.spec.params.iter().enumerate() {
+                let g = tuple[2 + i].to_vec::<f32>()?;
+                crate::ensure!(g.len() == p.len(), "grad {} size", p.name);
+                grads.push(g);
+            }
+            Ok(StepOutput {
+                loss,
+                correct,
+                grads,
+            })
+        }
+
+        /// `train_step` variant that stages inputs as PjRtBuffers and runs
+        /// `execute_b`. The vendored xla crate's `execute` (Literal path)
+        /// leaks the device-side input buffers it creates internally
+        /// (~input-size bytes per call, fatal over thousands of steps);
+        /// buffers we create ourselves are dropped deterministically.
+        pub fn train_step_b(
+            &mut self,
+            params: &ParamSet,
+            batch: &BatchBuffers,
+        ) -> Result<StepOutput> {
+            let bufs = self.build_buffers(params, batch, true)?;
+            let t0 = Instant::now();
+            let result =
+                self.train_exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
+            let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+            self.last_step_secs = t0.elapsed().as_secs_f64();
+            drop(result);
+            drop(bufs);
+            crate::ensure!(
+                tuple.len() == 2 + self.spec.params.len(),
+                "train output arity {} != {}",
+                tuple.len(),
+                2 + self.spec.params.len()
+            );
+            let loss: f32 = tuple[0].get_first_element()?;
+            let correct: i32 = tuple[1].get_first_element()?;
+            let mut grads = Vec::with_capacity(self.spec.params.len());
+            for (i, p) in self.spec.params.iter().enumerate() {
+                let g = tuple[2 + i].to_vec::<f32>()?;
+                crate::ensure!(g.len() == p.len(), "grad {} size", p.name);
+                grads.push(g);
+            }
+            Ok(StepOutput {
+                loss,
+                correct,
+                grads,
+            })
+        }
+
+        /// Predict via `execute_b` (leak-free input path, see
+        /// train_step_b).
+        pub fn predict_b(
+            &self,
+            params: &ParamSet,
+            batch: &BatchBuffers,
+        ) -> Result<Vec<f32>> {
+            let bufs = self.build_buffers(params, batch, false)?;
+            let result =
+                self.predict_exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
+            let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+            Ok(tuple[0].to_vec::<f32>()?)
+        }
+
+        fn build_buffers(
+            &self,
+            params: &ParamSet,
+            batch: &BatchBuffers,
+            with_labels: bool,
+        ) -> Result<Vec<xla::PjRtBuffer>> {
+            crate::ensure!(
+                params.tensors.len() == self.spec.params.len(),
+                "param arity mismatch"
+            );
+            let mut bufs = Vec::with_capacity(params.tensors.len() + 3);
+            for (t, p) in params.tensors.iter().zip(&self.spec.params) {
+                bufs.push(self.client.buffer_from_host_buffer::<f32>(
+                    t, &p.shape, None,
+                )?);
+            }
+            bufs.push(self.client.buffer_from_host_buffer::<f32>(
+                &batch.adj,
+                &batch.adj_dims(),
+                None,
+            )?);
+            bufs.push(self.client.buffer_from_host_buffer::<f32>(
+                &batch.x,
+                &batch.x_dims(),
+                None,
+            )?);
+            if with_labels {
+                bufs.push(self.client.buffer_from_host_buffer::<i32>(
+                    &batch.labels,
+                    &[batch.batch],
+                    None,
+                )?);
+            }
+            Ok(bufs)
+        }
+
+        /// Root logits [B, C] for accuracy evaluation.
+        pub fn predict(
+            &self,
+            params: &ParamSet,
+            batch: &BatchBuffers,
+        ) -> Result<Vec<f32>> {
+            let args = self.build_args(params, batch, false)?;
+            let result = self.predict_exe.execute::<xla::Literal>(&args)?;
+            let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+            Ok(tuple[0].to_vec::<f32>()?)
+        }
+
+        fn build_args(
+            &self,
+            params: &ParamSet,
+            batch: &BatchBuffers,
+            with_labels: bool,
+        ) -> Result<Vec<xla::Literal>> {
+            crate::ensure!(
+                params.tensors.len() == self.spec.params.len(),
+                "param arity mismatch"
+            );
+            let mut args = Vec::with_capacity(params.tensors.len() + 3);
+            for (t, p) in params.tensors.iter().zip(&self.spec.params) {
+                args.push(
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        &p.shape,
+                        f32_bytes(t),
+                    )?,
+                );
+            }
+            args.push(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &batch.adj_dims(),
+                f32_bytes(&batch.adj),
+            )?);
+            args.push(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &batch.x_dims(),
+                f32_bytes(&batch.x),
+            )?);
+            if with_labels {
+                args.push(
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::S32,
+                        &[batch.batch],
+                        i32_bytes(&batch.labels),
+                    )?,
+                );
+            }
+            Ok(args)
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+    }
+
+    fn compile(
+        client: &xla::PjRtClient,
+        path: &str,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(client.compile(&comp)?)
+    }
 }
 
 // Engine tests live in rust/tests/numeric_parity.rs (they need built
-// artifacts, which `make artifacts` produces before `cargo test` runs).
+// artifacts plus the `pjrt` feature, which `make artifacts` prepares
+// before `cargo test --features pjrt` runs).

@@ -10,7 +10,7 @@ use crate::partition::Partition;
 use crate::runtime::{Engine, Manifest};
 use crate::sampler::SampleConfig;
 use crate::train::{OrderPolicy, Trainer};
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub struct AccuracyRow {
     pub system: &'static str,
@@ -33,7 +33,7 @@ pub fn train_and_eval(
     let spec = manifest
         .find(model, hidden, dataset.feat_dim)
         .ok_or_else(|| {
-            anyhow::anyhow!(
+            crate::err!(
                 "no artifact for {model} h{hidden} f{} — extend \
                  DEFAULT_VARIANTS in python/compile/aot.py",
                 dataset.feat_dim

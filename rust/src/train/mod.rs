@@ -22,8 +22,8 @@ use crate::graph::datasets::Dataset;
 use crate::partition::Partition;
 use crate::runtime::{Adam, BatchBuffers, Engine, ParamSet};
 use crate::sampler::{sample_micrograph, Micrograph, SampleConfig};
+use crate::util::error::Result;
 use crate::util::rng::Rng;
-use anyhow::Result;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OrderPolicy {

@@ -1,0 +1,172 @@
+//! Minimal `anyhow`-style error type (the offline vendor set has no
+//! anyhow — see DESIGN.md "Vendored-crate constraint").
+//!
+//! An [`Error`] is a context chain: the root cause plus the messages
+//! layered on via [`Context::context`]/[`Context::with_context`].
+//! `{}` prints the outermost message, `{:#}` the whole chain
+//! outermost-first, `: `-separated — matching anyhow's conventions so
+//! existing `eprintln!("{e:#}")` call sites keep their output shape.
+
+use std::fmt;
+
+/// String-chain error. Cheap, non-generic, and good enough for the
+/// runtime/training paths, which only ever *report* errors.
+#[derive(Clone, Debug)]
+pub struct Error {
+    /// Innermost (root cause) first; contexts appended as added.
+    chain: Vec<String>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Self {
+            chain: vec![m.into()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, c: impl Into<String>) -> Self {
+        self.chain.push(c.into());
+        self
+    }
+
+    /// Outermost message (what `{}` prints).
+    pub fn top(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // outermost-first chain, like anyhow's `{:#}`
+            for (i, m) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.top())
+        }
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `.context("...")` / `.with_context(|| ...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, c: impl Into<String>) -> Result<T>;
+    fn with_context<C: Into<String>, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, c: impl Into<String>) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: Into<String>, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, c: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: Into<String>, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `format!`-style error constructor (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted error (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Assert-or-error (anyhow's `ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::err!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(Error::msg("root cause"))
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = fails().context("loading artifact").unwrap_err();
+        assert_eq!(format!("{e}"), "loading artifact");
+        assert_eq!(format!("{e:#}"), "loading artifact: root cause");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert!(f(3).is_ok());
+        assert!(f(5).is_err());
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+    }
+}

@@ -3,6 +3,7 @@
 //! constraint").
 
 pub mod cli;
+pub mod error;
 pub mod fxhash;
 pub mod json;
 pub mod prop;

@@ -1,7 +1,9 @@
 //! Real-PJRT integration: load the AOT artifacts, run actual train steps
 //! from Rust, and verify the numerics (init loss ≈ ln C for a balanced
 //! random classifier, loss decreases under Adam, determinism, accuracy
-//! learnable above chance). Requires `make artifacts` to have run.
+//! learnable above chance). Requires `make artifacts` to have run and
+//! the `pjrt` feature (the default build's engine is a stub).
+#![cfg(feature = "pjrt")]
 
 use hopgnn::graph::datasets::{load_spec, DatasetSpec};
 use hopgnn::partition::{partition, PartitionAlgo};
