@@ -6,7 +6,7 @@ use super::{Report, Scale};
 use crate::cluster::ModelFamily;
 use crate::config::RunConfig;
 use crate::coordinator::hopgnn::HopGnn;
-use super::cache;
+use super::memo;
 use crate::coordinator::{SimEnv, Strategy, StrategyKind};
 use crate::metrics::EpochMetrics;
 use crate::util::table::{fmt_secs, Table};
@@ -42,10 +42,10 @@ pub fn fig13_ablation(scale: Scale) -> Report {
     for ds in &datasets {
         for model in [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat] {
             let cfg = cfg_for(scale, ds, model);
-            let dgl = cache::run(&cfg, StrategyKind::Dgl);
-            let mg = cache::run(&cfg, StrategyKind::HopGnnMgOnly);
-            let pg = cache::run(&cfg, StrategyKind::HopGnnMgPg);
-            let all = cache::run(&cfg, StrategyKind::HopGnn);
+            let dgl = memo::run(&cfg, StrategyKind::Dgl);
+            let mg = memo::run(&cfg, StrategyKind::HopGnnMgOnly);
+            let pg = memo::run(&cfg, StrategyKind::HopGnnMgPg);
+            let all = memo::run(&cfg, StrategyKind::HopGnn);
             t.row([
                 ds.to_string(),
                 model.name().to_string(),
@@ -77,8 +77,8 @@ pub fn fig14_missrate(scale: Scale) -> Report {
     let (mut dgl_sum, mut mg_sum, mut n) = (0.0, 0.0, 0);
     for ds in &datasets {
         let cfg = cfg_for(scale, ds, ModelFamily::Gcn);
-        let dgl = cache::run(&cfg, StrategyKind::Dgl);
-        let mg = cache::run(&cfg, StrategyKind::HopGnnMgOnly);
+        let dgl = memo::run(&cfg, StrategyKind::Dgl);
+        let mg = memo::run(&cfg, StrategyKind::HopGnnMgOnly);
         dgl_sum += dgl.miss_rate();
         mg_sum += mg.miss_rate();
         n += 1;
@@ -106,8 +106,8 @@ pub fn fig15_gather_time(scale: Scale) -> Report {
     let mut t = Table::new(["model", "DGL gather", "+MG gather", "reduction"]);
     for model in [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat] {
         let cfg = cfg_for(scale, "products-s", model);
-        let dgl = cache::run(&cfg, StrategyKind::Dgl);
-        let mg = cache::run(&cfg, StrategyKind::HopGnnMgOnly);
+        let dgl = memo::run(&cfg, StrategyKind::Dgl);
+        let mg = memo::run(&cfg, StrategyKind::HopGnnMgOnly);
         t.row([
             model.name().to_string(),
             fmt_secs(dgl.time_gather),
@@ -135,8 +135,8 @@ pub fn fig16_pregather(scale: Scale) -> Report {
     };
     for ds in &datasets {
         let cfg = cfg_for(scale, ds, ModelFamily::Gcn);
-        let mg = cache::run(&cfg, StrategyKind::HopGnnMgOnly);
-        let pg = cache::run(&cfg, StrategyKind::HopGnnMgPg);
+        let mg = memo::run(&cfg, StrategyKind::HopGnnMgOnly);
+        let pg = memo::run(&cfg, StrategyKind::HopGnnMgPg);
         t.row([
             ds.to_string(),
             "remote requests".into(),
@@ -180,7 +180,7 @@ pub fn fig17_merging(scale: Scale) -> Report {
         "fig17",
         "micrograph merging trajectory (paper: 4 -> 3 -> 2 steps, settles at 3)",
     );
-    let d = cache::dataset("products-s");
+    let d = memo::dataset("products-s");
     let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gat);
     pytorch_stack_costs(&mut cfg);
     cfg.epochs = if scale.quick { 4 } else { 6 };
@@ -213,7 +213,7 @@ pub fn fig18_merge_selection(scale: Scale) -> Report {
     };
     let mut t = Table::new(["dataset", "MinLoad", "Random(RD)", "ratio"]);
     for ds in &datasets {
-        let d = cache::dataset(ds);
+        let d = memo::dataset(ds);
         let mut cfg = cfg_for(scale, ds, ModelFamily::Gcn);
         pytorch_stack_costs(&mut cfg);
         cfg.epochs = if scale.quick { 4 } else { 6 };

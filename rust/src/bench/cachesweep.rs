@@ -1,0 +1,210 @@
+//! Cache sweep: what does the feature-cache tier buy, per policy, per
+//! capacity, per strategy — on top of the `overlap` scenario?
+//!
+//! Runs the communication-bound fixed-schedule strategies (DGL's
+//! per-step gather, LO's redistributed local gather, HopGNN +PG's
+//! merged pre-gather — three different gather emission styles) with
+//! the driver's overlap mode on, sweeping every
+//! [`CachePolicy`] across a capacity ladder from 0 (the locked parity
+//! configuration) to "holds the working set". Adaptive-schedule
+//! strategies are excluded on purpose: the merge controller reacts to
+//! epoch times, so its request stream would change across capacities
+//! and hit rates would not be comparable column-to-column.
+//!
+//! The acceptance property — hit rate monotonically non-decreasing in
+//! capacity for every policy — is asserted by this module's tests: LRU
+//! has the stack-inclusion property (fixed-size rows), and the static
+//! policies pin supersets as capacity grows.
+
+use super::{memo, Report, Scale};
+use crate::cluster::{ModelFamily, TransferKind};
+use crate::config::RunConfig;
+use crate::coordinator::StrategyKind;
+use crate::featstore::cache::{ALL_CACHE_POLICIES, CachePolicy};
+use crate::metrics::EpochMetrics;
+use crate::util::table::{fmt_bytes, fmt_secs, Table};
+
+/// Fixed-schedule strategies whose gather streams are capacity-
+/// invariant (comparable hit rates).
+pub const SWEEP_STRATEGIES: [StrategyKind; 3] = [
+    StrategyKind::Dgl,
+    StrategyKind::LocalityOpt,
+    StrategyKind::HopGnnMgPg,
+];
+
+/// Capacity ladder in MiB (0 = parity configuration).
+pub fn capacities_mb(scale: Scale) -> Vec<usize> {
+    if scale.quick {
+        vec![0, 2, 8, 32]
+    } else {
+        vec![0, 16, 64, 256]
+    }
+}
+
+fn cfg_for(scale: Scale, ds: &str, policy: CachePolicy, mb: usize) -> RunConfig {
+    let model = ModelFamily::Gcn;
+    RunConfig {
+        dataset: ds.into(),
+        model,
+        layers: model.default_layers(),
+        batch_size: scale.batch,
+        epochs: scale.epochs,
+        max_iterations: scale.max_iterations,
+        vmax: RunConfig::full_sim_vmax(model.default_layers(), 10),
+        fanout: 10,
+        overlap: true,
+        cache_policy: policy,
+        cache_mb: mb,
+        ..Default::default()
+    }
+}
+
+/// One sweep cell: (policy, capacity, strategy) -> averaged epoch.
+pub fn sweep_cell(
+    scale: Scale,
+    ds: &str,
+    policy: CachePolicy,
+    mb: usize,
+    kind: StrategyKind,
+) -> EpochMetrics {
+    memo::run(&cfg_for(scale, ds, policy, mb), kind)
+}
+
+/// The `cachesweep` experiment: hit rate / bytes saved / epoch time per
+/// (policy, capacity, strategy) over the overlap scenario.
+pub fn cachesweep(scale: Scale) -> Report {
+    let mut r = Report::new(
+        "cachesweep",
+        "feature cache: hit rate and epoch time vs capacity, per policy",
+    );
+    let ds = if scale.quick { "arxiv-s" } else { "products-s" };
+    let _ = memo::dataset(ds); // warm the memo table
+    let caps = capacities_mb(scale);
+    for policy in ALL_CACHE_POLICIES {
+        let mut t = Table::new([
+            "system",
+            "capacity",
+            "hit rate",
+            "feat moved",
+            "bytes saved",
+            "epoch",
+        ]);
+        for kind in SWEEP_STRATEGIES {
+            let mut prev_rate = -1.0f64;
+            for &mb in &caps {
+                let m = sweep_cell(scale, ds, policy, mb, kind);
+                let rate = m.cache_hit_rate();
+                debug_assert!(
+                    rate + 1e-12 >= prev_rate,
+                    "{} {} hit rate regressed at {mb} MiB",
+                    policy.name(),
+                    kind.name()
+                );
+                prev_rate = rate;
+                t.row([
+                    kind.name().to_string(),
+                    format!("{mb} MiB"),
+                    format!("{:.1}%", rate * 100.0),
+                    fmt_bytes(m.bytes(TransferKind::Feature)),
+                    fmt_bytes(m.cache_hit_bytes),
+                    fmt_secs(m.epoch_time),
+                ]);
+            }
+        }
+        r.section(
+            format!(
+                "policy {} (GCN on {ds}, 4 servers, overlap on)",
+                policy.name()
+            ),
+            t,
+        );
+    }
+    r.note(
+        "hit rate = cache hits / (hits + misses) over remote feature \
+         requests; 0 MiB is the parity configuration (cache path active, \
+         nothing admitted) locked bit-identical to the uncached driver by \
+         tests/cache_parity.rs",
+    );
+    r.note(
+        "bytes saved = feature bytes served from the cache instead of the \
+         network; feat moved + bytes saved is capacity-invariant per \
+         strategy (byte conservation)",
+    );
+    r.note(
+        "adaptive-schedule strategies (HopGNN full, RD) are excluded: \
+         their merge controllers react to epoch time, so request streams \
+         would differ across capacities",
+    );
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_scale() -> Scale {
+        Scale {
+            epochs: 2,
+            max_iterations: Some(2),
+            batch: 128,
+            quick: true,
+        }
+    }
+
+    #[test]
+    fn report_renders_every_policy() {
+        let r = cachesweep(tiny_scale());
+        let s = r.render();
+        for policy in ALL_CACHE_POLICIES {
+            assert!(s.contains(policy.name()), "{s}");
+        }
+        assert!(s.contains("hit rate"), "{s}");
+    }
+
+    #[test]
+    fn hit_rate_monotone_in_capacity_for_every_policy() {
+        // the cachesweep acceptance criterion, asserted release-mode too
+        let scale = tiny_scale();
+        for policy in ALL_CACHE_POLICIES {
+            for kind in SWEEP_STRATEGIES {
+                let mut prev = -1.0f64;
+                for &mb in &capacities_mb(scale) {
+                    let m = sweep_cell(scale, "arxiv-s", policy, mb, kind);
+                    let rate = m.cache_hit_rate();
+                    assert!(
+                        rate + 1e-12 >= prev,
+                        "{}/{}: hit rate fell from {prev} to {rate} at \
+                         {mb} MiB",
+                        policy.name(),
+                        kind.name()
+                    );
+                    prev = rate;
+                }
+                assert!(
+                    prev > 0.0,
+                    "{}/{}: largest capacity never hit",
+                    policy.name(),
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn byte_conservation_across_capacities() {
+        let scale = tiny_scale();
+        let kind = StrategyKind::Dgl;
+        let baseline =
+            sweep_cell(scale, "arxiv-s", CachePolicy::Lru, 0, kind);
+        let requested = baseline.cache_hit_bytes + baseline.cache_miss_bytes;
+        for &mb in &capacities_mb(scale)[1..] {
+            let m = sweep_cell(scale, "arxiv-s", CachePolicy::Lru, mb, kind);
+            assert_eq!(
+                m.cache_hit_bytes + m.cache_miss_bytes,
+                requested,
+                "requested bytes must be capacity-invariant"
+            );
+            assert_eq!(m.cache_miss_bytes, m.bytes(TransferKind::Feature));
+        }
+    }
+}

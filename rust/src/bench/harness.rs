@@ -31,8 +31,7 @@ impl BenchResult {
 
 /// Time `f` with automatic iteration-count calibration: aims for
 /// ~`target_secs` of total measurement after `warmup` runs.
-pub fn bench<F: FnMut()>(name: &str, target_secs: f64, mut f: F)
-                         -> BenchResult {
+pub fn bench<F: FnMut()>(name: &str, target_secs: f64, mut f: F) -> BenchResult {
     // warmup + calibrate
     let t0 = Instant::now();
     f();

@@ -1,6 +1,10 @@
-//! Process-wide caches for the experiment harness: loading a dataset and
-//! partitioning a multi-million-edge graph are seconds-scale one-time
-//! costs that dozens of experiment configurations share.
+//! Process-wide memoization for the experiment harness: loading a
+//! dataset and partitioning a multi-million-edge graph are seconds-scale
+//! one-time costs that dozens of experiment configurations share.
+//!
+//! (Formerly `bench/cache.rs` — renamed so the harness-side memo tables
+//! cannot be confused with the simulated per-server feature cache,
+//! `crate::featstore::cache`.)
 
 use crate::config::RunConfig;
 use crate::coordinator::{SimEnv, StrategyKind};
@@ -60,8 +64,12 @@ pub fn run(cfg: &RunConfig, kind: StrategyKind) -> EpochMetrics {
     if let Some(pa) = kind.preferred_partition() {
         cfg.partition_algo = pa;
     }
-    let part = partition_for(d, cfg.num_servers, cfg.partition_algo,
-                             cfg.seed ^ 0x9A27);
+    let part = partition_for(
+        d,
+        cfg.num_servers,
+        cfg.partition_algo,
+        cfg.seed ^ 0x9A27,
+    );
     let epochs = cfg.epochs;
     let mut env = SimEnv::with_partition(d, cfg, part);
     let mut strat = kind.build();

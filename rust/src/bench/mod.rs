@@ -4,15 +4,18 @@
 //! prints it and writes `reports/<id>.md`.
 
 pub mod ablation;
-pub mod cache;
+pub mod cachesweep;
 pub mod harness;
+pub mod memo;
 pub mod motivation;
 pub mod overall;
 pub mod overlap;
 pub mod sensitivity;
 pub mod table3;
 
+use crate::util::json::{self, Value};
 use crate::util::table::Table;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 /// A rendered experiment: one or more captioned tables + notes.
@@ -62,6 +65,67 @@ impl Report {
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join(format!("{}.md", self.id)), self.render())
     }
+
+    /// Structured form of the report (id / title / sections with header
+    /// + rows / notes) for machine consumers — the CI smoke job uploads
+    /// these as its workflow artifact.
+    pub fn to_json(&self) -> Value {
+        let mut obj = BTreeMap::new();
+        obj.insert("id".to_string(), Value::Str(self.id.to_string()));
+        obj.insert("title".to_string(), Value::Str(self.title.clone()));
+        let sections: Vec<Value> = self
+            .sections
+            .iter()
+            .map(|(caption, table)| {
+                let mut s = BTreeMap::new();
+                s.insert("caption".to_string(), Value::Str(caption.clone()));
+                s.insert(
+                    "headers".to_string(),
+                    Value::Arr(
+                        table
+                            .headers()
+                            .iter()
+                            .map(|h| Value::Str(h.clone()))
+                            .collect(),
+                    ),
+                );
+                s.insert(
+                    "rows".to_string(),
+                    Value::Arr(
+                        table
+                            .rows()
+                            .iter()
+                            .map(|row| {
+                                Value::Arr(
+                                    row.iter()
+                                        .map(|c| Value::Str(c.clone()))
+                                        .collect(),
+                                )
+                            })
+                            .collect(),
+                    ),
+                );
+                Value::Obj(s)
+            })
+            .collect();
+        obj.insert("sections".to_string(), Value::Arr(sections));
+        obj.insert(
+            "notes".to_string(),
+            Value::Arr(
+                self.notes.iter().map(|n| Value::Str(n.clone())).collect(),
+            ),
+        );
+        Value::Obj(obj)
+    }
+
+    pub fn save_json(&self, dir: impl AsRef<Path>) -> std::io::Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(
+            dir.join(format!("{}.json", self.id)),
+            json::write(&self.to_json(), true),
+        )
+    }
 }
 
 /// Experiment scale knobs (--quick shrinks everything for CI).
@@ -98,7 +162,7 @@ impl Scale {
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig04", "fig05", "fig07", "table1", "fig11", "fig12", "fig13",
     "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-    "fig21", "fig22", "fig23", "table3", "overlap",
+    "fig21", "fig22", "fig23", "table3", "overlap", "cachesweep",
 ];
 
 /// Dispatch one experiment by id.
@@ -123,6 +187,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> Result<Report, String> {
         "fig23" => Ok(sensitivity::fig23_fanout_machines(scale)),
         "table3" => table3::table3_accuracy(scale),
         "overlap" => Ok(overlap::overlap_sweep(scale)),
+        "cachesweep" => Ok(cachesweep::cachesweep(scale)),
         _ => Err(format!(
             "unknown experiment '{id}'; known: {}",
             ALL_EXPERIMENTS.join(", ")
@@ -153,5 +218,26 @@ mod tests {
     #[test]
     fn unknown_experiment_rejected() {
         assert!(run_experiment("nope", Scale::quick()).is_err());
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let mut r = Report::new("figJSON", "json demo");
+        let mut t = Table::new(["k", "v"]);
+        t.row(["x", "1"]);
+        r.section("cap", t);
+        r.note("n1");
+        let text = json::write(&r.to_json(), true);
+        let v = json::parse(&text).expect("report JSON must parse");
+        assert_eq!(v.path("id").and_then(Value::as_str), Some("figJSON"));
+        let sections = v.path("sections").and_then(Value::as_arr).unwrap();
+        assert_eq!(sections.len(), 1);
+        assert_eq!(
+            sections[0].path("headers").and_then(Value::as_arr).unwrap().len(),
+            2
+        );
+        let dir = std::env::temp_dir().join("hopgnn-report-json-test");
+        r.save_json(&dir).unwrap();
+        assert!(dir.join("figJSON.json").exists());
     }
 }

@@ -4,7 +4,7 @@
 use super::{Report, Scale};
 use crate::cluster::{ModelFamily, TransferKind};
 use crate::config::RunConfig;
-use super::cache;
+use super::memo;
 use crate::coordinator::StrategyKind;
 use crate::graph::datasets::Dataset;
 use crate::partition::{partition, PartitionAlgo};
@@ -46,7 +46,7 @@ pub fn fig04_breakdown(scale: Scale) -> Report {
     for ds in datasets {
         for model in [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat] {
             let cfg = base_cfg(scale, ds, model);
-            let m = cache::run(&cfg, StrategyKind::Dgl);
+            let m = memo::run(&cfg, StrategyKind::Dgl);
             let total = (m.time_sample + m.time_gather + m.time_compute
                 + m.time_migrate
                 + m.time_sync)
@@ -73,7 +73,7 @@ pub fn fig05_alpha(scale: Scale) -> Report {
         "alpha ratio: fetched data volume / model size (paper: 13.4-2368)",
     );
     let mut t = Table::new(["model", "layers", "hidden", "alpha", "log2"]);
-    let d = cache::dataset("products-s");
+    let d = memo::dataset("products-s");
     // (family, layers, hidden, fanout). The depth trend needs a FIXED
     // fanout (the paper's Fig 5 point: subgraph size — hence alpha —
     // grows with layer count, DeeperGCN-112 reaching 2368).
@@ -96,7 +96,7 @@ pub fn fig05_alpha(scale: Scale) -> Report {
         cfg.fanout = fanout;
         cfg.vmax = RunConfig::full_sim_vmax(layers, fanout);
         cfg.epochs = 1;
-        let m = cache::run(&cfg, StrategyKind::Dgl);
+        let m = memo::run(&cfg, StrategyKind::Dgl);
         let feat_dim = d.feat_dim;
         let shape = cfg.model_shape(feat_dim, d.classes);
         let per_iter = m.bytes(TransferKind::Feature) as f64
@@ -133,8 +133,8 @@ pub fn fig07_naive_vs_mc(scale: Scale) -> Report {
     for ds in datasets {
         for model in [ModelFamily::Gcn, ModelFamily::Gat] {
             let cfg = base_cfg(scale, ds, model);
-            let mc = cache::run(&cfg, StrategyKind::Dgl);
-            let nv = cache::run(&cfg, StrategyKind::Naive);
+            let mc = memo::run(&cfg, StrategyKind::Dgl);
+            let nv = memo::run(&cfg, StrategyKind::Naive);
             let ratio = nv.total_bytes() as f64 / mc.total_bytes().max(1) as f64;
             worst = worst.max(ratio);
             t.row([
@@ -182,7 +182,7 @@ pub fn table1_locality(scale: Scale) -> Report {
             "R_sub 2L%",
         ]);
         for &(ds, algo) in &setups {
-            let d = cache::dataset(ds);
+            let d = memo::dataset(ds);
             for &s in &server_counts {
                 let p = partition(&d.graph, s, algo, 7);
                 let (rm2, rs2) = locality_of(&d, &p, 2, kind, 64);

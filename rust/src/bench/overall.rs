@@ -5,13 +5,17 @@ use super::{Report, Scale};
 use crate::cluster::ModelFamily;
 use crate::config::RunConfig;
 use crate::coordinator::neutronstar::{FullBatchMode, NeutronStar};
-use super::cache;
+use super::memo;
 use crate::coordinator::{SimEnv, Strategy, StrategyKind};
 use crate::metrics::EpochMetrics;
 use crate::util::table::{fmt_secs, Table};
 
-fn cfg_for(scale: Scale, ds: &str, model: ModelFamily, hidden: usize)
-           -> RunConfig {
+fn cfg_for(
+    scale: Scale,
+    ds: &str,
+    model: ModelFamily,
+    hidden: usize,
+) -> RunConfig {
     let deep = model.default_layers() > 3;
     RunConfig {
         dataset: ds.into(),
@@ -45,7 +49,7 @@ fn faceoff_row(
 ) -> (f64, f64) {
     let ms: Vec<EpochMetrics> = HEADLINE
         .iter()
-        .map(|&k| cache::run(cfg, k))
+        .map(|&k| memo::run(cfg, k))
         .collect();
     let hop = ms[3].epoch_time;
     let vs_dgl = ms[0].epoch_time / hop;
@@ -145,7 +149,7 @@ pub fn fig19_large_graph(scale: Scale) -> Report {
         "large-graph performance (paper: 1.91x vs DGL, 1.48x vs P3; hit rate 24.4%->92.3%)",
     );
     let ds = if scale.quick { "uk-s" } else { "it-s" };
-    let _ = cache::dataset(ds); // warm the cache
+    let _ = memo::dataset(ds); // warm the cache
     let mut t = Table::new(["model", "system", "epoch", "hit rate%"]);
     for model in [ModelFamily::Gcn, ModelFamily::Gat] {
         let mut cfg = cfg_for(scale, ds, model, 128);
@@ -154,7 +158,7 @@ pub fn fig19_large_graph(scale: Scale) -> Report {
         }
         for kind in [StrategyKind::Dgl, StrategyKind::P3, StrategyKind::HopGnn]
         {
-            let m = cache::run(&cfg, kind);
+            let m = memo::run(&cfg, kind);
             t.row([
                 model.name().to_string(),
                 kind.name().to_string(),
@@ -181,7 +185,7 @@ pub fn fig21_fullbatch(scale: Scale) -> Report {
         vec!["arxiv-s", "products-s", "uk-s"]
     };
     for ds in &datasets {
-        let d = cache::dataset(ds);
+        let d = memo::dataset(ds);
         for model in [ModelFamily::Gcn, ModelFamily::Gat] {
             let cfg = cfg_for(scale, ds, model, 128);
             for mode in [

@@ -8,7 +8,7 @@
 //! a true prefetch; DGL models a prefetching dataloader. Naive-FC is
 //! the control — its serial walk cannot overlap anything.
 
-use super::{cache, Report, Scale};
+use super::{memo, Report, Scale};
 use crate::cluster::ModelFamily;
 use crate::config::RunConfig;
 use crate::coordinator::StrategyKind;
@@ -37,7 +37,7 @@ pub fn overlap_sweep(scale: Scale) -> Report {
         "gather/compute overlap: epoch time with pipelining off vs on",
     );
     let ds = if scale.quick { "arxiv-s" } else { "products-s" };
-    let _ = cache::dataset(ds); // warm the cache
+    let _ = memo::dataset(ds); // warm the cache
     let kinds = [
         StrategyKind::Dgl,
         StrategyKind::P3,
@@ -51,8 +51,8 @@ pub fn overlap_sweep(scale: Scale) -> Report {
     ]);
     for kind in kinds {
         let base_cfg = cfg_for(scale, ds);
-        let serial = cache::run(&base_cfg, kind);
-        let over = cache::run(
+        let serial = memo::run(&base_cfg, kind);
+        let over = memo::run(
             &RunConfig {
                 overlap: true,
                 ..base_cfg

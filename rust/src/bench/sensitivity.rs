@@ -4,7 +4,7 @@
 use super::{Report, Scale};
 use crate::cluster::ModelFamily;
 use crate::config::RunConfig;
-use super::cache;
+use super::memo;
 use crate::coordinator::StrategyKind;
 use crate::util::table::{fmt_secs, Table};
 
@@ -30,11 +30,11 @@ pub fn fig20_gpu_util(scale: Scale) -> Report {
         "GPU busy fraction (paper: HopGNN 52% vs DGL 13% / P3 18%)",
     );
     let ds = if scale.quick { "products-s" } else { "uk-s" };
-    let _ = cache::dataset(ds); // warm the cache
+    let _ = memo::dataset(ds); // warm the cache
     let cfg = cfg_for(scale, ds, ModelFamily::Gat);
     let mut t = Table::new(["system", "busy %", "epoch"]);
     for kind in [StrategyKind::Dgl, StrategyKind::P3, StrategyKind::HopGnn] {
-        let m = cache::run(&cfg, kind);
+        let m = memo::run(&cfg, kind);
         t.row([
             kind.name().to_string(),
             format!("{:.1}", m.gpu_busy_fraction * 100.0),
@@ -62,8 +62,8 @@ pub fn fig22_batch_featdim(scale: Scale) -> Report {
     for &b in &batches {
         let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gcn);
         cfg.batch_size = b;
-        let dgl = cache::run(&cfg, StrategyKind::Dgl);
-        let hop = cache::run(&cfg, StrategyKind::HopGnn);
+        let dgl = memo::run(&cfg, StrategyKind::Dgl);
+        let hop = memo::run(&cfg, StrategyKind::HopGnn);
         t.row([
             b.to_string(),
             fmt_secs(dgl.epoch_time),
@@ -82,8 +82,8 @@ pub fn fig22_batch_featdim(scale: Scale) -> Report {
     for &fd in &dims {
         let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gcn);
         cfg.feat_dim_override = Some(fd);
-        let dgl = cache::run(&cfg, StrategyKind::Dgl);
-        let hop = cache::run(&cfg, StrategyKind::HopGnn);
+        let dgl = memo::run(&cfg, StrategyKind::Dgl);
+        let hop = memo::run(&cfg, StrategyKind::HopGnn);
         t.row([
             fd.to_string(),
             fmt_secs(dgl.epoch_time),
@@ -113,8 +113,8 @@ pub fn fig23_fanout_machines(scale: Scale) -> Report {
         let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gcn);
         cfg.fanout = f;
         cfg.vmax = (1 + f + f * f).min(512).next_power_of_two();
-        let dgl = cache::run(&cfg, StrategyKind::Dgl);
-        let hop = cache::run(&cfg, StrategyKind::HopGnn);
+        let dgl = memo::run(&cfg, StrategyKind::Dgl);
+        let hop = memo::run(&cfg, StrategyKind::HopGnn);
         t.row([
             f.to_string(),
             fmt_secs(dgl.epoch_time),
@@ -135,8 +135,8 @@ pub fn fig23_fanout_machines(scale: Scale) -> Report {
         cfg.num_servers = n;
         // weak scaling, as in the paper: per-server batch share fixed
         cfg.batch_size = (scale.batch / 4) * n;
-        let dgl = cache::run(&cfg, StrategyKind::Dgl);
-        let hop = cache::run(&cfg, StrategyKind::HopGnn);
+        let dgl = memo::run(&cfg, StrategyKind::Dgl);
+        let hop = memo::run(&cfg, StrategyKind::HopGnn);
         t.row([
             n.to_string(),
             fmt_secs(dgl.epoch_time),

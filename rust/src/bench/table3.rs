@@ -49,17 +49,44 @@ pub fn table3_accuracy(scale: Scale) -> Result<Report, String> {
         vec!["gcn", "sage", "gat"]
     };
     for model in models {
-        let dgl = train_and_eval(&d, None, &manifest, model, 128,
-                                 OrderPolicy::Global, epochs, batch, 7)
-            .map_err(|e| e.to_string())?;
-        let lo = train_and_eval(&d, Some(&p), &manifest, model, 128,
-                                OrderPolicy::LocalityOpt, epochs, batch, 7)
-            .map_err(|e| e.to_string())?;
+        let dgl = train_and_eval(
+            &d,
+            None,
+            &manifest,
+            model,
+            128,
+            OrderPolicy::Global,
+            epochs,
+            batch,
+            7,
+        )
+        .map_err(|e| e.to_string())?;
+        let lo = train_and_eval(
+            &d,
+            Some(&p),
+            &manifest,
+            model,
+            128,
+            OrderPolicy::LocalityOpt,
+            epochs,
+            batch,
+            7,
+        )
+        .map_err(|e| e.to_string())?;
         // HopGNN: same global order, different sampling seed (migration
         // changes *where* training happens, never which roots are drawn)
-        let hop = train_and_eval(&d, None, &manifest, model, 128,
-                                 OrderPolicy::Global, epochs, batch, 8)
-            .map_err(|e| e.to_string())?;
+        let hop = train_and_eval(
+            &d,
+            None,
+            &manifest,
+            model,
+            128,
+            OrderPolicy::Global,
+            epochs,
+            batch,
+            8,
+        )
+        .map_err(|e| e.to_string())?;
         let fmt_drop = |base: f64, x: f64| {
             let drop = (base - x) * 100.0;
             if drop.abs() < 0.1 {

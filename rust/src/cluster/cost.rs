@@ -189,8 +189,13 @@ impl CostModel {
 
     /// Calibrate effective FLOP/s from a measured real execution of a
     /// known block (done once at startup when PJRT artifacts are loaded).
-    pub fn calibrate(&mut self, shape: &ModelShape, vertices: u64, edges: u64,
-                     measured_secs: f64) {
+    pub fn calibrate(
+        &mut self,
+        shape: &ModelShape,
+        vertices: u64,
+        edges: u64,
+        measured_secs: f64,
+    ) {
         if measured_secs > 0.0 {
             self.flops_per_sec = shape.train_flops(vertices, edges)
                 / measured_secs;

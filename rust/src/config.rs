@@ -6,6 +6,7 @@
 //! line-oriented subset of TOML.
 
 use crate::cluster::{CostModel, ModelFamily, ModelShape, NetworkModel};
+use crate::featstore::cache::CachePolicy;
 use crate::partition::PartitionAlgo;
 use crate::sampler::{SampleConfig, SamplerKind};
 
@@ -39,6 +40,16 @@ pub struct RunConfig {
     /// Execute per-server op lanes on worker threads (bit-identical to
     /// sequential execution; purely a wall-clock knob for big sweeps).
     pub parallel_lanes: bool,
+    /// Per-server feature-cache policy (`None` = the PR 1 uncached
+    /// gather path, byte-for-byte). With any other policy the
+    /// strategies emit `CacheFetch` ops and hot remote rows are served
+    /// without a transfer; see `featstore::cache`.
+    pub cache_policy: CachePolicy,
+    /// Feature-cache capacity per server, in MiB. Capacity 0 with a
+    /// policy set keeps the cache path active but admits nothing —
+    /// locked bit-identical to the uncached driver by
+    /// `tests/cache_parity.rs`.
+    pub cache_mb: usize,
 }
 
 impl Default for RunConfig {
@@ -62,6 +73,8 @@ impl Default for RunConfig {
             feat_dim_override: None,
             overlap: false,
             parallel_lanes: true,
+            cache_policy: CachePolicy::None,
+            cache_mb: 64,
         }
     }
 }
@@ -91,6 +104,16 @@ impl RunConfig {
             hidden: self.hidden,
             classes,
         }
+    }
+
+    /// Whether gathers should be routed through the feature cache.
+    pub fn cache_enabled(&self) -> bool {
+        self.cache_policy != CachePolicy::None
+    }
+
+    /// Feature-cache capacity per server, in bytes.
+    pub fn cache_bytes(&self) -> u64 {
+        (self.cache_mb as u64) << 20
     }
 
     pub fn sample_config(&self) -> SampleConfig {
@@ -173,6 +196,11 @@ impl RunConfig {
             "feat_dim" => self.feat_dim_override = Some(us(val)?),
             "overlap" => self.overlap = bl(val)?,
             "parallel_lanes" | "parallel" => self.parallel_lanes = bl(val)?,
+            "cache" | "cache_policy" => {
+                self.cache_policy = CachePolicy::from_str(val)
+                    .ok_or_else(|| format!("unknown cache policy '{val}'"))?
+            }
+            "cache_mb" => self.cache_mb = us(val)?,
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -216,6 +244,18 @@ mod tests {
         assert!(RunConfig::from_kv("model = resnet").is_err());
         assert!(RunConfig::from_kv("just a line").is_err());
         assert!(RunConfig::from_kv("overlap = maybe").is_err());
+    }
+
+    #[test]
+    fn cache_knobs_parse() {
+        let cfg = RunConfig::from_kv("cache = lru\ncache_mb = 8\n").unwrap();
+        assert_eq!(cfg.cache_policy, CachePolicy::Lru);
+        assert_eq!(cfg.cache_mb, 8);
+        assert_eq!(cfg.cache_bytes(), 8 << 20);
+        assert!(cfg.cache_enabled());
+        let d = RunConfig::default();
+        assert!(!d.cache_enabled(), "cache must default off (parity)");
+        assert!(RunConfig::from_kv("cache = arc").is_err());
     }
 
     #[test]

@@ -33,12 +33,27 @@
 //! never how many bytes move. With the knob off, every op is charged
 //! inline and the driver reproduces the historical eager loops'
 //! accounting exactly.
+//!
+//! ## Feature caching
+//!
+//! The driver owns one [`FeatureCache`] per server lane (built from
+//! [`crate::config::RunConfig::cache_policy`]). [`Op::CacheFetch`] ops
+//! resolve their request through the lane's cache before touching the
+//! network: hits move zero bytes and zero transfer seconds — in both
+//! serial and overlap modes, so with overlap on a hit also never
+//! enters the async pending stream — while misses cost exactly what
+//! the equivalent `GatherMerged` would and are admitted per the
+//! eviction policy. Caches are lane-private, keeping parallel lane
+//! execution bit-identical to sequential; a capacity-0 cache
+//! reproduces the uncached driver bit-for-bit
+//! (`tests/cache_parity.rs`).
 
 use super::ops::{Item, Op, Phase, Program};
 use super::SimEnv;
 use crate::cluster::{Clocks, NetStats};
-use crate::featstore::FeatureStore;
+use crate::featstore::cache::FeatureCache;
 use crate::featstore::pregather::PregatherPlan;
+use crate::featstore::FeatureStore;
 use crate::metrics::EpochMetrics;
 
 /// Minimum summed op weight in a lane set before the driver spawns
@@ -59,6 +74,10 @@ pub struct EpochDriver<'e, 'a> {
     m: EpochMetrics,
     /// Per-server asynchronous transfer time not yet hidden or exposed.
     pending: Vec<f64>,
+    /// One feature cache per server lane (all no-op with the cache
+    /// policy off). A cache is only ever touched by its own lane, so
+    /// parallel lane execution stays bit-identical to sequential.
+    caches: Vec<FeatureCache>,
     parallel_override: Option<bool>,
 }
 
@@ -81,6 +100,7 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
             stats: NetStats::new(n),
             m: EpochMetrics::default(),
             pending: vec![0.0f64; n],
+            caches: env.build_caches(),
             parallel_override,
         }
     }
@@ -111,6 +131,7 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
                         &mut self.stats,
                         &mut self.m,
                         &mut self.pending,
+                        &mut self.caches,
                     );
                 }
                 Item::Barrier => {
@@ -209,16 +230,20 @@ fn exec_lanes(
     stats: &mut NetStats,
     m: &mut EpochMetrics,
     pending: &mut [f64],
+    caches: &mut [FeatureCache],
 ) {
     let results: Vec<LaneOut> = if parallel {
         std::thread::scope(|scope| {
             let handles: Vec<_> = lanes
                 .iter()
+                .zip(caches.iter_mut())
                 .enumerate()
-                .map(|(s, ops)| {
+                .map(|(s, (ops, cache))| {
                     let t0 = clocks.now(s);
                     let p0 = pending[s];
-                    scope.spawn(move || run_lane(env, store, s, ops, t0, p0))
+                    scope.spawn(move || {
+                        run_lane(env, store, s, ops, t0, p0, cache)
+                    })
                 })
                 .collect();
             handles
@@ -229,9 +254,10 @@ fn exec_lanes(
     } else {
         lanes
             .iter()
+            .zip(caches.iter_mut())
             .enumerate()
-            .map(|(s, ops)| {
-                run_lane(env, store, s, ops, clocks.now(s), pending[s])
+            .map(|(s, (ops, cache))| {
+                run_lane(env, store, s, ops, clocks.now(s), pending[s], cache)
             })
             .collect()
     };
@@ -247,8 +273,9 @@ fn exec_lanes(
 }
 
 /// Execute one server's ops starting from clock `t0` and async-pending
-/// `pending0`. Pure: reads only shared immutable state, writes only
-/// lane-local accumulators.
+/// `pending0`. Pure with respect to shared state: reads only shared
+/// immutable state, writes only lane-local accumulators (the feature
+/// `cache` belongs to this lane alone).
 fn run_lane(
     env: &SimEnv,
     store: &FeatureStore,
@@ -256,6 +283,7 @@ fn run_lane(
     ops: &[Op],
     t0: f64,
     pending0: f64,
+    cache: &mut FeatureCache,
 ) -> LaneOut {
     let n = env.num_servers();
     let cfg = &env.cfg;
@@ -309,10 +337,20 @@ fn run_lane(
             Op::Gather { vertices, overlap } => {
                 let plan = store.plan(server, vertices.iter().copied());
                 let dt = store.sim_cost(
-                    &plan, &cfg.net, &cfg.cost, &mut stats, &mut m,
+                    &plan,
+                    &cfg.net,
+                    &cfg.cost,
+                    &mut stats,
+                    &mut m,
                 );
-                charge_transfer(dt, Phase::Gather, *overlap, &mut t,
-                                &mut pending, &mut m);
+                charge_transfer(
+                    dt,
+                    Phase::Gather,
+                    *overlap,
+                    &mut t,
+                    &mut pending,
+                    &mut m,
+                );
             }
             Op::GatherMerged { steps, overlap } => {
                 let plan = PregatherPlan::build(store, server, steps);
@@ -323,17 +361,62 @@ fn run_lane(
                     &mut stats,
                     &mut m,
                 );
-                charge_transfer(dt, Phase::Gather, *overlap, &mut t,
-                                &mut pending, &mut m);
+                charge_transfer(
+                    dt,
+                    Phase::Gather,
+                    *overlap,
+                    &mut t,
+                    &mut pending,
+                    &mut m,
+                );
+            }
+            Op::CacheFetch { steps, overlap } => {
+                // resolve through this lane's cache: hits skip the
+                // transfer (and, in overlap mode, the pending stream);
+                // misses fetch exactly like a merged gather and are
+                // admitted for the next iteration
+                let res = cache.resolve(store, server, steps);
+                let dt = store.sim_cost_cached(
+                    &res.plan,
+                    res.hits,
+                    &cfg.net,
+                    &cfg.cost,
+                    &mut stats,
+                    &mut m,
+                );
+                m.cache_hits += res.hits;
+                m.cache_misses += res.plan.remote_count();
+                m.cache_hit_bytes += res.hit_bytes;
+                m.cache_miss_bytes +=
+                    res.plan.remote_count() * store.feat_bytes;
+                m.cache_evict_bytes += res.evicted_bytes;
+                charge_transfer(
+                    dt,
+                    Phase::Gather,
+                    *overlap,
+                    &mut t,
+                    &mut pending,
+                    &mut m,
+                );
             }
             Op::Compute { v, e } => {
                 let dt = cfg.cost.train_time(&env.shape, *v, *e);
-                charge_compute(dt, &mut t, &mut busy_dt, &mut pending,
-                               &mut m);
+                charge_compute(
+                    dt,
+                    &mut t,
+                    &mut busy_dt,
+                    &mut pending,
+                    &mut m,
+                );
             }
             Op::ComputeSecs { secs } => {
-                charge_compute(*secs, &mut t, &mut busy_dt, &mut pending,
-                               &mut m);
+                charge_compute(
+                    *secs,
+                    &mut t,
+                    &mut busy_dt,
+                    &mut pending,
+                    &mut m,
+                );
             }
             Op::Migrate {
                 from,
@@ -344,8 +427,14 @@ fn run_lane(
             } => {
                 let dt =
                     stats.record(&cfg.net, *from, server, *bytes, *kind);
-                charge_transfer(dt, *phase, *overlap, &mut t,
-                                &mut pending, &mut m);
+                charge_transfer(
+                    dt,
+                    *phase,
+                    *overlap,
+                    &mut t,
+                    &mut pending,
+                    &mut m,
+                );
             }
             Op::Host { secs, phase } => {
                 t += secs;
@@ -386,6 +475,7 @@ mod tests {
     use crate::cluster::TransferKind;
     use crate::config::RunConfig;
     use crate::coordinator::ops::ProgramBuilder;
+    use crate::featstore::cache::CachePolicy;
     use crate::graph::datasets::tiny_test_dataset;
 
     fn env_with(overlap: bool, parallel: bool) -> RunConfig {
@@ -533,6 +623,147 @@ mod tests {
                 "nothing to hide behind: {} vs {}",
                 on.epoch_time, off.epoch_time);
         assert_eq!(on.time_overlap_hidden, 0.0);
+    }
+
+    /// Two identical cache-routed gathers on server 0 + an allreduce.
+    /// No compute: in overlap mode the pending stream is fully exposed
+    /// at the allreduce fence, so any hit shows up in the epoch time.
+    fn cache_program(overlap: bool) -> Program {
+        let mut b = ProgramBuilder::new(2);
+        for _ in 0..2 {
+            b.op(0, Op::CacheFetch {
+                steps: vec![(0..400u32).collect()],
+                overlap,
+            });
+        }
+        b.allreduce();
+        b.finish()
+    }
+
+    fn cache_cfg(policy: CachePolicy, mb: usize, overlap: bool) -> RunConfig {
+        RunConfig {
+            num_servers: 2,
+            overlap,
+            parallel_lanes: false,
+            cache_policy: policy,
+            cache_mb: mb,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cache_hits_skip_transfers_in_serial_and_overlap_lanes() {
+        let d = tiny_test_dataset(205);
+        for overlap in [false, true] {
+            let prog = cache_program(overlap);
+            let cold = EpochDriver::run(
+                &SimEnv::new(&d, cache_cfg(CachePolicy::Lru, 0, overlap)),
+                &prog,
+            );
+            let warm = EpochDriver::run(
+                &SimEnv::new(&d, cache_cfg(CachePolicy::Lru, 64, overlap)),
+                &prog,
+            );
+            // capacity 0 never hits; 64 MiB holds the whole remote set,
+            // so the second gather is all hits: half the feature bytes
+            assert_eq!(cold.cache_hits, 0);
+            assert!(warm.cache_hits > 0);
+            assert_eq!(warm.cache_hits, warm.cache_misses);
+            assert_eq!(
+                2 * warm.bytes(TransferKind::Feature),
+                cold.bytes(TransferKind::Feature),
+                "overlap={overlap}: warm cache must halve feature bytes"
+            );
+            // byte conservation: requested = skipped + transferred
+            assert_eq!(
+                warm.cache_hit_bytes + warm.cache_miss_bytes,
+                cold.cache_miss_bytes,
+                "overlap={overlap}"
+            );
+            assert_eq!(warm.cache_miss_bytes,
+                       warm.bytes(TransferKind::Feature));
+            assert!(
+                warm.epoch_time < cold.epoch_time,
+                "overlap={overlap}: hits must shrink the epoch \
+                 ({} !< {})",
+                warm.epoch_time,
+                cold.epoch_time
+            );
+        }
+    }
+
+    #[test]
+    fn capacity_zero_cache_matches_uncached_gather_bitwise() {
+        let d = tiny_test_dataset(206);
+        for overlap in [false, true] {
+            // the uncached twin of `cache_program`: plain gathers,
+            // op-for-op identical otherwise
+            let mut b = ProgramBuilder::new(2);
+            for _ in 0..2 {
+                b.op(0, Op::Gather {
+                    vertices: (0..400u32).collect(),
+                    overlap,
+                });
+            }
+            b.allreduce();
+            let plain = b.finish();
+            let off = EpochDriver::run(
+                &SimEnv::new(&d, cache_cfg(CachePolicy::None, 64, overlap)),
+                &plain,
+            );
+            let zero = EpochDriver::run(
+                &SimEnv::new(&d, cache_cfg(CachePolicy::Lru, 0, overlap)),
+                &cache_program(overlap),
+            );
+            assert_eq!(off.total_bytes(), zero.total_bytes());
+            assert_eq!(off.epoch_time.to_bits(), zero.epoch_time.to_bits());
+            assert_eq!(off.time_gather.to_bits(), zero.time_gather.to_bits());
+            assert_eq!(off.remote_vertices, zero.remote_vertices);
+            assert_eq!(off.local_hits, zero.local_hits);
+            assert_eq!(zero.cache_hits, 0);
+        }
+    }
+
+    #[test]
+    fn parallel_lanes_bit_identical_with_cache_enabled() {
+        let d = tiny_test_dataset(207);
+        let prog = demo_cache_lanes();
+        let cfg = |parallel| RunConfig {
+            num_servers: 4,
+            parallel_lanes: parallel,
+            cache_policy: CachePolicy::Lru,
+            cache_mb: 4,
+            ..Default::default()
+        };
+        let env_seq = SimEnv::new(&d, cfg(false));
+        let env_par = SimEnv::new(&d, cfg(true));
+        let seq = EpochDriver::run_inner(&env_seq, &prog, Some(false));
+        let par = EpochDriver::run_inner(&env_par, &prog, Some(true));
+        assert_eq!(seq.total_bytes(), par.total_bytes());
+        assert_eq!(seq.epoch_time.to_bits(), par.epoch_time.to_bits());
+        assert_eq!(seq.cache_hits, par.cache_hits);
+        assert_eq!(seq.cache_hit_bytes, par.cache_hit_bytes);
+        assert_eq!(seq.cache_evict_bytes, par.cache_evict_bytes);
+        assert!(seq.cache_hits > 0, "warm rows must hit on the re-fetch");
+    }
+
+    /// Four lanes, each fetching overlapping windows twice through the
+    /// cache, so every lane produces both misses and hits.
+    fn demo_cache_lanes() -> Program {
+        let mut b = ProgramBuilder::new(4);
+        for round in 0..2u32 {
+            for s in 0..4 {
+                let lo = (s as u32 * 50 + round * 25) % 300;
+                b.op(s, Op::CacheFetch {
+                    steps: vec![(lo..lo + 100).collect()],
+                    overlap: false,
+                });
+                b.op(s, Op::Compute { v: 100, e: 600 });
+            }
+            b.barrier();
+        }
+        b.allreduce();
+        b.finish()
     }
 
     #[test]

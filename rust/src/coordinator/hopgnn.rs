@@ -23,7 +23,11 @@
 //! eligible: with the driver's overlap mode on, the pre-gather becomes a
 //! true prefetch that streams in behind the step computes instead of
 //! blocking the iteration head — the principled version of §5.2's
-//! "gather once, early" idea.
+//! "gather once, early" idea. With a feature cache configured
+//! ([`crate::config::RunConfig::cache_policy`]) the (pre-)gathers are
+//! emitted as `CacheFetch` ops, so rows still resident from earlier
+//! iterations skip the fetch entirely — §5.2 dedups within the
+//! iteration, the cache dedups across them.
 
 use super::merge::{MergeController, Selection};
 use super::ops::{Op, Phase, ProgramBuilder};
@@ -60,8 +64,11 @@ impl HopGnn {
         Self::with_flags(true, true, Selection::Random)
     }
 
-    pub fn with_flags(pregather: bool, merging: bool, selection: Selection)
-                      -> Self {
+    pub fn with_flags(
+        pregather: bool,
+        merging: bool,
+        selection: Selection,
+    ) -> Self {
         Self {
             pregather,
             merging,
@@ -93,9 +100,14 @@ impl Strategy for HopGnn {
 
     fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics {
         let n = env.num_servers();
+        let cached = env.cfg.cache_enabled();
         let controller = self.controller.get_or_insert_with(|| {
-            MergeController::new(n, self.merging, self.selection,
-                                 env.cfg.seed ^ 0x3E46)
+            MergeController::new(
+                n,
+                self.merging,
+                self.selection,
+                env.cfg.seed ^ 0x3E46,
+            )
         });
         let schedule = controller.schedule.clone();
         let t_steps = schedule.num_steps();
@@ -165,10 +177,7 @@ impl Strategy for HopGnn {
                                 .collect()
                         })
                         .collect();
-                    b.op(srv, Op::GatherMerged {
-                        steps,
-                        overlap: true,
-                    });
+                    b.op(srv, Op::gather_merged(cached, steps, true));
                 }
                 b.barrier();
             }
@@ -184,10 +193,7 @@ impl Strategy for HopGnn {
                             .iter()
                             .flat_map(|g| g.vertices.iter().copied())
                             .collect();
-                        b.op(srv, Op::Gather {
-                            vertices: verts,
-                            overlap: true,
-                        });
+                        b.op(srv, Op::gather(cached, verts, true));
                     }
                     b.op(srv, Op::Compute {
                         v: mg_vertices(mgs),
@@ -246,6 +252,7 @@ mod tests {
     use super::*;
     use crate::config::RunConfig;
     use crate::coordinator::model_centric::ModelCentric;
+    use crate::featstore::cache::CachePolicy;
     use crate::graph::datasets::small_test_dataset;
 
     fn cfg() -> RunConfig {
@@ -337,6 +344,31 @@ mod tests {
         // RD still merges (selection differs, mechanism identical)
         let last_steps = epochs.last().unwrap().time_steps_per_iter;
         assert!(last_steps <= 4.0);
+    }
+
+    #[test]
+    fn cache_composes_with_pregather() {
+        // §5.2 dedups *within* an iteration; the feature cache dedups
+        // *across* iterations on top of it
+        let d = small_test_dataset(37);
+        let pg = HopGnn::mg_pg().run_epoch(&mut SimEnv::new(&d, cfg()));
+        let pc = HopGnn::mg_pg().run_epoch(&mut SimEnv::new(
+            &d,
+            RunConfig {
+                cache_policy: CachePolicy::Lru,
+                cache_mb: 64,
+                ..cfg()
+            },
+        ));
+        assert!(pc.cache_hits > 0, "cross-iteration reuse must hit");
+        assert!(
+            pc.bytes(TransferKind::Feature)
+                < pg.bytes(TransferKind::Feature)
+        );
+        assert_eq!(
+            pc.cache_hit_bytes + pc.cache_miss_bytes,
+            pg.bytes(TransferKind::Feature)
+        );
     }
 
     #[test]

@@ -36,6 +36,7 @@ impl Strategy for LocalityOpt {
 
     fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics {
         let n = env.num_servers();
+        let cached = env.cfg.cache_enabled();
         let mut rng = env.rng.fork(0x10C ^ self.epoch_idx);
         self.epoch_idx += 1;
 
@@ -72,10 +73,9 @@ impl Strategy for LocalityOpt {
                     .flat_map(|g| g.vertices.iter().copied())
                     .collect();
                 let (v, e) = (mg_vertices(&mgs), mg_edges(&mgs));
-                b.op(s, Op::Gather {
-                    vertices: verts,
-                    overlap: true,
-                });
+                // the few remote halo vertices LO's local micrographs
+                // still touch are exactly the hot-set a cache retains
+                b.op(s, Op::gather(cached, verts, true));
                 b.op(s, Op::Compute { v, e });
             }
             b.allreduce();

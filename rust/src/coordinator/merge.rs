@@ -125,8 +125,12 @@ pub struct MergeController {
 }
 
 impl MergeController {
-    pub fn new(num_servers: usize, enabled: bool, selection: Selection,
-               seed: u64) -> Self {
+    pub fn new(
+        num_servers: usize,
+        enabled: bool,
+        selection: Selection,
+        seed: u64,
+    ) -> Self {
         Self {
             schedule: Schedule::round_robin(num_servers),
             enabled,

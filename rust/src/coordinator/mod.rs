@@ -10,8 +10,11 @@
 //! [`crate::cluster::NetStats`] / [`crate::metrics::EpochMetrics`]) in
 //! one place. The driver owns the epoch lifecycle, runs independent
 //! per-server lanes on worker threads (bit-identical to sequential
-//! execution), and models gather/compute overlap when
-//! [`crate::config::RunConfig::overlap`] is on.
+//! execution), models gather/compute overlap when
+//! [`crate::config::RunConfig::overlap`] is on, and owns one
+//! [`crate::featstore::cache::FeatureCache`] per lane so cache-routed
+//! gathers ([`ops::Op::CacheFetch`]) can skip transfers for hot remote
+//! rows when [`crate::config::RunConfig::cache_policy`] is set.
 //!
 //! | strategy            | schedule it builds                          | paper role                |
 //! |---------------------|---------------------------------------------|---------------------------|
@@ -44,12 +47,14 @@ pub use ops::{Op, Phase, Program, ProgramBuilder};
 
 use crate::cluster::{Clocks, ModelShape, NetStats, TransferKind};
 use crate::config::RunConfig;
+use crate::featstore::cache::{self, CachePolicy, FeatureCache};
 use crate::featstore::FeatureStore;
 use crate::graph::datasets::Dataset;
 use crate::metrics::EpochMetrics;
 use crate::partition::{partition, Partition, PartitionAlgo};
 use crate::sampler::{sample_micrograph, Micrograph};
 use crate::util::rng::Rng;
+use std::sync::OnceLock;
 
 /// Everything a strategy needs to simulate (or drive) one training run.
 pub struct SimEnv<'a> {
@@ -60,6 +65,10 @@ pub struct SimEnv<'a> {
     /// Feature bytes per vertex (honors `feat_dim_override`).
     pub feat_bytes: u64,
     pub rng: Rng,
+    /// Global vertex ranking backing the static cache policies, built
+    /// once per env (the ranking depends only on config + dataset, so
+    /// every epoch's caches pin identical sets). Empty for `None`/LRU.
+    cache_rank: OnceLock<Vec<u32>>,
 }
 
 impl<'a> SimEnv<'a> {
@@ -90,6 +99,7 @@ impl<'a> SimEnv<'a> {
             shape,
             feat_bytes: (feat_dim * 4) as u64,
             rng,
+            cache_rank: OnceLock::new(),
         }
     }
 
@@ -103,6 +113,65 @@ impl<'a> SimEnv<'a> {
             &self.partition,
             self.feat_bytes,
         )
+    }
+
+    /// Build one feature cache per server lane for an epoch session
+    /// (caches are per-epoch state owned by the `EpochDriver`; the
+    /// static pin rankings are computed once per env and shared).
+    pub fn build_caches(&self) -> Vec<FeatureCache> {
+        let rank = match self.cfg.cache_policy {
+            CachePolicy::Degree | CachePolicy::Precomputed => {
+                Some(self.cache_rank().as_slice())
+            }
+            _ => None,
+        };
+        cache::build_caches(
+            self.cfg.cache_policy,
+            self.cfg.cache_bytes(),
+            self.feat_bytes,
+            rank,
+            &self.partition,
+        )
+    }
+
+    fn cache_rank(&self) -> &Vec<u32> {
+        self.cache_rank.get_or_init(|| match self.cfg.cache_policy {
+            CachePolicy::Degree => cache::rank_by_degree(&self.dataset.graph),
+            CachePolicy::Precomputed => cache::rank_by_profile(
+                &self.sampler_profile(),
+                &self.dataset.graph,
+            ),
+            _ => Vec::new(),
+        })
+    }
+
+    /// The RapidGNN-style profiling pass: replay one epoch's worth of
+    /// the deterministic sampling schedule (own RNG stream, so the
+    /// training epochs are untouched) and count how often each vertex
+    /// is requested. The counts rank the `Precomputed` pin sets.
+    fn sampler_profile(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.dataset.graph.num_vertices()];
+        let mut rng = Rng::new(self.cfg.seed ^ 0xCAC4E);
+        let mut roots = self.dataset.train_vertices.clone();
+        rng.shuffle(&mut roots);
+        let bs = self.cfg.batch_size.max(self.num_servers());
+        // profile one epoch's worth of roots with 2x slack: the real
+        // epochs draw different shuffles, so the pin set should cover
+        // the hot neighborhood structure, not one specific root draw
+        let budget = self
+            .cfg
+            .max_iterations
+            .map(|it| 2 * it * bs)
+            .unwrap_or(roots.len())
+            .min(roots.len());
+        let scfg = self.cfg.sample_config();
+        for &r in &roots[..budget] {
+            let mg = sample_micrograph(&self.dataset.graph, r, &scfg, &mut rng);
+            for &v in &mg.vertices {
+                counts[v as usize] += 1;
+            }
+        }
+        counts
     }
 
     /// Iteration schedule for one epoch: shuffled train roots, chunked

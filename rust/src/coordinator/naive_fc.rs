@@ -17,6 +17,13 @@
 //! before its state arrives from stop k — so none of its transfers are
 //! overlap-eligible; the op stream simply threads the migrations through
 //! the visited servers' lanes.
+//!
+//! The strawman also sits outside the feature-cache tier
+//! (`featstore::cache`): it consumes every feature *where it lives*
+//! (no remote feature fetches to cache) and what it ships instead —
+//! params plus per-mini-batch intermediate state — is unique to each
+//! iteration, so the builder emits no gather ops and `--cache` is a
+//! no-op here.
 
 use super::ops::{Op, Phase, ProgramBuilder};
 use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};

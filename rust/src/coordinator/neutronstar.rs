@@ -21,6 +21,14 @@
 //! Boundary fetches are overlap-eligible (they are known before the
 //! epoch starts — the full-batch analogue of a deterministic prefetch
 //! schedule); model migration and the per-layer barriers are not.
+//!
+//! Full-batch training is outside the feature-cache tier
+//! (`featstore::cache`): each boundary vertex is fetched exactly once
+//! per epoch already (the boundary census above is itself a perfect
+//! intra-epoch dedup), and the caches are per-epoch state, so there is
+//! no cross-iteration redundancy left for a cache to remove — the
+//! builder keeps its aggregated per-source `Migrate` transfers and
+//! `--cache` is a no-op here.
 
 use super::ops::{Op, Phase, ProgramBuilder};
 use super::{EpochDriver, SimEnv, Strategy};

@@ -51,6 +51,15 @@ pub enum Op {
     /// Iteration-level merged gather (§5.2 pre-gathering): one
     /// deduplicated fetch for all `steps` of the iteration.
     GatherMerged { steps: Vec<Vec<u32>>, overlap: bool },
+    /// Cache-mediated gather: the dedup union of `steps` is resolved
+    /// through this lane's [`crate::featstore::cache::FeatureCache`] —
+    /// hits skip the transfer entirely (in overlap mode they also never
+    /// enter the async pending stream), misses are fetched like a
+    /// `GatherMerged` and admitted. With a capacity-0 cache this is
+    /// bit-identical to `Gather`/`GatherMerged` (`tests/cache_parity`).
+    /// Emitted by the strategy builders in place of the plain gathers
+    /// when [`crate::config::RunConfig::cache_enabled`] holds.
+    CacheFetch { steps: Vec<Vec<u32>>, overlap: bool },
     /// GNN training compute over `v` vertices / `e` edges (busy time,
     /// cost-model derived).
     Compute { v: u64, e: u64 },
@@ -82,10 +91,37 @@ impl Op {
     pub fn weight(&self) -> usize {
         match self {
             Op::Gather { vertices, .. } => vertices.len(),
-            Op::GatherMerged { steps, .. } => {
+            Op::GatherMerged { steps, .. } | Op::CacheFetch { steps, .. } => {
                 steps.iter().map(|s| s.len()).sum()
             }
             _ => 1,
+        }
+    }
+
+    /// Single-step feature gather, routed through the per-server cache
+    /// when `cached` — the one gather-emission point every strategy
+    /// builder shares, so the cache knob cannot drift per strategy.
+    pub fn gather(cached: bool, vertices: Vec<u32>, overlap: bool) -> Op {
+        if cached {
+            Op::CacheFetch {
+                steps: vec![vertices],
+                overlap,
+            }
+        } else {
+            Op::Gather { vertices, overlap }
+        }
+    }
+
+    /// Iteration-level merged gather (§5.2), cache-routed when `cached`.
+    pub fn gather_merged(
+        cached: bool,
+        steps: Vec<Vec<u32>>,
+        overlap: bool,
+    ) -> Op {
+        if cached {
+            Op::CacheFetch { steps, overlap }
+        } else {
+            Op::GatherMerged { steps, overlap }
         }
     }
 }
@@ -257,5 +293,39 @@ mod tests {
             .weight(),
             3
         );
+        assert_eq!(
+            Op::CacheFetch {
+                steps: vec![vec![1, 2], vec![3, 4]],
+                overlap: true
+            }
+            .weight(),
+            4
+        );
+    }
+
+    #[test]
+    fn gather_helpers_route_through_the_cache_knob() {
+        match Op::gather(false, vec![1, 2], true) {
+            Op::Gather { vertices, overlap } => {
+                assert_eq!(vertices, vec![1, 2]);
+                assert!(overlap);
+            }
+            other => panic!("expected Gather, got {other:?}"),
+        }
+        match Op::gather(true, vec![1, 2], false) {
+            Op::CacheFetch { steps, overlap } => {
+                assert_eq!(steps, vec![vec![1, 2]]);
+                assert!(!overlap);
+            }
+            other => panic!("expected CacheFetch, got {other:?}"),
+        }
+        match Op::gather_merged(false, vec![vec![5]], true) {
+            Op::GatherMerged { .. } => {}
+            other => panic!("expected GatherMerged, got {other:?}"),
+        }
+        match Op::gather_merged(true, vec![vec![5]], true) {
+            Op::CacheFetch { .. } => {}
+            other => panic!("expected CacheFetch, got {other:?}"),
+        }
     }
 }

@@ -20,6 +20,12 @@
 //! allreduce). The hidden exchange is overlap-eligible — P³'s design is
 //! exactly a pipelining argument, and with the driver's overlap mode on
 //! the push-pull hides behind compute.
+//!
+//! P³ is deliberately outside the feature-cache tier
+//! (`featstore::cache`): it never moves raw features (every server
+//! holds a 1/N slice of all of them), and its hidden-activation
+//! exchange is fresh per step — there is nothing reusable to cache, so
+//! the builder emits no gather ops and `--cache` is a no-op here.
 
 use super::ops::{Op, Phase, ProgramBuilder};
 use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};

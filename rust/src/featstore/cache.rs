@@ -1,0 +1,538 @@
+//! Per-server feature cache — the tier in front of [`GatherPlan`]
+//! resolution.
+//!
+//! Pre-gathering (§5.2) removes redundant fetches *within* one
+//! iteration, but across iterations every strategy still re-fetches hot
+//! remote vertices from scratch. RapidGNN (arXiv 2505.10806) observes
+//! that with a deterministic sampling schedule those reuse patterns are
+//! precomputable; the systems survey (arXiv 2211.05368) lists feature
+//! caching as the standard model-centric lever. This module provides
+//! both flavors behind one interface:
+//!
+//! * [`CachePolicy::Lru`] — classic recency eviction. Entries are all
+//!   `feat_bytes` wide, so LRU keeps the stack-inclusion property and
+//!   its hit count is monotonically non-decreasing in capacity.
+//! * [`CachePolicy::Degree`] — degree-weighted static set: the
+//!   highest-degree remote vertices are pinned (they are the most
+//!   likely to be sampled again under any neighbor sampler). No
+//!   runtime eviction; larger capacities pin supersets.
+//! * [`CachePolicy::Precomputed`] — RapidGNN-style schedule cache: a
+//!   profiling pass replays the sampler's deterministic RNG to count
+//!   how often each vertex will actually be requested, and pins the
+//!   hottest remote vertices by that measured frequency.
+//!
+//! Every policy starts cold and fills on first miss, so each cached
+//! byte was transferred exactly once and byte conservation stays exact:
+//! `hit_bytes + miss_bytes` equals what the uncached gather would have
+//! moved. A capacity-0 cache admits nothing and reproduces the uncached
+//! [`GatherPlan`] bit-for-bit (locked by `tests/cache_parity.rs`).
+//!
+//! One [`FeatureCache`] belongs to one server lane of the
+//! [`crate::coordinator::engine::EpochDriver`], so lane-parallel
+//! execution never shares cache state and stays bit-identical to
+//! sequential execution. The cache is resolved by the
+//! [`crate::coordinator::ops::Op::CacheFetch`] op; hits skip the
+//! network transfer entirely (bytes and seconds — in overlap mode this
+//! also shrinks the async pending stream), while hit rows still pay
+//! host staging into the device tensor like local reads do.
+
+use super::{FeatureStore, GatherPlan};
+use crate::partition::Partition;
+use crate::util::fxhash::{FxHashMap, FxHashSet};
+use std::collections::BTreeMap;
+
+/// Eviction/admission policy of a [`FeatureCache`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// No cache: every remote vertex is fetched (the PR 1 behavior).
+    None,
+    /// Least-recently-used eviction over fixed-size feature rows.
+    Lru,
+    /// Static pin of the highest-degree remote vertices.
+    Degree,
+    /// Static pin of the vertices the sampler's deterministic schedule
+    /// will actually request most often (RapidGNN-style).
+    Precomputed,
+}
+
+/// The sweepable (non-`None`) policies, in presentation order.
+pub const ALL_CACHE_POLICIES: [CachePolicy; 3] = [
+    CachePolicy::Lru,
+    CachePolicy::Degree,
+    CachePolicy::Precomputed,
+];
+
+impl CachePolicy {
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "none" | "off" => Some(Self::None),
+            "lru" => Some(Self::Lru),
+            "degree" | "degree-static" => Some(Self::Degree),
+            "schedule" | "precomputed" | "rapid" => Some(Self::Precomputed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Lru => "lru",
+            Self::Degree => "degree",
+            Self::Precomputed => "schedule",
+        }
+    }
+}
+
+/// Outcome of one vertex access.
+struct Access {
+    hit: bool,
+    evicted_bytes: u64,
+}
+
+/// Outcome of resolving one [`CacheFetch`](crate::coordinator::ops::Op)
+/// through the cache: the residual gather plan (misses only) plus the
+/// accounting deltas the driver folds into
+/// [`crate::metrics::EpochMetrics`].
+pub struct CacheResolution {
+    /// Gather plan for the cache misses; `local` is untouched by the
+    /// cache (local shard reads never enter it).
+    pub plan: GatherPlan,
+    /// Remote vertices served from the cache (no transfer).
+    pub hits: u64,
+    /// Bytes those hits would have moved: `hits * feat_bytes`.
+    pub hit_bytes: u64,
+    /// Bytes displaced by LRU eviction while admitting the misses.
+    pub evicted_bytes: u64,
+}
+
+/// One server's feature cache. All entries are one feature row
+/// (`feat_bytes`) wide; capacity is tracked in bytes so `RunConfig`'s
+/// MB knob maps directly onto it.
+pub struct FeatureCache {
+    policy: CachePolicy,
+    capacity: u64,
+    feat_bytes: u64,
+    used: u64,
+    /// LRU state: access clock, vertex -> last-use tick, tick -> vertex.
+    tick: u64,
+    recency: FxHashMap<u32, u64>,
+    order: BTreeMap<u64, u32>,
+    /// Static policies: the admissible set (sized to capacity) and the
+    /// subset already filled by a first-miss fetch.
+    pinned: FxHashSet<u32>,
+    resident: FxHashSet<u32>,
+}
+
+impl FeatureCache {
+    pub fn new(
+        policy: CachePolicy,
+        capacity: u64,
+        feat_bytes: u64,
+        pinned: FxHashSet<u32>,
+    ) -> Self {
+        Self {
+            policy,
+            capacity,
+            feat_bytes,
+            used: 0,
+            tick: 0,
+            recency: FxHashMap::default(),
+            order: BTreeMap::new(),
+            pinned,
+            resident: FxHashSet::default(),
+        }
+    }
+
+    /// Bytes currently resident.
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// Resolve a (possibly multi-step) fetch: deduplicate the request
+    /// in first-seen order — exactly like [`FeatureStore::plan`] — and
+    /// split the remote vertices into cache hits and a miss-only
+    /// [`GatherPlan`]. Misses are admitted per the policy, so a vertex
+    /// requested again later in the epoch hits.
+    pub fn resolve(
+        &mut self,
+        store: &FeatureStore,
+        server: usize,
+        steps: &[Vec<u32>],
+    ) -> CacheResolution {
+        let n = store.partition.num_parts;
+        let mut plan = GatherPlan {
+            server,
+            local: Vec::new(),
+            remote: vec![Vec::new(); n],
+        };
+        let mut seen = FxHashSet::default();
+        let mut hits = 0u64;
+        let mut evicted_bytes = 0u64;
+        for v in steps.iter().flatten().copied() {
+            if !seen.insert(v) {
+                continue;
+            }
+            let home = store.partition.home(v) as usize;
+            if home == server {
+                plan.local.push(v);
+            } else {
+                let a = self.access(v);
+                if a.hit {
+                    hits += 1;
+                } else {
+                    plan.remote[home].push(v);
+                    evicted_bytes += a.evicted_bytes;
+                }
+            }
+        }
+        let hit_bytes = hits * self.feat_bytes;
+        CacheResolution {
+            plan,
+            hits,
+            hit_bytes,
+            evicted_bytes,
+        }
+    }
+
+    /// Look up one remote vertex and admit it on a miss.
+    fn access(&mut self, v: u32) -> Access {
+        match self.policy {
+            CachePolicy::None => Access {
+                hit: false,
+                evicted_bytes: 0,
+            },
+            CachePolicy::Lru => self.access_lru(v),
+            CachePolicy::Degree | CachePolicy::Precomputed => {
+                if self.resident.contains(&v) {
+                    Access {
+                        hit: true,
+                        evicted_bytes: 0,
+                    }
+                } else {
+                    // fill-on-miss: a pinned vertex becomes resident the
+                    // first time it is fetched; unpinned vertices bypass
+                    if self.pinned.contains(&v) {
+                        self.resident.insert(v);
+                        self.used += self.feat_bytes;
+                    }
+                    Access {
+                        hit: false,
+                        evicted_bytes: 0,
+                    }
+                }
+            }
+        }
+    }
+
+    fn access_lru(&mut self, v: u32) -> Access {
+        if self.recency.contains_key(&v) {
+            self.touch(v);
+            return Access {
+                hit: true,
+                evicted_bytes: 0,
+            };
+        }
+        let mut evicted_bytes = 0u64;
+        if self.feat_bytes > 0 && self.feat_bytes <= self.capacity {
+            while self.used + self.feat_bytes > self.capacity {
+                let freed = self.evict_one();
+                if freed == 0 {
+                    break;
+                }
+                evicted_bytes += freed;
+            }
+            self.used += self.feat_bytes;
+            self.touch(v);
+        }
+        Access {
+            hit: false,
+            evicted_bytes,
+        }
+    }
+
+    /// Move `v` to most-recently-used.
+    fn touch(&mut self, v: u32) {
+        self.tick += 1;
+        if let Some(old) = self.recency.insert(v, self.tick) {
+            self.order.remove(&old);
+        }
+        self.order.insert(self.tick, v);
+    }
+
+    /// Evict the least-recently-used row; returns the bytes freed.
+    fn evict_one(&mut self) -> u64 {
+        let victim = match self.order.iter().next() {
+            Some((&tick, &v)) => (tick, v),
+            None => return 0,
+        };
+        self.order.remove(&victim.0);
+        self.recency.remove(&victim.1);
+        self.used -= self.feat_bytes;
+        self.feat_bytes
+    }
+}
+
+/// Global vertex ranking for [`CachePolicy::Degree`]: degree
+/// descending, vertex id ascending as the deterministic tie-break.
+pub fn rank_by_degree(graph: &crate::graph::CsrGraph) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..graph.num_vertices() as u32).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(graph.degree(v)), v));
+    order
+}
+
+/// Global vertex ranking for [`CachePolicy::Precomputed`]:
+/// `counts[v]` = how often the profiling replay of the sampler's
+/// deterministic schedule requested `v`. Never-requested vertices are
+/// excluded (pinning them would waste capacity); ties break by degree
+/// then id so the ranking is deterministic.
+pub fn rank_by_profile(
+    counts: &[u32],
+    graph: &crate::graph::CsrGraph,
+) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..counts.len() as u32)
+        .filter(|&v| counts[v as usize] > 0)
+        .collect();
+    order.sort_by_key(|&v| {
+        (
+            std::cmp::Reverse(counts[v as usize]),
+            std::cmp::Reverse(graph.degree(v)),
+            v,
+        )
+    });
+    order
+}
+
+/// Build one cache per server. `rank` supplies the global vertex
+/// ranking for the static policies (ignored by `None`/`Lru`); each
+/// server pins the best-ranked vertices *not homed on it*, up to
+/// capacity.
+pub fn build_caches(
+    policy: CachePolicy,
+    capacity_bytes: u64,
+    feat_bytes: u64,
+    rank: Option<&[u32]>,
+    partition: &Partition,
+) -> Vec<FeatureCache> {
+    (0..partition.num_parts)
+        .map(|server| {
+            let pinned = match (policy, rank) {
+                (CachePolicy::Degree, Some(r))
+                | (CachePolicy::Precomputed, Some(r)) => {
+                    pin_top(r, partition, server, capacity_bytes, feat_bytes)
+                }
+                _ => FxHashSet::default(),
+            };
+            FeatureCache::new(policy, capacity_bytes, feat_bytes, pinned)
+        })
+        .collect()
+}
+
+/// Top-ranked remote vertices for `server`, truncated to capacity.
+fn pin_top(
+    rank: &[u32],
+    partition: &Partition,
+    server: usize,
+    capacity_bytes: u64,
+    feat_bytes: u64,
+) -> FxHashSet<u32> {
+    let entries = if feat_bytes == 0 {
+        0
+    } else {
+        (capacity_bytes / feat_bytes) as usize
+    };
+    let mut pinned = FxHashSet::default();
+    for &v in rank {
+        if pinned.len() >= entries {
+            break;
+        }
+        if partition.home(v) as usize != server {
+            pinned.insert(v);
+        }
+    }
+    pinned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny_test_dataset;
+    use crate::partition::{partition, PartitionAlgo};
+
+    fn store_fixture(
+        seed: u64,
+    ) -> (crate::graph::datasets::Dataset, Partition) {
+        let d = tiny_test_dataset(seed);
+        let p = partition(&d.graph, 2, PartitionAlgo::Hash, seed);
+        (d, p)
+    }
+
+    #[test]
+    fn policy_parsing_roundtrip() {
+        for p in ALL_CACHE_POLICIES {
+            assert_eq!(CachePolicy::from_str(p.name()), Some(p));
+        }
+        assert_eq!(CachePolicy::from_str("none"), Some(CachePolicy::None));
+        assert_eq!(
+            CachePolicy::from_str("precomputed"),
+            Some(CachePolicy::Precomputed)
+        );
+        assert_eq!(CachePolicy::from_str("arc"), None);
+    }
+
+    #[test]
+    fn capacity_zero_resolves_like_plan() {
+        let (d, p) = store_fixture(80);
+        let fs = FeatureStore::new(&d, &p);
+        let mut cache = FeatureCache::new(
+            CachePolicy::Lru,
+            0,
+            fs.feat_bytes,
+            FxHashSet::default(),
+        );
+        let steps = vec![(0..100u32).collect::<Vec<_>>(), (50..150).collect()];
+        let res = cache.resolve(&fs, 0, &steps);
+        let union: Vec<u32> = steps.iter().flatten().copied().collect();
+        let want = fs.plan(0, union);
+        assert_eq!(res.hits, 0);
+        assert_eq!(res.hit_bytes, 0);
+        assert_eq!(res.evicted_bytes, 0);
+        assert_eq!(res.plan.local, want.local);
+        assert_eq!(res.plan.remote, want.remote);
+    }
+
+    #[test]
+    fn lru_hits_on_repeat_and_evicts_in_order() {
+        let (d, p) = store_fixture(81);
+        let fs = FeatureStore::new(&d, &p);
+        let fb = fs.feat_bytes;
+        // find three vertices remote to server 0
+        let remote: Vec<u32> = (0..400u32)
+            .filter(|&v| p.home(v) as usize != 0)
+            .take(3)
+            .collect();
+        let (a, b, c) = (remote[0], remote[1], remote[2]);
+        // capacity for exactly two rows
+        let mut cache = FeatureCache::new(
+            CachePolicy::Lru,
+            2 * fb,
+            fb,
+            FxHashSet::default(),
+        );
+        // miss a, miss b, hit a, miss c (evicts b: least recent), hit a
+        let r1 = cache.resolve(&fs, 0, &[vec![a, b]]);
+        assert_eq!(r1.hits, 0);
+        let r2 = cache.resolve(&fs, 0, &[vec![a]]);
+        assert_eq!(r2.hits, 1);
+        let r3 = cache.resolve(&fs, 0, &[vec![c]]);
+        assert_eq!(r3.hits, 0);
+        assert_eq!(r3.evicted_bytes, fb, "b must be evicted");
+        let r4 = cache.resolve(&fs, 0, &[vec![a, b]]);
+        assert_eq!(r4.hits, 1, "a stays resident, b was evicted");
+        assert_eq!(cache.used_bytes(), 2 * fb);
+    }
+
+    #[test]
+    fn static_policies_fill_on_miss_and_never_evict() {
+        let (d, p) = store_fixture(82);
+        let fs = FeatureStore::new(&d, &p);
+        let fb = fs.feat_bytes;
+        let rank = rank_by_degree(&d.graph);
+        let caches =
+            build_caches(CachePolicy::Degree, 4 * fb, fb, Some(&rank), &p);
+        assert_eq!(caches.len(), 2);
+        let mut cache = caches.into_iter().next().unwrap();
+        // the top-ranked remote vertex: miss (fill), then hit forever
+        let pinned: Vec<u32> = rank
+            .iter()
+            .copied()
+            .filter(|&v| p.home(v) as usize != 0)
+            .take(4)
+            .collect();
+        let r1 = cache.resolve(&fs, 0, &[pinned.clone()]);
+        assert_eq!(r1.hits, 0, "cold cache fills on miss");
+        let r2 = cache.resolve(&fs, 0, &[pinned.clone()]);
+        assert_eq!(r2.hits, 4, "pinned set is resident after the fill");
+        assert_eq!(r2.evicted_bytes, 0);
+        // an unpinned vertex never displaces a pinned one
+        let unpinned = (0..400u32)
+            .find(|&v| p.home(v) as usize != 0 && !pinned.contains(&v))
+            .unwrap();
+        let r3 = cache.resolve(&fs, 0, &[vec![unpinned]]);
+        assert_eq!(r3.hits, 0);
+        let r4 = cache.resolve(&fs, 0, &[pinned]);
+        assert_eq!(r4.hits, 4, "static contents are stable");
+    }
+
+    #[test]
+    fn eviction_is_deterministic_across_replays() {
+        // same request stream twice => identical hit/evict trajectory,
+        // for every policy
+        let (d, p) = store_fixture(83);
+        let fs = FeatureStore::new(&d, &p);
+        let fb = fs.feat_bytes;
+        let rank = rank_by_degree(&d.graph);
+        let stream: Vec<Vec<u32>> = (0..10u32)
+            .map(|i| ((i * 17) % 300..(i * 17) % 300 + 40).collect())
+            .collect();
+        for policy in ALL_CACHE_POLICIES {
+            let run = || {
+                let mut cache =
+                    build_caches(policy, 8 * fb, fb, Some(&rank), &p).remove(1);
+                let mut trace = Vec::new();
+                for step in &stream {
+                    let r = cache.resolve(&fs, 1, &[step.clone()]);
+                    trace.push((
+                        r.hits,
+                        r.evicted_bytes,
+                        r.plan.remote_count(),
+                    ));
+                }
+                trace
+            };
+            assert_eq!(run(), run(), "{} nondeterministic", policy.name());
+        }
+    }
+
+    #[test]
+    fn lru_hit_count_is_monotone_in_capacity() {
+        // the stack-inclusion property the cachesweep acceptance relies on
+        let (d, p) = store_fixture(84);
+        let fs = FeatureStore::new(&d, &p);
+        let fb = fs.feat_bytes;
+        let stream: Vec<Vec<u32>> = (0..12u32)
+            .map(|i| ((i * 29) % 250..(i * 29) % 250 + 60).collect())
+            .collect();
+        let mut prev = 0u64;
+        for rows in [0u64, 2, 8, 32, 128] {
+            let mut cache = FeatureCache::new(
+                CachePolicy::Lru,
+                rows * fb,
+                fb,
+                FxHashSet::default(),
+            );
+            let mut hits = 0u64;
+            for step in &stream {
+                hits += cache.resolve(&fs, 0, &[step.clone()]).hits;
+            }
+            assert!(
+                hits >= prev,
+                "hits dropped from {prev} to {hits} at {rows} rows"
+            );
+            prev = hits;
+        }
+        assert!(prev > 0, "the largest capacity must produce hits");
+    }
+
+    #[test]
+    fn profile_rank_orders_by_frequency() {
+        let (d, _) = store_fixture(85);
+        let mut counts = vec![0u32; d.graph.num_vertices()];
+        counts[7] = 100;
+        counts[3] = 50;
+        counts[9] = 50;
+        let rank = rank_by_profile(&counts, &d.graph);
+        assert_eq!(rank[0], 7);
+        assert_eq!(rank.len(), 3, "zero-frequency vertices are excluded");
+        assert!(rank[1..].contains(&3) && rank[1..].contains(&9));
+    }
+}

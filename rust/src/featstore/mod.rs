@@ -5,10 +5,21 @@
 //! is the `Partition` and transfers run through the cluster's network
 //! accounting). The store answers one question for the strategies: *for
 //! this set of vertices needed on server `s`, what is served locally and
-//! what must move, from whom?* — plus the pre-gathering planner (§5.2)
-//! that deduplicates an entire iteration's remote fetches into one
-//! batched transfer per source server.
+//! what must move, from whom?* — plus two tiers that shrink the remote
+//! side of the answer:
+//!
+//! * the pre-gathering planner (§5.2, [`pregather`]) deduplicates an
+//!   entire iteration's remote fetches into one batched transfer per
+//!   source server — *intra*-iteration redundancy;
+//! * the per-server feature cache ([`cache`]) keeps hot remote rows
+//!   resident *across* iterations, behind pluggable eviction policies
+//!   (LRU, degree-weighted static, RapidGNN-style precomputed
+//!   schedule). Cache hits skip the network transfer entirely; see
+//!   [`cache`] for the policy semantics and
+//!   [`crate::coordinator::ops::Op::CacheFetch`] for how the epoch
+//!   driver executes cache-mediated gathers.
 
+pub mod cache;
 pub mod pregather;
 
 use crate::cluster::{Clocks, CostModel, NetStats, NetworkModel, TransferKind};
@@ -113,6 +124,23 @@ impl<'a> FeatureStore<'a> {
         stats: &mut NetStats,
         metrics: &mut EpochMetrics,
     ) -> f64 {
+        self.sim_cost_cached(plan, 0, net, cost, stats, metrics)
+    }
+
+    /// [`Self::sim_cost`] for a cache-resolved plan: `hit_rows` remote
+    /// vertices were served from the feature cache, so they move no
+    /// bytes — but like local reads they still pay host staging into
+    /// the device tensor. With `hit_rows == 0` this is exactly
+    /// `sim_cost` (the capacity-0 parity the tests lock).
+    pub fn sim_cost_cached(
+        &self,
+        plan: &GatherPlan,
+        hit_rows: u64,
+        net: &NetworkModel,
+        cost: &CostModel,
+        stats: &mut NetStats,
+        metrics: &mut EpochMetrics,
+    ) -> f64 {
         let fb = self.feat_bytes;
         let mut dt = 0.0;
         for (src, verts) in plan.remote.iter().enumerate() {
@@ -120,11 +148,13 @@ impl<'a> FeatureStore<'a> {
                 continue;
             }
             let bytes = fb * verts.len() as u64;
-            dt += stats.record(net, src, plan.server, bytes,
-                               TransferKind::Feature);
+            dt += stats
+                .record(net, src, plan.server, bytes, TransferKind::Feature);
         }
-        // local reads still pay host staging into the device tensor
-        let staged = (plan.local.len() as u64 + plan.remote_count()) * fb;
+        // local reads and cache hits still pay host staging into the
+        // device tensor; only the network transfer is skipped on a hit
+        let staged =
+            (plan.local.len() as u64 + plan.remote_count() + hit_rows) * fb;
         dt += cost.stage_time(staged);
         metrics.remote_requests += plan.request_count();
         metrics.remote_vertices += plan.remote_count();

@@ -206,8 +206,11 @@ pub fn load_spec(spec: &DatasetSpec) -> Dataset {
 
 /// Class-conditional feature means (computed once per dataset; the per-
 /// vertex synthesis used to redo these draws for every vertex).
-fn build_class_means(feature_seed: u64, classes: usize, feat_dim: usize)
-                     -> Vec<f32> {
+fn build_class_means(
+    feature_seed: u64,
+    classes: usize,
+    feat_dim: usize,
+) -> Vec<f32> {
     let mut out = vec![0f32; classes * feat_dim];
     for label in 0..classes as u64 {
         let mut class_rng = Rng::new(

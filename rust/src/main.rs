@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   reproduce  regenerate paper tables/figures (DESIGN.md §5)
+//!   bench      run experiments by id, writing markdown + JSON reports
+//!              (the CI smoke entry point)
 //!   sim        run one (dataset, model, strategy) simulation
 //!   train      real PJRT training run (loss curve + accuracy)
 //!   partition  partition a dataset and report cut/balance/locality
@@ -32,6 +34,7 @@ fn main() {
     };
     let code = match cmd {
         "reproduce" => cmd_reproduce(rest),
+        "bench" => cmd_bench(rest),
         "sim" => cmd_sim(rest),
         "train" => cmd_train(rest),
         "partition" => cmd_partition(rest),
@@ -54,6 +57,7 @@ fn usage() -> String {
      Usage: hopgnn <command> [options]\n\n\
      Commands:\n  \
        reproduce   regenerate paper tables/figures (--exp <id|all>, --quick)\n  \
+       bench       run experiments by id (positional), md + JSON reports\n  \
        sim         simulate one strategy (--dataset, --model, --strategy, ...)\n  \
        train       real PJRT training (--dataset-size, --model, --epochs)\n  \
        partition   partition quality report (--dataset, --algo, --servers)\n  \
@@ -105,6 +109,63 @@ fn cmd_reproduce(args: Vec<String>) -> i32 {
     failed
 }
 
+/// `hopgnn bench [--quick] [--out DIR] <experiment id>...` — the CI
+/// smoke entry point: run the named experiments (default: all) and
+/// write both the markdown report and its JSON twin, which the smoke
+/// workflow uploads as its artifact.
+fn cmd_bench(args: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "hopgnn bench",
+        "run experiments by id, writing markdown + JSON reports",
+    )
+    .opt("out", "reports", "output directory for md/json reports")
+    .flag("quick", "reduced scale (CI-sized)");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let scale = if a.has("quick") {
+        Scale::quick()
+    } else {
+        Scale::full()
+    };
+    let ids: Vec<String> = if a.positional.is_empty() {
+        ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect()
+    } else {
+        a.positional.clone()
+    };
+    let out = a.get_or("out", "reports");
+    let mut failed = 0;
+    for id in &ids {
+        let t0 = std::time::Instant::now();
+        match run_experiment(id, scale) {
+            Ok(report) => {
+                println!("{}", report.render());
+                if let Err(e) = report.save(&out) {
+                    eprintln!("warning: could not save {id}.md: {e}");
+                    failed += 1;
+                }
+                if let Err(e) = report.save_json(&out) {
+                    eprintln!("warning: could not save {id}.json: {e}");
+                    failed += 1;
+                }
+                eprintln!(
+                    "[{id} done in {}]\n",
+                    fmt_secs(t0.elapsed().as_secs_f64())
+                );
+            }
+            Err(e) => {
+                eprintln!("experiment {id} failed: {e}");
+                failed += 1;
+            }
+        }
+    }
+    failed
+}
+
 fn cmd_sim(args: Vec<String>) -> i32 {
     let cli = Cli::new("hopgnn sim", "simulate one training strategy")
         .opt("dataset", "products-s", "dataset (arxiv-s|products-s|uk-s|in-s|it-s)")
@@ -119,6 +180,9 @@ fn cmd_sim(args: Vec<String>) -> i32 {
         .opt("partition", "metis", "metis|heuristic|hash")
         .opt("config", "", "key=value config file (overrides other flags)")
         .opt("seed", "42", "random seed")
+        .opt("cache", "none",
+             "feature-cache policy (none|lru|degree|schedule)")
+        .opt("cache-mb", "64", "feature-cache capacity per server, MiB")
         .flag("overlap", "hide async gathers behind compute (pipelining)")
         .flag("sequential", "disable parallel per-server op lanes");
     let a = match cli.parse(args) {
@@ -128,9 +192,9 @@ fn cmd_sim(args: Vec<String>) -> i32 {
             return 2;
         }
     };
-    let mut cfg = if let Some(path) = a.get("config").filter(|s| !s.is_empty())
-    {
-        match RunConfig::from_kv_file(path) {
+    let from_file = a.get("config").is_some_and(|s| !s.is_empty());
+    let mut cfg = if from_file {
+        match RunConfig::from_kv_file(a.get("config").unwrap()) {
             Ok(c) => c,
             Err(e) => {
                 eprintln!("{e}");
@@ -140,8 +204,13 @@ fn cmd_sim(args: Vec<String>) -> i32 {
     } else {
         RunConfig::default()
     };
+    // with a config file, CLI *defaults* must not stomp the file's
+    // settings — only options the user actually typed override it
     for key in ["dataset", "model", "servers", "hidden", "fanout", "epochs",
-                "partition", "seed"] {
+                "partition", "seed", "cache"] {
+        if from_file && !a.explicit(key) {
+            continue;
+        }
         if let Some(v) = a.get(key) {
             if let Err(e) = cfg.set(key, v) {
                 eprintln!("{e}");
@@ -149,7 +218,17 @@ fn cmd_sim(args: Vec<String>) -> i32 {
             }
         }
     }
-    cfg.batch_size = a.get_usize("batch", cfg.batch_size);
+    if !from_file || a.explicit("cache-mb") {
+        if let Some(v) = a.get("cache-mb") {
+            if let Err(e) = cfg.set("cache_mb", v) {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    if !from_file || a.explicit("batch") {
+        cfg.batch_size = a.get_usize("batch", cfg.batch_size);
+    }
     if a.has("overlap") {
         cfg.overlap = true;
     }
@@ -178,6 +257,16 @@ fn cmd_sim(args: Vec<String>) -> i32 {
     let m = run_strategy(&d, &cfg, kind);
     println!("strategy {}: {}", kind.name(), m.summary());
     println!("{}", m.breakdown_table().render());
+    if cfg.cache_enabled() {
+        println!(
+            "cache {} ({} MiB/server): {:.1}% hit rate, {} saved, {} evicted",
+            cfg.cache_policy.name(),
+            cfg.cache_mb,
+            m.cache_hit_rate() * 100.0,
+            fmt_bytes(m.cache_hit_bytes),
+            fmt_bytes(m.cache_evict_bytes),
+        );
+    }
     0
 }
 

@@ -30,6 +30,21 @@ pub struct EpochMetrics {
     pub remote_vertices: u64,
     /// Locally served feature reads.
     pub local_hits: u64,
+    /// Feature-cache accounting (all zero unless a
+    /// [`crate::featstore::cache::CachePolicy`] is configured). A cache
+    /// hit is a remote vertex served without a transfer: it counts
+    /// neither as a `remote_vertices` move nor as a `local_hits` shard
+    /// read. Byte conservation: `cache_hit_bytes + cache_miss_bytes`
+    /// is exactly what the same schedule would have transferred with
+    /// the cache off, and `cache_miss_bytes` is what it did transfer.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Bytes that never hit the network thanks to cache hits.
+    pub cache_hit_bytes: u64,
+    /// Bytes transferred through the cache path (the misses).
+    pub cache_miss_bytes: u64,
+    /// Bytes displaced by eviction while admitting misses.
+    pub cache_evict_bytes: u64,
     /// GPU busy fraction proxy (Fig 20).
     pub gpu_busy_fraction: f64,
     /// Time steps per iteration, averaged (Fig 17).
@@ -54,6 +69,17 @@ impl EpochMetrics {
             0.0
         } else {
             self.remote_vertices as f64 / total as f64
+        }
+    }
+
+    /// Feature-cache hit rate: hits / (hits + misses) over the remote
+    /// vertices that went through the cache path (0 with the cache off).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
         }
     }
 
@@ -94,6 +120,11 @@ impl EpochMetrics {
         self.remote_requests += other.remote_requests;
         self.remote_vertices += other.remote_vertices;
         self.local_hits += other.local_hits;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.cache_hit_bytes += other.cache_hit_bytes;
+        self.cache_miss_bytes += other.cache_miss_bytes;
+        self.cache_evict_bytes += other.cache_evict_bytes;
         self.gpu_busy_fraction += other.gpu_busy_fraction;
         self.time_steps_per_iter += other.time_steps_per_iter;
         self.iterations += other.iterations;
@@ -124,6 +155,11 @@ impl EpochMetrics {
         out.remote_requests /= nu;
         out.remote_vertices /= nu;
         out.local_hits /= nu;
+        out.cache_hits /= nu;
+        out.cache_misses /= nu;
+        out.cache_hit_bytes /= nu;
+        out.cache_miss_bytes /= nu;
+        out.cache_evict_bytes /= nu;
         out.gpu_busy_fraction /= n;
         out.time_steps_per_iter /= n;
         out.iterations /= nu;
@@ -193,7 +229,25 @@ mod tests {
         let m = EpochMetrics::default();
         assert_eq!(m.miss_rate(), 0.0);
         assert_eq!(m.gather_fraction(), 0.0);
+        assert_eq!(m.cache_hit_rate(), 0.0);
         assert_eq!(m.total_bytes(), 0);
+    }
+
+    #[test]
+    fn cache_counters_accumulate_and_average() {
+        let a = EpochMetrics {
+            cache_hits: 30,
+            cache_misses: 10,
+            cache_hit_bytes: 3000,
+            cache_miss_bytes: 1000,
+            cache_evict_bytes: 200,
+            ..Default::default()
+        };
+        assert!((a.cache_hit_rate() - 0.75).abs() < 1e-12);
+        let avg = EpochMetrics::average_of(&[a.clone(), a]);
+        assert_eq!(avg.cache_hits, 30);
+        assert_eq!(avg.cache_hit_bytes, 3000);
+        assert_eq!(avg.cache_evict_bytes, 200);
     }
 
     #[test]

@@ -25,8 +25,12 @@ impl BatchBuffers {
         Self::new(spec.batch, spec.layers, spec.vmax, spec.feat_dim)
     }
 
-    pub fn new(batch: usize, layers: usize, vmax: usize, feat_dim: usize)
-               -> Self {
+    pub fn new(
+        batch: usize,
+        layers: usize,
+        vmax: usize,
+        feat_dim: usize,
+    ) -> Self {
         Self {
             batch,
             layers,
@@ -106,8 +110,12 @@ mod tests {
         let mut rng = Rng::new(1);
         (0..n)
             .map(|i| {
-                sample_micrograph(&d.graph, (i * 17) as u32 % 400, &cfg,
-                                  &mut rng)
+                sample_micrograph(
+                    &d.graph,
+                    (i * 17) as u32 % 400,
+                    &cfg,
+                    &mut rng,
+                )
             })
             .collect()
     }
@@ -124,8 +132,7 @@ mod tests {
             let off = b * 16 * d.feat_dim;
             let row = &buf.x[off..off + d.feat_dim];
             assert!(row.iter().any(|&v| v != 0.0), "root features zero");
-            assert_eq!(buf.labels[b],
-                       d.labels[mgs[b].root as usize] as i32);
+            assert_eq!(buf.labels[b], d.labels[mgs[b].root as usize] as i32);
         }
         // slot 3 (unused) fully zero
         let off = 3 * 16 * d.feat_dim;

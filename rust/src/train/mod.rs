@@ -49,8 +49,12 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(engine: Engine, sample_cfg: SampleConfig, lr: f32,
-               seed: u64) -> Self {
+    pub fn new(
+        engine: Engine,
+        sample_cfg: SampleConfig,
+        lr: f32,
+        seed: u64,
+    ) -> Self {
         let params = ParamSet::init(&engine.spec, seed);
         let opt = Adam::new(&params, lr);
         let buffers = BatchBuffers::for_artifact(&engine.spec);
@@ -112,8 +116,8 @@ impl Trainer {
             for chunk in &chunks {
                 let packed = self.buffers.pack(chunk, dataset);
                 debug_assert_eq!(packed, b);
-                let out = self.engine.train_step_b(&self.params,
-                                                   &self.buffers)?;
+                let out =
+                    self.engine.train_step_b(&self.params, &self.buffers)?;
                 total_loss += out.loss as f64 * b as f64;
                 total_correct += out.correct as u64;
                 total_seen += b as u64;
@@ -151,7 +155,7 @@ impl Trainer {
         let mut total = 0u64;
         let mut mgs: Vec<Micrograph> = Vec::with_capacity(b);
         let flush = |mgs: &mut Vec<Micrograph>,
-                         this: &mut Self|
+                     this: &mut Self|
          -> Result<(u64, u64)> {
             if mgs.is_empty() {
                 return Ok((0, 0));

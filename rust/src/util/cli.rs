@@ -17,6 +17,10 @@ pub struct ArgSpec {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Options the user actually typed (vs. spec defaults) — lets
+    /// callers layer CLI values over a config file without the
+    /// defaults stomping the file's settings.
+    explicit: Vec<String>,
     pub positional: Vec<String>,
 }
 
@@ -52,6 +56,11 @@ impl Args {
     pub fn has(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name) || self.values.contains_key(name)
     }
+
+    /// Was `--name` given on the command line (not just a default)?
+    pub fn explicit(&self, name: &str) -> bool {
+        self.explicit.iter().any(|n| n == name)
+    }
 }
 
 pub struct Cli {
@@ -69,8 +78,12 @@ impl Cli {
         }
     }
 
-    pub fn opt(mut self, name: &'static str, default: &'static str,
-               help: &'static str) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
         self.specs.push(ArgSpec {
             name,
             help,
@@ -127,13 +140,15 @@ impl Cli {
                     .specs
                     .iter()
                     .find(|s| s.name == name)
-                    .ok_or_else(|| format!("unknown option --{name}\n\n{}",
-                                           self.help_text()))?;
+                    .ok_or_else(|| {
+                        format!("unknown option --{name}\n\n{}", self.help_text())
+                    })?;
                 if spec.is_flag {
                     if let Some(v) = inline {
                         args.values.insert(name.clone(), v);
                     }
-                    args.flags.push(name);
+                    args.flags.push(name.clone());
+                    args.explicit.push(name);
                 } else {
                     let v = match inline {
                         Some(v) => v,
@@ -141,7 +156,8 @@ impl Cli {
                             .next()
                             .ok_or_else(|| format!("--{name} needs a value"))?,
                     };
-                    args.values.insert(name, v);
+                    args.values.insert(name.clone(), v);
+                    args.explicit.push(name);
                 }
             } else {
                 args.positional.push(tok);
@@ -185,6 +201,15 @@ mod tests {
         assert_eq!(a.get_usize("servers", 0), 8);
         assert!(a.has("verbose"));
         assert_eq!(a.positional, vec!["go"]);
+    }
+
+    #[test]
+    fn explicit_distinguishes_typed_from_default() {
+        let a = parse(&["--servers", "8", "--verbose"]);
+        assert!(a.explicit("servers"));
+        assert!(a.explicit("verbose"));
+        assert!(!a.explicit("dataset"), "default is not explicit");
+        assert_eq!(a.get("dataset"), Some("arxiv-s"), "default still applies");
     }
 
     #[test]

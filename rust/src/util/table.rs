@@ -69,6 +69,16 @@ impl Table {
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
+
+    /// Column headers (for structured report export).
+    pub fn headers(&self) -> &[String] {
+        &self.headers
+    }
+
+    /// Data rows (for structured report export).
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
 }
 
 /// Format seconds human-readably (ms below 1 s).

@@ -1,0 +1,240 @@
+//! Feature-cache parity and accounting locks.
+//!
+//! The cache tier (`featstore::cache`) sits in front of every
+//! strategy's gather resolution, so it must be *provably* inert when it
+//! holds nothing and *exactly* byte-conserving when it does not. These
+//! tests pin that contract at the strategy level, on top of the
+//! op-level locks in `coordinator::engine`:
+//!
+//! * **capacity-0 parity** — with any policy configured but 0 MiB of
+//!   capacity, the `CacheFetch` path reproduces the PR 1 uncached
+//!   driver bit-identically (epoch time, busy fraction, every byte
+//!   counter), in both serial and overlap modes;
+//! * **byte conservation** — `cache_hit_bytes` is exactly (total
+//!   requested − transferred): what a warm cache saves is accounted,
+//!   never invented;
+//! * **determinism** — hit/evict trajectories replay bit-identically
+//!   across repeat runs and across parallel vs sequential lanes, for
+//!   every eviction policy.
+
+use hopgnn::cluster::network::NUM_KINDS;
+use hopgnn::cluster::TransferKind;
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::{run_strategy, StrategyKind};
+use hopgnn::featstore::cache::{ALL_CACHE_POLICIES, CachePolicy};
+use hopgnn::graph::datasets::{load_spec, Dataset, DatasetSpec};
+use hopgnn::metrics::EpochMetrics;
+use std::sync::OnceLock;
+
+fn dataset() -> &'static Dataset {
+    static D: OnceLock<Dataset> = OnceLock::new();
+    D.get_or_init(|| {
+        load_spec(&DatasetSpec {
+            name: "cache-parity",
+            num_vertices: 8_000,
+            num_edges: 56_000,
+            feat_dim: 64,
+            classes: 8,
+            num_communities: 40,
+            train_fraction: 0.4,
+            seed: 1717,
+        })
+    })
+}
+
+fn cfg(overlap: bool, policy: CachePolicy, mb: usize) -> RunConfig {
+    RunConfig {
+        batch_size: 128,
+        num_servers: 4,
+        epochs: 2,
+        max_iterations: Some(3),
+        fanout: 5,
+        vmax: RunConfig::full_sim_vmax(3, 5),
+        seed: 77,
+        overlap,
+        cache_policy: policy,
+        cache_mb: mb,
+        ..Default::default()
+    }
+}
+
+/// Every strategy whose builder emits feature gathers (the cache-routed
+/// ops); includes the adaptive full system — at capacity 0 its epoch
+/// times are bit-identical, so its merge trajectory must be too.
+const CACHED_KINDS: [StrategyKind; 5] = [
+    StrategyKind::Dgl,
+    StrategyKind::LocalityOpt,
+    StrategyKind::HopGnnMgOnly,
+    StrategyKind::HopGnnMgPg,
+    StrategyKind::HopGnn,
+];
+
+fn assert_bit_identical(a: &EpochMetrics, b: &EpochMetrics, what: &str) {
+    for k in 0..NUM_KINDS {
+        assert_eq!(
+            a.bytes_by_kind[k], b.bytes_by_kind[k],
+            "{what}: byte totals diverged for kind index {k}"
+        );
+    }
+    assert_eq!(a.remote_vertices, b.remote_vertices, "{what}");
+    assert_eq!(a.remote_requests, b.remote_requests, "{what}");
+    assert_eq!(a.local_hits, b.local_hits, "{what}");
+    assert_eq!(
+        a.epoch_time.to_bits(),
+        b.epoch_time.to_bits(),
+        "{what}: epoch time must be bit-identical ({} vs {})",
+        a.epoch_time,
+        b.epoch_time
+    );
+    assert_eq!(
+        a.gpu_busy_fraction.to_bits(),
+        b.gpu_busy_fraction.to_bits(),
+        "{what}: busy fraction diverged"
+    );
+    assert_eq!(
+        a.time_gather.to_bits(),
+        b.time_gather.to_bits(),
+        "{what}: gather time diverged"
+    );
+}
+
+#[test]
+fn capacity_zero_cache_is_bit_identical_to_uncached_driver() {
+    let d = dataset();
+    for overlap in [false, true] {
+        for kind in CACHED_KINDS {
+            let base =
+                run_strategy(d, &cfg(overlap, CachePolicy::None, 64), kind);
+            let zero =
+                run_strategy(d, &cfg(overlap, CachePolicy::Lru, 0), kind);
+            assert_bit_identical(
+                &base,
+                &zero,
+                &format!("{} overlap={overlap}", kind.name()),
+            );
+            assert_eq!(zero.cache_hits, 0, "{}", kind.name());
+            assert_eq!(zero.cache_hit_bytes, 0, "{}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn capacity_zero_parity_holds_for_every_policy() {
+    // the static policies' empty pin sets must bypass exactly like LRU's
+    // empty recency map (DGL exercises the single-step gather path)
+    let d = dataset();
+    let base =
+        run_strategy(d, &cfg(false, CachePolicy::None, 64), StrategyKind::Dgl);
+    for policy in ALL_CACHE_POLICIES {
+        let zero = run_strategy(d, &cfg(false, policy, 0), StrategyKind::Dgl);
+        assert_bit_identical(&base, &zero, policy.name());
+    }
+}
+
+#[test]
+fn hit_bytes_sum_to_total_minus_transferred() {
+    let d = dataset();
+    for kind in [StrategyKind::Dgl, StrategyKind::HopGnnMgPg] {
+        let base = run_strategy(d, &cfg(false, CachePolicy::None, 64), kind);
+        let warm = run_strategy(d, &cfg(false, CachePolicy::Lru, 64), kind);
+        assert!(warm.cache_hits > 0, "{}: no reuse to cache", kind.name());
+        // total requested is schedule-determined, so it equals what the
+        // uncached run transferred; hits are exactly the bytes saved
+        assert_eq!(
+            warm.cache_hit_bytes + warm.cache_miss_bytes,
+            base.bytes(TransferKind::Feature),
+            "{}",
+            kind.name()
+        );
+        assert_eq!(
+            warm.cache_hit_bytes,
+            base.bytes(TransferKind::Feature)
+                - warm.bytes(TransferKind::Feature),
+            "{}: hit bytes != total - transferred",
+            kind.name()
+        );
+        assert_eq!(
+            warm.cache_miss_bytes,
+            warm.bytes(TransferKind::Feature),
+            "{}: miss bytes must equal the feature bytes moved",
+            kind.name()
+        );
+        assert!(
+            warm.epoch_time < base.epoch_time,
+            "{}: a warm cache must not slow the epoch ({} !< {})",
+            kind.name(),
+            warm.epoch_time,
+            base.epoch_time
+        );
+    }
+}
+
+#[test]
+fn overlap_mode_changes_no_cached_byte() {
+    // with a warm cache, enabling overlap still only re-times exposure
+    let d = dataset();
+    for policy in ALL_CACHE_POLICIES {
+        let serial =
+            run_strategy(d, &cfg(false, policy, 16), StrategyKind::Dgl);
+        let over = run_strategy(d, &cfg(true, policy, 16), StrategyKind::Dgl);
+        for k in 0..NUM_KINDS {
+            assert_eq!(
+                serial.bytes_by_kind[k], over.bytes_by_kind[k],
+                "{}: overlap changed cached byte accounting",
+                policy.name()
+            );
+        }
+        assert_eq!(serial.cache_hits, over.cache_hits, "{}", policy.name());
+        assert_eq!(
+            serial.cache_hit_bytes,
+            over.cache_hit_bytes,
+            "{}",
+            policy.name()
+        );
+        assert!(
+            over.epoch_time <= serial.epoch_time * (1.0 + 1e-12),
+            "{}: overlap slowed the cached epoch",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn cached_runs_replay_bit_identically_for_every_policy() {
+    // eviction determinism at the full-strategy level: 1 MiB per server
+    // is smaller than the per-server remote working set, so LRU evicts
+    let d = dataset();
+    for policy in ALL_CACHE_POLICIES {
+        let a = run_strategy(d, &cfg(false, policy, 1), StrategyKind::Dgl);
+        let b = run_strategy(d, &cfg(false, policy, 1), StrategyKind::Dgl);
+        assert_bit_identical(&a, &b, policy.name());
+        assert_eq!(a.cache_hits, b.cache_hits, "{}", policy.name());
+        assert_eq!(a.cache_misses, b.cache_misses, "{}", policy.name());
+        assert_eq!(
+            a.cache_evict_bytes,
+            b.cache_evict_bytes,
+            "{}",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn parallel_lanes_match_sequential_with_cache_on() {
+    let d = dataset();
+    for policy in ALL_CACHE_POLICIES {
+        let mut seq_cfg = cfg(false, policy, 16);
+        seq_cfg.parallel_lanes = false;
+        let par_cfg = cfg(false, policy, 16);
+        let seq = run_strategy(d, &seq_cfg, StrategyKind::Dgl);
+        let par = run_strategy(d, &par_cfg, StrategyKind::Dgl);
+        assert_bit_identical(&seq, &par, policy.name());
+        assert_eq!(seq.cache_hits, par.cache_hits, "{}", policy.name());
+        assert_eq!(
+            seq.cache_evict_bytes,
+            par.cache_evict_bytes,
+            "{}",
+            policy.name()
+        );
+    }
+}
