@@ -6,6 +6,7 @@
 pub mod ablation;
 pub mod cachesweep;
 pub mod harness;
+pub mod hetero;
 pub mod memo;
 pub mod motivation;
 pub mod overall;
@@ -163,6 +164,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig04", "fig05", "fig07", "table1", "fig11", "fig12", "fig13",
     "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
     "fig21", "fig22", "fig23", "table3", "overlap", "cachesweep",
+    "hetero",
 ];
 
 /// Dispatch one experiment by id.
@@ -188,6 +190,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> Result<Report, String> {
         "table3" => table3::table3_accuracy(scale),
         "overlap" => Ok(overlap::overlap_sweep(scale)),
         "cachesweep" => Ok(cachesweep::cachesweep(scale)),
+        "hetero" => Ok(hetero::hetero(scale)),
         _ => Err(format!(
             "unknown experiment '{id}'; known: {}",
             ALL_EXPERIMENTS.join(", ")

@@ -1,0 +1,439 @@
+//! Topology-aware cluster fabric: per-(src, dst)-link latency/bandwidth
+//! plus per-server compute-speed multipliers.
+//!
+//! The paper's testbed is one uniform 10 GbE switch, but HopGNN's core
+//! claims — merging that rebalances per-worker load (§5.3), feature-
+//! centric transfers beating push-pull — matter *most* on non-uniform
+//! clusters: oversubscribed racks, mixed-generation NICs, straggler
+//! GPUs. The scalar [`NetworkModel`] cannot express any of those, so the
+//! simulator routes every transfer through a [`Fabric`] instead: a full
+//! link matrix (`t = latency[src][dst] + bytes / bandwidth[src][dst]`)
+//! and a per-server compute multiplier that scales `Op::Compute` time in
+//! the epoch driver.
+//!
+//! Named topologies ([`FabricSpec`], parseable from `--fabric` and the
+//! `fabric =` config key):
+//!
+//! * `uniform` — every link is the base [`NetworkModel`], every server
+//!   computes at full speed. **Bit-identical** to the legacy scalar
+//!   model (locked by `tests/fabric_parity.rs`): the per-link lookup
+//!   performs exactly the same float operations on exactly the same
+//!   values.
+//! * `rack:<k>` — two-tier oversubscribed topology with `k` racks
+//!   (contiguous server ranges). Intra-rack links run at the base rate;
+//!   cross-rack links lose [`RACK_OVERSUBSCRIPTION`]× bandwidth and pay
+//!   [`RACK_CROSS_LATENCY_FACTOR`]× latency (the extra spine hop).
+//! * `hetero-mix` — mixed-generation NICs: the upper half of the
+//!   servers has [`SLOW_NIC_FACTOR`]× slower NICs, and a link runs at
+//!   the slower endpoint's rate.
+//! * `straggler:<s>` — one degraded server: every link touching `s`
+//!   loses [`STRAGGLER_LINK_FACTOR`]× bandwidth and doubles latency,
+//!   and `s` computes at `1/`[`STRAGGLER_COMPUTE_FACTOR`] speed.
+//!
+//! All topologies are symmetric (`time(a→b) == time(b→a)`) and strictly
+//! positive off the diagonal — property-tested in
+//! `tests/fabric_parity.rs`.
+
+use super::network::NetworkModel;
+
+/// Cross-rack links of a `rack:<k>` fabric run at `base bandwidth / 4`
+/// (a classic 4:1 oversubscribed spine).
+pub const RACK_OVERSUBSCRIPTION: f64 = 4.0;
+/// Cross-rack latency multiplier (the extra switch hop).
+pub const RACK_CROSS_LATENCY_FACTOR: f64 = 2.0;
+/// Slow-NIC bandwidth divisor for the `hetero-mix` fabric's slow half.
+pub const SLOW_NIC_FACTOR: f64 = 4.0;
+/// Bandwidth divisor for every link touching a `straggler:<s>` server.
+pub const STRAGGLER_LINK_FACTOR: f64 = 4.0;
+/// Latency multiplier for every link touching a `straggler:<s>` server.
+pub const STRAGGLER_LATENCY_FACTOR: f64 = 2.0;
+/// Compute slowdown of a `straggler:<s>` server (speed = 1/this).
+pub const STRAGGLER_COMPUTE_FACTOR: f64 = 2.0;
+
+/// Named fabric topology — the config-level description, materialized
+/// into a [`Fabric`] once the server count is known.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricSpec {
+    /// Every link identical to the base scalar model (legacy behavior).
+    Uniform,
+    /// Two-tier topology: `racks` racks, oversubscribed spine between.
+    Rack { racks: usize },
+    /// Fast/slow NIC split: the upper half of the servers is slow.
+    HeteroMix,
+    /// One slow server: degraded links and half-speed compute.
+    Straggler { server: usize },
+}
+
+impl FabricSpec {
+    /// Parse `uniform`, `rack:<k>`, `hetero-mix`, or `straggler:<s>`.
+    pub fn from_str(s: &str) -> Option<Self> {
+        if let Some(k) = s.strip_prefix("rack:") {
+            return k
+                .parse()
+                .ok()
+                .filter(|&racks| racks >= 1)
+                .map(|racks| Self::Rack { racks });
+        }
+        if let Some(sv) = s.strip_prefix("straggler:") {
+            return sv.parse().ok().map(|server| Self::Straggler { server });
+        }
+        match s {
+            "uniform" => Some(Self::Uniform),
+            "hetero-mix" | "hetero" => Some(Self::HeteroMix),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (round-trips through [`Self::from_str`]).
+    pub fn name(&self) -> String {
+        match self {
+            Self::Uniform => "uniform".to_string(),
+            Self::Rack { racks } => format!("rack:{racks}"),
+            Self::HeteroMix => "hetero-mix".to_string(),
+            Self::Straggler { server } => format!("straggler:{server}"),
+        }
+    }
+
+    /// Config-level validation for values that only make sense once the
+    /// server count is known (CLI/config front ends call this to reject
+    /// bad input gracefully; [`Self::build`] asserts the same bound).
+    pub fn validate(&self, num_servers: usize) -> Result<(), String> {
+        if let Self::Straggler { server } = self {
+            if *server >= num_servers {
+                return Err(format!(
+                    "straggler server {server} out of range (servers: \
+                     {num_servers})"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the topology for `num_servers` servers over the base
+    /// scalar model.
+    pub fn build(&self, num_servers: usize, base: NetworkModel) -> Fabric {
+        match *self {
+            Self::Uniform => Fabric::uniform(num_servers, base),
+            Self::Rack { racks } => Fabric::rack(num_servers, base, racks),
+            Self::HeteroMix => Fabric::hetero_mix(num_servers, base),
+            Self::Straggler { server } => {
+                Fabric::straggler(num_servers, base, server)
+            }
+        }
+    }
+}
+
+/// Which rack hosts `server` under a `rack:<k>` fabric: contiguous
+/// ranges, as evenly sized as integer division allows. Widened
+/// arithmetic keeps absurd user-supplied rack counts from overflowing.
+pub fn rack_of(server: usize, num_servers: usize, racks: usize) -> usize {
+    (server as u128 * racks as u128 / num_servers as u128) as usize
+}
+
+/// The materialized cluster fabric: full per-link cost matrices plus
+/// per-server compute-speed multipliers. All transfer times in the
+/// simulator derive from [`Self::transfer_time`]; all compute times are
+/// divided by [`Self::compute_speed`] in the epoch driver's lane
+/// executor.
+#[derive(Clone, Debug)]
+pub struct Fabric {
+    num_servers: usize,
+    /// latency[src * n + dst], seconds.
+    latency: Vec<f64>,
+    /// bandwidth[src * n + dst], bytes/second.
+    bandwidth: Vec<f64>,
+    /// Per-server compute-speed multiplier (1.0 = baseline).
+    compute: Vec<f64>,
+    spec: FabricSpec,
+}
+
+impl Fabric {
+    fn filled(num_servers: usize, base: NetworkModel, spec: FabricSpec) -> Self {
+        let nn = num_servers * num_servers;
+        Self {
+            num_servers,
+            latency: vec![base.latency; nn],
+            bandwidth: vec![base.bandwidth; nn],
+            compute: vec![1.0; num_servers],
+            spec,
+        }
+    }
+
+    fn set_link(&mut self, src: usize, dst: usize, lat: f64, bw: f64) {
+        let i = src * self.num_servers + dst;
+        self.latency[i] = lat;
+        self.bandwidth[i] = bw;
+    }
+
+    /// Every link = the base scalar model (bit-identical to it).
+    pub fn uniform(num_servers: usize, base: NetworkModel) -> Self {
+        Self::filled(num_servers, base, FabricSpec::Uniform)
+    }
+
+    /// Two-tier oversubscribed topology with `racks` racks.
+    pub fn rack(num_servers: usize, base: NetworkModel, racks: usize) -> Self {
+        assert!(racks >= 1, "rack fabric needs at least one rack");
+        let mut f =
+            Self::filled(num_servers, base, FabricSpec::Rack { racks });
+        for src in 0..num_servers {
+            for dst in 0..num_servers {
+                if src == dst {
+                    continue;
+                }
+                let cross = rack_of(src, num_servers, racks)
+                    != rack_of(dst, num_servers, racks);
+                if cross {
+                    f.set_link(
+                        src,
+                        dst,
+                        base.latency * RACK_CROSS_LATENCY_FACTOR,
+                        base.bandwidth / RACK_OVERSUBSCRIPTION,
+                    );
+                }
+            }
+        }
+        f
+    }
+
+    /// Mixed-generation NICs: the upper half of the servers runs
+    /// [`SLOW_NIC_FACTOR`]× slower; a link runs at its slower endpoint.
+    pub fn hetero_mix(num_servers: usize, base: NetworkModel) -> Self {
+        let nic = |s: usize| -> f64 {
+            // slow half: s >= ceil(n/2)
+            if s >= num_servers - num_servers / 2 {
+                SLOW_NIC_FACTOR
+            } else {
+                1.0
+            }
+        };
+        let mut f = Self::filled(num_servers, base, FabricSpec::HeteroMix);
+        for src in 0..num_servers {
+            for dst in 0..num_servers {
+                if src == dst {
+                    continue;
+                }
+                let factor = nic(src).max(nic(dst));
+                if factor > 1.0 {
+                    f.set_link(
+                        src,
+                        dst,
+                        base.latency,
+                        base.bandwidth / factor,
+                    );
+                }
+            }
+        }
+        f
+    }
+
+    /// One degraded server: slow links on everything touching it, and
+    /// half-speed compute.
+    pub fn straggler(
+        num_servers: usize,
+        base: NetworkModel,
+        server: usize,
+    ) -> Self {
+        assert!(
+            server < num_servers,
+            "straggler server {server} out of range (servers: {num_servers})"
+        );
+        let mut f = Self::filled(
+            num_servers,
+            base,
+            FabricSpec::Straggler { server },
+        );
+        for peer in 0..num_servers {
+            if peer == server {
+                continue;
+            }
+            let lat = base.latency * STRAGGLER_LATENCY_FACTOR;
+            let bw = base.bandwidth / STRAGGLER_LINK_FACTOR;
+            f.set_link(server, peer, lat, bw);
+            f.set_link(peer, server, lat, bw);
+        }
+        f.compute[server] = 1.0 / STRAGGLER_COMPUTE_FACTOR;
+        f
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.num_servers
+    }
+
+    pub fn spec(&self) -> FabricSpec {
+        self.spec
+    }
+
+    pub fn name(&self) -> String {
+        self.spec.name()
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        matches!(self.spec, FabricSpec::Uniform)
+    }
+
+    /// Linear per-link time model:
+    /// `t = latency[src][dst] + bytes / bandwidth[src][dst]`.
+    #[inline]
+    pub fn transfer_time(&self, src: usize, dst: usize, bytes: u64) -> f64 {
+        let i = src * self.num_servers + dst;
+        self.latency[i] + bytes as f64 / self.bandwidth[i]
+    }
+
+    pub fn link_latency(&self, src: usize, dst: usize) -> f64 {
+        self.latency[src * self.num_servers + dst]
+    }
+
+    pub fn link_bandwidth(&self, src: usize, dst: usize) -> f64 {
+        self.bandwidth[src * self.num_servers + dst]
+    }
+
+    /// Compute-speed multiplier of `server` (1.0 = baseline; the epoch
+    /// driver divides every compute op's seconds by this).
+    #[inline]
+    pub fn compute_speed(&self, server: usize) -> f64 {
+        self.compute[server]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing_roundtrips() {
+        for s in ["uniform", "rack:2", "rack:3", "hetero-mix", "straggler:0"]
+        {
+            let spec = FabricSpec::from_str(s).unwrap();
+            assert_eq!(spec.name(), s, "canonical spelling must roundtrip");
+        }
+        assert_eq!(
+            FabricSpec::from_str("hetero"),
+            Some(FabricSpec::HeteroMix)
+        );
+        assert_eq!(FabricSpec::from_str("rack:0"), None);
+        assert_eq!(FabricSpec::from_str("rack:x"), None);
+        assert_eq!(FabricSpec::from_str("straggler:"), None);
+        assert_eq!(FabricSpec::from_str("mesh"), None);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_straggler() {
+        let spec = FabricSpec::Straggler { server: 9 };
+        assert!(spec.validate(4).is_err());
+        assert!(spec.validate(10).is_ok());
+        for spec in [
+            FabricSpec::Uniform,
+            FabricSpec::Rack { racks: 7 },
+            FabricSpec::HeteroMix,
+        ] {
+            assert!(spec.validate(2).is_ok());
+        }
+    }
+
+    #[test]
+    fn uniform_matches_scalar_model_bitwise() {
+        let base = NetworkModel::default();
+        let f = Fabric::uniform(4, base);
+        for bytes in [0u64, 1, 1 << 10, 1 << 20, 1 << 30] {
+            for src in 0..4 {
+                for dst in 0..4 {
+                    assert_eq!(
+                        f.transfer_time(src, dst, bytes).to_bits(),
+                        base.transfer_time(bytes).to_bits()
+                    );
+                }
+            }
+        }
+        for s in 0..4 {
+            assert_eq!(f.compute_speed(s), 1.0);
+        }
+        assert!(f.is_uniform());
+    }
+
+    #[test]
+    fn rack_fabric_oversubscribes_cross_rack_only() {
+        let base = NetworkModel::default();
+        let f = Fabric::rack(4, base, 2);
+        // servers {0,1} in rack 0, {2,3} in rack 1
+        assert_eq!(f.link_bandwidth(0, 1), base.bandwidth);
+        assert_eq!(f.link_latency(0, 1), base.latency);
+        assert_eq!(
+            f.link_bandwidth(0, 2),
+            base.bandwidth / RACK_OVERSUBSCRIPTION
+        );
+        assert_eq!(
+            f.link_latency(1, 3),
+            base.latency * RACK_CROSS_LATENCY_FACTOR
+        );
+        // rack:1 degenerates to uniform (every link intra-rack)
+        let one = Fabric::rack(4, base, 1);
+        for src in 0..4 {
+            for dst in 0..4 {
+                assert_eq!(
+                    one.transfer_time(src, dst, 1 << 20).to_bits(),
+                    base.transfer_time(1 << 20).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_mix_slows_the_upper_half() {
+        let base = NetworkModel::default();
+        let f = Fabric::hetero_mix(4, base);
+        // fast-fast link at base rate; any slow endpoint degrades it
+        assert_eq!(f.link_bandwidth(0, 1), base.bandwidth);
+        assert_eq!(
+            f.link_bandwidth(0, 2),
+            base.bandwidth / SLOW_NIC_FACTOR
+        );
+        assert_eq!(
+            f.link_bandwidth(2, 3),
+            base.bandwidth / SLOW_NIC_FACTOR
+        );
+        for s in 0..4 {
+            assert_eq!(f.compute_speed(s), 1.0, "hetero-mix is NIC-only");
+        }
+    }
+
+    #[test]
+    fn straggler_degrades_exactly_one_server() {
+        let base = NetworkModel::default();
+        let f = Fabric::straggler(4, base, 1);
+        assert_eq!(
+            f.compute_speed(1),
+            1.0 / STRAGGLER_COMPUTE_FACTOR
+        );
+        for s in [0usize, 2, 3] {
+            assert_eq!(f.compute_speed(s), 1.0);
+        }
+        assert_eq!(
+            f.link_bandwidth(0, 1),
+            base.bandwidth / STRAGGLER_LINK_FACTOR
+        );
+        assert_eq!(
+            f.link_bandwidth(1, 2),
+            base.bandwidth / STRAGGLER_LINK_FACTOR
+        );
+        assert_eq!(f.link_bandwidth(0, 2), base.bandwidth);
+        assert_eq!(
+            f.link_latency(3, 1),
+            base.latency * STRAGGLER_LATENCY_FACTOR
+        );
+    }
+
+    #[test]
+    fn rack_assignment_is_contiguous_and_total() {
+        for n in 1..9 {
+            for racks in 1..5 {
+                let mut prev = 0usize;
+                for s in 0..n {
+                    let r = rack_of(s, n, racks);
+                    assert!(r >= prev, "rack ids must be non-decreasing");
+                    assert!(r < racks.max(n), "rack id out of range");
+                    prev = r;
+                }
+            }
+        }
+    }
+}

@@ -1,16 +1,34 @@
-//! The simulated GPU cluster: per-server virtual clocks, the network
-//! cost model with exact byte accounting, and the compute cost model.
+//! The simulated GPU cluster: per-server virtual clocks, the
+//! topology-aware fabric with exact byte accounting, and the compute
+//! cost model.
 //!
 //! Substitution note (DESIGN.md §2): the paper's 4×A100 + 10 GbE testbed
 //! is replaced by N simulated servers. Coordination logic (who fetches
 //! what, when models move) is identical to a real deployment; compute and
-//! network *times* come from calibrated cost models, while *byte counts*
-//! are exact.
+//! network *times* come from calibrated cost models, while *byte and
+//! message counts* are exact.
+//!
+//! Layering:
+//!
+//! * [`network`] — exact per-(src, dst)-link byte/message accounting
+//!   ([`NetStats`], validated at the end of every driver session) and
+//!   the base scalar rate ([`NetworkModel`]).
+//! * [`fabric`] — the topology layer: a [`Fabric`] owns per-link
+//!   latency/bandwidth matrices plus per-server compute multipliers,
+//!   built from a named [`FabricSpec`] (`uniform`, `rack:<k>`,
+//!   `hetero-mix`, `straggler:<s>`). The `uniform` fabric is
+//!   bit-identical to the legacy scalar model.
+//! * [`cost`] — analytic FLOP counts per GNN layer and the per-server
+//!   compute constants ([`CostModel`]); the fabric's compute multiplier
+//!   scales these per server in the epoch driver.
+//! * [`clock`] — per-server virtual clocks and barriers ([`Clocks`]).
 
 pub mod clock;
 pub mod cost;
+pub mod fabric;
 pub mod network;
 
 pub use clock::Clocks;
 pub use cost::{CostModel, ModelFamily, ModelShape};
+pub use fabric::{Fabric, FabricSpec};
 pub use network::{NetStats, NetworkModel, TransferKind};

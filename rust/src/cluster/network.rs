@@ -1,10 +1,15 @@
-//! Network cost model + exact byte accounting.
+//! Network byte accounting + the base scalar link model.
 //!
 //! The paper's testbed is 4 GPU servers on 10 Gb/s Ethernet; every win
 //! HopGNN reports is ultimately a byte-count win (features vs model vs
-//! intermediate state). This module accounts **bytes exactly** per
-//! transfer kind and per (src, dst) link, and derives time from the
-//! standard linear model `t = latency + bytes / bandwidth`.
+//! intermediate state). This module accounts **bytes and messages
+//! exactly** per transfer kind and per (src, dst) link. Transfer *times*
+//! come from the topology-aware [`super::fabric::Fabric`] — a per-link
+//! `t = latency + bytes / bandwidth` matrix; the scalar [`NetworkModel`]
+//! here is the base rate a fabric is built from (and exactly what a
+//! `uniform` fabric reproduces, bit for bit).
+
+use super::fabric::Fabric;
 
 /// What is being moved — the categories the paper's figures break out.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -49,7 +54,9 @@ impl TransferKind {
     }
 }
 
-/// Linear network model: `t = latency + bytes / bandwidth`.
+/// Base scalar link model: `t = latency + bytes / bandwidth`. A
+/// `uniform` fabric applies this rate to every link; the non-uniform
+/// topologies derive their per-link matrices from it.
 #[derive(Clone, Copy, Debug)]
 pub struct NetworkModel {
     /// Per-message latency in seconds (RPC + kernel + switch).
@@ -86,6 +93,8 @@ pub struct NetStats {
     pub msgs_by_kind: [u64; NUM_KINDS],
     /// per-link bytes: link[src * n + dst]
     pub link_bytes: Vec<u64>,
+    /// per-link message counts: link[src * n + dst]
+    pub link_msgs: Vec<u64>,
 }
 
 impl NetStats {
@@ -95,13 +104,15 @@ impl NetStats {
             bytes_by_kind: [0; NUM_KINDS],
             msgs_by_kind: [0; NUM_KINDS],
             link_bytes: vec![0; num_servers * num_servers],
+            link_msgs: vec![0; num_servers * num_servers],
         }
     }
 
-    /// Record a transfer and return its modeled duration.
+    /// Record a transfer and return its modeled duration on the
+    /// (src, dst) link of `fabric`.
     pub fn record(
         &mut self,
-        net: &NetworkModel,
+        fabric: &Fabric,
         src: usize,
         dst: usize,
         bytes: u64,
@@ -114,11 +125,16 @@ impl NetStats {
         self.bytes_by_kind[kind.index()] += bytes;
         self.msgs_by_kind[kind.index()] += 1;
         self.link_bytes[src * self.num_servers + dst] += bytes;
-        net.transfer_time(bytes)
+        self.link_msgs[src * self.num_servers + dst] += 1;
+        fabric.transfer_time(src, dst, bytes)
     }
 
     pub fn total_bytes(&self) -> u64 {
         self.bytes_by_kind.iter().sum()
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs_by_kind.iter().sum()
     }
 
     pub fn bytes(&self, kind: TransferKind) -> u64 {
@@ -139,15 +155,28 @@ impl NetStats {
         {
             *dst += src;
         }
+        for (dst, src) in self.link_msgs.iter_mut().zip(&other.link_msgs) {
+            *dst += src;
+        }
     }
 
-    /// Byte-conservation invariant: per-kind totals == per-link totals.
+    /// Conservation invariant, checked at the end of every
+    /// `EpochDriver` session: per-kind byte totals == per-link byte
+    /// totals, and per-kind message counts == per-link message counts.
     pub fn validate(&self) -> Result<(), String> {
         let by_link: u64 = self.link_bytes.iter().sum();
         let by_kind: u64 = self.total_bytes();
         if by_link != by_kind {
             return Err(format!(
                 "byte accounting mismatch: links {by_link} != kinds {by_kind}"
+            ));
+        }
+        let msgs_link: u64 = self.link_msgs.iter().sum();
+        let msgs_kind: u64 = self.total_msgs();
+        if msgs_link != msgs_kind {
+            return Err(format!(
+                "message accounting mismatch: links {msgs_link} != kinds \
+                 {msgs_kind}"
             ));
         }
         Ok(())
@@ -157,6 +186,10 @@ impl NetStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn uniform(n: usize) -> Fabric {
+        Fabric::uniform(n, NetworkModel::default())
+    }
 
     #[test]
     fn linear_time_model() {
@@ -170,39 +203,70 @@ mod tests {
 
     #[test]
     fn local_transfers_are_free_and_uncounted() {
-        let net = NetworkModel::default();
+        let f = uniform(4);
         let mut s = NetStats::new(4);
-        let t = s.record(&net, 2, 2, 1 << 20, TransferKind::Feature);
+        let t = s.record(&f, 2, 2, 1 << 20, TransferKind::Feature);
         assert_eq!(t, 0.0);
         assert_eq!(s.total_bytes(), 0);
+        assert_eq!(s.total_msgs(), 0);
     }
 
     #[test]
     fn merge_is_exact_sum() {
-        let net = NetworkModel::default();
+        let f = uniform(2);
         let mut a = NetStats::new(2);
         let mut b = NetStats::new(2);
-        a.record(&net, 0, 1, 100, TransferKind::Feature);
-        b.record(&net, 1, 0, 40, TransferKind::Gradient);
-        b.record(&net, 0, 1, 5, TransferKind::Feature);
+        a.record(&f, 0, 1, 100, TransferKind::Feature);
+        b.record(&f, 1, 0, 40, TransferKind::Gradient);
+        b.record(&f, 0, 1, 5, TransferKind::Feature);
         a.merge(&b);
         assert_eq!(a.bytes(TransferKind::Feature), 105);
         assert_eq!(a.bytes(TransferKind::Gradient), 40);
         assert_eq!(a.msgs_by_kind[TransferKind::Feature.index()], 2);
+        assert_eq!(a.link_msgs[1], 2); // 0 -> 1 twice
+        assert_eq!(a.link_msgs[2], 1); // 1 -> 0 once
         a.validate().unwrap();
     }
 
     #[test]
     fn accounting_by_kind_and_link() {
-        let net = NetworkModel::default();
+        let f = uniform(3);
         let mut s = NetStats::new(3);
-        s.record(&net, 0, 1, 100, TransferKind::Feature);
-        s.record(&net, 0, 1, 50, TransferKind::Feature);
-        s.record(&net, 1, 2, 7, TransferKind::ModelParams);
+        s.record(&f, 0, 1, 100, TransferKind::Feature);
+        s.record(&f, 0, 1, 50, TransferKind::Feature);
+        s.record(&f, 1, 2, 7, TransferKind::ModelParams);
         assert_eq!(s.bytes(TransferKind::Feature), 150);
         assert_eq!(s.bytes(TransferKind::ModelParams), 7);
         assert_eq!(s.msgs_by_kind[TransferKind::Feature.index()], 2);
-        assert_eq!(s.link_bytes[0 * 3 + 1], 150);
+        assert_eq!(s.link_bytes[1], 150);
+        assert_eq!(s.link_msgs[1], 2);
+        assert_eq!(s.link_msgs[5], 1);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_message_drift() {
+        let f = uniform(2);
+        let mut s = NetStats::new(2);
+        s.record(&f, 0, 1, 64, TransferKind::Control);
+        s.link_msgs[1] += 1; // corrupt the per-link message count
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn record_charges_the_fabric_link() {
+        // a straggler link must be priced per-link, not at the base rate
+        let base = NetworkModel::default();
+        let f = Fabric::straggler(3, base, 0);
+        let mut s = NetStats::new(3);
+        let slow = s.record(&f, 0, 1, 1 << 20, TransferKind::Feature);
+        let fast = s.record(&f, 1, 2, 1 << 20, TransferKind::Feature);
+        assert!(slow > fast, "straggler link {slow} !> fast link {fast}");
+        assert_eq!(
+            fast.to_bits(),
+            base.transfer_time(1 << 20).to_bits(),
+            "untouched links stay at the base rate"
+        );
         s.validate().unwrap();
     }
 }

@@ -5,7 +5,9 @@
 //! offline vendor set has no TOML crate, so the config format is a strict
 //! line-oriented subset of TOML.
 
-use crate::cluster::{CostModel, ModelFamily, ModelShape, NetworkModel};
+use crate::cluster::{
+    CostModel, FabricSpec, ModelFamily, ModelShape, NetworkModel,
+};
 use crate::featstore::cache::CachePolicy;
 use crate::partition::PartitionAlgo;
 use crate::sampler::{SampleConfig, SamplerKind};
@@ -26,7 +28,14 @@ pub struct RunConfig {
     pub partition_algo: PartitionAlgo,
     pub epochs: usize,
     pub seed: u64,
+    /// Base scalar link rate the fabric is built from (`latency` /
+    /// `bandwidth` config keys).
     pub net: NetworkModel,
+    /// Cluster topology (`--fabric` / `fabric` key): per-link cost
+    /// matrices + per-server compute multipliers, materialized by
+    /// `SimEnv`. `uniform` reproduces the scalar `net` model bit for
+    /// bit (locked by `tests/fabric_parity.rs`).
+    pub fabric: FabricSpec,
     pub cost: CostModel,
     /// Cap iterations per epoch (simulation speed knob; None = full epoch).
     pub max_iterations: Option<usize>,
@@ -50,6 +59,11 @@ pub struct RunConfig {
     /// locked bit-identical to the uncached driver by
     /// `tests/cache_parity.rs`.
     pub cache_mb: usize,
+    /// Keep per-server feature caches warm *across* epochs
+    /// (`--cache-persist`): the strategies hand their caches back to
+    /// the next epoch's driver session instead of starting cold. Off =
+    /// the per-epoch caches of the cache-subsystem PR, byte-for-byte.
+    pub cache_persist: bool,
 }
 
 impl Default for RunConfig {
@@ -68,6 +82,7 @@ impl Default for RunConfig {
             epochs: 3,
             seed: 42,
             net: NetworkModel::default(),
+            fabric: FabricSpec::Uniform,
             cost: CostModel::default(),
             max_iterations: None,
             feat_dim_override: None,
@@ -75,6 +90,7 @@ impl Default for RunConfig {
             parallel_lanes: true,
             cache_policy: CachePolicy::None,
             cache_mb: 64,
+            cache_persist: false,
         }
     }
 }
@@ -189,6 +205,14 @@ impl RunConfig {
             "seed" => self.seed = us(val)? as u64,
             "latency" => self.net.latency = fl(val)?,
             "bandwidth" => self.net.bandwidth = fl(val)?,
+            "fabric" => {
+                self.fabric = FabricSpec::from_str(val).ok_or_else(|| {
+                    format!(
+                        "unknown fabric '{val}' (uniform|rack:<k>|\
+                         hetero-mix|straggler:<s>)"
+                    )
+                })?
+            }
             "flops" => self.cost.flops_per_sec = fl(val)?,
             "t_launch" => self.cost.t_launch = fl(val)?,
             "t_sync" => self.cost.t_sync = fl(val)?,
@@ -201,6 +225,7 @@ impl RunConfig {
                     .ok_or_else(|| format!("unknown cache policy '{val}'"))?
             }
             "cache_mb" => self.cache_mb = us(val)?,
+            "cache_persist" => self.cache_persist = bl(val)?,
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -256,6 +281,29 @@ mod tests {
         let d = RunConfig::default();
         assert!(!d.cache_enabled(), "cache must default off (parity)");
         assert!(RunConfig::from_kv("cache = arc").is_err());
+    }
+
+    #[test]
+    fn fabric_knob_parses() {
+        let cfg = RunConfig::from_kv("fabric = rack:2").unwrap();
+        assert_eq!(cfg.fabric, FabricSpec::Rack { racks: 2 });
+        let cfg = RunConfig::from_kv("fabric = straggler:1").unwrap();
+        assert_eq!(cfg.fabric, FabricSpec::Straggler { server: 1 });
+        let cfg = RunConfig::from_kv("fabric = hetero-mix").unwrap();
+        assert_eq!(cfg.fabric, FabricSpec::HeteroMix);
+        let d = RunConfig::default();
+        assert_eq!(d.fabric, FabricSpec::Uniform, "must default uniform");
+        assert!(RunConfig::from_kv("fabric = mesh").is_err());
+        assert!(RunConfig::from_kv("fabric = rack:0").is_err());
+    }
+
+    #[test]
+    fn cache_persist_parses_and_defaults_off() {
+        let cfg = RunConfig::from_kv("cache_persist = on").unwrap();
+        assert!(cfg.cache_persist);
+        let d = RunConfig::default();
+        assert!(!d.cache_persist, "persistence must default off (parity)");
+        assert!(RunConfig::from_kv("cache_persist = sometimes").is_err());
     }
 
     #[test]

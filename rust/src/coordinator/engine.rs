@@ -37,16 +37,27 @@
 //! ## Feature caching
 //!
 //! The driver owns one [`FeatureCache`] per server lane (built from
-//! [`crate::config::RunConfig::cache_policy`]). [`Op::CacheFetch`] ops
-//! resolve their request through the lane's cache before touching the
-//! network: hits move zero bytes and zero transfer seconds — in both
-//! serial and overlap modes, so with overlap on a hit also never
-//! enters the async pending stream — while misses cost exactly what
-//! the equivalent `GatherMerged` would and are admitted per the
-//! eviction policy. Caches are lane-private, keeping parallel lane
-//! execution bit-identical to sequential; a capacity-0 cache
-//! reproduces the uncached driver bit-for-bit
-//! (`tests/cache_parity.rs`).
+//! [`crate::config::RunConfig::cache_policy`], or handed in warm via
+//! [`EpochDriver::with_caches`] when
+//! [`crate::config::RunConfig::cache_persist`] keeps them alive across
+//! epochs). [`Op::CacheFetch`] ops resolve their request through the
+//! lane's cache before touching the network: hits move zero bytes and
+//! zero transfer seconds — in both serial and overlap modes, so with
+//! overlap on a hit also never enters the async pending stream — while
+//! misses cost exactly what the equivalent `GatherMerged` would and
+//! are admitted per the eviction policy. Caches are lane-private,
+//! keeping parallel lane execution bit-identical to sequential; a
+//! capacity-0 cache reproduces the uncached driver bit-for-bit
+//! (`tests/cache_parity.rs`). [`EpochDriver::finish_session`] returns
+//! the caches so a strategy can carry them into its next epoch.
+//!
+//! ## The cluster fabric
+//!
+//! All lane costs are priced by the env's [`crate::cluster::Fabric`]:
+//! transfer ops charge the per-(src, dst)-link time, and compute ops'
+//! seconds are divided by the executing server's compute-speed
+//! multiplier. On the `uniform` fabric both are bit-identical to the
+//! historical scalar model (`tests/fabric_parity.rs`).
 
 use super::ops::{Item, Op, Phase, Program};
 use super::SimEnv;
@@ -83,13 +94,32 @@ pub struct EpochDriver<'e, 'a> {
 
 impl<'e, 'a> EpochDriver<'e, 'a> {
     pub fn new(env: &'e SimEnv<'a>) -> Self {
-        Self::with_override(env, None)
+        Self::with_parts(env, None, None)
     }
 
-    /// `new` with the lane-parallelism decision forced (tests assert
-    /// bit-parity between the two modes through this entry point).
-    fn with_override(
+    /// `new` with warm feature caches carried over from a previous
+    /// epoch session (the `--cache-persist` path; see
+    /// [`Self::finish_session`]).
+    pub fn with_caches(
         env: &'e SimEnv<'a>,
+        caches: Vec<FeatureCache>,
+    ) -> Self {
+        // hard assert: exec_lanes zips lanes with caches, so a wrong
+        // length would silently drop server lanes in release builds
+        assert_eq!(
+            caches.len(),
+            env.num_servers(),
+            "persisted caches do not match the env's server count"
+        );
+        Self::with_parts(env, Some(caches), None)
+    }
+
+    /// Full constructor: optional warm caches, optional forced
+    /// lane-parallelism decision (tests assert bit-parity between the
+    /// two modes through this entry point).
+    fn with_parts(
+        env: &'e SimEnv<'a>,
+        caches: Option<Vec<FeatureCache>>,
         parallel_override: Option<bool>,
     ) -> Self {
         let n = env.num_servers();
@@ -100,7 +130,7 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
             stats: NetStats::new(n),
             m: EpochMetrics::default(),
             pending: vec![0.0f64; n],
-            caches: env.build_caches(),
+            caches: caches.unwrap_or_else(|| env.build_caches()),
             parallel_override,
         }
     }
@@ -170,19 +200,32 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
         }
     }
 
-    /// Close the session: expose leftover async time, validate byte
-    /// conservation, and return the epoch's metrics (times, exact
-    /// bytes, counters, busy fraction).
+    /// Close the session: expose leftover async time, validate byte and
+    /// message conservation ([`NetStats::validate`] runs on *every*
+    /// session close, bench runs included), and return the epoch's
+    /// metrics (times, exact bytes, counters, busy fraction).
     ///
     /// The caller (strategy) still owns schedule-level metrics:
-    /// `iterations` and `time_steps_per_iter` are not known here.
-    pub fn finish(mut self) -> EpochMetrics {
+    /// `iterations`, `time_steps_per_iter`, and `dropped_roots` are not
+    /// known here.
+    pub fn finish(self) -> EpochMetrics {
+        self.finish_session().0
+    }
+
+    /// [`Self::finish`] that also hands the per-lane feature caches
+    /// back, so a strategy running with
+    /// [`crate::config::RunConfig::cache_persist`] can seed its next
+    /// epoch's session via [`Self::with_caches`].
+    pub fn finish_session(mut self) -> (EpochMetrics, Vec<FeatureCache>) {
         expose_pending(&mut self.clocks, &mut self.pending);
         self.stats.validate().expect("byte accounting");
         self.m.absorb_net(&self.stats);
         self.m.epoch_time = self.clocks.max();
         self.m.gpu_busy_fraction = self.clocks.busy_fraction();
-        self.m
+        self.m.per_server_busy = (0..self.env.num_servers())
+            .map(|s| self.clocks.busy_time(s))
+            .collect();
+        (self.m, self.caches)
     }
 
     /// One-shot: execute `program` in a fresh session and finish.
@@ -195,7 +238,7 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
         program: &Program,
         parallel_override: Option<bool>,
     ) -> EpochMetrics {
-        let mut driver = EpochDriver::with_override(env, parallel_override);
+        let mut driver = EpochDriver::with_parts(env, None, parallel_override);
         driver.exec(program);
         driver.finish()
     }
@@ -288,6 +331,10 @@ fn run_lane(
     let n = env.num_servers();
     let cfg = &env.cfg;
     let overlap_on = cfg.overlap;
+    // heterogeneous compute: this server's cost-model seconds divide by
+    // its fabric speed multiplier (1.0 on a uniform fabric — and
+    // `x / 1.0` is bitwise `x`, preserving uniform parity)
+    let speed = env.fabric.compute_speed(server);
     let mut t = t0;
     let mut busy_dt = 0.0f64;
     let mut pending = pending0;
@@ -338,7 +385,7 @@ fn run_lane(
                 let plan = store.plan(server, vertices.iter().copied());
                 let dt = store.sim_cost(
                     &plan,
-                    &cfg.net,
+                    &env.fabric,
                     &cfg.cost,
                     &mut stats,
                     &mut m,
@@ -356,7 +403,7 @@ fn run_lane(
                 let plan = PregatherPlan::build(store, server, steps);
                 let dt = store.sim_cost(
                     &plan.merged,
-                    &cfg.net,
+                    &env.fabric,
                     &cfg.cost,
                     &mut stats,
                     &mut m,
@@ -379,7 +426,7 @@ fn run_lane(
                 let dt = store.sim_cost_cached(
                     &res.plan,
                     res.hits,
-                    &cfg.net,
+                    &env.fabric,
                     &cfg.cost,
                     &mut stats,
                     &mut m,
@@ -400,7 +447,7 @@ fn run_lane(
                 );
             }
             Op::Compute { v, e } => {
-                let dt = cfg.cost.train_time(&env.shape, *v, *e);
+                let dt = cfg.cost.train_time(&env.shape, *v, *e) / speed;
                 charge_compute(
                     dt,
                     &mut t,
@@ -411,7 +458,7 @@ fn run_lane(
             }
             Op::ComputeSecs { secs } => {
                 charge_compute(
-                    *secs,
+                    *secs / speed,
                     &mut t,
                     &mut busy_dt,
                     &mut pending,
@@ -426,7 +473,7 @@ fn run_lane(
                 overlap,
             } => {
                 let dt =
-                    stats.record(&cfg.net, *from, server, *bytes, *kind);
+                    stats.record(&env.fabric, *from, server, *bytes, *kind);
                 charge_transfer(
                     dt,
                     *phase,
@@ -764,6 +811,70 @@ mod tests {
         }
         b.allreduce();
         b.finish()
+    }
+
+    #[test]
+    fn straggler_fabric_scales_compute_per_server() {
+        use crate::cluster::FabricSpec;
+        let d = tiny_test_dataset(208);
+        let mut b = ProgramBuilder::new(2);
+        b.op(0, Op::Compute { v: 400, e: 2400 });
+        b.op(1, Op::Compute { v: 400, e: 2400 });
+        let prog = b.finish();
+        let mk = |fabric| {
+            SimEnv::new(&d, RunConfig {
+                num_servers: 2,
+                parallel_lanes: false,
+                fabric,
+                ..Default::default()
+            })
+        };
+        let uni = EpochDriver::run(&mk(FabricSpec::Uniform), &prog);
+        let strag =
+            EpochDriver::run(&mk(FabricSpec::Straggler { server: 0 }), &prog);
+        // server 0 computes at half speed; same work, twice the time
+        assert!(
+            (strag.epoch_time - 2.0 * uni.epoch_time).abs()
+                < 1e-12 * uni.epoch_time,
+            "straggler epoch {} != 2x uniform {}",
+            strag.epoch_time,
+            uni.epoch_time
+        );
+        assert_eq!(strag.per_server_busy.len(), 2);
+        assert!(
+            (strag.per_server_busy[0] - 2.0 * strag.per_server_busy[1])
+                .abs()
+                < 1e-12 * strag.per_server_busy[1],
+            "observed lane times must expose the straggler"
+        );
+        // uniform fabric: busy times match exactly (bit parity)
+        assert_eq!(
+            uni.per_server_busy[0].to_bits(),
+            uni.per_server_busy[1].to_bits()
+        );
+    }
+
+    #[test]
+    fn warm_caches_carry_across_driver_sessions() {
+        let d = tiny_test_dataset(209);
+        let env = SimEnv::new(&d, cache_cfg(CachePolicy::Lru, 64, false));
+        let prog = cache_program(false);
+        // session 1 starts cold: first fetch misses, re-fetch hits
+        let mut s1 = EpochDriver::new(&env);
+        s1.exec(&prog);
+        let (m1, caches) = s1.finish_session();
+        assert!(m1.cache_hits > 0);
+        assert!(m1.cache_misses > 0);
+        // session 2 seeded with session 1's caches: every fetch hits
+        let mut s2 = EpochDriver::with_caches(&env, caches);
+        s2.exec(&prog);
+        let (m2, _) = s2.finish_session();
+        assert_eq!(m2.cache_misses, 0, "warm session must not re-fetch");
+        assert!(m2.cache_hits > m1.cache_hits);
+        assert!(m2.epoch_time < m1.epoch_time);
+        // a fresh session still starts cold (persistence is opt-in)
+        let m3 = EpochDriver::run(&env, &prog);
+        assert_eq!(m3.cache_hits, m1.cache_hits);
     }
 
     #[test]

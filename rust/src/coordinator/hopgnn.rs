@@ -33,6 +33,7 @@ use super::merge::{MergeController, Selection};
 use super::ops::{Op, Phase, ProgramBuilder};
 use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};
 use crate::cluster::TransferKind;
+use crate::featstore::cache::FeatureCache;
 use crate::metrics::EpochMetrics;
 use crate::sampler::Micrograph;
 
@@ -41,6 +42,10 @@ pub struct HopGnn {
     pub merging: bool,
     pub selection: Selection,
     controller: Option<MergeController>,
+    /// Warm feature caches carried across epochs when
+    /// `RunConfig::cache_persist` is set (otherwise every epoch's
+    /// driver session builds its own cold caches).
+    caches: Option<Vec<FeatureCache>>,
     epoch_idx: u64,
 }
 
@@ -64,6 +69,14 @@ impl HopGnn {
         Self::with_flags(true, true, Selection::Random)
     }
 
+    /// Fabric-aware merging: the controller weights per-worker
+    /// micrograph counts by observed lane compute times, so merging
+    /// load-balances away from stragglers. Reachable end-to-end as
+    /// `StrategyKind::HopGnnFabric` (`--strategy fa`).
+    pub fn fabric_aware() -> Self {
+        Self::with_flags(true, true, Selection::FabricAware)
+    }
+
     pub fn with_flags(
         pregather: bool,
         merging: bool,
@@ -74,6 +87,7 @@ impl HopGnn {
             merging,
             selection,
             controller: None,
+            caches: None,
             epoch_idx: 0,
         }
     }
@@ -90,7 +104,11 @@ impl HopGnn {
 impl Strategy for HopGnn {
     fn name(&self) -> &'static str {
         if self.merging {
-            "HopGNN"
+            if self.selection == Selection::FabricAware {
+                "HopGNN-FA"
+            } else {
+                "HopGNN"
+            }
         } else if self.pregather {
             "+PG"
         } else {
@@ -117,8 +135,18 @@ impl Strategy for HopGnn {
 
         let iterations = env.epoch_iterations();
         let param_bytes = env.shape.param_bytes();
-        let mut step_loads = vec![0u64; t_steps];
-        let mut driver = EpochDriver::new(env);
+        // slot_loads[t][server] = root vertices trained on `server` at
+        // step t over the epoch (summed over servers this is the
+        // paper's Num_vertex step load)
+        let mut slot_loads = vec![vec![0u64; n]; t_steps];
+        // unscaled compute seconds emitted per server — dividing the
+        // observed lane busy time by this measures each server's
+        // effective slowdown for the fabric-aware controller
+        let mut ideal_secs = vec![0.0f64; n];
+        let mut driver = match self.caches.take() {
+            Some(c) => EpochDriver::with_caches(env, c),
+            None => EpochDriver::new(env),
+        };
 
         for minibatches in &iterations {
             let mut b = ProgramBuilder::new(n);
@@ -147,14 +175,14 @@ impl Strategy for HopGnn {
             let mut slot_mgs: Vec<Vec<Vec<Micrograph>>> =
                 vec![(0..n).map(|_| Vec::new()).collect(); t_steps];
             for (d, per_server) in groups.iter().enumerate() {
-                for (t, loads) in step_loads.iter_mut().enumerate() {
+                for (t, loads) in slot_loads.iter_mut().enumerate() {
                     let srv = schedule.visits[d][t];
                     for src in schedule.sources(d, t) {
                         let roots = &per_server[src];
                         if roots.is_empty() {
                             continue;
                         }
-                        *loads += roots.len() as u64;
+                        loads[srv] += roots.len() as u64;
                         let mgs = env.sample_micrographs(roots, &mut rng);
                         b.op(srv, Op::Sample {
                             vertices: mg_vertices(&mgs),
@@ -195,10 +223,10 @@ impl Strategy for HopGnn {
                             .collect();
                         b.op(srv, Op::gather(cached, verts, true));
                     }
-                    b.op(srv, Op::Compute {
-                        v: mg_vertices(mgs),
-                        e: mg_edges(mgs),
-                    });
+                    let (v, e) = (mg_vertices(mgs), mg_edges(mgs));
+                    ideal_secs[srv] +=
+                        env.cfg.cost.train_time(&env.shape, v, e);
+                    b.op(srv, Op::Compute { v, e });
                 }
 
                 // step barrier + model migration (params + accumulated
@@ -236,13 +264,30 @@ impl Strategy for HopGnn {
             driver.exec(&b.finish());
         }
 
-        let mut m = driver.finish();
+        let (mut m, caches) = driver.finish_session();
+        if env.cfg.cache_persist {
+            self.caches = Some(caches);
+        }
         m.iterations = iterations.len() as u64;
         m.time_steps_per_iter = t_steps as f64;
+        m.dropped_roots = env.dropped_roots;
 
-        // merging feedback (§5.3): adapt the schedule between epochs
+        // merging feedback (§5.3): adapt the schedule between epochs.
+        // Weights = observed lane busy seconds / emitted compute
+        // seconds, i.e. each server's measured slowdown (exactly 1.0 on
+        // a uniform fabric, so min-load behavior is unchanged there).
+        let weights: Vec<f64> = (0..n)
+            .map(|s| {
+                let busy = m.per_server_busy.get(s).copied().unwrap_or(0.0);
+                if ideal_secs[s] > 0.0 && busy > 0.0 {
+                    busy / ideal_secs[s]
+                } else {
+                    1.0
+                }
+            })
+            .collect();
         let controller = self.controller.as_mut().unwrap();
-        controller.end_epoch(m.epoch_time, &step_loads);
+        controller.end_epoch_observed(m.epoch_time, &slot_loads, &weights);
         m
     }
 }
@@ -369,6 +414,59 @@ mod tests {
             pc.cache_hit_bytes + pc.cache_miss_bytes,
             pg.bytes(TransferKind::Feature)
         );
+    }
+
+    #[test]
+    fn cache_persist_carries_hits_across_epochs() {
+        let d = small_test_dataset(38);
+        let mk = |persist| RunConfig {
+            cache_policy: CachePolicy::Lru,
+            cache_mb: 64,
+            cache_persist: persist,
+            ..cfg()
+        };
+        let mut cold = HopGnn::mg_pg();
+        let cold_epochs = cold.run(&mut SimEnv::new(&d, mk(false)), 3);
+        let mut warm = HopGnn::mg_pg();
+        let warm_epochs = warm.run(&mut SimEnv::new(&d, mk(true)), 3);
+        // epoch 0 starts cold either way
+        assert_eq!(
+            cold_epochs[0].cache_hits, warm_epochs[0].cache_hits,
+            "first epoch has no prior cache to inherit"
+        );
+        // later epochs reuse the previous epochs' residency
+        assert!(
+            warm_epochs[2].cache_hits > cold_epochs[2].cache_hits,
+            "persisted caches must out-hit per-epoch caches ({} !> {})",
+            warm_epochs[2].cache_hits,
+            cold_epochs[2].cache_hits
+        );
+        assert!(
+            warm_epochs[2].bytes(TransferKind::Feature)
+                < cold_epochs[2].bytes(TransferKind::Feature)
+        );
+    }
+
+    #[test]
+    fn fabric_aware_on_uniform_fabric_stays_deterministic() {
+        // FA on a uniform fabric sees weights of exactly 1.0, so its
+        // selection equals min-load; it must adapt and replay
+        // deterministically like the other merge modes
+        let d = small_test_dataset(39);
+        let mut a = HopGnn::fabric_aware();
+        let ea = a.run(&mut SimEnv::new(&d, cfg()), 4);
+        let mut b = HopGnn::fabric_aware();
+        let eb = b.run(&mut SimEnv::new(&d, cfg()), 4);
+        for (x, y) in ea.iter().zip(&eb) {
+            assert_eq!(x.total_bytes(), y.total_bytes());
+            assert_eq!(x.epoch_time.to_bits(), y.epoch_time.to_bits());
+        }
+        assert_eq!(a.merge_history().len(), 4);
+        assert!(
+            ea.last().unwrap().time_steps_per_iter <= 4.0,
+            "FA must still merge on a uniform fabric"
+        );
+        assert_eq!(a.name(), "HopGNN-FA");
     }
 
     #[test]

@@ -8,6 +8,20 @@
 //! lists home servers whose root groups were merged into slot `(d, t)`:
 //! those micrographs are trained wherever model `d` is, with their
 //! features fetched from the (removed) home server.
+//!
+//! ## Fabric awareness
+//!
+//! The paper's min-load selection treats all workers as equal — true on
+//! its uniform testbed, false on a [`crate::cluster::Fabric`] with
+//! stragglers or mixed GPU generations. [`Selection::FabricAware`]
+//! weights per-worker micrograph counts by *observed* lane compute
+//! times (seconds of busy time per unit of scheduled work, fed back via
+//! [`MergeController::end_epoch_observed`]): step selection minimizes
+//! the weighted load it has to re-place, and
+//! [`Schedule::merge_step_weighted`] re-places each displaced root
+//! group on the surviving step whose training server is fastest and
+//! least crowded — real load balancing instead of round-robin. With
+//! uniform weights the selection coincides with min-load.
 
 use crate::util::rng::Rng;
 
@@ -64,6 +78,42 @@ impl Schedule {
         }
     }
 
+    /// Fabric-aware variant of [`Self::merge_step`]: each displaced
+    /// root group lands on the surviving step whose *training server*
+    /// has the lowest (speed-weight × occupancy) cost, instead of
+    /// round-robin — so a straggler's slots stop absorbing extra work.
+    /// `weights[s]` ≈ observed seconds per unit of work on server `s`
+    /// (1.0 = baseline; missing entries default to 1.0). Preserves the
+    /// Fig 10 invariant exactly like `merge_step`.
+    pub fn merge_step_weighted(&mut self, ts: usize, weights: &[f64]) {
+        assert!(self.num_steps() > 1, "cannot merge the last step");
+        assert!(ts < self.num_steps());
+        for d in 0..self.num_models() {
+            let removed_primary = self.visits[d].remove(ts);
+            let removed_extras = self.extras[d].remove(ts);
+            let steps = self.visits[d].len();
+            let mut sources = vec![removed_primary];
+            sources.extend(removed_extras);
+            for src in sources {
+                let mut best = 0usize;
+                let mut best_cost = f64::INFINITY;
+                for slot in 0..steps {
+                    let srv = self.visits[d][slot];
+                    let w = weights.get(srv).copied().unwrap_or(1.0);
+                    // occupancy = groups already training in the slot
+                    // (primary + extras) plus the one being placed
+                    let cost =
+                        w * (2.0 + self.extras[d][slot].len() as f64);
+                    if cost < best_cost {
+                        best_cost = cost;
+                        best = slot;
+                    }
+                }
+                self.extras[d][best].push(src);
+            }
+        }
+    }
+
     /// Invariant (Fig 10): each model still trains every home server's
     /// root group exactly once, and each step's primaries are distinct.
     pub fn validate(&self, num_servers: usize) -> Result<(), String> {
@@ -100,13 +150,21 @@ impl Schedule {
 }
 
 /// Which step to merge (Fig 18 compares the paper's min-load selection
-/// against random).
+/// against random; `FabricAware` extends min-load to heterogeneous
+/// clusters).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Selection {
     /// The paper's scheme: merge the step with the fewest root vertices.
     MinLoad,
     /// Ablation baseline (RD in Fig 18).
     Random,
+    /// Merge the step with the least *time-weighted* load (per-worker
+    /// root counts × observed lane seconds-per-work), and re-place its
+    /// groups on fast, uncrowded servers
+    /// ([`Schedule::merge_step_weighted`]). Requires feedback through
+    /// [`MergeController::end_epoch_observed`]; degrades to min-load +
+    /// occupancy-balanced placement when no observation exists yet.
+    FabricAware,
 }
 
 /// Cross-epoch adaptive controller: starting from the second epoch, merge
@@ -120,6 +178,13 @@ pub struct MergeController {
     prev_epoch_time: Option<f64>,
     frozen: bool,
     rng: Rng,
+    /// Latest observed per-server weights (seconds of busy time per
+    /// unit of scheduled work; empty until the first
+    /// [`Self::end_epoch_observed`] call).
+    server_weights: Vec<f64>,
+    /// Latest `slot_loads[t][server]` = root vertices trained on
+    /// `server` at step `t` (empty for the plain `end_epoch` path).
+    slot_loads: Vec<Vec<u64>>,
     /// (epoch, steps) history for Fig 17.
     pub history: Vec<(f64, usize)>,
 }
@@ -139,13 +204,17 @@ impl MergeController {
             prev_epoch_time: None,
             frozen: !enabled,
             rng: Rng::new(seed),
+            server_weights: Vec::new(),
+            slot_loads: Vec::new(),
             history: Vec::new(),
         }
     }
 
     /// Feed back one epoch's measurement. `step_loads[t]` = total root
     /// vertices trained at step t over the epoch (the paper's Num_vertex
-    /// approximation).
+    /// approximation). [`Selection::FabricAware`] controllers should
+    /// prefer [`Self::end_epoch_observed`], which also carries the
+    /// per-server breakdown and observed lane weights.
     pub fn end_epoch(&mut self, epoch_time: f64, step_loads: &[u64]) {
         self.history.push((epoch_time, self.schedule.num_steps()));
         if self.frozen {
@@ -172,23 +241,83 @@ impl MergeController {
         }
     }
 
+    /// [`Self::end_epoch`] with the observed per-server breakdown:
+    /// `slot_loads[t][s]` = root vertices trained on server `s` at step
+    /// `t`, `server_weights[s]` = observed seconds of lane busy time
+    /// per unit of scheduled work (1.0 = baseline; a straggler shows
+    /// ~2.0). Non-fabric-aware selections ignore the extra detail, so
+    /// this is a strict superset of the plain feedback path.
+    pub fn end_epoch_observed(
+        &mut self,
+        epoch_time: f64,
+        slot_loads: &[Vec<u64>],
+        server_weights: &[f64],
+    ) {
+        self.slot_loads = slot_loads.to_vec();
+        self.server_weights = server_weights.to_vec();
+        let step_loads: Vec<u64> = slot_loads
+            .iter()
+            .map(|per_server| per_server.iter().sum())
+            .collect();
+        self.end_epoch(epoch_time, &step_loads);
+    }
+
     fn try_merge(&mut self, step_loads: &[u64]) {
         if self.schedule.num_steps() <= 1 {
             self.frozen = true;
             return;
         }
-        let ts = match self.selection {
-            Selection::MinLoad => step_loads
+        let steps = self.schedule.num_steps();
+        let min_load = || {
+            step_loads
                 .iter()
                 .enumerate()
-                .take(self.schedule.num_steps())
+                .take(steps)
                 .min_by_key(|(_, &l)| l)
                 .map(|(t, _)| t)
-                .unwrap_or(0),
-            Selection::Random => self.rng.below(self.schedule.num_steps()),
+                .unwrap_or(0)
+        };
+        let ts = match self.selection {
+            Selection::MinLoad => min_load(),
+            Selection::Random => self.rng.below(steps),
+            Selection::FabricAware => {
+                if self.slot_loads.len() >= steps
+                    && !self.server_weights.is_empty()
+                {
+                    self.weighted_min_step(steps)
+                } else {
+                    min_load()
+                }
+            }
         };
         self.prev_schedule = Some(self.schedule.clone());
-        self.schedule.merge_step(ts);
+        if self.selection == Selection::FabricAware {
+            let weights = self.server_weights.clone();
+            self.schedule.merge_step_weighted(ts, &weights);
+        } else {
+            self.schedule.merge_step(ts);
+        }
+    }
+
+    /// The step whose time-weighted load is cheapest to re-place:
+    /// `argmin_t Σ_s slot_loads[t][s] * weights[s]`. With uniform
+    /// weights this is exactly min-load.
+    fn weighted_min_step(&self, steps: usize) -> usize {
+        let mut best = 0usize;
+        let mut best_cost = f64::INFINITY;
+        for (t, per_server) in self.slot_loads.iter().enumerate().take(steps)
+        {
+            let mut cost = 0.0;
+            for (s, &load) in per_server.iter().enumerate() {
+                let w = self.server_weights.get(s).copied().unwrap_or(1.0);
+                cost += load as f64 * w;
+            }
+            if cost < best_cost {
+                best_cost = cost;
+                best = t;
+            }
+        }
+        best
     }
 
     pub fn frozen(&self) -> bool {
@@ -246,6 +375,100 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn prop_weighted_merge_keeps_invariant() {
+        prop::check(
+            "weighted-merge-invariant",
+            30,
+            |r| (r.range(2, 9), r.next_u64()),
+            |&(n, seed)| {
+                let mut s = Schedule::round_robin(n);
+                let mut rng = Rng::new(seed);
+                // arbitrary positive weights
+                let weights: Vec<f64> = (0..n)
+                    .map(|_| 0.5 + rng.below(8) as f64 * 0.5)
+                    .collect();
+                while s.num_steps() > 1 {
+                    let ts = rng.below(s.num_steps());
+                    s.merge_step_weighted(ts, &weights);
+                    s.validate(n).map_err(|e| e)?;
+                }
+                for d in 0..n {
+                    if s.sources(d, 0).len() != n {
+                        return Err(format!("model {d} lost groups"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn weighted_merge_avoids_the_slow_server() {
+        // 4 servers, server 0 twice as slow: no displaced group may be
+        // re-placed on a slot whose training server is 0 while a fast
+        // empty slot exists
+        let mut s = Schedule::round_robin(4);
+        let weights = [2.0, 1.0, 1.0, 1.0];
+        s.merge_step_weighted(0, &weights);
+        s.validate(4).unwrap();
+        for d in 0..4 {
+            for t in 0..s.num_steps() {
+                if s.visits[d][t] == 0 {
+                    assert!(
+                        s.extras[d][t].is_empty(),
+                        "model {d}: straggler slot {t} absorbed extras"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fabric_aware_controller_uses_observed_weights() {
+        let mut c = MergeController::new(3, true, Selection::FabricAware, 4);
+        // step 0 is lightest by raw count, but its load sits on fast
+        // servers; step 1's load sits on the straggler (server 0), so
+        // its *weighted* cost is what the controller must not pick...
+        // selection removes the *cheapest-to-re-place* step: step 0
+        // slot_loads[t][server]
+        let slot_loads = vec![
+            vec![0, 20, 20],  // step 0: 40 on fast servers
+            vec![30, 0, 15],  // step 1: 30 on the straggler
+            vec![25, 25, 0],  // step 2
+        ];
+        let weights = vec![4.0, 1.0, 1.0];
+        // weighted costs: step0 = 40, step1 = 135, step2 = 125
+        c.end_epoch_observed(10.0, &slot_loads, &weights);
+        assert_eq!(c.schedule.num_steps(), 2);
+        c.schedule.validate(3).unwrap();
+        // with uniform weights the same feedback picks min raw load
+        // (step 1: 45 < step 0: 40? no — step 0 is 40, still min), so
+        // check a case where weighting flips the argmin:
+        let mut c2 = MergeController::new(3, true, Selection::FabricAware, 4);
+        let flip = vec![
+            vec![30, 0, 0],   // step 0: raw 30 (min), all on straggler
+            vec![0, 20, 15],  // step 1: raw 35, weighted 35
+            vec![0, 25, 20],  // step 2: raw 45
+        ];
+        // weighted: step0 = 120, step1 = 35, step2 = 45 -> merge step 1
+        c2.end_epoch_observed(10.0, &flip, &weights);
+        let mut c3 = MergeController::new(3, true, Selection::MinLoad, 4);
+        c3.end_epoch(10.0, &[30, 35, 45]); // min-load merges step 0
+        assert_ne!(
+            c2.schedule.visits[0], c3.schedule.visits[0],
+            "weighting must flip the selection"
+        );
+    }
+
+    #[test]
+    fn fabric_aware_without_observation_falls_back_to_min_load() {
+        let mut c = MergeController::new(4, true, Selection::FabricAware, 5);
+        c.end_epoch(10.0, &[100, 50, 100, 100]);
+        assert_eq!(c.schedule.num_steps(), 3);
+        c.schedule.validate(4).unwrap();
     }
 
     #[test]

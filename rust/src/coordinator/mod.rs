@@ -25,12 +25,26 @@
 //! | [`locality_opt`]    | redistribute only, no migration             | LO, accuracy-compromising |
 //! | [`neutronstar`]     | full-batch boundary exchange / hybrid       | §7.7 comparison           |
 //!
-//! Byte counts are exact (recorded per link and per
-//! [`crate::cluster::TransferKind`]); times come from the cluster cost
-//! models. With `overlap` off the op streams reproduce the historical
-//! eager per-strategy loops' accounting exactly — locked in by
-//! `tests/parity.rs`. The real (PJRT) trainer reuses the HopGNN/DGL/LO
-//! schedules — see `train/`.
+//! ## The cluster fabric
+//!
+//! Every transfer and every compute op is priced by the env's
+//! [`crate::cluster::Fabric`] — per-(src, dst)-link latency/bandwidth
+//! matrices plus per-server compute-speed multipliers, built from
+//! [`crate::config::RunConfig::fabric`] (`uniform`, `rack:<k>`,
+//! `hetero-mix`, `straggler:<s>`). Byte and message counts are exact
+//! (recorded per link and per [`crate::cluster::TransferKind`], with
+//! conservation validated at the end of every driver session); times
+//! come from the fabric's link matrix and the cost model scaled by the
+//! server's compute multiplier. [`SimEnv::allreduce_grads`] charges
+//! every ring round at its *slowest* link, so heterogeneous fabrics
+//! gate gradient sync on the weakest hop. The `uniform` fabric
+//! reproduces the historical scalar-model accounting bit for bit —
+//! locked by `tests/parity.rs` and `tests/fabric_parity.rs`. HopGNN's
+//! merge controller additionally has a fabric-aware mode
+//! ([`StrategyKind::HopGnnFabric`]) that weights per-worker micrograph
+//! counts by observed lane compute times, so merging load-balances
+//! under heterogeneous compute (see [`merge`]). The real (PJRT)
+//! trainer reuses the HopGNN/DGL/LO schedules — see `train/`.
 
 pub mod engine;
 pub mod hopgnn;
@@ -45,7 +59,7 @@ pub mod p3;
 pub use engine::EpochDriver;
 pub use ops::{Op, Phase, Program, ProgramBuilder};
 
-use crate::cluster::{Clocks, ModelShape, NetStats, TransferKind};
+use crate::cluster::{Clocks, Fabric, ModelShape, NetStats, TransferKind};
 use crate::config::RunConfig;
 use crate::featstore::cache::{self, CachePolicy, FeatureCache};
 use crate::featstore::FeatureStore;
@@ -62,9 +76,17 @@ pub struct SimEnv<'a> {
     pub partition: Partition,
     pub cfg: RunConfig,
     pub shape: ModelShape,
+    /// The materialized cluster topology (from `cfg.fabric` + `cfg.net`):
+    /// prices every transfer per link and scales compute per server.
+    pub fabric: Fabric,
     /// Feature bytes per vertex (honors `feat_dim_override`).
     pub feat_bytes: u64,
     pub rng: Rng,
+    /// Roots discarded by the most recent [`Self::epoch_iterations`]
+    /// call (the DGL-style `drop_last` ragged tail plus uneven-split
+    /// remainders) — strategies report this in
+    /// [`EpochMetrics::dropped_roots`] instead of silently losing it.
+    pub dropped_roots: u64,
     /// Global vertex ranking backing the static cache policies, built
     /// once per env (the ranking depends only on config + dataset, so
     /// every epoch's caches pin identical sets). Empty for `None`/LRU.
@@ -92,13 +114,16 @@ impl<'a> SimEnv<'a> {
         let feat_dim = cfg.feat_dim_override.unwrap_or(dataset.feat_dim);
         let shape = cfg.model_shape(feat_dim, dataset.classes);
         let rng = Rng::new(cfg.seed);
+        let fabric = cfg.fabric.build(cfg.num_servers, cfg.net);
         Self {
             dataset,
             partition: part,
             cfg,
             shape,
+            fabric,
             feat_bytes: (feat_dim * 4) as u64,
             rng,
+            dropped_roots: 0,
             cache_rank: OnceLock::new(),
         }
     }
@@ -176,18 +201,25 @@ impl<'a> SimEnv<'a> {
 
     /// Iteration schedule for one epoch: shuffled train roots, chunked
     /// into global batches, each split into one mini-batch per model.
-    /// Returns `iterations[iter][model] = roots`.
+    /// Returns `iterations[iter][model] = roots`; roots the schedule
+    /// discards (the DGL `drop_last` ragged tail and uneven-split
+    /// remainders — *not* iterations cut by the `max_iterations` sim
+    /// budget) are counted in [`Self::dropped_roots`].
     pub fn epoch_iterations(&mut self) -> Vec<Vec<Vec<u32>>> {
         let mut roots = self.dataset.train_vertices.clone();
         self.rng.shuffle(&mut roots);
         let n = self.num_servers();
         let bs = self.cfg.batch_size.max(n);
         let mut iters = Vec::new();
+        self.dropped_roots = 0;
         for chunk in roots.chunks(bs) {
             if chunk.len() < n {
-                break; // drop ragged tail (DGL's drop_last)
+                // drop ragged tail (DGL's drop_last)
+                self.dropped_roots += chunk.len() as u64;
+                break;
             }
             let per = chunk.len() / n;
+            self.dropped_roots += (chunk.len() - per * n) as u64;
             let mut mini = Vec::with_capacity(n);
             for d in 0..n {
                 mini.push(chunk[d * per..(d + 1) * per].to_vec());
@@ -236,7 +268,7 @@ impl<'a> SimEnv<'a> {
                 for s in 0..n {
                     let dst = (s + 1) % n;
                     let t = stats.record(
-                        &self.cfg.net,
+                        &self.fabric,
                         s,
                         dst,
                         chunk,
@@ -244,9 +276,12 @@ impl<'a> SimEnv<'a> {
                     );
                     if round == 0 {
                         // all links of a round proceed in parallel, so
-                        // the round costs its *slowest* link (they only
-                        // differ under heterogeneous networks); total
-                        // time = rounds x per-round time, charged
+                        // the round costs its *slowest* link — every
+                        // round reuses the same ring links, so the
+                        // round-0 max is the true per-round gate. On a
+                        // uniform fabric all links tie; a straggler or
+                        // oversubscribed hop gates the whole ring.
+                        // Total time = rounds x per-round time, charged
                         // uniformly below.
                         dt_round = dt_round.max(t);
                     }
@@ -309,13 +344,17 @@ pub enum StrategyKind {
     HopGnnMgPg,
     /// Fig 18's RD ablation: merging with random step selection.
     HopGnnRandomMerge,
+    /// Fabric-aware merging: step selection and redistribution weighted
+    /// by observed per-server lane times (load balancing under
+    /// heterogeneous compute; see `merge::Selection::FabricAware`).
+    HopGnnFabric,
     LocalityOpt,
     NeutronStar,
     DglFullBatch,
 }
 
 /// Every selectable strategy, in presentation order (harness sweeps).
-pub const ALL_STRATEGY_KINDS: [StrategyKind; 10] = [
+pub const ALL_STRATEGY_KINDS: [StrategyKind; 11] = [
     StrategyKind::Dgl,
     StrategyKind::P3,
     StrategyKind::Naive,
@@ -323,6 +362,7 @@ pub const ALL_STRATEGY_KINDS: [StrategyKind; 10] = [
     StrategyKind::HopGnnMgOnly,
     StrategyKind::HopGnnMgPg,
     StrategyKind::HopGnnRandomMerge,
+    StrategyKind::HopGnnFabric,
     StrategyKind::LocalityOpt,
     StrategyKind::NeutronStar,
     StrategyKind::DglFullBatch,
@@ -338,6 +378,7 @@ impl StrategyKind {
             "hopgnn-mg" | "+mg" => Some(Self::HopGnnMgOnly),
             "hopgnn-mg-pg" | "+pg" => Some(Self::HopGnnMgPg),
             "hopgnn-rd" | "rd" => Some(Self::HopGnnRandomMerge),
+            "hopgnn-fa" | "fa" => Some(Self::HopGnnFabric),
             "lo" | "locality-opt" => Some(Self::LocalityOpt),
             "neutronstar" | "ns" => Some(Self::NeutronStar),
             "dgl-fb" => Some(Self::DglFullBatch),
@@ -354,6 +395,7 @@ impl StrategyKind {
             Self::HopGnnMgOnly => "+MG",
             Self::HopGnnMgPg => "+PG",
             Self::HopGnnRandomMerge => "RD",
+            Self::HopGnnFabric => "HopGNN-FA",
             Self::LocalityOpt => "LO",
             Self::NeutronStar => "NeutronStar",
             Self::DglFullBatch => "DGL-FB",
@@ -371,6 +413,7 @@ impl StrategyKind {
             Self::HopGnnRandomMerge => {
                 Box::new(hopgnn::HopGnn::random_merge())
             }
+            Self::HopGnnFabric => Box::new(hopgnn::HopGnn::fabric_aware()),
             Self::LocalityOpt => Box::new(locality_opt::LocalityOpt::new()),
             Self::NeutronStar => {
                 Box::new(neutronstar::NeutronStar::new(false))
@@ -393,7 +436,10 @@ impl StrategyKind {
     /// Strategies whose merge controller adapts the schedule across
     /// epochs (report the final frozen epoch as steady state).
     pub fn adapts_across_epochs(&self) -> bool {
-        matches!(self, Self::HopGnn | Self::HopGnnRandomMerge)
+        matches!(
+            self,
+            Self::HopGnn | Self::HopGnnRandomMerge | Self::HopGnnFabric
+        )
     }
 }
 
@@ -517,6 +563,75 @@ mod tests {
     }
 
     #[test]
+    fn allreduce_ring_is_gated_by_the_slowest_fabric_link() {
+        // straggler fabric: the ring's slow hop gates every round
+        use crate::cluster::FabricSpec;
+        let d = tiny_test_dataset(13);
+        let cfg = RunConfig {
+            num_servers: 4,
+            fabric: FabricSpec::Straggler { server: 0 },
+            ..Default::default()
+        };
+        let env = SimEnv::new(&d, cfg);
+        let mut clocks = Clocks::new(4);
+        let mut stats = NetStats::new(4);
+        let mut m = EpochMetrics::default();
+        env.allreduce_grads(&mut clocks, &mut stats, &mut m);
+        let chunk = env.shape.param_bytes() / 4;
+        let slowest = (0..4)
+            .map(|s| env.fabric.transfer_time(s, (s + 1) % 4, chunk))
+            .fold(0.0f64, f64::max);
+        let expect = slowest * 6.0 + env.cfg.cost.t_sync;
+        assert!(
+            (clocks.now(0) - expect).abs() < 1e-12,
+            "hetero ring time {} != slowest-link bound {expect}",
+            clocks.now(0)
+        );
+        // and it really is slower than the uniform ring
+        let uni = env.cfg.net.transfer_time(chunk) * 6.0
+            + env.cfg.cost.t_sync;
+        assert!(clocks.now(0) > uni);
+        stats.validate().unwrap();
+    }
+
+    #[test]
+    fn epoch_iterations_count_dropped_tail_roots() {
+        let d = tiny_test_dataset(14);
+        let total = d.train_vertices.len() as u64;
+        // 200 train roots, batch 66: three 66-chunks each lose a 2-root
+        // uneven-split remainder, and the 2-root tail is dropped whole
+        let cfg = RunConfig {
+            batch_size: 66,
+            num_servers: 4,
+            max_iterations: None,
+            ..Default::default()
+        };
+        let mut env = SimEnv::new(&d, cfg);
+        let iters = env.epoch_iterations();
+        let used: u64 = iters
+            .iter()
+            .map(|it| it.iter().map(|mb| mb.len() as u64).sum::<u64>())
+            .sum();
+        assert!(env.dropped_roots > 0, "this schedule must drop roots");
+        assert_eq!(
+            used + env.dropped_roots,
+            total,
+            "every train root is either scheduled or counted dropped"
+        );
+        // capped runs do not count the budget cut as dropped
+        let cfg = RunConfig {
+            batch_size: 48,
+            num_servers: 4,
+            max_iterations: Some(1),
+            ..Default::default()
+        };
+        let mut env = SimEnv::new(&d, cfg);
+        let iters = env.epoch_iterations();
+        assert_eq!(iters.len(), 1);
+        assert_eq!(env.dropped_roots, 0);
+    }
+
+    #[test]
     fn strategy_kind_parsing() {
         assert_eq!(StrategyKind::from_str("dgl"), Some(StrategyKind::Dgl));
         assert_eq!(
@@ -547,6 +662,7 @@ mod tests {
                 StrategyKind::HopGnnMgOnly => "+mg",
                 StrategyKind::HopGnnMgPg => "+pg",
                 StrategyKind::HopGnnRandomMerge => "rd",
+                StrategyKind::HopGnnFabric => "fa",
                 StrategyKind::LocalityOpt => "lo",
                 StrategyKind::NeutronStar => "ns",
                 StrategyKind::DglFullBatch => "dgl-fb",

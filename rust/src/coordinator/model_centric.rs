@@ -10,16 +10,22 @@
 
 use super::ops::{Op, ProgramBuilder};
 use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};
+use crate::featstore::cache::FeatureCache;
 use crate::metrics::EpochMetrics;
 use crate::sampler::Subgraph;
 
 pub struct ModelCentric {
+    /// Warm feature caches held across epochs under `--cache-persist`.
+    caches: Option<Vec<FeatureCache>>,
     epoch_idx: u64,
 }
 
 impl ModelCentric {
     pub fn new() -> Self {
-        Self { epoch_idx: 0 }
+        Self {
+            caches: None,
+            epoch_idx: 0,
+        }
     }
 }
 
@@ -41,7 +47,10 @@ impl Strategy for ModelCentric {
         self.epoch_idx += 1;
 
         let iterations = env.epoch_iterations();
-        let mut driver = EpochDriver::new(env);
+        let mut driver = match self.caches.take() {
+            Some(c) => EpochDriver::with_caches(env, c),
+            None => EpochDriver::new(env),
+        };
         for minibatches in &iterations {
             let mut b = ProgramBuilder::new(n);
             for (server, roots) in minibatches.iter().enumerate() {
@@ -74,9 +83,13 @@ impl Strategy for ModelCentric {
             driver.exec(&b.finish());
         }
 
-        let mut m = driver.finish();
+        let (mut m, caches) = driver.finish_session();
+        if env.cfg.cache_persist {
+            self.caches = Some(caches);
+        }
         m.iterations = iterations.len() as u64;
         m.time_steps_per_iter = 1.0;
+        m.dropped_roots = env.dropped_roots;
         m
     }
 }

@@ -184,6 +184,7 @@ impl Strategy for NaiveFc {
         } else {
             steps_accum / m.iterations as f64
         };
+        m.dropped_roots = env.dropped_roots;
         m
     }
 }

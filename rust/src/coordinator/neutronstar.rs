@@ -190,9 +190,10 @@ impl Strategy for NeutronStar {
                     let recompute_cost_secs =
                         recompute_flops / env.cfg.cost.flops_per_sec;
                     // transfers are batched per source: amortized cost is
-                    // bandwidth-only (latency paid once per source)
+                    // bandwidth-only (latency paid once per source),
+                    // priced on the actual (src -> s) fabric link
                     let comm_cost_secs =
-                        comm as f64 / env.cfg.net.bandwidth;
+                        comm as f64 / env.fabric.link_bandwidth(src, s);
                     if dgl_baseline || comm_cost_secs <= recompute_cost_secs
                     {
                         fetch_bytes_by_src[src] += comm;

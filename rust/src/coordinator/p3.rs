@@ -190,6 +190,7 @@ impl Strategy for P3 {
         let mut m = driver.finish();
         m.iterations = iterations.len() as u64;
         m.time_steps_per_iter = 2.0; // MP phase + DP phase
+        m.dropped_roots = env.dropped_roots;
         m
     }
 }

@@ -22,7 +22,7 @@
 pub mod cache;
 pub mod pregather;
 
-use crate::cluster::{Clocks, CostModel, NetStats, NetworkModel, TransferKind};
+use crate::cluster::{Clocks, CostModel, Fabric, NetStats, TransferKind};
 use crate::graph::datasets::Dataset;
 use crate::metrics::EpochMetrics;
 use crate::partition::Partition;
@@ -119,12 +119,12 @@ impl<'a> FeatureStore<'a> {
     pub fn sim_cost(
         &self,
         plan: &GatherPlan,
-        net: &NetworkModel,
+        fabric: &Fabric,
         cost: &CostModel,
         stats: &mut NetStats,
         metrics: &mut EpochMetrics,
     ) -> f64 {
-        self.sim_cost_cached(plan, 0, net, cost, stats, metrics)
+        self.sim_cost_cached(plan, 0, fabric, cost, stats, metrics)
     }
 
     /// [`Self::sim_cost`] for a cache-resolved plan: `hit_rows` remote
@@ -136,7 +136,7 @@ impl<'a> FeatureStore<'a> {
         &self,
         plan: &GatherPlan,
         hit_rows: u64,
-        net: &NetworkModel,
+        fabric: &Fabric,
         cost: &CostModel,
         stats: &mut NetStats,
         metrics: &mut EpochMetrics,
@@ -147,9 +147,15 @@ impl<'a> FeatureStore<'a> {
             if verts.is_empty() {
                 continue;
             }
+            // batched transfers are priced on their own (src, dst) link
             let bytes = fb * verts.len() as u64;
-            dt += stats
-                .record(net, src, plan.server, bytes, TransferKind::Feature);
+            dt += stats.record(
+                fabric,
+                src,
+                plan.server,
+                bytes,
+                TransferKind::Feature,
+            );
         }
         // local reads and cache hits still pay host staging into the
         // device tensor; only the network transfer is skipped on a hit
@@ -168,13 +174,13 @@ impl<'a> FeatureStore<'a> {
     pub fn execute_sim(
         &self,
         plan: &GatherPlan,
-        net: &NetworkModel,
+        fabric: &Fabric,
         cost: &CostModel,
         clocks: &mut Clocks,
         stats: &mut NetStats,
         metrics: &mut EpochMetrics,
     ) -> f64 {
-        let dt = self.sim_cost(plan, net, cost, stats, metrics);
+        let dt = self.sim_cost(plan, fabric, cost, stats, metrics);
         clocks.advance(plan.server, dt);
         metrics.time_gather += dt;
         dt
@@ -221,14 +227,15 @@ mod tests {
         let d = tiny_test_dataset(2);
         let p = partition(&d.graph, 2, PartitionAlgo::Hash, 2);
         let fs = FeatureStore::new(&d, &p);
-        let net = NetworkModel::default();
+        let fabric =
+            Fabric::uniform(2, crate::cluster::NetworkModel::default());
         let cost = CostModel::default();
         let mut clocks = Clocks::new(2);
         let mut stats = NetStats::new(2);
         let mut m = EpochMetrics::default();
         let plan = fs.plan(0, 0..200u32);
-        let dt = fs.execute_sim(&plan, &net, &cost, &mut clocks, &mut stats,
-                                &mut m);
+        let dt = fs.execute_sim(&plan, &fabric, &cost, &mut clocks,
+                                &mut stats, &mut m);
         assert!(dt > 0.0);
         assert_eq!(clocks.now(0), dt);
         assert_eq!(clocks.now(1), 0.0);

@@ -171,8 +171,10 @@ fn cmd_sim(args: Vec<String>) -> i32 {
         .opt("dataset", "products-s", "dataset (arxiv-s|products-s|uk-s|in-s|it-s)")
         .opt("model", "gcn", "gcn|sage|gat|deepgcn|film")
         .opt("strategy", "hopgnn",
-             "dgl|p3|naive|hopgnn|+mg|+pg|rd|lo|ns|dgl-fb")
+             "dgl|p3|naive|hopgnn|+mg|+pg|rd|fa|lo|ns|dgl-fb")
         .opt("servers", "4", "number of simulated GPU servers")
+        .opt("fabric", "uniform",
+             "cluster topology (uniform|rack:<k>|hetero-mix|straggler:<s>)")
         .opt("batch", "1024", "global mini-batch size")
         .opt("hidden", "128", "hidden dimension")
         .opt("fanout", "10", "neighbor sampling fanout")
@@ -183,6 +185,7 @@ fn cmd_sim(args: Vec<String>) -> i32 {
         .opt("cache", "none",
              "feature-cache policy (none|lru|degree|schedule)")
         .opt("cache-mb", "64", "feature-cache capacity per server, MiB")
+        .flag("cache-persist", "keep feature caches warm across epochs")
         .flag("overlap", "hide async gathers behind compute (pipelining)")
         .flag("sequential", "disable parallel per-server op lanes");
     let a = match cli.parse(args) {
@@ -207,7 +210,7 @@ fn cmd_sim(args: Vec<String>) -> i32 {
     // with a config file, CLI *defaults* must not stomp the file's
     // settings — only options the user actually typed override it
     for key in ["dataset", "model", "servers", "hidden", "fanout", "epochs",
-                "partition", "seed", "cache"] {
+                "partition", "seed", "cache", "fabric"] {
         if from_file && !a.explicit(key) {
             continue;
         }
@@ -228,6 +231,13 @@ fn cmd_sim(args: Vec<String>) -> i32 {
     }
     if !from_file || a.explicit("batch") {
         cfg.batch_size = a.get_usize("batch", cfg.batch_size);
+    }
+    if a.has("cache-persist") {
+        cfg.cache_persist = true;
+    }
+    if let Err(e) = cfg.fabric.validate(cfg.num_servers) {
+        eprintln!("{e}");
+        return 2;
     }
     if a.has("overlap") {
         cfg.overlap = true;
@@ -254,6 +264,15 @@ fn cmd_sim(args: Vec<String>) -> i32 {
         d.feat_dim,
         fmt_bytes(d.feature_volume_bytes())
     );
+    if cfg.fabric != hopgnn::cluster::FabricSpec::Uniform {
+        println!(
+            "fabric {}: per-link costs + per-server compute multipliers \
+             (base: {:.0} MB/s, {:.0} us)",
+            cfg.fabric.name(),
+            cfg.net.bandwidth / 1e6,
+            cfg.net.latency * 1e6
+        );
+    }
     let m = run_strategy(&d, &cfg, kind);
     println!("strategy {}: {}", kind.name(), m.summary());
     println!("{}", m.breakdown_table().render());
@@ -515,8 +534,9 @@ fn cmd_info(_args: Vec<String>) -> i32 {
     println!("{}", t.render());
     println!("models: gcn, sage, gat (3L), deepgcn (7L), film (10L)");
     println!(
-        "strategies: dgl, p3, naive, hopgnn, +mg, +pg, rd, lo, ns, dgl-fb"
+        "strategies: dgl, p3, naive, hopgnn, +mg, +pg, rd, fa, lo, ns, dgl-fb"
     );
+    println!("fabrics: uniform, rack:<k>, hetero-mix, straggler:<s>");
     println!("experiments: {}", ALL_EXPERIMENTS.join(", "));
     match Manifest::load_default() {
         Ok(m) => {

@@ -47,10 +47,20 @@ pub struct EpochMetrics {
     pub cache_evict_bytes: u64,
     /// GPU busy fraction proxy (Fig 20).
     pub gpu_busy_fraction: f64,
+    /// Per-server busy (compute) seconds — the observed lane times.
+    /// Under a heterogeneous fabric the slow servers show
+    /// proportionally more seconds for the same work, which is what
+    /// HopGNN's fabric-aware merge mode feeds back into its schedule.
+    /// Empty in lane-local deltas; filled by the driver at session end.
+    pub per_server_busy: Vec<f64>,
     /// Time steps per iteration, averaged (Fig 17).
     pub time_steps_per_iter: f64,
     /// Iterations in this epoch.
     pub iterations: u64,
+    /// Train roots the epoch schedule discarded (DGL-style `drop_last`
+    /// ragged tail + uneven mini-batch splits) — reported instead of
+    /// silently losing them.
+    pub dropped_roots: u64,
 }
 
 impl EpochMetrics {
@@ -126,8 +136,19 @@ impl EpochMetrics {
         self.cache_miss_bytes += other.cache_miss_bytes;
         self.cache_evict_bytes += other.cache_evict_bytes;
         self.gpu_busy_fraction += other.gpu_busy_fraction;
+        if !other.per_server_busy.is_empty() {
+            if self.per_server_busy.is_empty() {
+                self.per_server_busy = vec![0.0; other.per_server_busy.len()];
+            }
+            for (a, b) in
+                self.per_server_busy.iter_mut().zip(&other.per_server_busy)
+            {
+                *a += b;
+            }
+        }
         self.time_steps_per_iter += other.time_steps_per_iter;
         self.iterations += other.iterations;
+        self.dropped_roots += other.dropped_roots;
     }
 
     /// Merge a later epoch into a running average (used by multi-epoch
@@ -161,8 +182,12 @@ impl EpochMetrics {
         out.cache_miss_bytes /= nu;
         out.cache_evict_bytes /= nu;
         out.gpu_busy_fraction /= n;
+        for b in out.per_server_busy.iter_mut() {
+            *b /= n;
+        }
         out.time_steps_per_iter /= n;
         out.iterations /= nu;
+        out.dropped_roots /= nu;
         out
     }
 
@@ -248,6 +273,23 @@ mod tests {
         assert_eq!(avg.cache_hits, 30);
         assert_eq!(avg.cache_hit_bytes, 3000);
         assert_eq!(avg.cache_evict_bytes, 200);
+    }
+
+    #[test]
+    fn per_server_busy_and_dropped_roots_average() {
+        let a = EpochMetrics {
+            per_server_busy: vec![2.0, 4.0],
+            dropped_roots: 6,
+            ..Default::default()
+        };
+        let b = EpochMetrics {
+            per_server_busy: vec![4.0, 8.0],
+            dropped_roots: 2,
+            ..Default::default()
+        };
+        let avg = EpochMetrics::average_of(&[a, b]);
+        assert_eq!(avg.per_server_busy, vec![3.0, 6.0]);
+        assert_eq!(avg.dropped_roots, 4);
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Cross-epoch cache persistence locks (`--cache-persist`).
+//!
+//! With the flag off, every epoch's driver session builds cold caches —
+//! the exact behavior of the cache-subsystem PR, locked bit-identically
+//! here. With the flag on, strategies hand their warm caches to the
+//! next epoch's session: later epochs hit rows fetched in earlier ones,
+//! byte conservation still holds per epoch, and runs stay
+//! deterministic.
+
+use hopgnn::cluster::network::NUM_KINDS;
+use hopgnn::cluster::TransferKind;
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::{SimEnv, Strategy, StrategyKind};
+use hopgnn::featstore::cache::CachePolicy;
+use hopgnn::graph::datasets::{load_spec, Dataset, DatasetSpec};
+use hopgnn::metrics::EpochMetrics;
+use std::sync::OnceLock;
+
+fn dataset() -> &'static Dataset {
+    static D: OnceLock<Dataset> = OnceLock::new();
+    D.get_or_init(|| {
+        load_spec(&DatasetSpec {
+            name: "cache-persist",
+            num_vertices: 8_000,
+            num_edges: 56_000,
+            feat_dim: 64,
+            classes: 8,
+            num_communities: 40,
+            train_fraction: 0.4,
+            seed: 3131,
+        })
+    })
+}
+
+fn cfg(persist: bool) -> RunConfig {
+    RunConfig {
+        batch_size: 128,
+        num_servers: 4,
+        epochs: 3,
+        max_iterations: Some(3),
+        fanout: 5,
+        vmax: RunConfig::full_sim_vmax(3, 5),
+        seed: 77,
+        cache_policy: CachePolicy::Lru,
+        cache_mb: 64,
+        cache_persist: persist,
+        ..Default::default()
+    }
+}
+
+/// Per-epoch metrics for `kind` under the given persistence setting.
+fn epochs_of(kind: StrategyKind, persist: bool) -> Vec<EpochMetrics> {
+    let d = dataset();
+    let mut env = SimEnv::new(d, cfg(persist));
+    let mut strat = kind.build();
+    strat.run(&mut env, 3)
+}
+
+/// Cached fixed-schedule strategies (capacity-invariant request
+/// streams, so per-epoch requested bytes are comparable).
+const KINDS: [StrategyKind; 3] = [
+    StrategyKind::Dgl,
+    StrategyKind::LocalityOpt,
+    StrategyKind::HopGnnMgPg,
+];
+
+#[test]
+fn persistence_off_is_bit_identical_to_per_epoch_caches() {
+    // the flag default must change nothing: same strategy object, same
+    // epochs, every counter and every second identical
+    for kind in KINDS {
+        let base = epochs_of(kind, false);
+        let off = epochs_of(kind, false);
+        for (a, b) in base.iter().zip(&off) {
+            assert_eq!(a.epoch_time.to_bits(), b.epoch_time.to_bits());
+            assert_eq!(a.cache_hits, b.cache_hits);
+        }
+    }
+}
+
+#[test]
+fn warm_epochs_hit_more_and_move_less() {
+    for kind in KINDS {
+        let cold = epochs_of(kind, false);
+        let warm = epochs_of(kind, true);
+        // epoch 0 is identical: there is no earlier cache to inherit
+        assert_eq!(
+            cold[0].epoch_time.to_bits(),
+            warm[0].epoch_time.to_bits(),
+            "{}: first epoch must not change",
+            kind.name()
+        );
+        assert_eq!(cold[0].cache_hits, warm[0].cache_hits);
+        // epochs 1+ reuse residency from the previous epochs
+        for e in 1..3 {
+            assert!(
+                warm[e].cache_hits >= cold[e].cache_hits,
+                "{} epoch {e}: warm hits {} < cold hits {}",
+                kind.name(),
+                warm[e].cache_hits,
+                cold[e].cache_hits
+            );
+        }
+        let warm_feat: u64 =
+            warm.iter().map(|m| m.bytes(TransferKind::Feature)).sum();
+        let cold_feat: u64 =
+            cold.iter().map(|m| m.bytes(TransferKind::Feature)).sum();
+        assert!(
+            warm_feat < cold_feat,
+            "{}: persistence must cut feature bytes ({warm_feat} !< \
+             {cold_feat})",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn byte_conservation_holds_per_epoch_with_persistence() {
+    // requested = hit + miss per epoch, even when the hits come from a
+    // previous epoch's fills
+    for kind in KINDS {
+        let cold = epochs_of(kind, false);
+        let warm = epochs_of(kind, true);
+        for e in 0..3 {
+            assert_eq!(
+                warm[e].cache_hit_bytes + warm[e].cache_miss_bytes,
+                cold[e].cache_hit_bytes + cold[e].cache_miss_bytes,
+                "{} epoch {e}: requested bytes must be persistence-\
+                 invariant",
+                kind.name()
+            );
+            assert_eq!(
+                warm[e].cache_miss_bytes,
+                warm[e].bytes(TransferKind::Feature),
+                "{} epoch {e}: misses are exactly the bytes moved",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn persistent_runs_replay_deterministically() {
+    for kind in KINDS {
+        let a = epochs_of(kind, true);
+        let b = epochs_of(kind, true);
+        for (x, y) in a.iter().zip(&b) {
+            for k in 0..NUM_KINDS {
+                assert_eq!(x.bytes_by_kind[k], y.bytes_by_kind[k]);
+            }
+            assert_eq!(x.epoch_time.to_bits(), y.epoch_time.to_bits());
+            assert_eq!(x.cache_hits, y.cache_hits);
+            assert_eq!(x.cache_evict_bytes, y.cache_evict_bytes);
+        }
+    }
+}

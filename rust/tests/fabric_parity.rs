@@ -1,0 +1,314 @@
+//! Fabric-layer locks: the topology-aware refactor must be invisible
+//! on a uniform cluster and well-behaved on every named topology.
+//!
+//! * **uniform parity** — `--fabric uniform` performs exactly the same
+//!   float operations on exactly the same values as the legacy scalar
+//!   `NetworkModel`, so every strategy's run is *bit-identical* to the
+//!   pre-fabric simulator (also cross-checked via `rack:1`, which
+//!   degenerates to uniform).
+//! * **constructor properties** — all topologies are symmetric and
+//!   strictly positive off the diagonal; `rack:<k>` applies exactly
+//!   the documented oversubscription ratio.
+//! * **heterogeneity is observable** — non-uniform fabrics slow the
+//!   epoch without moving a single extra byte, and the straggler's
+//!   compute multiplier shows up in the observed per-server lane
+//!   times.
+
+use hopgnn::cluster::fabric::{
+    rack_of, RACK_CROSS_LATENCY_FACTOR, RACK_OVERSUBSCRIPTION,
+    STRAGGLER_COMPUTE_FACTOR,
+};
+use hopgnn::cluster::network::NUM_KINDS;
+use hopgnn::cluster::{Fabric, FabricSpec, NetworkModel};
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::{run_strategy, StrategyKind, ALL_STRATEGY_KINDS};
+use hopgnn::graph::datasets::{load_spec, Dataset, DatasetSpec};
+use hopgnn::metrics::EpochMetrics;
+use hopgnn::util::prop;
+use hopgnn::util::rng::Rng;
+use std::sync::OnceLock;
+
+fn dataset() -> &'static Dataset {
+    static D: OnceLock<Dataset> = OnceLock::new();
+    D.get_or_init(|| {
+        load_spec(&DatasetSpec {
+            name: "fabric-parity",
+            num_vertices: 8_000,
+            num_edges: 56_000,
+            feat_dim: 64,
+            classes: 8,
+            num_communities: 40,
+            train_fraction: 0.4,
+            seed: 2424,
+        })
+    })
+}
+
+fn cfg(fabric: FabricSpec) -> RunConfig {
+    RunConfig {
+        batch_size: 128,
+        num_servers: 4,
+        epochs: 2,
+        max_iterations: Some(3),
+        fanout: 5,
+        vmax: RunConfig::full_sim_vmax(3, 5),
+        seed: 77,
+        fabric,
+        ..Default::default()
+    }
+}
+
+fn cfg_overlap(fabric: FabricSpec) -> RunConfig {
+    RunConfig {
+        overlap: true,
+        ..cfg(fabric)
+    }
+}
+
+fn assert_bit_identical(a: &EpochMetrics, b: &EpochMetrics, what: &str) {
+    for k in 0..NUM_KINDS {
+        assert_eq!(
+            a.bytes_by_kind[k], b.bytes_by_kind[k],
+            "{what}: byte totals diverged for kind index {k}"
+        );
+    }
+    assert_eq!(a.remote_vertices, b.remote_vertices, "{what}");
+    assert_eq!(a.remote_requests, b.remote_requests, "{what}");
+    assert_eq!(a.local_hits, b.local_hits, "{what}");
+    assert_eq!(
+        a.epoch_time.to_bits(),
+        b.epoch_time.to_bits(),
+        "{what}: epoch time must be bit-identical ({} vs {})",
+        a.epoch_time,
+        b.epoch_time
+    );
+    assert_eq!(
+        a.gpu_busy_fraction.to_bits(),
+        b.gpu_busy_fraction.to_bits(),
+        "{what}: busy fraction diverged"
+    );
+}
+
+fn random_net(rng: &mut Rng) -> NetworkModel {
+    NetworkModel {
+        latency: 1e-6 * (1 + rng.below(500)) as f64,
+        bandwidth: 1e8 * (1 + rng.below(100)) as f64,
+    }
+}
+
+#[test]
+fn prop_uniform_fabric_is_bitwise_the_scalar_model() {
+    // the pre-refactor scalar path still exists as
+    // NetworkModel::transfer_time; the uniform fabric must reproduce it
+    // bit for bit on every link, for arbitrary rates and sizes
+    prop::check(
+        "uniform-fabric-parity",
+        50,
+        |r| (2 + r.below(7), r.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Rng::new(seed);
+            let net = random_net(&mut rng);
+            let f = Fabric::uniform(n, net);
+            for _ in 0..20 {
+                let bytes = rng.next_u64() % (1 << 32);
+                let src = rng.below(n);
+                let dst = rng.below(n);
+                if f.transfer_time(src, dst, bytes).to_bits()
+                    != net.transfer_time(bytes).to_bits()
+                {
+                    return Err(format!(
+                        "link ({src},{dst}) diverged at {bytes} bytes"
+                    ));
+                }
+            }
+            for s in 0..n {
+                if f.compute_speed(s) != 1.0 {
+                    return Err(format!("server {s} not at full speed"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fabrics_are_symmetric_and_positive() {
+    prop::check(
+        "fabric-symmetry",
+        40,
+        |r| (2 + r.below(7), r.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Rng::new(seed);
+            let net = random_net(&mut rng);
+            let specs = [
+                FabricSpec::Uniform,
+                FabricSpec::Rack {
+                    racks: 1 + rng.below(n),
+                },
+                FabricSpec::HeteroMix,
+                FabricSpec::Straggler {
+                    server: rng.below(n),
+                },
+            ];
+            for spec in specs {
+                let f = spec.build(n, net);
+                for src in 0..n {
+                    if f.compute_speed(src) <= 0.0 {
+                        return Err(format!(
+                            "{}: non-positive speed on {src}",
+                            spec.name()
+                        ));
+                    }
+                    for dst in 0..n {
+                        if src == dst {
+                            continue;
+                        }
+                        let ab = f.transfer_time(src, dst, 1 << 20);
+                        let ba = f.transfer_time(dst, src, 1 << 20);
+                        if ab.to_bits() != ba.to_bits() {
+                            return Err(format!(
+                                "{}: asymmetric link ({src},{dst})",
+                                spec.name()
+                            ));
+                        }
+                        if !(ab > 0.0 && ab.is_finite()) {
+                            return Err(format!(
+                                "{}: bad link time {ab}",
+                                spec.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn rack_oversubscription_ratio_is_exact() {
+    let net = NetworkModel::default();
+    for n in [4usize, 6, 8] {
+        for racks in [2usize, 3] {
+            let f = Fabric::rack(n, net, racks);
+            for src in 0..n {
+                for dst in 0..n {
+                    if src == dst {
+                        continue;
+                    }
+                    let cross =
+                        rack_of(src, n, racks) != rack_of(dst, n, racks);
+                    let ratio =
+                        net.bandwidth / f.link_bandwidth(src, dst);
+                    let lat_ratio =
+                        f.link_latency(src, dst) / net.latency;
+                    if cross {
+                        assert_eq!(ratio, RACK_OVERSUBSCRIPTION);
+                        assert_eq!(lat_ratio, RACK_CROSS_LATENCY_FACTOR);
+                    } else {
+                        assert_eq!(ratio, 1.0);
+                        assert_eq!(lat_ratio, 1.0);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn uniform_fabric_runs_every_strategy_bit_identically_to_rack1() {
+    // rack:1 builds the identical link matrix through the non-uniform
+    // constructor path — a whole-simulator equivalence check
+    let d = dataset();
+    for kind in ALL_STRATEGY_KINDS {
+        let uni = run_strategy(d, &cfg(FabricSpec::Uniform), kind);
+        let rack1 =
+            run_strategy(d, &cfg(FabricSpec::Rack { racks: 1 }), kind);
+        assert_bit_identical(&uni, &rack1, kind.name());
+    }
+    // and the same holds with the overlap lanes engaged
+    for kind in [
+        StrategyKind::Dgl,
+        StrategyKind::HopGnnMgPg,
+        StrategyKind::HopGnn,
+    ] {
+        let uni = run_strategy(d, &cfg_overlap(FabricSpec::Uniform), kind);
+        let rack1 = run_strategy(
+            d,
+            &cfg_overlap(FabricSpec::Rack { racks: 1 }),
+            kind,
+        );
+        assert_bit_identical(
+            &uni,
+            &rack1,
+            &format!("{} (overlap)", kind.name()),
+        );
+    }
+}
+
+#[test]
+fn heterogeneous_fabrics_change_time_not_bytes() {
+    let d = dataset();
+    for kind in [StrategyKind::Dgl, StrategyKind::P3, StrategyKind::Naive] {
+        let uni = run_strategy(d, &cfg(FabricSpec::Uniform), kind);
+        for spec in [
+            FabricSpec::Rack { racks: 2 },
+            FabricSpec::HeteroMix,
+            FabricSpec::Straggler { server: 0 },
+        ] {
+            let het = run_strategy(d, &cfg(spec), kind);
+            for k in 0..NUM_KINDS {
+                assert_eq!(
+                    uni.bytes_by_kind[k],
+                    het.bytes_by_kind[k],
+                    "{} on {}: fabric changed byte accounting",
+                    kind.name(),
+                    spec.name()
+                );
+            }
+            assert!(
+                het.epoch_time > uni.epoch_time,
+                "{} on {}: {} !> uniform {}",
+                kind.name(),
+                spec.name(),
+                het.epoch_time,
+                uni.epoch_time
+            );
+        }
+    }
+}
+
+#[test]
+fn straggler_compute_shows_in_observed_lane_times() {
+    let d = dataset();
+    let m = run_strategy(
+        d,
+        &cfg(FabricSpec::Straggler { server: 2 }),
+        StrategyKind::Dgl,
+    );
+    assert_eq!(m.per_server_busy.len(), 4);
+    let fast_mean = (m.per_server_busy[0]
+        + m.per_server_busy[1]
+        + m.per_server_busy[3])
+        / 3.0;
+    let ratio = m.per_server_busy[2] / fast_mean;
+    // same expected work per server, half speed on the straggler
+    assert!(
+        ratio > 0.7 * STRAGGLER_COMPUTE_FACTOR
+            && ratio < 1.3 * STRAGGLER_COMPUTE_FACTOR,
+        "straggler busy ratio {ratio} not near {STRAGGLER_COMPUTE_FACTOR}"
+    );
+}
+
+#[test]
+fn fabric_runs_are_deterministic_with_parallel_lanes() {
+    let d = dataset();
+    for spec in [
+        FabricSpec::Rack { racks: 2 },
+        FabricSpec::Straggler { server: 0 },
+    ] {
+        let a = run_strategy(d, &cfg(spec), StrategyKind::HopGnnFabric);
+        let b = run_strategy(d, &cfg(spec), StrategyKind::HopGnnFabric);
+        assert_bit_identical(&a, &b, &spec.name());
+    }
+}

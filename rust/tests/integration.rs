@@ -2,7 +2,9 @@
 //! config plumbing, pipeline composition (generator → partitioner →
 //! sampler → feature store → metrics).
 
-use hopgnn::cluster::{Clocks, CostModel, NetStats, NetworkModel, TransferKind};
+use hopgnn::cluster::{
+    Clocks, CostModel, Fabric, NetStats, NetworkModel, TransferKind,
+};
 use hopgnn::config::RunConfig;
 use hopgnn::coordinator::{run_strategy, SimEnv, StrategyKind};
 use hopgnn::featstore::FeatureStore;
@@ -61,13 +63,13 @@ fn brute_force_byte_oracle_model_centric() {
         .filter(|&&v| p.home(v) as usize != server)
         .count() as u64;
 
-    let net = NetworkModel::default();
+    let fabric = Fabric::uniform(2, NetworkModel::default());
     let cost = CostModel::default();
     let mut clocks = Clocks::new(2);
     let mut stats = NetStats::new(2);
     let mut m = EpochMetrics::default();
     let plan = store.plan(server, sub.vertices.iter().copied());
-    store.execute_sim(&plan, &net, &cost, &mut clocks, &mut stats, &mut m);
+    store.execute_sim(&plan, &fabric, &cost, &mut clocks, &mut stats, &mut m);
 
     assert_eq!(m.remote_vertices, remote_oracle);
     assert_eq!(
