@@ -5,7 +5,7 @@
 
 use hopgnn::cluster::TransferKind;
 use hopgnn::config::RunConfig;
-use hopgnn::coordinator::{run_strategy, StrategyKind};
+use hopgnn::coordinator::{run_strategy, StrategySpec};
 use hopgnn::graph::datasets::load;
 use hopgnn::util::table::{fmt_bytes, fmt_secs, Table};
 
@@ -35,10 +35,10 @@ fn main() {
         "system", "epoch time", "feature bytes", "miss rate", "GPU busy",
     ]);
     for kind in [
-        StrategyKind::Dgl,
-        StrategyKind::P3,
-        StrategyKind::Naive,
-        StrategyKind::HopGnn,
+        StrategySpec::dgl(),
+        StrategySpec::p3(),
+        StrategySpec::naive(),
+        StrategySpec::hopgnn(),
     ] {
         let m = run_strategy(&dataset, &cfg, kind);
         table.row([

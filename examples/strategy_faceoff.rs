@@ -6,7 +6,7 @@
 
 use hopgnn::cluster::{ModelFamily, TransferKind};
 use hopgnn::config::RunConfig;
-use hopgnn::coordinator::{run_strategy, StrategyKind};
+use hopgnn::coordinator::{run_strategy, StrategySpec};
 use hopgnn::graph::datasets::load;
 use hopgnn::util::table::{fmt_bytes, fmt_secs, Table};
 
@@ -44,13 +44,13 @@ fn main() {
     ]);
     let mut dgl_time = None;
     for kind in [
-        StrategyKind::Dgl,
-        StrategyKind::P3,
-        StrategyKind::Naive,
-        StrategyKind::HopGnnMgOnly,
-        StrategyKind::HopGnnMgPg,
-        StrategyKind::HopGnn,
-        StrategyKind::LocalityOpt,
+        StrategySpec::dgl(),
+        StrategySpec::p3(),
+        StrategySpec::naive(),
+        StrategySpec::hopgnn_mg(),
+        StrategySpec::hopgnn_mg_pg(),
+        StrategySpec::hopgnn(),
+        StrategySpec::locality_opt(),
     ] {
         let m = run_strategy(&d, &cfg, kind);
         let base = *dgl_time.get_or_insert(m.epoch_time);

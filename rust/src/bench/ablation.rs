@@ -1,13 +1,18 @@
 //! Ablation experiments: Fig 13 (+MG/+PG/All), Fig 14 (miss rate),
 //! Fig 15 (gather time), Fig 16 (pre-gathering), Fig 17 (merging
 //! trajectory), Fig 18 (merge selection vs random).
+//!
+//! The grid-shaped figures (13/14/15/16/18) are dataset × model ×
+//! strategy products on the sweep engine ([`super::sweep`]); Fig 17
+//! needs the controller's per-epoch history, so it drives the strategy
+//! directly.
 
-use super::{Report, Scale};
+use super::sweep::{Axis, SweepSpec};
+use super::{memo, Report, Scale};
 use crate::cluster::ModelFamily;
 use crate::config::RunConfig;
 use crate::coordinator::hopgnn::HopGnn;
-use super::memo;
-use crate::coordinator::{SimEnv, Strategy, StrategyKind};
+use crate::coordinator::{SimEnv, Strategy, StrategySpec};
 use crate::metrics::EpochMetrics;
 use crate::util::table::{fmt_secs, Table};
 
@@ -25,6 +30,33 @@ fn cfg_for(scale: Scale, ds: &str, model: ModelFamily) -> RunConfig {
     }
 }
 
+/// Model axis over config patches: `model = <family>` resets the layer
+/// count to the family default, and `vmax` is re-derived from that
+/// depth exactly as [`cfg_for`] does (for the 3-layer families swept
+/// today the values coincide; deep families would silently keep a
+/// 3-layer vmax cap without this patch).
+fn model_axis(models: &[ModelFamily]) -> Axis {
+    Axis::patches(
+        "model",
+        models
+            .iter()
+            .map(|m| {
+                (
+                    m.name().to_string(),
+                    vec![
+                        ("model".to_string(), m.name().to_string()),
+                        (
+                            "vmax".to_string(),
+                            RunConfig::full_sim_vmax(m.default_layers(), 10)
+                                .to_string(),
+                        ),
+                    ],
+                )
+            })
+            .collect(),
+    )
+}
+
 /// Fig 13: each technique's incremental speedup over DGL.
 pub fn fig13_ablation(scale: Scale) -> Report {
     let mut r = Report::new(
@@ -36,16 +68,31 @@ pub fn fig13_ablation(scale: Scale) -> Report {
     } else {
         vec!["products-s", "uk-s"]
     };
+    let models = [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat];
+    let steps = [
+        StrategySpec::dgl(),
+        StrategySpec::hopgnn_mg(),
+        StrategySpec::hopgnn_mg_pg(),
+        StrategySpec::hopgnn(),
+    ];
+    let grid = SweepSpec::new(
+        cfg_for(scale, datasets[0], ModelFamily::Gcn),
+        StrategySpec::hopgnn(),
+    )
+    .axis(Axis::key("dataset", &datasets))
+    .axis(model_axis(&models))
+    .axis(Axis::strategies(&steps))
+    .run()
+    .expect("fig13 grid is statically valid");
     let mut t = Table::new([
         "dataset", "model", "DGL", "+MG", "+PG", "All", "All speedup",
     ]);
-    for ds in &datasets {
-        for model in [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat] {
-            let cfg = cfg_for(scale, ds, model);
-            let dgl = memo::run(&cfg, StrategyKind::Dgl);
-            let mg = memo::run(&cfg, StrategyKind::HopGnnMgOnly);
-            let pg = memo::run(&cfg, StrategyKind::HopGnnMgPg);
-            let all = memo::run(&cfg, StrategyKind::HopGnn);
+    for (di, ds) in datasets.iter().enumerate() {
+        for (mi, model) in models.iter().enumerate() {
+            let dgl = grid.metrics(&[di, mi, 0]);
+            let mg = grid.metrics(&[di, mi, 1]);
+            let pg = grid.metrics(&[di, mi, 2]);
+            let all = grid.metrics(&[di, mi, 3]);
             t.row([
                 ds.to_string(),
                 model.name().to_string(),
@@ -74,11 +121,21 @@ pub fn fig14_missrate(scale: Scale) -> Report {
     } else {
         vec!["arxiv-s", "products-s", "uk-s", "in-s"]
     };
+    let grid = SweepSpec::new(
+        cfg_for(scale, datasets[0], ModelFamily::Gcn),
+        StrategySpec::hopgnn(),
+    )
+    .axis(Axis::key("dataset", &datasets))
+    .axis(Axis::strategies(&[
+        StrategySpec::dgl(),
+        StrategySpec::hopgnn_mg(),
+    ]))
+    .run()
+    .expect("fig14 grid is statically valid");
     let (mut dgl_sum, mut mg_sum, mut n) = (0.0, 0.0, 0);
-    for ds in &datasets {
-        let cfg = cfg_for(scale, ds, ModelFamily::Gcn);
-        let dgl = memo::run(&cfg, StrategyKind::Dgl);
-        let mg = memo::run(&cfg, StrategyKind::HopGnnMgOnly);
+    for (di, ds) in datasets.iter().enumerate() {
+        let dgl = grid.metrics(&[di, 0]);
+        let mg = grid.metrics(&[di, 1]);
         dgl_sum += dgl.miss_rate();
         mg_sum += mg.miss_rate();
         n += 1;
@@ -104,10 +161,21 @@ pub fn fig15_gather_time(scale: Scale) -> Report {
         "remote gather time, DGL vs +MG (paper: 2.3x reduction on avg)",
     );
     let mut t = Table::new(["model", "DGL gather", "+MG gather", "reduction"]);
-    for model in [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat] {
-        let cfg = cfg_for(scale, "products-s", model);
-        let dgl = memo::run(&cfg, StrategyKind::Dgl);
-        let mg = memo::run(&cfg, StrategyKind::HopGnnMgOnly);
+    let models = [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat];
+    let grid = SweepSpec::new(
+        cfg_for(scale, "products-s", ModelFamily::Gcn),
+        StrategySpec::hopgnn(),
+    )
+    .axis(model_axis(&models))
+    .axis(Axis::strategies(&[
+        StrategySpec::dgl(),
+        StrategySpec::hopgnn_mg(),
+    ]))
+    .run()
+    .expect("fig15 grid is statically valid");
+    for (mi, model) in models.iter().enumerate() {
+        let dgl = grid.metrics(&[mi, 0]);
+        let mg = grid.metrics(&[mi, 1]);
         t.row([
             model.name().to_string(),
             fmt_secs(dgl.time_gather),
@@ -133,10 +201,20 @@ pub fn fig16_pregather(scale: Scale) -> Report {
     } else {
         vec!["products-s", "uk-s"]
     };
-    for ds in &datasets {
-        let cfg = cfg_for(scale, ds, ModelFamily::Gcn);
-        let mg = memo::run(&cfg, StrategyKind::HopGnnMgOnly);
-        let pg = memo::run(&cfg, StrategyKind::HopGnnMgPg);
+    let grid = SweepSpec::new(
+        cfg_for(scale, datasets[0], ModelFamily::Gcn),
+        StrategySpec::hopgnn(),
+    )
+    .axis(Axis::key("dataset", &datasets))
+    .axis(Axis::strategies(&[
+        StrategySpec::hopgnn_mg(),
+        StrategySpec::hopgnn_mg_pg(),
+    ]))
+    .run()
+    .expect("fig16 grid is statically valid");
+    for (di, ds) in datasets.iter().enumerate() {
+        let mg = grid.metrics(&[di, 0]);
+        let pg = grid.metrics(&[di, 1]);
         t.row([
             ds.to_string(),
             "remote requests".into(),
@@ -175,6 +253,8 @@ fn pytorch_stack_costs(cfg: &mut RunConfig) {
 }
 
 /// Fig 17: merging trajectory — epoch time & time steps per epoch.
+/// (Trajectory experiment: needs per-epoch history, so it drives the
+/// strategy directly instead of going through the sweep engine.)
 pub fn fig17_merging(scale: Scale) -> Report {
     let mut r = Report::new(
         "fig17",
@@ -184,7 +264,7 @@ pub fn fig17_merging(scale: Scale) -> Report {
     let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gat);
     pytorch_stack_costs(&mut cfg);
     cfg.epochs = if scale.quick { 4 } else { 6 };
-    let mut env = SimEnv::new(&d, cfg.clone());
+    let mut env = SimEnv::new(d, cfg.clone());
     let mut strat = HopGnn::full();
     let epochs: Vec<EpochMetrics> = strat.run(&mut env, cfg.epochs);
     let mut t = Table::new(["epoch", "time steps/iter", "epoch time"]);
@@ -200,7 +280,9 @@ pub fn fig17_merging(scale: Scale) -> Report {
     r
 }
 
-/// Fig 18: merge-step selection — min-load vs random.
+/// Fig 18: merge-step selection — min-load vs random, as a dataset ×
+/// selection grid (steady state = the controller's frozen last epoch,
+/// which is what the memoized runner reports for adapting specs).
 pub fn fig18_merge_selection(scale: Scale) -> Report {
     let mut r = Report::new(
         "fig18",
@@ -211,21 +293,21 @@ pub fn fig18_merge_selection(scale: Scale) -> Report {
     } else {
         vec!["products-s", "in-s"]
     };
+    let mut base = cfg_for(scale, datasets[0], ModelFamily::Gcn);
+    pytorch_stack_costs(&mut base);
+    base.epochs = if scale.quick { 4 } else { 6 };
+    let grid = SweepSpec::new(base, StrategySpec::hopgnn())
+        .axis(Axis::key("dataset", &datasets))
+        .axis(Axis::strategies(&[
+            StrategySpec::hopgnn(),
+            StrategySpec::hopgnn_rd(),
+        ]))
+        .run()
+        .expect("fig18 grid is statically valid");
     let mut t = Table::new(["dataset", "MinLoad", "Random(RD)", "ratio"]);
-    for ds in &datasets {
-        let d = memo::dataset(ds);
-        let mut cfg = cfg_for(scale, ds, ModelFamily::Gcn);
-        pytorch_stack_costs(&mut cfg);
-        cfg.epochs = if scale.quick { 4 } else { 6 };
-
-        let mut env = SimEnv::new(&d, cfg.clone());
-        let min_epochs = HopGnn::full().run(&mut env, cfg.epochs);
-        let min_time = min_epochs.last().unwrap().epoch_time;
-
-        let mut env = SimEnv::new(&d, cfg.clone());
-        let rd_epochs = HopGnn::random_merge().run(&mut env, cfg.epochs);
-        let rd_time = rd_epochs.last().unwrap().epoch_time;
-
+    for (di, ds) in datasets.iter().enumerate() {
+        let min_time = grid.metrics(&[di, 0]).epoch_time;
+        let rd_time = grid.metrics(&[di, 1]).epoch_time;
         t.row([
             ds.to_string(),
             fmt_secs(min_time),

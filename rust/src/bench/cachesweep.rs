@@ -11,25 +11,29 @@
 //! epoch times, so its request stream would change across capacities
 //! and hit rates would not be comparable column-to-column.
 //!
+//! Declared as a policy × strategy × capacity grid on the sweep engine
+//! ([`super::sweep`]).
+//!
 //! The acceptance property — hit rate monotonically non-decreasing in
 //! capacity for every policy — is asserted by this module's tests: LRU
 //! has the stack-inclusion property (fixed-size rows), and the static
 //! policies pin supersets as capacity grows.
 
+use super::sweep::{Axis, SweepSpec};
 use super::{memo, Report, Scale};
 use crate::cluster::{ModelFamily, TransferKind};
 use crate::config::RunConfig;
-use crate::coordinator::StrategyKind;
+use crate::coordinator::StrategySpec;
 use crate::featstore::cache::{ALL_CACHE_POLICIES, CachePolicy};
 use crate::metrics::EpochMetrics;
 use crate::util::table::{fmt_bytes, fmt_secs, Table};
 
 /// Fixed-schedule strategies whose gather streams are capacity-
 /// invariant (comparable hit rates).
-pub const SWEEP_STRATEGIES: [StrategyKind; 3] = [
-    StrategyKind::Dgl,
-    StrategyKind::LocalityOpt,
-    StrategyKind::HopGnnMgPg,
+pub const SWEEP_STRATEGIES: [StrategySpec; 3] = [
+    StrategySpec::dgl(),
+    StrategySpec::locality_opt(),
+    StrategySpec::hopgnn_mg_pg(),
 ];
 
 /// Capacity ladder in MiB (0 = parity configuration).
@@ -65,9 +69,9 @@ pub fn sweep_cell(
     ds: &str,
     policy: CachePolicy,
     mb: usize,
-    kind: StrategyKind,
+    spec: StrategySpec,
 ) -> EpochMetrics {
-    memo::run(&cfg_for(scale, ds, policy, mb), kind)
+    memo::run(&cfg_for(scale, ds, policy, mb), spec)
 }
 
 /// The `cachesweep` experiment: hit rate / bytes saved / epoch time per
@@ -78,9 +82,15 @@ pub fn cachesweep(scale: Scale) -> Report {
         "feature cache: hit rate and epoch time vs capacity, per policy",
     );
     let ds = if scale.quick { "arxiv-s" } else { "products-s" };
-    let _ = memo::dataset(ds); // warm the memo table
     let caps = capacities_mb(scale);
-    for policy in ALL_CACHE_POLICIES {
+    let grid =
+        SweepSpec::new(cfg_for(scale, ds, CachePolicy::Lru, 0), StrategySpec::dgl())
+            .axis(Axis::cache_policies(&ALL_CACHE_POLICIES))
+            .axis(Axis::strategies(&SWEEP_STRATEGIES))
+            .axis(Axis::cache_capacities_mb(&caps))
+            .run()
+            .expect("cachesweep grid is statically valid");
+    for (pi, policy) in ALL_CACHE_POLICIES.iter().enumerate() {
         let mut t = Table::new([
             "system",
             "capacity",
@@ -89,20 +99,20 @@ pub fn cachesweep(scale: Scale) -> Report {
             "bytes saved",
             "epoch",
         ]);
-        for kind in SWEEP_STRATEGIES {
+        for (ki, spec) in SWEEP_STRATEGIES.iter().enumerate() {
             let mut prev_rate = -1.0f64;
-            for &mb in &caps {
-                let m = sweep_cell(scale, ds, policy, mb, kind);
+            for (ci, &mb) in caps.iter().enumerate() {
+                let m = grid.metrics(&[pi, ki, ci]);
                 let rate = m.cache_hit_rate();
                 debug_assert!(
                     rate + 1e-12 >= prev_rate,
                     "{} {} hit rate regressed at {mb} MiB",
                     policy.name(),
-                    kind.name()
+                    spec.name()
                 );
                 prev_rate = rate;
                 t.row([
-                    kind.name().to_string(),
+                    spec.name(),
                     format!("{mb} MiB"),
                     format!("{:.1}%", rate * 100.0),
                     fmt_bytes(m.bytes(TransferKind::Feature)),
@@ -166,17 +176,17 @@ mod tests {
         // the cachesweep acceptance criterion, asserted release-mode too
         let scale = tiny_scale();
         for policy in ALL_CACHE_POLICIES {
-            for kind in SWEEP_STRATEGIES {
+            for spec in SWEEP_STRATEGIES {
                 let mut prev = -1.0f64;
                 for &mb in &capacities_mb(scale) {
-                    let m = sweep_cell(scale, "arxiv-s", policy, mb, kind);
+                    let m = sweep_cell(scale, "arxiv-s", policy, mb, spec);
                     let rate = m.cache_hit_rate();
                     assert!(
                         rate + 1e-12 >= prev,
                         "{}/{}: hit rate fell from {prev} to {rate} at \
                          {mb} MiB",
                         policy.name(),
-                        kind.name()
+                        spec.name()
                     );
                     prev = rate;
                 }
@@ -184,7 +194,7 @@ mod tests {
                     prev > 0.0,
                     "{}/{}: largest capacity never hit",
                     policy.name(),
-                    kind.name()
+                    spec.name()
                 );
             }
         }
@@ -193,12 +203,12 @@ mod tests {
     #[test]
     fn byte_conservation_across_capacities() {
         let scale = tiny_scale();
-        let kind = StrategyKind::Dgl;
+        let spec = StrategySpec::dgl();
         let baseline =
-            sweep_cell(scale, "arxiv-s", CachePolicy::Lru, 0, kind);
+            sweep_cell(scale, "arxiv-s", CachePolicy::Lru, 0, spec);
         let requested = baseline.cache_hit_bytes + baseline.cache_miss_bytes;
         for &mb in &capacities_mb(scale)[1..] {
-            let m = sweep_cell(scale, "arxiv-s", CachePolicy::Lru, mb, kind);
+            let m = sweep_cell(scale, "arxiv-s", CachePolicy::Lru, mb, spec);
             assert_eq!(
                 m.cache_hit_bytes + m.cache_miss_bytes,
                 requested,

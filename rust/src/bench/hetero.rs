@@ -12,15 +12,19 @@
 //!
 //! The second section isolates HopGNN's merge controller: the paper's
 //! min-load selection (fabric-oblivious) vs the fabric-aware mode
-//! (`--strategy fa`), which weights per-worker micrograph counts by
-//! observed lane compute times and re-places merged groups on fast
+//! (`--strategy hopgnn+fa`), which weights per-worker micrograph counts
+//! by observed lane compute times and re-places merged groups on fast
 //! servers. Under `straggler:0` the fabric-aware merge must not lose
 //! to the oblivious one — asserted by this module's tests.
+//!
+//! Both sections are fabric × strategy (× overlap) grids on the sweep
+//! engine ([`super::sweep`]).
 
-use super::{memo, Report, Scale};
+use super::sweep::{Axis, SweepSpec};
+use super::{Report, Scale};
 use crate::cluster::{FabricSpec, ModelFamily, TransferKind};
 use crate::config::RunConfig;
-use crate::coordinator::StrategyKind;
+use crate::coordinator::StrategySpec;
 use crate::util::table::{fmt_bytes, fmt_secs, Table};
 
 /// The swept topologies, in presentation order.
@@ -33,11 +37,11 @@ pub const FABRICS: [FabricSpec; 4] = [
 
 /// Strategies in the per-fabric sweep (DGL first: the speedup
 /// baseline).
-pub const SWEEP_STRATEGIES: [StrategyKind; 4] = [
-    StrategyKind::Dgl,
-    StrategyKind::P3,
-    StrategyKind::HopGnnMgPg,
-    StrategyKind::HopGnn,
+pub const SWEEP_STRATEGIES: [StrategySpec; 4] = [
+    StrategySpec::dgl(),
+    StrategySpec::p3(),
+    StrategySpec::hopgnn_mg_pg(),
+    StrategySpec::hopgnn(),
 ];
 
 fn cfg_for(
@@ -81,8 +85,16 @@ pub fn hetero(scale: Scale) -> Report {
          overlap",
     );
     let ds = if scale.quick { "arxiv-s" } else { "products-s" };
-    let _ = memo::dataset(ds); // warm the memo table
-    for fabric in FABRICS {
+    let grid = SweepSpec::new(
+        cfg_for(scale, ds, FabricSpec::Uniform, false),
+        StrategySpec::hopgnn(),
+    )
+    .axis(Axis::fabrics(&FABRICS))
+    .axis(Axis::strategies(&SWEEP_STRATEGIES))
+    .axis(Axis::overlap(&[false, true]))
+    .run()
+    .expect("hetero grid is statically valid");
+    for (fi, fabric) in FABRICS.iter().enumerate() {
         let mut t = Table::new([
             "system",
             "serial",
@@ -91,21 +103,13 @@ pub fn hetero(scale: Scale) -> Report {
             "feat moved",
             "vs DGL",
         ]);
-        let cells: Vec<_> = SWEEP_STRATEGIES
-            .iter()
-            .map(|&kind| {
-                let serial =
-                    memo::run(&cfg_for(scale, ds, fabric, false), kind);
-                let over =
-                    memo::run(&cfg_for(scale, ds, fabric, true), kind);
-                (kind, serial, over)
-            })
-            .collect();
         // DGL is SWEEP_STRATEGIES[0]: its serial epoch is the baseline
-        let dgl_serial = cells[0].1.epoch_time;
-        for (kind, serial, over) in &cells {
+        let dgl_serial = grid.metrics(&[fi, 0, 0]).epoch_time;
+        for (ki, spec) in SWEEP_STRATEGIES.iter().enumerate() {
+            let serial = grid.metrics(&[fi, ki, 0]);
+            let over = grid.metrics(&[fi, ki, 1]);
             t.row([
-                kind.name().to_string(),
+                spec.name(),
                 fmt_secs(serial.epoch_time),
                 fmt_secs(over.epoch_time),
                 format!("{:.2}x", serial.epoch_time / over.epoch_time),
@@ -121,6 +125,17 @@ pub fn hetero(scale: Scale) -> Report {
 
     // fabric-aware vs fabric-oblivious merging (overlap on, steady
     // epoch after the controllers converge)
+    let merge_grid = SweepSpec::new(
+        merge_cfg(scale, ds, FabricSpec::Uniform),
+        StrategySpec::hopgnn(),
+    )
+    .axis(Axis::fabrics(&FABRICS))
+    .axis(Axis::strategies(&[
+        StrategySpec::hopgnn(),
+        StrategySpec::hopgnn_fa(),
+    ]))
+    .run()
+    .expect("merge grid is statically valid");
     let mut t = Table::new([
         "fabric",
         "HopGNN (min-load)",
@@ -129,12 +144,9 @@ pub fn hetero(scale: Scale) -> Report {
         "FA steps",
         "FA gain",
     ]);
-    for fabric in FABRICS {
-        let ob = memo::run(&merge_cfg(scale, ds, fabric), StrategyKind::HopGnn);
-        let fa = memo::run(
-            &merge_cfg(scale, ds, fabric),
-            StrategyKind::HopGnnFabric,
-        );
+    for (fi, fabric) in FABRICS.iter().enumerate() {
+        let ob = merge_grid.metrics(&[fi, 0]);
+        let fa = merge_grid.metrics(&[fi, 1]);
         t.row([
             fabric.name(),
             fmt_secs(ob.epoch_time),
@@ -172,6 +184,7 @@ pub fn hetero(scale: Scale) -> Report {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench::memo;
 
     fn tiny_scale() -> Scale {
         Scale {
@@ -189,8 +202,8 @@ mod tests {
         for fabric in FABRICS {
             assert!(s.contains(&fabric.name()), "{s}");
         }
-        for kind in SWEEP_STRATEGIES {
-            assert!(s.contains(kind.name()), "{s}");
+        for spec in SWEEP_STRATEGIES {
+            assert!(s.contains(&spec.name()), "{s}");
         }
         assert!(s.contains("HopGNN-FA"), "{s}");
     }
@@ -200,7 +213,7 @@ mod tests {
         let scale = tiny_scale();
         let uni = memo::run(
             &cfg_for(scale, "arxiv-s", FabricSpec::Uniform, false),
-            StrategyKind::Dgl,
+            StrategySpec::dgl(),
         );
         for fabric in [
             FabricSpec::Rack { racks: 2 },
@@ -209,7 +222,7 @@ mod tests {
         ] {
             let het = memo::run(
                 &cfg_for(scale, "arxiv-s", fabric, false),
-                StrategyKind::Dgl,
+                StrategySpec::dgl(),
             );
             assert!(
                 het.epoch_time > uni.epoch_time,
@@ -238,11 +251,11 @@ mod tests {
         let fabric = FabricSpec::Straggler { server: 0 };
         let ob = memo::run(
             &merge_cfg(scale, "arxiv-s", fabric),
-            StrategyKind::HopGnn,
+            StrategySpec::hopgnn(),
         );
         let fa = memo::run(
             &merge_cfg(scale, "arxiv-s", fabric),
-            StrategyKind::HopGnnFabric,
+            StrategySpec::hopgnn_fa(),
         );
         // 1% slack absorbs micrograph sampling noise once the two
         // schedules diverge; the expected gap is far larger (the
@@ -259,11 +272,11 @@ mod tests {
         // (same selection, balanced placement)
         let uni_ob = memo::run(
             &merge_cfg(scale, "arxiv-s", FabricSpec::Uniform),
-            StrategyKind::HopGnn,
+            StrategySpec::hopgnn(),
         );
         let uni_fa = memo::run(
             &merge_cfg(scale, "arxiv-s", FabricSpec::Uniform),
-            StrategyKind::HopGnnFabric,
+            StrategySpec::hopgnn_fa(),
         );
         assert!(
             uni_fa.epoch_time <= uni_ob.epoch_time * 1.05,

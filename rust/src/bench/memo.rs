@@ -7,7 +7,7 @@
 //! `crate::featstore::cache`.)
 
 use crate::config::RunConfig;
-use crate::coordinator::{SimEnv, StrategyKind};
+use crate::coordinator::{SimEnv, StrategySpec};
 use crate::graph::datasets::{load, Dataset};
 use crate::metrics::EpochMetrics;
 use crate::partition::{partition, Partition, PartitionAlgo};
@@ -58,10 +58,10 @@ pub fn partition_for(
 
 /// Cached-run variant of `coordinator::run_strategy`: same semantics,
 /// but dataset and partition come from the process-wide caches.
-pub fn run(cfg: &RunConfig, kind: StrategyKind) -> EpochMetrics {
+pub fn run(cfg: &RunConfig, spec: StrategySpec) -> EpochMetrics {
     let d = dataset(&cfg.dataset);
     let mut cfg = cfg.clone();
-    if let Some(pa) = kind.preferred_partition() {
+    if let Some(pa) = spec.preferred_partition() {
         cfg.partition_algo = pa;
     }
     let part = partition_for(
@@ -72,12 +72,12 @@ pub fn run(cfg: &RunConfig, kind: StrategyKind) -> EpochMetrics {
     );
     let epochs = cfg.epochs;
     let mut env = SimEnv::with_partition(d, cfg, part);
-    let mut strat = kind.build();
+    let mut strat = spec.build();
     let per_epoch = strat.run(&mut env, epochs);
     // HopGNN adapts its schedule across epochs (merging probe); report
     // the final (frozen) epoch as steady state, like the paper's
     // "remainder of the training" framing in Fig 17.
-    let steady = if per_epoch.len() > 2 && kind.adapts_across_epochs() {
+    let steady = if per_epoch.len() > 2 && spec.adapts_across_epochs() {
         &per_epoch[per_epoch.len() - 1..]
     } else {
         &per_epoch[..]

@@ -12,6 +12,7 @@ pub mod motivation;
 pub mod overall;
 pub mod overlap;
 pub mod sensitivity;
+pub mod sweep;
 pub mod table3;
 
 use crate::util::json::{self, Value};
@@ -167,6 +168,40 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "hetero",
 ];
 
+/// Fail-fast id resolution for the `bench` CLI: validate *and dedupe*
+/// every requested experiment id up front, so an unknown id aborts
+/// before any experiment has spent time running. Order is preserved
+/// (first occurrence wins); all unknown ids are reported together.
+pub fn resolve_experiment_ids(
+    ids: &[String],
+) -> Result<Vec<&'static str>, String> {
+    let mut resolved: Vec<&'static str> = Vec::new();
+    let mut unknown: Vec<String> = Vec::new();
+    for id in ids {
+        match ALL_EXPERIMENTS.iter().find(|&&k| k == id.as_str()) {
+            Some(&k) => {
+                if !resolved.contains(&k) {
+                    resolved.push(k);
+                }
+            }
+            None => {
+                if !unknown.contains(id) {
+                    unknown.push(id.clone());
+                }
+            }
+        }
+    }
+    if !unknown.is_empty() {
+        return Err(format!(
+            "unknown experiment id{} '{}'; known ids: {}",
+            if unknown.len() > 1 { "s" } else { "" },
+            unknown.join("', '"),
+            ALL_EXPERIMENTS.join(", ")
+        ));
+    }
+    Ok(resolved)
+}
+
 /// Dispatch one experiment by id.
 pub fn run_experiment(id: &str, scale: Scale) -> Result<Report, String> {
     match id {
@@ -221,6 +256,28 @@ mod tests {
     #[test]
     fn unknown_experiment_rejected() {
         assert!(run_experiment("nope", Scale::quick()).is_err());
+    }
+
+    #[test]
+    fn id_resolution_is_fail_fast_and_dedupes() {
+        let ids: Vec<String> = ["overlap", "fig11", "overlap"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(
+            resolve_experiment_ids(&ids).unwrap(),
+            vec!["overlap", "fig11"],
+            "duplicates collapse, order preserved"
+        );
+        let bad: Vec<String> = ["overlap", "nope", "alsonope", "nope"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let e = resolve_experiment_ids(&bad).unwrap_err();
+        assert!(e.contains("'nope', 'alsonope'"), "{e}");
+        assert!(e.contains("known ids"), "{e}");
+        assert!(e.contains("cachesweep"), "lists the valid ids: {e}");
+        assert!(resolve_experiment_ids(&[]).unwrap().is_empty());
     }
 
     #[test]

@@ -5,7 +5,7 @@ use super::{Report, Scale};
 use crate::cluster::{ModelFamily, TransferKind};
 use crate::config::RunConfig;
 use super::memo;
-use crate::coordinator::StrategyKind;
+use crate::coordinator::StrategySpec;
 use crate::graph::datasets::Dataset;
 use crate::partition::{partition, PartitionAlgo};
 use crate::sampler::{sample_micrograph, SampleConfig, SamplerKind, Subgraph};
@@ -46,7 +46,7 @@ pub fn fig04_breakdown(scale: Scale) -> Report {
     for ds in datasets {
         for model in [ModelFamily::Gcn, ModelFamily::Sage, ModelFamily::Gat] {
             let cfg = base_cfg(scale, ds, model);
-            let m = memo::run(&cfg, StrategyKind::Dgl);
+            let m = memo::run(&cfg, StrategySpec::dgl());
             let total = (m.time_sample + m.time_gather + m.time_compute
                 + m.time_migrate
                 + m.time_sync)
@@ -96,7 +96,7 @@ pub fn fig05_alpha(scale: Scale) -> Report {
         cfg.fanout = fanout;
         cfg.vmax = RunConfig::full_sim_vmax(layers, fanout);
         cfg.epochs = 1;
-        let m = memo::run(&cfg, StrategyKind::Dgl);
+        let m = memo::run(&cfg, StrategySpec::dgl());
         let feat_dim = d.feat_dim;
         let shape = cfg.model_shape(feat_dim, d.classes);
         let per_iter = m.bytes(TransferKind::Feature) as f64
@@ -133,8 +133,8 @@ pub fn fig07_naive_vs_mc(scale: Scale) -> Report {
     for ds in datasets {
         for model in [ModelFamily::Gcn, ModelFamily::Gat] {
             let cfg = base_cfg(scale, ds, model);
-            let mc = memo::run(&cfg, StrategyKind::Dgl);
-            let nv = memo::run(&cfg, StrategyKind::Naive);
+            let mc = memo::run(&cfg, StrategySpec::dgl());
+            let nv = memo::run(&cfg, StrategySpec::naive());
             let ratio = nv.total_bytes() as f64 / mc.total_bytes().max(1) as f64;
             worst = worst.max(ratio);
             t.row([

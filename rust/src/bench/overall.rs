@@ -6,7 +6,7 @@ use crate::cluster::ModelFamily;
 use crate::config::RunConfig;
 use crate::coordinator::neutronstar::{FullBatchMode, NeutronStar};
 use super::memo;
-use crate::coordinator::{SimEnv, Strategy, StrategyKind};
+use crate::coordinator::{SimEnv, Strategy, StrategySpec};
 use crate::metrics::EpochMetrics;
 use crate::util::table::{fmt_secs, Table};
 
@@ -34,11 +34,11 @@ fn cfg_for(
     }
 }
 
-const HEADLINE: [StrategyKind; 4] = [
-    StrategyKind::Dgl,
-    StrategyKind::P3,
-    StrategyKind::Naive,
-    StrategyKind::HopGnn,
+const HEADLINE: [StrategySpec; 4] = [
+    StrategySpec::dgl(),
+    StrategySpec::p3(),
+    StrategySpec::naive(),
+    StrategySpec::hopgnn(),
 ];
 
 fn faceoff_row(
@@ -156,12 +156,12 @@ pub fn fig19_large_graph(scale: Scale) -> Report {
         if scale.quick {
             cfg.max_iterations = Some(2);
         }
-        for kind in [StrategyKind::Dgl, StrategyKind::P3, StrategyKind::HopGnn]
+        for kind in [StrategySpec::dgl(), StrategySpec::p3(), StrategySpec::hopgnn()]
         {
             let m = memo::run(&cfg, kind);
             t.row([
                 model.name().to_string(),
-                kind.name().to_string(),
+                kind.name(),
                 fmt_secs(m.epoch_time),
                 format!("{:.1}", (1.0 - m.miss_rate()) * 100.0),
             ]);

@@ -7,11 +7,15 @@
 //! rows: P³ is a pipelining design and HopGNN's §5.2 pre-gather becomes
 //! a true prefetch; DGL models a prefetching dataloader. Naive-FC is
 //! the control — its serial walk cannot overlap anything.
+//!
+//! Declared as a strategy × overlap grid on the sweep engine
+//! ([`super::sweep`]); the table is the grid read row-major.
 
-use super::{memo, Report, Scale};
+use super::sweep::{Axis, SweepSpec};
+use super::{Report, Scale};
 use crate::cluster::ModelFamily;
 use crate::config::RunConfig;
-use crate::coordinator::StrategyKind;
+use crate::coordinator::StrategySpec;
 use crate::util::table::{fmt_secs, Table};
 
 fn cfg_for(scale: Scale, ds: &str) -> RunConfig {
@@ -37,43 +41,40 @@ pub fn overlap_sweep(scale: Scale) -> Report {
         "gather/compute overlap: epoch time with pipelining off vs on",
     );
     let ds = if scale.quick { "arxiv-s" } else { "products-s" };
-    let _ = memo::dataset(ds); // warm the cache
-    let kinds = [
-        StrategyKind::Dgl,
-        StrategyKind::P3,
-        StrategyKind::Naive,
-        StrategyKind::HopGnnMgOnly,
-        StrategyKind::HopGnnMgPg,
-        StrategyKind::HopGnn,
+    let specs = [
+        StrategySpec::dgl(),
+        StrategySpec::p3(),
+        StrategySpec::naive(),
+        StrategySpec::hopgnn_mg(),
+        StrategySpec::hopgnn_mg_pg(),
+        StrategySpec::hopgnn(),
     ];
+    let grid = SweepSpec::new(cfg_for(scale, ds), StrategySpec::hopgnn())
+        .axis(Axis::strategies(&specs))
+        .axis(Axis::overlap(&[false, true]))
+        .run()
+        .expect("overlap grid is statically valid");
     let mut t = Table::new([
         "system", "serial", "overlapped", "speedup", "hidden/epoch",
     ]);
-    for kind in kinds {
-        let base_cfg = cfg_for(scale, ds);
-        let serial = memo::run(&base_cfg, kind);
-        let over = memo::run(
-            &RunConfig {
-                overlap: true,
-                ..base_cfg
-            },
-            kind,
-        );
+    for (i, spec) in specs.iter().enumerate() {
+        let serial = grid.metrics(&[i, 0]);
+        let over = grid.metrics(&[i, 1]);
         // overlap never changes what a given schedule moves — but the
         // merge controller adapts its schedule on measured epoch times,
         // so the adapting strategies may legitimately take different
         // merge trajectories (and byte totals) across >2 epochs. Hard
         // byte parity is asserted only for fixed-schedule strategies.
-        if !kind.adapts_across_epochs() {
+        if !spec.adapts_across_epochs() {
             assert_eq!(
                 serial.total_bytes(),
                 over.total_bytes(),
                 "{}: overlap changed byte accounting",
-                kind.name()
+                spec.name()
             );
         }
         t.row([
-            kind.name().to_string(),
+            spec.name(),
             fmt_secs(serial.epoch_time),
             fmt_secs(over.epoch_time),
             format!("{:.2}x", serial.epoch_time / over.epoch_time),

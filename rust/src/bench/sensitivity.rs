@@ -5,7 +5,7 @@ use super::{Report, Scale};
 use crate::cluster::ModelFamily;
 use crate::config::RunConfig;
 use super::memo;
-use crate::coordinator::StrategyKind;
+use crate::coordinator::StrategySpec;
 use crate::util::table::{fmt_secs, Table};
 
 fn cfg_for(scale: Scale, ds: &str, model: ModelFamily) -> RunConfig {
@@ -33,10 +33,10 @@ pub fn fig20_gpu_util(scale: Scale) -> Report {
     let _ = memo::dataset(ds); // warm the cache
     let cfg = cfg_for(scale, ds, ModelFamily::Gat);
     let mut t = Table::new(["system", "busy %", "epoch"]);
-    for kind in [StrategyKind::Dgl, StrategyKind::P3, StrategyKind::HopGnn] {
+    for kind in [StrategySpec::dgl(), StrategySpec::p3(), StrategySpec::hopgnn()] {
         let m = memo::run(&cfg, kind);
         t.row([
-            kind.name().to_string(),
+            kind.name(),
             format!("{:.1}", m.gpu_busy_fraction * 100.0),
             fmt_secs(m.epoch_time),
         ]);
@@ -62,8 +62,8 @@ pub fn fig22_batch_featdim(scale: Scale) -> Report {
     for &b in &batches {
         let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gcn);
         cfg.batch_size = b;
-        let dgl = memo::run(&cfg, StrategyKind::Dgl);
-        let hop = memo::run(&cfg, StrategyKind::HopGnn);
+        let dgl = memo::run(&cfg, StrategySpec::dgl());
+        let hop = memo::run(&cfg, StrategySpec::hopgnn());
         t.row([
             b.to_string(),
             fmt_secs(dgl.epoch_time),
@@ -82,8 +82,8 @@ pub fn fig22_batch_featdim(scale: Scale) -> Report {
     for &fd in &dims {
         let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gcn);
         cfg.feat_dim_override = Some(fd);
-        let dgl = memo::run(&cfg, StrategyKind::Dgl);
-        let hop = memo::run(&cfg, StrategyKind::HopGnn);
+        let dgl = memo::run(&cfg, StrategySpec::dgl());
+        let hop = memo::run(&cfg, StrategySpec::hopgnn());
         t.row([
             fd.to_string(),
             fmt_secs(dgl.epoch_time),
@@ -113,8 +113,8 @@ pub fn fig23_fanout_machines(scale: Scale) -> Report {
         let mut cfg = cfg_for(scale, "products-s", ModelFamily::Gcn);
         cfg.fanout = f;
         cfg.vmax = (1 + f + f * f).min(512).next_power_of_two();
-        let dgl = memo::run(&cfg, StrategyKind::Dgl);
-        let hop = memo::run(&cfg, StrategyKind::HopGnn);
+        let dgl = memo::run(&cfg, StrategySpec::dgl());
+        let hop = memo::run(&cfg, StrategySpec::hopgnn());
         t.row([
             f.to_string(),
             fmt_secs(dgl.epoch_time),
@@ -135,8 +135,8 @@ pub fn fig23_fanout_machines(scale: Scale) -> Report {
         cfg.num_servers = n;
         // weak scaling, as in the paper: per-server batch share fixed
         cfg.batch_size = (scale.batch / 4) * n;
-        let dgl = memo::run(&cfg, StrategyKind::Dgl);
-        let hop = memo::run(&cfg, StrategyKind::HopGnn);
+        let dgl = memo::run(&cfg, StrategySpec::dgl());
+        let hop = memo::run(&cfg, StrategySpec::hopgnn());
         t.row([
             n.to_string(),
             fmt_secs(dgl.epoch_time),

@@ -1,0 +1,526 @@
+//! Declarative sweep engine: experiments as cartesian grids of named
+//! axes instead of hand-rolled nested loops.
+//!
+//! A [`SweepSpec`] is a base [`RunConfig`] + default [`StrategySpec`] +
+//! a list of [`Axis`]es. Each axis value is either a strategy spec or a
+//! batch of `key = value` config patches (the same keys
+//! [`RunConfig::set`] accepts), so *anything* the config can express is
+//! sweepable — fabrics, cache policies, capacities, overlap, datasets,
+//! models, cost constants. [`SweepSpec::run`] expands the full product
+//! (validating every cell *before* running any), executes each cell
+//! through the memoized runner ([`super::memo`]), and returns a
+//! [`SweepGrid`] the experiment renders into its [`super::Report`] —
+//! or, for the `bench sweep` CLI path, via the generic
+//! [`SweepGrid::table`].
+//!
+//! The four grid-shaped experiments (`hetero`, `cachesweep`, `overlap`,
+//! and the ablation figures) are all built on this engine; only
+//! trajectory experiments that need per-epoch history (Fig 17) still
+//! drive strategies directly.
+
+use super::memo;
+use crate::cluster::FabricSpec;
+use crate::config::RunConfig;
+use crate::coordinator::StrategySpec;
+use crate::featstore::cache::CachePolicy;
+use crate::graph::datasets;
+use crate::metrics::EpochMetrics;
+use crate::util::table::{fmt_bytes, fmt_secs, Table};
+use std::collections::BTreeSet;
+
+/// One point on an axis: a strategy, or a labeled batch of config
+/// patches applied through [`RunConfig::set`].
+#[derive(Clone)]
+pub enum AxisValue {
+    /// Selects the strategy for the cell (overrides the sweep default).
+    Strategy(StrategySpec),
+    /// Applies `key = value` patches to the cell's config.
+    Patch {
+        label: String,
+        kv: Vec<(String, String)>,
+    },
+}
+
+impl AxisValue {
+    /// Display label for grid lookups and the generic table.
+    pub fn label(&self) -> String {
+        match self {
+            Self::Strategy(s) => s.name(),
+            Self::Patch { label, .. } => label.clone(),
+        }
+    }
+}
+
+/// A named list of sweep points; the grid is the product of all axes.
+#[derive(Clone)]
+pub struct Axis {
+    pub name: String,
+    pub values: Vec<AxisValue>,
+}
+
+impl Axis {
+    pub fn new(name: impl Into<String>, values: Vec<AxisValue>) -> Self {
+        Self {
+            name: name.into(),
+            values,
+        }
+    }
+
+    /// Strategy axis: one cell per spec.
+    pub fn strategies(specs: &[StrategySpec]) -> Self {
+        Self::new(
+            "strategy",
+            specs.iter().map(|&s| AxisValue::Strategy(s)).collect(),
+        )
+    }
+
+    /// Generic single-key axis: label == value (e.g. a `dataset` axis).
+    pub fn key(key: &str, values: &[&str]) -> Self {
+        Self::new(
+            key,
+            values
+                .iter()
+                .map(|v| AxisValue::Patch {
+                    label: (*v).to_string(),
+                    kv: vec![(key.to_string(), (*v).to_string())],
+                })
+                .collect(),
+        )
+    }
+
+    /// Fabric-topology axis over named [`FabricSpec`]s.
+    pub fn fabrics(specs: &[FabricSpec]) -> Self {
+        Self::new(
+            "fabric",
+            specs
+                .iter()
+                .map(|f| AxisValue::Patch {
+                    label: f.name(),
+                    kv: vec![("fabric".to_string(), f.name())],
+                })
+                .collect(),
+        )
+    }
+
+    /// Overlap axis (`serial` / `overlap` cells).
+    pub fn overlap(values: &[bool]) -> Self {
+        Self::new(
+            "overlap",
+            values
+                .iter()
+                .map(|&b| AxisValue::Patch {
+                    label: if b { "overlap" } else { "serial" }.to_string(),
+                    kv: vec![("overlap".to_string(), b.to_string())],
+                })
+                .collect(),
+        )
+    }
+
+    /// Feature-cache policy axis.
+    pub fn cache_policies(policies: &[CachePolicy]) -> Self {
+        Self::new(
+            "cache",
+            policies
+                .iter()
+                .map(|p| AxisValue::Patch {
+                    label: p.name().to_string(),
+                    kv: vec![("cache".to_string(), p.name().to_string())],
+                })
+                .collect(),
+        )
+    }
+
+    /// Feature-cache capacity ladder (MiB per server).
+    pub fn cache_capacities_mb(caps: &[usize]) -> Self {
+        Self::new(
+            "cache_mb",
+            caps.iter()
+                .map(|&mb| AxisValue::Patch {
+                    label: format!("{mb} MiB"),
+                    kv: vec![("cache_mb".to_string(), mb.to_string())],
+                })
+                .collect(),
+        )
+    }
+
+    /// Fully general patch axis: named values, each a list of
+    /// `key = value` settings.
+    pub fn patches(
+        name: impl Into<String>,
+        values: Vec<(String, Vec<(String, String)>)>,
+    ) -> Self {
+        Self::new(
+            name,
+            values
+                .into_iter()
+                .map(|(label, kv)| AxisValue::Patch { label, kv })
+                .collect(),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn label(&self, i: usize) -> String {
+        self.values[i].label()
+    }
+}
+
+/// One expanded (not yet executed) cell: grid index, strategy, config.
+pub type ExpandedCell = (Vec<usize>, StrategySpec, RunConfig);
+
+/// A declarative experiment: base config, default strategy, axes.
+pub struct SweepSpec {
+    pub base: RunConfig,
+    pub strategy: StrategySpec,
+    pub axes: Vec<Axis>,
+}
+
+impl SweepSpec {
+    pub fn new(base: RunConfig, strategy: StrategySpec) -> Self {
+        Self {
+            base,
+            strategy,
+            axes: Vec::new(),
+        }
+    }
+
+    /// Append an axis (builder style). Later axes vary fastest.
+    pub fn axis(mut self, axis: Axis) -> Self {
+        self.axes.push(axis);
+        self
+    }
+
+    /// Cells in the full product.
+    pub fn num_cells(&self) -> usize {
+        self.axes.iter().map(Axis::len).product()
+    }
+
+    /// Expand the cartesian grid into (index, strategy, config) cells in
+    /// row-major order (last axis fastest), validating every strategy
+    /// spec, config patch, and dataset name — a bad cell fails the
+    /// whole sweep here, before anything has run. A cell's strategy is
+    /// resolved as: strategy-axis value, else the config's `strategy =`
+    /// field (base or patched), else [`SweepSpec::strategy`].
+    pub fn expand(&self) -> Result<Vec<ExpandedCell>, String> {
+        for ax in &self.axes {
+            if ax.is_empty() {
+                return Err(format!("sweep axis '{}' has no values", ax.name));
+            }
+        }
+        self.strategy
+            .validate()
+            .map_err(|e| format!("sweep base strategy: {e}"))?;
+        let total = self.num_cells();
+        let mut cells = Vec::with_capacity(total);
+        let mut index = vec![0usize; self.axes.len()];
+        for _ in 0..total {
+            let mut cfg = self.base.clone();
+            let mut axis_strategy = None;
+            for (ax, &i) in self.axes.iter().zip(&index) {
+                match &ax.values[i] {
+                    AxisValue::Strategy(s) => {
+                        s.validate().map_err(|e| {
+                            format!("sweep axis '{}' value '{s}': {e}", ax.name)
+                        })?;
+                        axis_strategy = Some(*s);
+                    }
+                    AxisValue::Patch { label, kv } => {
+                        for (k, v) in kv {
+                            cfg.set(k, v).map_err(|e| {
+                                format!(
+                                    "sweep axis '{}' value '{label}': {e}",
+                                    ax.name
+                                )
+                            })?;
+                        }
+                    }
+                }
+            }
+            // the runner loads datasets by name and panics on unknown
+            // ones; catch that here so the fail-fast promise holds for
+            // the dataset axis too
+            if datasets::spec_by_name(&cfg.dataset).is_none() {
+                return Err(format!(
+                    "sweep cell has unknown dataset '{}'",
+                    cfg.dataset
+                ));
+            }
+            // strategy resolution: a strategy axis wins, then a
+            // `strategy =` config patch, then the sweep default
+            let strategy =
+                axis_strategy.or(cfg.strategy).unwrap_or(self.strategy);
+            strategy.validate().map_err(|e| {
+                format!("sweep cell strategy '{strategy}': {e}")
+            })?;
+            cells.push((index.clone(), strategy, cfg));
+            // odometer: advance the last axis first
+            for d in (0..index.len()).rev() {
+                index[d] += 1;
+                if index[d] < self.axes[d].len() {
+                    break;
+                }
+                index[d] = 0;
+            }
+        }
+        Ok(cells)
+    }
+
+    /// Expand, warm the dataset memo for every distinct dataset, and
+    /// execute every cell through [`memo::run`].
+    pub fn run(&self) -> Result<SweepGrid, String> {
+        let expanded = self.expand()?;
+        let mut seen = BTreeSet::new();
+        for (_, _, cfg) in &expanded {
+            if seen.insert(cfg.dataset.clone()) {
+                let _ = memo::dataset(&cfg.dataset);
+            }
+        }
+        let mut cells = Vec::with_capacity(expanded.len());
+        for (index, strategy, cfg) in expanded {
+            let metrics = memo::run(&cfg, strategy);
+            cells.push(SweepCell {
+                index,
+                strategy,
+                cfg,
+                metrics,
+            });
+        }
+        Ok(SweepGrid {
+            axes: self.axes.clone(),
+            cells,
+        })
+    }
+}
+
+/// One executed grid point.
+pub struct SweepCell {
+    /// Position along each axis (same order as [`SweepGrid::axes`]).
+    pub index: Vec<usize>,
+    pub strategy: StrategySpec,
+    pub cfg: RunConfig,
+    pub metrics: EpochMetrics,
+}
+
+/// The executed product grid, indexable by per-axis positions.
+pub struct SweepGrid {
+    pub axes: Vec<Axis>,
+    /// Row-major over the axes (last axis fastest).
+    pub cells: Vec<SweepCell>,
+}
+
+impl SweepGrid {
+    /// The cell at the given per-axis positions.
+    pub fn get(&self, index: &[usize]) -> &SweepCell {
+        assert_eq!(
+            index.len(),
+            self.axes.len(),
+            "sweep index rank mismatch"
+        );
+        let mut flat = 0usize;
+        for (d, &i) in index.iter().enumerate() {
+            assert!(
+                i < self.axes[d].len(),
+                "axis '{}': index {i} out of range",
+                self.axes[d].name
+            );
+            flat = flat * self.axes[d].len() + i;
+        }
+        &self.cells[flat]
+    }
+
+    /// Shorthand for `get(index).metrics`.
+    pub fn metrics(&self, index: &[usize]) -> &EpochMetrics {
+        &self.get(index).metrics
+    }
+
+    /// Generic rendering for the `bench sweep` CLI: one row per cell
+    /// with the axis labels and the headline metrics.
+    pub fn table(&self) -> Table {
+        let has_strategy_axis = self
+            .axes
+            .iter()
+            .any(|a| matches!(a.values.first(), Some(AxisValue::Strategy(_))));
+        let mut headers: Vec<String> = Vec::new();
+        if !has_strategy_axis {
+            headers.push("strategy".to_string());
+        }
+        headers.extend(self.axes.iter().map(|a| a.name.clone()));
+        for h in ["epoch", "feat moved", "total moved", "hit rate", "steps/iter"]
+        {
+            headers.push(h.to_string());
+        }
+        let mut t = Table::new(headers);
+        for cell in &self.cells {
+            let m = &cell.metrics;
+            let mut row: Vec<String> = Vec::new();
+            if !has_strategy_axis {
+                row.push(cell.strategy.name());
+            }
+            for (d, &i) in cell.index.iter().enumerate() {
+                row.push(self.axes[d].label(i));
+            }
+            row.push(fmt_secs(m.epoch_time));
+            row.push(fmt_bytes(
+                m.bytes(crate::cluster::TransferKind::Feature),
+            ));
+            row.push(fmt_bytes(m.total_bytes()));
+            row.push(format!("{:.1}%", m.cache_hit_rate() * 100.0));
+            row.push(format!("{:.1}", m.time_steps_per_iter));
+            t.row(row);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_base() -> RunConfig {
+        RunConfig {
+            dataset: "arxiv-s".into(),
+            batch_size: 128,
+            epochs: 1,
+            max_iterations: Some(1),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn expansion_is_row_major_and_patches_apply() {
+        let spec = SweepSpec::new(tiny_base(), StrategySpec::dgl())
+            .axis(Axis::strategies(&[
+                StrategySpec::dgl(),
+                StrategySpec::hopgnn(),
+            ]))
+            .axis(Axis::overlap(&[false, true]));
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        // last axis fastest: (dgl, serial), (dgl, overlap), (hop, ...)
+        assert_eq!(cells[0].0, vec![0, 0]);
+        assert_eq!(cells[1].0, vec![0, 1]);
+        assert_eq!(cells[2].0, vec![1, 0]);
+        assert!(!cells[0].2.overlap);
+        assert!(cells[1].2.overlap);
+        assert_eq!(cells[2].1, StrategySpec::hopgnn());
+        assert_eq!(cells[0].1, StrategySpec::dgl());
+    }
+
+    #[test]
+    fn bad_cells_fail_the_whole_sweep_before_running() {
+        // invalid strategy spec in an axis
+        let spec = SweepSpec::new(tiny_base(), StrategySpec::dgl()).axis(
+            Axis::strategies(&[StrategySpec::dgl().pregather(true)]),
+        );
+        let e = spec.expand().unwrap_err();
+        assert!(e.contains("micrograph"), "{e}");
+        // invalid config patch
+        let spec = SweepSpec::new(tiny_base(), StrategySpec::dgl()).axis(
+            Axis::key("fabric", &["mesh"]),
+        );
+        let e = spec.expand().unwrap_err();
+        assert!(e.contains("fabric"), "{e}");
+        // unknown dataset (the runner would panic; expand must catch it)
+        let spec = SweepSpec::new(tiny_base(), StrategySpec::dgl())
+            .axis(Axis::key("dataset", &["arxiv-s", "prodcts-s"]));
+        let e = spec.expand().unwrap_err();
+        assert!(e.contains("unknown dataset 'prodcts-s'"), "{e}");
+        // empty axis
+        let spec = SweepSpec::new(tiny_base(), StrategySpec::dgl())
+            .axis(Axis::strategies(&[]));
+        assert!(spec.expand().unwrap_err().contains("no values"));
+    }
+
+    #[test]
+    fn strategy_config_patches_select_the_cell_strategy() {
+        // `strategy = <spec>` works as a patch axis (and in the base
+        // config), losing only to an explicit strategy axis
+        let spec = SweepSpec::new(tiny_base(), StrategySpec::dgl())
+            .axis(Axis::key("strategy", &["p3", "hopgnn-merge"]));
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells[0].1, StrategySpec::p3());
+        assert_eq!(cells[1].1, StrategySpec::hopgnn_mg_pg());
+        // base-config strategy beats the sweep default
+        let mut base = tiny_base();
+        base.strategy = Some(StrategySpec::locality_opt());
+        let cells = SweepSpec::new(base, StrategySpec::dgl())
+            .expand()
+            .unwrap();
+        assert_eq!(cells[0].1, StrategySpec::locality_opt());
+        // ...but an explicit strategy axis wins over the patch
+        let spec = SweepSpec::new(tiny_base(), StrategySpec::dgl())
+            .axis(Axis::key("strategy", &["p3"]))
+            .axis(Axis::strategies(&[StrategySpec::naive()]));
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells[0].1, StrategySpec::naive());
+    }
+
+    #[test]
+    fn executed_grid_matches_direct_memo_runs() {
+        let spec = SweepSpec::new(tiny_base(), StrategySpec::dgl())
+            .axis(Axis::strategies(&[
+                StrategySpec::dgl(),
+                StrategySpec::hopgnn_mg_pg(),
+            ]))
+            .axis(Axis::overlap(&[false, true]));
+        let grid = spec.run().unwrap();
+        assert_eq!(grid.cells.len(), 4);
+        for (si, strat) in
+            [StrategySpec::dgl(), StrategySpec::hopgnn_mg_pg()]
+                .into_iter()
+                .enumerate()
+        {
+            for (oi, overlap) in [false, true].into_iter().enumerate() {
+                let direct = memo::run(
+                    &RunConfig {
+                        overlap,
+                        ..tiny_base()
+                    },
+                    strat,
+                );
+                let cell = grid.get(&[si, oi]);
+                assert_eq!(cell.strategy, strat);
+                assert_eq!(
+                    cell.metrics.epoch_time.to_bits(),
+                    direct.epoch_time.to_bits(),
+                    "{strat} overlap={overlap}"
+                );
+                assert_eq!(
+                    cell.metrics.total_bytes(),
+                    direct.total_bytes()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generic_table_renders_every_cell() {
+        let grid = SweepSpec::new(tiny_base(), StrategySpec::dgl())
+            .axis(Axis::fabrics(&[
+                FabricSpec::Uniform,
+                FabricSpec::Straggler { server: 0 },
+            ]))
+            .run()
+            .unwrap();
+        let s = grid.table().render();
+        assert!(s.contains("uniform"), "{s}");
+        assert!(s.contains("straggler:0"), "{s}");
+        // no strategy axis: the default strategy column is prepended
+        assert!(s.contains("DGL"), "{s}");
+    }
+
+    #[test]
+    fn zero_axes_is_a_single_cell() {
+        let grid = SweepSpec::new(tiny_base(), StrategySpec::dgl())
+            .run()
+            .unwrap();
+        assert_eq!(grid.cells.len(), 1);
+        assert!(grid.metrics(&[]).epoch_time > 0.0);
+    }
+}

@@ -8,9 +8,41 @@
 use crate::cluster::{
     CostModel, FabricSpec, ModelFamily, ModelShape, NetworkModel,
 };
+use crate::coordinator::StrategySpec;
 use crate::featstore::cache::CachePolicy;
 use crate::partition::PartitionAlgo;
 use crate::sampler::{SampleConfig, SamplerKind};
+
+/// Every key [`RunConfig::set`] accepts (primary spellings), listed in
+/// unknown-key errors so a config-file typo names its alternatives.
+pub const VALID_KEYS: [&str; 26] = [
+    "dataset",
+    "model",
+    "layers",
+    "hidden",
+    "servers",
+    "batch_size",
+    "fanout",
+    "vmax",
+    "sampler",
+    "partition",
+    "strategy",
+    "epochs",
+    "seed",
+    "latency",
+    "bandwidth",
+    "fabric",
+    "flops",
+    "t_launch",
+    "t_sync",
+    "max_iterations",
+    "feat_dim",
+    "overlap",
+    "parallel_lanes",
+    "cache",
+    "cache_mb",
+    "cache_persist",
+];
 
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -64,6 +96,11 @@ pub struct RunConfig {
     /// the next epoch's driver session instead of starting cold. Off =
     /// the per-epoch caches of the cache-subsystem PR, byte-for-byte.
     pub cache_persist: bool,
+    /// Strategy pinned by the config file (`strategy = hopgnn+fa-pg`,
+    /// spec grammar or legacy alias). `None` leaves the choice to the
+    /// caller (`sim --strategy` / the harness); an explicit CLI
+    /// `--strategy` always wins over the file.
+    pub strategy: Option<StrategySpec>,
 }
 
 impl Default for RunConfig {
@@ -91,6 +128,7 @@ impl Default for RunConfig {
             cache_policy: CachePolicy::None,
             cache_mb: 64,
             cache_persist: false,
+            strategy: None,
         }
     }
 }
@@ -201,6 +239,7 @@ impl RunConfig {
                 self.partition_algo = PartitionAlgo::from_str(val)
                     .ok_or_else(|| format!("unknown partitioner '{val}'"))?
             }
+            "strategy" => self.strategy = Some(val.parse()?),
             "epochs" => self.epochs = us(val)?,
             "seed" => self.seed = us(val)? as u64,
             "latency" => self.net.latency = fl(val)?,
@@ -226,7 +265,12 @@ impl RunConfig {
             }
             "cache_mb" => self.cache_mb = us(val)?,
             "cache_persist" => self.cache_persist = bl(val)?,
-            _ => return Err(format!("unknown config key '{key}'")),
+            _ => {
+                return Err(format!(
+                    "unknown config key '{key}'; valid keys: {}",
+                    VALID_KEYS.join(", ")
+                ))
+            }
         }
         Ok(())
     }
@@ -269,6 +313,35 @@ mod tests {
         assert!(RunConfig::from_kv("model = resnet").is_err());
         assert!(RunConfig::from_kv("just a line").is_err());
         assert!(RunConfig::from_kv("overlap = maybe").is_err());
+    }
+
+    #[test]
+    fn unknown_key_error_lists_the_valid_keys() {
+        let e = RunConfig::from_kv("strategyy = dgl").unwrap_err();
+        assert!(e.contains("unknown config key 'strategyy'"), "{e}");
+        for key in VALID_KEYS {
+            assert!(e.contains(key), "error must list '{key}': {e}");
+        }
+    }
+
+    #[test]
+    fn strategy_key_pins_a_spec() {
+        let cfg = RunConfig::from_kv("strategy = hopgnn+fa-pg").unwrap();
+        assert_eq!(
+            cfg.strategy,
+            Some(
+                StrategySpec::hopgnn()
+                    .merge(crate::coordinator::Merge::FabricAware)
+                    .pregather(false)
+            )
+        );
+        // legacy aliases work in config files too
+        let cfg = RunConfig::from_kv("strategy = rd").unwrap();
+        assert_eq!(cfg.strategy.unwrap().to_string(), "hopgnn+rd");
+        assert_eq!(RunConfig::default().strategy, None);
+        // invalid combos surface the grammar's rule
+        let e = RunConfig::from_kv("strategy = dgl+pg").unwrap_err();
+        assert!(e.contains("micrograph"), "{e}");
     }
 
     #[test]

@@ -63,16 +63,15 @@ impl HopGnn {
     }
 
     /// Fig 18's RD baseline: merging with random step selection.
-    /// Reachable end-to-end as `StrategyKind::HopGnnRandomMerge`
-    /// (`--strategy rd`).
+    /// Reachable end-to-end as the `hopgnn+rd` spec (`--strategy rd`).
     pub fn random_merge() -> Self {
         Self::with_flags(true, true, Selection::Random)
     }
 
     /// Fabric-aware merging: the controller weights per-worker
     /// micrograph counts by observed lane compute times, so merging
-    /// load-balances away from stragglers. Reachable end-to-end as
-    /// `StrategyKind::HopGnnFabric` (`--strategy fa`).
+    /// load-balances away from stragglers. Reachable end-to-end as the
+    /// `hopgnn+fa` spec (`--strategy fa`).
     pub fn fabric_aware() -> Self {
         Self::with_flags(true, true, Selection::FabricAware)
     }

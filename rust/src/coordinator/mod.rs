@@ -16,14 +16,29 @@
 //! gathers ([`ops::Op::CacheFetch`]) can skip transfers for hot remote
 //! rows when [`crate::config::RunConfig::cache_policy`] is set.
 //!
-//! | strategy            | schedule it builds                          | paper role                |
-//! |---------------------|---------------------------------------------|---------------------------|
-//! | [`model_centric`]   | sample → gather → compute per server        | DGL baseline              |
-//! | [`p3`]              | MP layer-1 + hidden push-pull, then DP      | P³ (state of the art)     |
-//! | [`naive_fc`]        | model walk dragging intermediate state      | §3.2 strawman             |
-//! | [`hopgnn`]          | redistribute → pre-gather → T migration steps| the contribution (§5)    |
-//! | [`locality_opt`]    | redistribute only, no migration             | LO, accuracy-compromising |
-//! | [`neutronstar`]     | full-batch boundary exchange / hybrid       | §7.7 comparison           |
+//! ## Strategy specs: the ablation space as a product of axes
+//!
+//! Strategies are selected by a composable [`StrategySpec`] — a value
+//! with one field per orthogonal axis (`base`, `micrograph`,
+//! `pregather`, `merge`) instead of a closed enum of hand-written
+//! crosses. Specs parse from a canonical string grammar
+//! (`hopgnn+fa-pg` = fabric-aware merging without pre-gathering) and
+//! from every legacy alias (`dgl`, `rd`, `+mg`, …); see [`spec`] for
+//! the grammar, the builder API, and the combination rules.
+//!
+//! | base (`StrategySpec`) | schedule it builds                          | paper role                |
+//! |-----------------------|---------------------------------------------|---------------------------|
+//! | [`model_centric`] (`dgl`) | sample → gather → compute per server    | DGL baseline              |
+//! | [`p3`] (`p3`)         | MP layer-1 + hidden push-pull, then DP      | P³ (state of the art)     |
+//! | [`naive_fc`] (`naive`)| model walk dragging intermediate state      | §3.2 strawman             |
+//! | [`hopgnn`] (`hopgnn`) | redistribute → pre-gather → T migration steps| the contribution (§5)    |
+//! | [`locality_opt`] (`lo`)| redistribute only, no migration            | LO, accuracy-compromising |
+//! | [`neutronstar`] (`ns`, `dgl-fb`) | full-batch boundary exchange / hybrid | §7.7 comparison     |
+//!
+//! The `hopgnn` base composes with the micrograph/pre-gather/merge
+//! axes; the paper's ablation points are just named specs
+//! ([`StrategySpec::hopgnn_mg`], [`StrategySpec::hopgnn_mg_pg`], …)
+//! and new combinations need no new code.
 //!
 //! ## The cluster fabric
 //!
@@ -41,7 +56,7 @@
 //! reproduces the historical scalar-model accounting bit for bit —
 //! locked by `tests/parity.rs` and `tests/fabric_parity.rs`. HopGNN's
 //! merge controller additionally has a fabric-aware mode
-//! ([`StrategyKind::HopGnnFabric`]) that weights per-worker micrograph
+//! ([`spec::Merge::FabricAware`], `--strategy hopgnn+fa`) that weights per-worker micrograph
 //! counts by observed lane compute times, so merging load-balances
 //! under heterogeneous compute (see [`merge`]). The real (PJRT)
 //! trainer reuses the HopGNN/DGL/LO schedules — see `train/`.
@@ -55,9 +70,13 @@ pub mod naive_fc;
 pub mod neutronstar;
 pub mod ops;
 pub mod p3;
+pub mod spec;
 
 pub use engine::EpochDriver;
 pub use ops::{Op, Phase, Program, ProgramBuilder};
+pub use spec::{
+    Base, Merge, StrategySpec, ALL_BASES, ALL_LEGACY_SPECS, ALL_MERGES,
+};
 
 use crate::cluster::{Clocks, Fabric, ModelShape, NetStats, TransferKind};
 use crate::config::RunConfig;
@@ -65,7 +84,7 @@ use crate::featstore::cache::{self, CachePolicy, FeatureCache};
 use crate::featstore::FeatureStore;
 use crate::graph::datasets::Dataset;
 use crate::metrics::EpochMetrics;
-use crate::partition::{partition, Partition, PartitionAlgo};
+use crate::partition::{partition, Partition};
 use crate::sampler::{sample_micrograph, Micrograph};
 use crate::util::rng::Rng;
 use std::sync::OnceLock;
@@ -333,135 +352,25 @@ pub trait Strategy {
     }
 }
 
-/// Strategy selector for CLI / harness.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum StrategyKind {
-    Dgl,
-    P3,
-    Naive,
-    HopGnn,
-    HopGnnMgOnly,
-    HopGnnMgPg,
-    /// Fig 18's RD ablation: merging with random step selection.
-    HopGnnRandomMerge,
-    /// Fabric-aware merging: step selection and redistribution weighted
-    /// by observed per-server lane times (load balancing under
-    /// heterogeneous compute; see `merge::Selection::FabricAware`).
-    HopGnnFabric,
-    LocalityOpt,
-    NeutronStar,
-    DglFullBatch,
-}
-
-/// Every selectable strategy, in presentation order (harness sweeps).
-pub const ALL_STRATEGY_KINDS: [StrategyKind; 11] = [
-    StrategyKind::Dgl,
-    StrategyKind::P3,
-    StrategyKind::Naive,
-    StrategyKind::HopGnn,
-    StrategyKind::HopGnnMgOnly,
-    StrategyKind::HopGnnMgPg,
-    StrategyKind::HopGnnRandomMerge,
-    StrategyKind::HopGnnFabric,
-    StrategyKind::LocalityOpt,
-    StrategyKind::NeutronStar,
-    StrategyKind::DglFullBatch,
-];
-
-impl StrategyKind {
-    pub fn from_str(s: &str) -> Option<Self> {
-        match s {
-            "dgl" | "model-centric" => Some(Self::Dgl),
-            "p3" => Some(Self::P3),
-            "naive" | "naive-fc" => Some(Self::Naive),
-            "hopgnn" | "all" => Some(Self::HopGnn),
-            "hopgnn-mg" | "+mg" => Some(Self::HopGnnMgOnly),
-            "hopgnn-mg-pg" | "+pg" => Some(Self::HopGnnMgPg),
-            "hopgnn-rd" | "rd" => Some(Self::HopGnnRandomMerge),
-            "hopgnn-fa" | "fa" => Some(Self::HopGnnFabric),
-            "lo" | "locality-opt" => Some(Self::LocalityOpt),
-            "neutronstar" | "ns" => Some(Self::NeutronStar),
-            "dgl-fb" => Some(Self::DglFullBatch),
-            _ => None,
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Self::Dgl => "DGL",
-            Self::P3 => "P3",
-            Self::Naive => "Naive",
-            Self::HopGnn => "HopGNN",
-            Self::HopGnnMgOnly => "+MG",
-            Self::HopGnnMgPg => "+PG",
-            Self::HopGnnRandomMerge => "RD",
-            Self::HopGnnFabric => "HopGNN-FA",
-            Self::LocalityOpt => "LO",
-            Self::NeutronStar => "NeutronStar",
-            Self::DglFullBatch => "DGL-FB",
-        }
-    }
-
-    pub fn build(&self) -> Box<dyn Strategy> {
-        match self {
-            Self::Dgl => Box::new(model_centric::ModelCentric::new()),
-            Self::P3 => Box::new(p3::P3::new()),
-            Self::Naive => Box::new(naive_fc::NaiveFc::new()),
-            Self::HopGnn => Box::new(hopgnn::HopGnn::full()),
-            Self::HopGnnMgOnly => Box::new(hopgnn::HopGnn::mg_only()),
-            Self::HopGnnMgPg => Box::new(hopgnn::HopGnn::mg_pg()),
-            Self::HopGnnRandomMerge => {
-                Box::new(hopgnn::HopGnn::random_merge())
-            }
-            Self::HopGnnFabric => Box::new(hopgnn::HopGnn::fabric_aware()),
-            Self::LocalityOpt => Box::new(locality_opt::LocalityOpt::new()),
-            Self::NeutronStar => {
-                Box::new(neutronstar::NeutronStar::new(false))
-            }
-            Self::DglFullBatch => {
-                Box::new(neutronstar::NeutronStar::new(true))
-            }
-        }
-    }
-
-    /// P³'s design requires hash partitioning; everything else defaults
-    /// to the config's partitioner.
-    pub fn preferred_partition(&self) -> Option<PartitionAlgo> {
-        match self {
-            Self::P3 => Some(PartitionAlgo::Hash),
-            _ => None,
-        }
-    }
-
-    /// Strategies whose merge controller adapts the schedule across
-    /// epochs (report the final frozen epoch as steady state).
-    pub fn adapts_across_epochs(&self) -> bool {
-        matches!(
-            self,
-            Self::HopGnn | Self::HopGnnRandomMerge | Self::HopGnnFabric
-        )
-    }
-}
-
-/// Convenience: run a (strategy, config) pair end to end and return the
-/// average epoch (the paper's reporting convention).
+/// Convenience: run a (strategy spec, config) pair end to end and
+/// return the average epoch (the paper's reporting convention).
 pub fn run_strategy(
     dataset: &Dataset,
     cfg: &RunConfig,
-    kind: StrategyKind,
+    spec: StrategySpec,
 ) -> EpochMetrics {
     let mut cfg = cfg.clone();
-    if let Some(pa) = kind.preferred_partition() {
+    if let Some(pa) = spec.preferred_partition() {
         cfg.partition_algo = pa;
     }
     let epochs = cfg.epochs;
     let mut env = SimEnv::new(dataset, cfg);
-    let mut strat = kind.build();
+    let mut strat = spec.build();
     let per_epoch = strat.run(&mut env, epochs);
     // HopGNN adapts its schedule across epochs (merging probe); report
     // the final (frozen) epoch as steady state, like the paper's
     // "remainder of the training" framing in Fig 17.
-    let steady = if per_epoch.len() > 2 && kind.adapts_across_epochs() {
+    let steady = if per_epoch.len() > 2 && spec.adapts_across_epochs() {
         &per_epoch[per_epoch.len() - 1..]
     } else {
         &per_epoch[..]
@@ -632,42 +541,18 @@ mod tests {
     }
 
     #[test]
-    fn strategy_kind_parsing() {
-        assert_eq!(StrategyKind::from_str("dgl"), Some(StrategyKind::Dgl));
-        assert_eq!(
-            StrategyKind::from_str("hopgnn"),
-            Some(StrategyKind::HopGnn)
-        );
-        assert_eq!(
-            StrategyKind::from_str("rd"),
-            Some(StrategyKind::HopGnnRandomMerge)
-        );
-        assert_eq!(
-            StrategyKind::from_str("hopgnn-rd"),
-            Some(StrategyKind::HopGnnRandomMerge)
-        );
-        assert_eq!(StrategyKind::from_str("bogus"), None);
-    }
-
-    #[test]
-    fn every_kind_is_listed_and_buildable() {
-        for kind in ALL_STRATEGY_KINDS {
-            let s = kind.build();
-            assert!(!s.name().is_empty());
-            assert!(StrategyKind::from_str(match kind {
-                StrategyKind::Dgl => "dgl",
-                StrategyKind::P3 => "p3",
-                StrategyKind::Naive => "naive",
-                StrategyKind::HopGnn => "hopgnn",
-                StrategyKind::HopGnnMgOnly => "+mg",
-                StrategyKind::HopGnnMgPg => "+pg",
-                StrategyKind::HopGnnRandomMerge => "rd",
-                StrategyKind::HopGnnFabric => "fa",
-                StrategyKind::LocalityOpt => "lo",
-                StrategyKind::NeutronStar => "ns",
-                StrategyKind::DglFullBatch => "dgl-fb",
-            })
-            .is_some());
-        }
+    fn run_strategy_accepts_parsed_specs() {
+        let d = tiny_test_dataset(15);
+        let cfg = RunConfig {
+            batch_size: 40,
+            num_servers: 4,
+            epochs: 1,
+            max_iterations: Some(2),
+            ..Default::default()
+        };
+        let spec: StrategySpec = "hopgnn-merge".parse().unwrap();
+        let m = run_strategy(&d, &cfg, spec);
+        assert!(m.epoch_time > 0.0);
+        assert_eq!(m.iterations, 2);
     }
 }

@@ -1,0 +1,675 @@
+//! Composable strategy specifications: the ablation space as a product
+//! of orthogonal axes instead of a frozen enum.
+//!
+//! The paper's ablations (§7.3–§7.7) are *combinations* of mechanisms —
+//! micrograph training ± pre-gathering ± a merge policy — but the
+//! original selector was a closed 11-variant enum in which every cross
+//! (`+MG`, `+PG`, RD, FA, …) was a hand-written variant. A
+//! [`StrategySpec`] instead names the axes directly:
+//!
+//! | axis         | values                                   | paper mechanism |
+//! |--------------|------------------------------------------|-----------------|
+//! | `base`       | `dgl`, `p3`, `naive`, `hopgnn`, `lo`, `ns`, `dgl-fb` | which schedule builder |
+//! | `micrograph` | on/off                                   | §5.1 micrograph training |
+//! | `pregather`  | on/off                                   | §5.2 pre-gathering |
+//! | `merge`      | `Off`, `MinLoad`, `Random`, `FabricAware`| §5.3 step merging |
+//!
+//! New combinations are *composed*, not enumerated: fabric-aware
+//! merging without pre-gathering is
+//! `StrategySpec::hopgnn().merge(Merge::FabricAware).pregather(false)`
+//! — no new variant, no new match arms.
+//!
+//! ## String grammar
+//!
+//! [`std::fmt::Display`] and [`std::str::FromStr`] round-trip a
+//! canonical grammar: a base name followed by `+tok` / `-tok`
+//! modifiers, each a delta against the base's defaults:
+//!
+//! ```text
+//! hopgnn            the full system (mg + pg + min-load merging)
+//! hopgnn+fa         fabric-aware merging
+//! hopgnn+fa-pg      fabric-aware merging, pre-gathering off
+//! hopgnn-merge      mg + pg, no merging          (the paper's "+PG")
+//! hopgnn-merge-pg   mg only                      (the paper's "+MG")
+//! dgl, p3, naive, lo, ns, dgl-fb                 fixed-schedule bases
+//! ```
+//!
+//! Modifier tokens: `mg` / `pg` (set the booleans), `+ml` / `+rd` /
+//! `+fa` (pick a merge policy), `-merge` (disable merging). Illegal
+//! combinations are rejected with the rule that was violated — merging
+//! and pre-gathering require micrograph training, and the
+//! micrograph axes require the `hopgnn` base (the other bases have
+//! fixed schedules).
+//!
+//! Every legacy alias (`dgl`, `rd`, `fa`, `+mg`, `hopgnn-mg-pg`, …)
+//! still parses to the equivalent spec; `tests/spec_parity.rs` locks
+//! each one bit-identical to the pre-redesign dispatch.
+
+use super::hopgnn::HopGnn;
+use super::locality_opt::LocalityOpt;
+use super::merge::Selection;
+use super::model_centric::ModelCentric;
+use super::naive_fc::NaiveFc;
+use super::neutronstar::NeutronStar;
+use super::p3::P3;
+use super::Strategy;
+use crate::partition::PartitionAlgo;
+use std::fmt;
+use std::str::FromStr;
+
+/// The schedule-builder axis: which coordinator module compiles the
+/// epoch. Only [`Base::HopGnn`] composes with the other axes; the rest
+/// are fixed schedules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Base {
+    /// Model-centric data-parallel baseline ([`super::model_centric`]).
+    Dgl,
+    /// P³'s push-pull model/data parallelism ([`super::p3`]).
+    P3,
+    /// The §3.2 strawman feature-centric walk ([`super::naive_fc`]).
+    Naive,
+    /// Feature-centric model migration ([`super::hopgnn`]).
+    HopGnn,
+    /// Redistribution without migration ([`super::locality_opt`]).
+    LocalityOpt,
+    /// Full-batch hybrid boundary exchange ([`super::neutronstar`]).
+    NeutronStar,
+    /// Full-batch gather-everything baseline ([`super::neutronstar`]).
+    DglFullBatch,
+}
+
+/// Every base, in presentation order.
+pub const ALL_BASES: [Base; 7] = [
+    Base::Dgl,
+    Base::P3,
+    Base::Naive,
+    Base::HopGnn,
+    Base::LocalityOpt,
+    Base::NeutronStar,
+    Base::DglFullBatch,
+];
+
+impl Base {
+    /// The canonical grammar token (also parsed by [`StrategySpec`]'s
+    /// [`FromStr`]).
+    pub fn token(&self) -> &'static str {
+        match self {
+            Self::Dgl => "dgl",
+            Self::P3 => "p3",
+            Self::Naive => "naive",
+            Self::HopGnn => "hopgnn",
+            Self::LocalityOpt => "lo",
+            Self::NeutronStar => "ns",
+            Self::DglFullBatch => "dgl-fb",
+        }
+    }
+}
+
+/// The §5.3 merge-policy axis (requires micrograph training).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Merge {
+    /// No merging: the round-robin schedule stays at T = N steps.
+    Off,
+    /// The paper's scheme: merge the step with the fewest root vertices.
+    MinLoad,
+    /// Fig 18's RD ablation baseline: random step selection.
+    Random,
+    /// Selection and re-placement weighted by observed lane times
+    /// ([`Selection::FabricAware`]).
+    FabricAware,
+}
+
+/// Every merge policy, in presentation order.
+pub const ALL_MERGES: [Merge; 4] =
+    [Merge::Off, Merge::MinLoad, Merge::Random, Merge::FabricAware];
+
+impl Merge {
+    /// The canonical grammar token (`+ml` / `+rd` / `+fa`; `Off` is
+    /// spelled `-merge`).
+    pub fn token(&self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::MinLoad => "ml",
+            Self::Random => "rd",
+            Self::FabricAware => "fa",
+        }
+    }
+}
+
+/// A composed strategy: one value per axis. Construct with the builder
+/// API ([`StrategySpec::hopgnn`] + [`StrategySpec::merge()`] /
+/// [`StrategySpec::pregather()`] / [`StrategySpec::micrograph()`]) or
+/// parse the string grammar; validate before building.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StrategySpec {
+    pub base: Base,
+    /// §5.1 micrograph training (required by, and only legal with,
+    /// [`Base::HopGnn`]).
+    pub micrograph: bool,
+    /// §5.2 pre-gathering: one merged fetch per server per iteration.
+    pub pregather: bool,
+    /// §5.3 step merging policy.
+    pub merge: Merge,
+}
+
+/// The 11 specs of the pre-redesign `StrategyKind` enum, in its
+/// presentation order (harness sweeps iterate this).
+pub const ALL_LEGACY_SPECS: [StrategySpec; 11] = [
+    StrategySpec::dgl(),
+    StrategySpec::p3(),
+    StrategySpec::naive(),
+    StrategySpec::hopgnn(),
+    StrategySpec::hopgnn_mg(),
+    StrategySpec::hopgnn_mg_pg(),
+    StrategySpec::hopgnn_rd(),
+    StrategySpec::hopgnn_fa(),
+    StrategySpec::locality_opt(),
+    StrategySpec::neutronstar(),
+    StrategySpec::dgl_full_batch(),
+];
+
+/// Legacy display names for the specs the old enum could express (the
+/// figure labels every report table uses).
+const LEGACY_NAMES: [(StrategySpec, &str); 11] = [
+    (StrategySpec::dgl(), "DGL"),
+    (StrategySpec::p3(), "P3"),
+    (StrategySpec::naive(), "Naive"),
+    (StrategySpec::hopgnn(), "HopGNN"),
+    (StrategySpec::hopgnn_mg(), "+MG"),
+    (StrategySpec::hopgnn_mg_pg(), "+PG"),
+    (StrategySpec::hopgnn_rd(), "RD"),
+    (StrategySpec::hopgnn_fa(), "HopGNN-FA"),
+    (StrategySpec::locality_opt(), "LO"),
+    (StrategySpec::neutronstar(), "NeutronStar"),
+    (StrategySpec::dgl_full_batch(), "DGL-FB"),
+];
+
+impl StrategySpec {
+    /// Every axis at the given base's defaults: the full system for
+    /// [`Base::HopGnn`], everything off for the fixed-schedule bases.
+    pub const fn base_default(base: Base) -> Self {
+        match base {
+            Base::HopGnn => Self {
+                base,
+                micrograph: true,
+                pregather: true,
+                merge: Merge::MinLoad,
+            },
+            _ => Self {
+                base,
+                micrograph: false,
+                pregather: false,
+                merge: Merge::Off,
+            },
+        }
+    }
+
+    /// The DGL model-centric baseline.
+    pub const fn dgl() -> Self {
+        Self::base_default(Base::Dgl)
+    }
+
+    /// P³ push-pull parallelism.
+    pub const fn p3() -> Self {
+        Self::base_default(Base::P3)
+    }
+
+    /// The §3.2 naive feature-centric strawman.
+    pub const fn naive() -> Self {
+        Self::base_default(Base::Naive)
+    }
+
+    /// The full HopGNN system: micrographs + pre-gathering + min-load
+    /// merging.
+    pub const fn hopgnn() -> Self {
+        Self::base_default(Base::HopGnn)
+    }
+
+    /// The locality-optimized accuracy foil.
+    pub const fn locality_opt() -> Self {
+        Self::base_default(Base::LocalityOpt)
+    }
+
+    /// NeutronStar's full-batch hybrid.
+    pub const fn neutronstar() -> Self {
+        Self::base_default(Base::NeutronStar)
+    }
+
+    /// The full-batch DGL baseline.
+    pub const fn dgl_full_batch() -> Self {
+        Self::base_default(Base::DglFullBatch)
+    }
+
+    /// Fig 13's `+MG`: micrograph training only.
+    pub const fn hopgnn_mg() -> Self {
+        Self::hopgnn().pregather(false).merge(Merge::Off)
+    }
+
+    /// Fig 13's `+PG`: micrographs + pre-gathering, no merging.
+    pub const fn hopgnn_mg_pg() -> Self {
+        Self::hopgnn().merge(Merge::Off)
+    }
+
+    /// Fig 18's RD ablation: random merge-step selection.
+    pub const fn hopgnn_rd() -> Self {
+        Self::hopgnn().merge(Merge::Random)
+    }
+
+    /// Fabric-aware merging (load balancing under heterogeneity).
+    pub const fn hopgnn_fa() -> Self {
+        Self::hopgnn().merge(Merge::FabricAware)
+    }
+
+    /// Set the micrograph axis (builder style, by value).
+    pub const fn micrograph(mut self, on: bool) -> Self {
+        self.micrograph = on;
+        self
+    }
+
+    /// Set the pre-gathering axis (builder style, by value).
+    pub const fn pregather(mut self, on: bool) -> Self {
+        self.pregather = on;
+        self
+    }
+
+    /// Set the merge-policy axis (builder style, by value).
+    pub const fn merge(mut self, merge: Merge) -> Self {
+        self.merge = merge;
+        self
+    }
+
+    /// Check the combination rules. Parsing validates automatically;
+    /// builder-composed specs are validated by [`Self::build`] and the
+    /// sweep engine.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.base == Base::HopGnn && !self.micrograph {
+            return Err(
+                "base 'hopgnn' trains on micrographs by definition, so \
+                 '-mg' is not a valid combination (the model-centric \
+                 baseline is 'dgl'; the non-micrograph feature-centric \
+                 one is 'naive')"
+                    .to_string(),
+            );
+        }
+        if self.base != Base::HopGnn && self.micrograph {
+            return Err(format!(
+                "base '{}' has a fixed schedule; the micrograph axis \
+                 ('+mg') requires base 'hopgnn'",
+                self.base.token()
+            ));
+        }
+        if self.pregather && !self.micrograph {
+            return Err(
+                "pre-gathering ('+pg') requires micrograph training"
+                    .to_string(),
+            );
+        }
+        if self.merge != Merge::Off && !self.micrograph {
+            return Err(format!(
+                "merging ('+{}') requires micrograph training",
+                self.merge.token()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Display name for report tables: the historical figure label when
+    /// the spec matches a legacy variant, the canonical grammar string
+    /// for new combinations.
+    pub fn name(&self) -> String {
+        for (spec, name) in &LEGACY_NAMES {
+            if self == spec {
+                return (*name).to_string();
+            }
+        }
+        self.to_string()
+    }
+
+    /// Instantiate the strategy this spec describes.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the spec violates the combination rules — parse
+    /// user-supplied strings through [`FromStr`] (which validates) and
+    /// call [`Self::validate`] on builder-composed specs first.
+    pub fn build(&self) -> Box<dyn Strategy> {
+        if let Err(e) = self.validate() {
+            panic!("invalid strategy spec '{}': {e}", self);
+        }
+        match self.base {
+            Base::Dgl => Box::new(ModelCentric::new()),
+            Base::P3 => Box::new(P3::new()),
+            Base::Naive => Box::new(NaiveFc::new()),
+            Base::HopGnn => Box::new(HopGnn::with_flags(
+                self.pregather,
+                self.merge != Merge::Off,
+                self.selection(),
+            )),
+            Base::LocalityOpt => Box::new(LocalityOpt::new()),
+            Base::NeutronStar => Box::new(NeutronStar::new(false)),
+            Base::DglFullBatch => Box::new(NeutronStar::new(true)),
+        }
+    }
+
+    /// The merge controller's selection scheme for this spec.
+    fn selection(&self) -> Selection {
+        match self.merge {
+            Merge::Random => Selection::Random,
+            Merge::FabricAware => Selection::FabricAware,
+            Merge::Off | Merge::MinLoad => Selection::MinLoad,
+        }
+    }
+
+    /// P³'s design requires hash partitioning; everything else defaults
+    /// to the config's partitioner.
+    pub fn preferred_partition(&self) -> Option<PartitionAlgo> {
+        match self.base {
+            Base::P3 => Some(PartitionAlgo::Hash),
+            _ => None,
+        }
+    }
+
+    /// Whether the merge controller adapts the schedule across epochs
+    /// (report the final frozen epoch as steady state).
+    pub fn adapts_across_epochs(&self) -> bool {
+        self.merge != Merge::Off
+    }
+
+    /// One-line grammar summary for CLI error messages.
+    pub fn grammar_help() -> &'static str {
+        "strategy grammar: <base>[+tok|-tok...] with base one of dgl, \
+         p3, naive, hopgnn, lo, ns, dgl-fb and tokens mg, pg (axes), \
+         +ml/+rd/+fa (merge policy), -merge (merging off) — e.g. \
+         'hopgnn+fa-pg'; legacy aliases (+mg, +pg, rd, fa, ...) also \
+         accepted"
+    }
+}
+
+/// Exact-string legacy aliases, resolved before the grammar: every
+/// spelling the pre-redesign enum accepted maps to its equivalent spec.
+fn alias(s: &str) -> Option<StrategySpec> {
+    Some(match s {
+        "dgl" | "model-centric" => StrategySpec::dgl(),
+        "p3" => StrategySpec::p3(),
+        "naive" | "naive-fc" => StrategySpec::naive(),
+        "hopgnn" | "all" => StrategySpec::hopgnn(),
+        "hopgnn-mg" | "+mg" => StrategySpec::hopgnn_mg(),
+        "hopgnn-mg-pg" | "+pg" => StrategySpec::hopgnn_mg_pg(),
+        "hopgnn-rd" | "rd" => StrategySpec::hopgnn_rd(),
+        "hopgnn-fa" | "fa" => StrategySpec::hopgnn_fa(),
+        "lo" | "locality-opt" => StrategySpec::locality_opt(),
+        "neutronstar" | "ns" => StrategySpec::neutronstar(),
+        "dgl-fb" => StrategySpec::dgl_full_batch(),
+        _ => return None,
+    })
+}
+
+impl fmt::Display for StrategySpec {
+    /// The canonical grammar string: base token plus the modifiers that
+    /// differ from the base's defaults, in merge → mg → pg order (so
+    /// the full HopGNN prints as plain `hopgnn`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let d = Self::base_default(self.base);
+        write!(f, "{}", self.base.token())?;
+        if self.merge != d.merge {
+            match self.merge {
+                Merge::Off => write!(f, "-merge")?,
+                m => write!(f, "+{}", m.token())?,
+            }
+        }
+        if self.micrograph != d.micrograph {
+            write!(f, "{}mg", if self.micrograph { '+' } else { '-' })?;
+        }
+        if self.pregather != d.pregather {
+            write!(f, "{}pg", if self.pregather { '+' } else { '-' })?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for StrategySpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let input = s.trim();
+        if let Some(spec) = alias(input) {
+            return Ok(spec);
+        }
+        // longest base-name prefix ("dgl-fb" must win over "dgl")
+        let mut best: Option<(Base, &str)> = None;
+        for b in ALL_BASES {
+            if let Some(rest) = input.strip_prefix(b.token()) {
+                let longer = match best {
+                    Some((prev, _)) => b.token().len() > prev.token().len(),
+                    None => true,
+                };
+                if longer {
+                    best = Some((b, rest));
+                }
+            }
+        }
+        let (base, mut rest) = best.ok_or_else(|| {
+            format!(
+                "unknown strategy '{input}'; {}",
+                StrategySpec::grammar_help()
+            )
+        })?;
+        let mut spec = StrategySpec::base_default(base);
+        let (mut seen_mg, mut seen_pg, mut seen_merge) =
+            (false, false, false);
+        let dup = |seen: &mut bool, axis: &str| -> Result<(), String> {
+            if *seen {
+                return Err(format!(
+                    "strategy '{input}': axis '{axis}' set twice"
+                ));
+            }
+            *seen = true;
+            Ok(())
+        };
+        while !rest.is_empty() {
+            let on = match rest.as_bytes()[0] {
+                b'+' => true,
+                b'-' => false,
+                c => {
+                    return Err(format!(
+                        "strategy '{input}': expected '+' or '-' before \
+                         a modifier, found '{}'; {}",
+                        c as char,
+                        StrategySpec::grammar_help()
+                    ))
+                }
+            };
+            rest = &rest[1..];
+            let end = rest
+                .find(|c: char| c == '+' || c == '-')
+                .unwrap_or(rest.len());
+            let tok = &rest[..end];
+            rest = &rest[end..];
+            match (tok, on) {
+                ("mg", _) => {
+                    dup(&mut seen_mg, "micrograph")?;
+                    spec.micrograph = on;
+                }
+                ("pg", _) => {
+                    dup(&mut seen_pg, "pregather")?;
+                    spec.pregather = on;
+                }
+                ("ml" | "merge", true) => {
+                    dup(&mut seen_merge, "merge")?;
+                    spec.merge = Merge::MinLoad;
+                }
+                ("rd", true) => {
+                    dup(&mut seen_merge, "merge")?;
+                    spec.merge = Merge::Random;
+                }
+                ("fa", true) => {
+                    dup(&mut seen_merge, "merge")?;
+                    spec.merge = Merge::FabricAware;
+                }
+                ("merge", false) => {
+                    dup(&mut seen_merge, "merge")?;
+                    spec.merge = Merge::Off;
+                }
+                ("ml" | "rd" | "fa", false) => {
+                    return Err(format!(
+                        "strategy '{input}': use '-merge' to disable \
+                         merging (merge policies are picked with \
+                         '+ml'/'+rd'/'+fa')"
+                    ));
+                }
+                _ => {
+                    return Err(format!(
+                        "strategy '{input}': unknown modifier '{tok}'; \
+                         valid modifiers: mg, pg, ml, rd, fa, merge"
+                    ));
+                }
+            }
+        }
+        spec.validate()
+            .map_err(|e| format!("invalid strategy '{input}': {e}"))?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_composes_new_combinations() {
+        let s = StrategySpec::hopgnn()
+            .merge(Merge::FabricAware)
+            .pregather(false);
+        assert_eq!(s.base, Base::HopGnn);
+        assert!(s.micrograph);
+        assert!(!s.pregather);
+        assert_eq!(s.merge, Merge::FabricAware);
+        s.validate().unwrap();
+        assert_eq!(s.to_string(), "hopgnn+fa-pg");
+        assert_eq!("hopgnn+fa-pg".parse::<StrategySpec>().unwrap(), s);
+    }
+
+    #[test]
+    fn legacy_aliases_resolve() {
+        for (input, expect) in [
+            ("dgl", StrategySpec::dgl()),
+            ("model-centric", StrategySpec::dgl()),
+            ("p3", StrategySpec::p3()),
+            ("naive", StrategySpec::naive()),
+            ("naive-fc", StrategySpec::naive()),
+            ("hopgnn", StrategySpec::hopgnn()),
+            ("all", StrategySpec::hopgnn()),
+            ("hopgnn-mg", StrategySpec::hopgnn_mg()),
+            ("+mg", StrategySpec::hopgnn_mg()),
+            ("hopgnn-mg-pg", StrategySpec::hopgnn_mg_pg()),
+            ("+pg", StrategySpec::hopgnn_mg_pg()),
+            ("hopgnn-rd", StrategySpec::hopgnn_rd()),
+            ("rd", StrategySpec::hopgnn_rd()),
+            ("hopgnn-fa", StrategySpec::hopgnn_fa()),
+            ("fa", StrategySpec::hopgnn_fa()),
+            ("lo", StrategySpec::locality_opt()),
+            ("locality-opt", StrategySpec::locality_opt()),
+            ("neutronstar", StrategySpec::neutronstar()),
+            ("ns", StrategySpec::neutronstar()),
+            ("dgl-fb", StrategySpec::dgl_full_batch()),
+        ] {
+            assert_eq!(
+                input.parse::<StrategySpec>().unwrap(),
+                expect,
+                "alias '{input}'"
+            );
+        }
+        assert!("bogus".parse::<StrategySpec>().is_err());
+    }
+
+    #[test]
+    fn legacy_specs_keep_their_figure_labels() {
+        let names: Vec<String> =
+            ALL_LEGACY_SPECS.iter().map(StrategySpec::name).collect();
+        assert_eq!(
+            names,
+            [
+                "DGL",
+                "P3",
+                "Naive",
+                "HopGNN",
+                "+MG",
+                "+PG",
+                "RD",
+                "HopGNN-FA",
+                "LO",
+                "NeutronStar",
+                "DGL-FB"
+            ]
+        );
+        // new combinations fall back to the canonical grammar string
+        assert_eq!(
+            StrategySpec::hopgnn().pregather(false).name(),
+            "hopgnn-pg"
+        );
+    }
+
+    #[test]
+    fn illegal_combinations_are_rejected_with_the_rule() {
+        let e = "dgl+ml".parse::<StrategySpec>().unwrap_err();
+        assert!(e.contains("micrograph"), "{e}");
+        let e = "dgl+pg".parse::<StrategySpec>().unwrap_err();
+        assert!(e.contains("micrograph"), "{e}");
+        let e = "p3+mg".parse::<StrategySpec>().unwrap_err();
+        assert!(e.contains("hopgnn"), "{e}");
+        let e = "hopgnn-mg-pg-merge".parse::<StrategySpec>();
+        // alias "hopgnn-mg-pg" is exact-match only; this goes through
+        // the grammar and strips micrograph from the hopgnn base
+        assert!(e.unwrap_err().contains("micrographs by definition"));
+    }
+
+    #[test]
+    fn grammar_is_strict_about_tokens() {
+        assert!("hopgnn+zz".parse::<StrategySpec>().is_err());
+        assert!("hopgnn+".parse::<StrategySpec>().is_err());
+        assert!("hopgnnx".parse::<StrategySpec>().is_err());
+        let e = "hopgnn-fa-pg".parse::<StrategySpec>().unwrap_err();
+        assert!(e.contains("-merge"), "{e}");
+        let e = "hopgnn+rd+ml".parse::<StrategySpec>().unwrap_err();
+        assert!(e.contains("set twice"), "{e}");
+        // '+merge' is accepted as min-load (the default policy)
+        assert_eq!(
+            "hopgnn+merge".parse::<StrategySpec>().unwrap(),
+            StrategySpec::hopgnn()
+        );
+        // re-stating a boolean axis is harmless; only duplicates of the
+        // same axis are rejected
+        assert_eq!(
+            "hopgnn-merge+pg".parse::<StrategySpec>().unwrap(),
+            StrategySpec::hopgnn_mg_pg()
+        );
+    }
+
+    #[test]
+    fn every_legacy_spec_is_listed_buildable_and_round_trips() {
+        for spec in ALL_LEGACY_SPECS {
+            spec.validate().unwrap();
+            let s = spec.build();
+            assert!(!s.name().is_empty());
+            assert_eq!(
+                spec.to_string().parse::<StrategySpec>().unwrap(),
+                spec,
+                "canonical round-trip for {spec}"
+            );
+        }
+    }
+
+    #[test]
+    fn adaptation_and_partition_preferences_follow_the_axes() {
+        assert!(StrategySpec::hopgnn().adapts_across_epochs());
+        assert!(StrategySpec::hopgnn_rd().adapts_across_epochs());
+        assert!(StrategySpec::hopgnn_fa().adapts_across_epochs());
+        assert!(!StrategySpec::hopgnn_mg_pg().adapts_across_epochs());
+        assert!(!StrategySpec::dgl().adapts_across_epochs());
+        assert_eq!(
+            StrategySpec::p3().preferred_partition(),
+            Some(PartitionAlgo::Hash)
+        );
+        assert_eq!(StrategySpec::hopgnn().preferred_partition(), None);
+    }
+}

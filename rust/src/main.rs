@@ -10,10 +10,14 @@
 //!   calibrate  measure real PJRT step time, report effective FLOP/s
 //!   info       list datasets, artifacts, experiments
 
-use hopgnn::bench::{run_experiment, Scale, ALL_EXPERIMENTS};
-use hopgnn::cluster::ModelFamily;
+use hopgnn::bench::sweep::{Axis, SweepSpec};
+use hopgnn::bench::{
+    resolve_experiment_ids, run_experiment, Report, Scale, ALL_EXPERIMENTS,
+};
+use hopgnn::cluster::{FabricSpec, ModelFamily};
 use hopgnn::config::RunConfig;
-use hopgnn::coordinator::{run_strategy, StrategyKind};
+use hopgnn::coordinator::{run_strategy, StrategySpec};
+use hopgnn::featstore::cache::CachePolicy;
 use hopgnn::graph::datasets::{load, ALL_SPECS};
 use hopgnn::partition::{partition, PartitionAlgo};
 use hopgnn::runtime::{Engine, Manifest};
@@ -57,7 +61,8 @@ fn usage() -> String {
      Usage: hopgnn <command> [options]\n\n\
      Commands:\n  \
        reproduce   regenerate paper tables/figures (--exp <id|all>, --quick)\n  \
-       bench       run experiments by id (positional), md + JSON reports\n  \
+       bench       run experiments by id (positional), md + JSON reports;\n  \
+                   'bench sweep' runs a declarative strategy/config grid\n  \
        sim         simulate one strategy (--dataset, --model, --strategy, ...)\n  \
        train       real PJRT training (--dataset-size, --model, --epochs)\n  \
        partition   partition quality report (--dataset, --algo, --servers)\n  \
@@ -112,11 +117,20 @@ fn cmd_reproduce(args: Vec<String>) -> i32 {
 /// `hopgnn bench [--quick] [--out DIR] <experiment id>...` — the CI
 /// smoke entry point: run the named experiments (default: all) and
 /// write both the markdown report and its JSON twin, which the smoke
-/// workflow uploads as its artifact.
+/// workflow uploads as its artifact. Ids are validated and deduped
+/// *before* anything runs, so a typo can no longer abort a batch
+/// mid-run after earlier experiments already spent minutes.
+///
+/// `hopgnn bench sweep ...` instead runs one declarative grid through
+/// the sweep engine — see `cmd_bench_sweep`.
 fn cmd_bench(args: Vec<String>) -> i32 {
+    if args.first().map(String::as_str) == Some("sweep") {
+        return cmd_bench_sweep(args[1..].to_vec());
+    }
     let cli = Cli::new(
         "hopgnn bench",
-        "run experiments by id, writing markdown + JSON reports",
+        "run experiments by id, writing markdown + JSON reports \
+         ('bench sweep' runs a declarative grid instead)",
     )
     .opt("out", "reports", "output directory for md/json reports")
     .flag("quick", "reduced scale (CI-sized)");
@@ -132,10 +146,25 @@ fn cmd_bench(args: Vec<String>) -> i32 {
     } else {
         Scale::full()
     };
-    let ids: Vec<String> = if a.positional.is_empty() {
+    let requested: Vec<String> = if a.positional.is_empty() {
         ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect()
     } else {
         a.positional.clone()
+    };
+    // fail fast: every id checked (and duplicates dropped) up front
+    let ids = match resolve_experiment_ids(&requested) {
+        Ok(ids) => ids,
+        Err(e) => {
+            eprintln!("{e}");
+            if requested.iter().any(|id| id == "sweep") {
+                eprintln!(
+                    "note: 'sweep' is a subcommand, not an experiment \
+                     id — spell it `hopgnn bench sweep [flags]` with \
+                     'sweep' directly after 'bench'"
+                );
+            }
+            return 2;
+        }
     };
     let out = a.get_or("out", "reports");
     let mut failed = 0;
@@ -166,12 +195,221 @@ fn cmd_bench(args: Vec<String>) -> i32 {
     failed
 }
 
+/// `hopgnn bench sweep [--quick] [--out DIR] --strategies <specs>
+/// [--datasets ...] [--fabrics ...] [--cache ...] [--cache-mb ...]
+/// [--overlap off|on|both] [--set k=v,...]` — build a `SweepSpec`
+/// from the flags, run the full cartesian grid through the engine, and
+/// write a `sweep` report (md + JSON) with one row per cell.
+/// Parse a comma-separated CLI list, trimming items and prefixing
+/// errors with the flag name (shared by every `bench sweep` axis flag).
+fn parse_list<T>(
+    raw: &str,
+    what: &str,
+    parse: impl Fn(&str) -> Result<T, String>,
+) -> Result<Vec<T>, String> {
+    raw.split(',')
+        .map(|item| parse(item.trim()).map_err(|e| format!("{what}: {e}")))
+        .collect()
+}
+
+fn cmd_bench_sweep(args: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "hopgnn bench sweep",
+        "run a declarative strategy x config sweep grid",
+    )
+    .opt(
+        "strategies",
+        "dgl,hopgnn",
+        "comma-separated strategy specs (grammar or legacy aliases)",
+    )
+    .opt("datasets", "", "comma-separated dataset axis")
+    .opt(
+        "fabrics",
+        "",
+        "comma-separated fabric axis (uniform|rack:<k>|hetero-mix|straggler:<s>)",
+    )
+    .opt("cache", "", "comma-separated cache-policy axis")
+    .opt("cache-mb", "", "comma-separated capacity axis (MiB)")
+    .opt("overlap", "", "overlap axis: off|on|both")
+    .opt(
+        "set",
+        "",
+        "base config patches 'key=val[,key=val...]'; 'strategy=<spec>' \
+         pins the single strategy (instead of --strategies)",
+    )
+    .opt("out", "reports", "output directory for the md/json report")
+    .flag("quick", "reduced scale (CI-sized)");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let scale = if a.has("quick") {
+        Scale::quick()
+    } else {
+        Scale::full()
+    };
+    let mut base = RunConfig {
+        batch_size: scale.batch,
+        epochs: scale.epochs,
+        max_iterations: scale.max_iterations,
+        ..Default::default()
+    };
+    base.vmax = RunConfig::full_sim_vmax(base.layers, base.fanout);
+    for patch in a.get_or("set", "").split(',') {
+        let patch = patch.trim();
+        if patch.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = patch.split_once('=') else {
+            eprintln!("--set expects key=val pairs, got '{patch}'");
+            return 2;
+        };
+        if let Err(e) = base.set(k.trim(), v.trim()) {
+            eprintln!("--set {patch}: {e}");
+            return 2;
+        }
+    }
+
+    // `--set strategy=<spec>` pins the single strategy; mixing it with
+    // an explicit `--strategies` axis would be ambiguous
+    let mut specs: Vec<StrategySpec> = Vec::new();
+    if let Some(s) = base.strategy.take() {
+        if a.explicit("strategies") {
+            eprintln!(
+                "--set strategy= conflicts with --strategies; pick one"
+            );
+            return 2;
+        }
+        specs.push(s);
+    } else {
+        match parse_list(
+            &a.get_or("strategies", "dgl,hopgnn"),
+            "--strategies",
+            |s| s.parse::<StrategySpec>(),
+        ) {
+            Ok(list) => specs = list,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    let mut sweep = SweepSpec::new(base, specs[0]);
+    let mut shape: Vec<String> = Vec::new();
+    let datasets = a.get_or("datasets", "");
+    if !datasets.is_empty() {
+        let list: Vec<&str> = datasets.split(',').map(str::trim).collect();
+        shape.push(format!("{} datasets", list.len()));
+        sweep = sweep.axis(Axis::key("dataset", &list));
+    }
+    let fabrics = a.get_or("fabrics", "");
+    if !fabrics.is_empty() {
+        let list = match parse_list(&fabrics, "--fabrics", |f| {
+            FabricSpec::from_str(f)
+                .ok_or_else(|| format!("unknown fabric '{f}'"))
+        }) {
+            Ok(list) => list,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        shape.push(format!("{} fabrics", list.len()));
+        sweep = sweep.axis(Axis::fabrics(&list));
+    }
+    let cache = a.get_or("cache", "");
+    if !cache.is_empty() {
+        let list = match parse_list(&cache, "--cache", |p| {
+            CachePolicy::from_str(p)
+                .ok_or_else(|| format!("unknown cache policy '{p}'"))
+        }) {
+            Ok(list) => list,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        shape.push(format!("{} cache policies", list.len()));
+        sweep = sweep.axis(Axis::cache_policies(&list));
+    }
+    let cache_mb = a.get_or("cache-mb", "");
+    if !cache_mb.is_empty() {
+        let list = match parse_list(&cache_mb, "--cache-mb", |mb| {
+            mb.parse::<usize>()
+                .map_err(|_| format!("bad capacity '{mb}'"))
+        }) {
+            Ok(list) => list,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        shape.push(format!("{} capacities", list.len()));
+        sweep = sweep.axis(Axis::cache_capacities_mb(&list));
+    }
+    shape.push(format!("{} strategies", specs.len()));
+    sweep = sweep.axis(Axis::strategies(&specs));
+    match a.get_or("overlap", "").as_str() {
+        "" => {}
+        "off" => sweep = sweep.axis(Axis::overlap(&[false])),
+        "on" => sweep = sweep.axis(Axis::overlap(&[true])),
+        "both" => {
+            shape.push("2 overlap modes".to_string());
+            sweep = sweep.axis(Axis::overlap(&[false, true]));
+        }
+        other => {
+            eprintln!("--overlap expects off|on|both, got '{other}'");
+            return 2;
+        }
+    }
+
+    let t0 = std::time::Instant::now();
+    let grid = match sweep.run() {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("sweep failed validation: {e}");
+            return 2;
+        }
+    };
+    let mut report = Report::new("sweep", "declarative sweep grid");
+    report.section(
+        format!("{} cells ({})", grid.cells.len(), shape.join(" x ")),
+        grid.table(),
+    );
+    report.note(
+        "declared via `bench sweep`: each axis is expanded into a \
+         cartesian grid and executed through the memoized runner; see \
+         bench::sweep for the library API",
+    );
+    println!("{}", report.render());
+    eprintln!(
+        "[sweep: {} cells in {}]",
+        grid.cells.len(),
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+    let out = a.get_or("out", "reports");
+    let mut failed = 0;
+    if let Err(e) = report.save(&out) {
+        eprintln!("warning: could not save sweep.md: {e}");
+        failed += 1;
+    }
+    if let Err(e) = report.save_json(&out) {
+        eprintln!("warning: could not save sweep.json: {e}");
+        failed += 1;
+    }
+    failed
+}
+
 fn cmd_sim(args: Vec<String>) -> i32 {
     let cli = Cli::new("hopgnn sim", "simulate one training strategy")
         .opt("dataset", "products-s", "dataset (arxiv-s|products-s|uk-s|in-s|it-s)")
         .opt("model", "gcn", "gcn|sage|gat|deepgcn|film")
         .opt("strategy", "hopgnn",
-             "dgl|p3|naive|hopgnn|+mg|+pg|rd|fa|lo|ns|dgl-fb")
+             "strategy spec (e.g. hopgnn+fa-pg) or legacy alias \
+              (dgl|p3|naive|hopgnn|+mg|+pg|rd|fa|lo|ns|dgl-fb)")
         .opt("servers", "4", "number of simulated GPU servers")
         .opt("fabric", "uniform",
              "cluster topology (uniform|rack:<k>|hetero-mix|straggler:<s>)")
@@ -248,11 +486,23 @@ fn cmd_sim(args: Vec<String>) -> i32 {
     // simulation default: full micrograph (the 128 default is the PJRT
     // artifact pad, not a sampling semantic)
     cfg.vmax = RunConfig::full_sim_vmax(cfg.layers, cfg.fanout);
-    let kind = match StrategyKind::from_str(&a.get_or("strategy", "hopgnn")) {
-        Some(k) => k,
+    // a config file's `strategy =` key pins the spec unless the user
+    // typed --strategy explicitly
+    let file_spec = if from_file && !a.explicit("strategy") {
+        cfg.strategy
+    } else {
+        None
+    };
+    let spec = match file_spec {
+        Some(s) => s,
         None => {
-            eprintln!("unknown strategy");
-            return 2;
+            match a.get_or("strategy", "hopgnn").parse::<StrategySpec>() {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            }
         }
     };
     let d = load(&cfg.dataset);
@@ -273,8 +523,8 @@ fn cmd_sim(args: Vec<String>) -> i32 {
             cfg.net.latency * 1e6
         );
     }
-    let m = run_strategy(&d, &cfg, kind);
-    println!("strategy {}: {}", kind.name(), m.summary());
+    let m = run_strategy(&d, &cfg, spec);
+    println!("strategy {} ({spec}): {}", spec.name(), m.summary());
     println!("{}", m.breakdown_table().render());
     if cfg.cache_enabled() {
         println!(
@@ -534,7 +784,10 @@ fn cmd_info(_args: Vec<String>) -> i32 {
     println!("{}", t.render());
     println!("models: gcn, sage, gat (3L), deepgcn (7L), film (10L)");
     println!(
-        "strategies: dgl, p3, naive, hopgnn, +mg, +pg, rd, fa, lo, ns, dgl-fb"
+        "strategies (composable specs): base dgl|p3|naive|hopgnn|lo|ns|\
+         dgl-fb with modifiers +/-mg, +/-pg, +ml/+rd/+fa/-merge \
+         (e.g. hopgnn+fa-pg); legacy aliases +mg, +pg, rd, fa, ... \
+         still parse"
     );
     println!("fabrics: uniform, rack:<k>, hetero-mix, straggler:<s>");
     println!("experiments: {}", ALL_EXPERIMENTS.join(", "));

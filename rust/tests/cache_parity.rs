@@ -20,7 +20,7 @@
 use hopgnn::cluster::network::NUM_KINDS;
 use hopgnn::cluster::TransferKind;
 use hopgnn::config::RunConfig;
-use hopgnn::coordinator::{run_strategy, StrategyKind};
+use hopgnn::coordinator::{run_strategy, StrategySpec};
 use hopgnn::featstore::cache::{ALL_CACHE_POLICIES, CachePolicy};
 use hopgnn::graph::datasets::{load_spec, Dataset, DatasetSpec};
 use hopgnn::metrics::EpochMetrics;
@@ -61,12 +61,12 @@ fn cfg(overlap: bool, policy: CachePolicy, mb: usize) -> RunConfig {
 /// Every strategy whose builder emits feature gathers (the cache-routed
 /// ops); includes the adaptive full system — at capacity 0 its epoch
 /// times are bit-identical, so its merge trajectory must be too.
-const CACHED_KINDS: [StrategyKind; 5] = [
-    StrategyKind::Dgl,
-    StrategyKind::LocalityOpt,
-    StrategyKind::HopGnnMgOnly,
-    StrategyKind::HopGnnMgPg,
-    StrategyKind::HopGnn,
+const CACHED_KINDS: [StrategySpec; 5] = [
+    StrategySpec::dgl(),
+    StrategySpec::locality_opt(),
+    StrategySpec::hopgnn_mg(),
+    StrategySpec::hopgnn_mg_pg(),
+    StrategySpec::hopgnn(),
 ];
 
 fn assert_bit_identical(a: &EpochMetrics, b: &EpochMetrics, what: &str) {
@@ -124,9 +124,9 @@ fn capacity_zero_parity_holds_for_every_policy() {
     // empty recency map (DGL exercises the single-step gather path)
     let d = dataset();
     let base =
-        run_strategy(d, &cfg(false, CachePolicy::None, 64), StrategyKind::Dgl);
+        run_strategy(d, &cfg(false, CachePolicy::None, 64), StrategySpec::dgl());
     for policy in ALL_CACHE_POLICIES {
-        let zero = run_strategy(d, &cfg(false, policy, 0), StrategyKind::Dgl);
+        let zero = run_strategy(d, &cfg(false, policy, 0), StrategySpec::dgl());
         assert_bit_identical(&base, &zero, policy.name());
     }
 }
@@ -134,7 +134,7 @@ fn capacity_zero_parity_holds_for_every_policy() {
 #[test]
 fn hit_bytes_sum_to_total_minus_transferred() {
     let d = dataset();
-    for kind in [StrategyKind::Dgl, StrategyKind::HopGnnMgPg] {
+    for kind in [StrategySpec::dgl(), StrategySpec::hopgnn_mg_pg()] {
         let base = run_strategy(d, &cfg(false, CachePolicy::None, 64), kind);
         let warm = run_strategy(d, &cfg(false, CachePolicy::Lru, 64), kind);
         assert!(warm.cache_hits > 0, "{}: no reuse to cache", kind.name());
@@ -175,8 +175,8 @@ fn overlap_mode_changes_no_cached_byte() {
     let d = dataset();
     for policy in ALL_CACHE_POLICIES {
         let serial =
-            run_strategy(d, &cfg(false, policy, 16), StrategyKind::Dgl);
-        let over = run_strategy(d, &cfg(true, policy, 16), StrategyKind::Dgl);
+            run_strategy(d, &cfg(false, policy, 16), StrategySpec::dgl());
+        let over = run_strategy(d, &cfg(true, policy, 16), StrategySpec::dgl());
         for k in 0..NUM_KINDS {
             assert_eq!(
                 serial.bytes_by_kind[k], over.bytes_by_kind[k],
@@ -205,8 +205,8 @@ fn cached_runs_replay_bit_identically_for_every_policy() {
     // is smaller than the per-server remote working set, so LRU evicts
     let d = dataset();
     for policy in ALL_CACHE_POLICIES {
-        let a = run_strategy(d, &cfg(false, policy, 1), StrategyKind::Dgl);
-        let b = run_strategy(d, &cfg(false, policy, 1), StrategyKind::Dgl);
+        let a = run_strategy(d, &cfg(false, policy, 1), StrategySpec::dgl());
+        let b = run_strategy(d, &cfg(false, policy, 1), StrategySpec::dgl());
         assert_bit_identical(&a, &b, policy.name());
         assert_eq!(a.cache_hits, b.cache_hits, "{}", policy.name());
         assert_eq!(a.cache_misses, b.cache_misses, "{}", policy.name());
@@ -226,8 +226,8 @@ fn parallel_lanes_match_sequential_with_cache_on() {
         let mut seq_cfg = cfg(false, policy, 16);
         seq_cfg.parallel_lanes = false;
         let par_cfg = cfg(false, policy, 16);
-        let seq = run_strategy(d, &seq_cfg, StrategyKind::Dgl);
-        let par = run_strategy(d, &par_cfg, StrategyKind::Dgl);
+        let seq = run_strategy(d, &seq_cfg, StrategySpec::dgl());
+        let par = run_strategy(d, &par_cfg, StrategySpec::dgl());
         assert_bit_identical(&seq, &par, policy.name());
         assert_eq!(seq.cache_hits, par.cache_hits, "{}", policy.name());
         assert_eq!(

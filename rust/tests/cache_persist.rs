@@ -10,7 +10,7 @@
 use hopgnn::cluster::network::NUM_KINDS;
 use hopgnn::cluster::TransferKind;
 use hopgnn::config::RunConfig;
-use hopgnn::coordinator::{SimEnv, Strategy, StrategyKind};
+use hopgnn::coordinator::{SimEnv, Strategy, StrategySpec};
 use hopgnn::featstore::cache::CachePolicy;
 use hopgnn::graph::datasets::{load_spec, Dataset, DatasetSpec};
 use hopgnn::metrics::EpochMetrics;
@@ -49,7 +49,7 @@ fn cfg(persist: bool) -> RunConfig {
 }
 
 /// Per-epoch metrics for `kind` under the given persistence setting.
-fn epochs_of(kind: StrategyKind, persist: bool) -> Vec<EpochMetrics> {
+fn epochs_of(kind: StrategySpec, persist: bool) -> Vec<EpochMetrics> {
     let d = dataset();
     let mut env = SimEnv::new(d, cfg(persist));
     let mut strat = kind.build();
@@ -58,10 +58,10 @@ fn epochs_of(kind: StrategyKind, persist: bool) -> Vec<EpochMetrics> {
 
 /// Cached fixed-schedule strategies (capacity-invariant request
 /// streams, so per-epoch requested bytes are comparable).
-const KINDS: [StrategyKind; 3] = [
-    StrategyKind::Dgl,
-    StrategyKind::LocalityOpt,
-    StrategyKind::HopGnnMgPg,
+const KINDS: [StrategySpec; 3] = [
+    StrategySpec::dgl(),
+    StrategySpec::locality_opt(),
+    StrategySpec::hopgnn_mg_pg(),
 ];
 
 #[test]

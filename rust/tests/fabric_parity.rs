@@ -21,7 +21,7 @@ use hopgnn::cluster::fabric::{
 use hopgnn::cluster::network::NUM_KINDS;
 use hopgnn::cluster::{Fabric, FabricSpec, NetworkModel};
 use hopgnn::config::RunConfig;
-use hopgnn::coordinator::{run_strategy, StrategyKind, ALL_STRATEGY_KINDS};
+use hopgnn::coordinator::{run_strategy, StrategySpec, ALL_LEGACY_SPECS};
 use hopgnn::graph::datasets::{load_spec, Dataset, DatasetSpec};
 use hopgnn::metrics::EpochMetrics;
 use hopgnn::util::prop;
@@ -220,17 +220,17 @@ fn uniform_fabric_runs_every_strategy_bit_identically_to_rack1() {
     // rack:1 builds the identical link matrix through the non-uniform
     // constructor path — a whole-simulator equivalence check
     let d = dataset();
-    for kind in ALL_STRATEGY_KINDS {
+    for kind in ALL_LEGACY_SPECS {
         let uni = run_strategy(d, &cfg(FabricSpec::Uniform), kind);
         let rack1 =
             run_strategy(d, &cfg(FabricSpec::Rack { racks: 1 }), kind);
-        assert_bit_identical(&uni, &rack1, kind.name());
+        assert_bit_identical(&uni, &rack1, &kind.name());
     }
     // and the same holds with the overlap lanes engaged
     for kind in [
-        StrategyKind::Dgl,
-        StrategyKind::HopGnnMgPg,
-        StrategyKind::HopGnn,
+        StrategySpec::dgl(),
+        StrategySpec::hopgnn_mg_pg(),
+        StrategySpec::hopgnn(),
     ] {
         let uni = run_strategy(d, &cfg_overlap(FabricSpec::Uniform), kind);
         let rack1 = run_strategy(
@@ -249,7 +249,7 @@ fn uniform_fabric_runs_every_strategy_bit_identically_to_rack1() {
 #[test]
 fn heterogeneous_fabrics_change_time_not_bytes() {
     let d = dataset();
-    for kind in [StrategyKind::Dgl, StrategyKind::P3, StrategyKind::Naive] {
+    for kind in [StrategySpec::dgl(), StrategySpec::p3(), StrategySpec::naive()] {
         let uni = run_strategy(d, &cfg(FabricSpec::Uniform), kind);
         for spec in [
             FabricSpec::Rack { racks: 2 },
@@ -284,7 +284,7 @@ fn straggler_compute_shows_in_observed_lane_times() {
     let m = run_strategy(
         d,
         &cfg(FabricSpec::Straggler { server: 2 }),
-        StrategyKind::Dgl,
+        StrategySpec::dgl(),
     );
     assert_eq!(m.per_server_busy.len(), 4);
     let fast_mean = (m.per_server_busy[0]
@@ -307,8 +307,8 @@ fn fabric_runs_are_deterministic_with_parallel_lanes() {
         FabricSpec::Rack { racks: 2 },
         FabricSpec::Straggler { server: 0 },
     ] {
-        let a = run_strategy(d, &cfg(spec), StrategyKind::HopGnnFabric);
-        let b = run_strategy(d, &cfg(spec), StrategyKind::HopGnnFabric);
+        let a = run_strategy(d, &cfg(spec), StrategySpec::hopgnn_fa());
+        let b = run_strategy(d, &cfg(spec), StrategySpec::hopgnn_fa());
         assert_bit_identical(&a, &b, &spec.name());
     }
 }

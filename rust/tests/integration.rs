@@ -6,7 +6,7 @@ use hopgnn::cluster::{
     Clocks, CostModel, Fabric, NetStats, NetworkModel, TransferKind,
 };
 use hopgnn::config::RunConfig;
-use hopgnn::coordinator::{run_strategy, SimEnv, StrategyKind};
+use hopgnn::coordinator::{run_strategy, SimEnv, StrategySpec};
 use hopgnn::featstore::FeatureStore;
 use hopgnn::graph::datasets::{load_spec, tiny_test_dataset, DatasetSpec};
 use hopgnn::metrics::EpochMetrics;
@@ -27,7 +27,7 @@ fn whole_sim_is_deterministic_across_processes_worth_of_state() {
         ..Default::default()
     };
     let runs: Vec<EpochMetrics> = (0..2)
-        .map(|_| run_strategy(&d, &cfg, StrategyKind::HopGnn))
+        .map(|_| run_strategy(&d, &cfg, StrategySpec::hopgnn()))
         .collect();
     assert_eq!(runs[0].total_bytes(), runs[1].total_bytes());
     assert_eq!(runs[0].remote_vertices, runs[1].remote_vertices);
@@ -92,7 +92,7 @@ fn config_file_drives_simulation() {
     let cfg = RunConfig::from_kv_file(path.to_str().unwrap()).unwrap();
     assert_eq!(cfg.num_servers, 2);
     let d = tiny_test_dataset(102);
-    let m = run_strategy(&d, &cfg, StrategyKind::Dgl);
+    let m = run_strategy(&d, &cfg, StrategySpec::dgl());
     assert!(m.epoch_time > 0.0);
     assert_eq!(m.iterations, 2);
 }
@@ -118,11 +118,11 @@ fn prop_epoch_bytes_conserved_across_strategies() {
         |r| (r.below(5), r.next_u64()),
         |&(which, seed)| {
             let kind = [
-                StrategyKind::Dgl,
-                StrategyKind::P3,
-                StrategyKind::Naive,
-                StrategyKind::HopGnn,
-                StrategyKind::LocalityOpt,
+                StrategySpec::dgl(),
+                StrategySpec::p3(),
+                StrategySpec::naive(),
+                StrategySpec::hopgnn(),
+                StrategySpec::locality_opt(),
             ][which];
             let cfg = RunConfig {
                 batch_size: 64,
@@ -162,9 +162,9 @@ fn simenv_respects_feature_override() {
         epochs: 1,
         ..Default::default()
     };
-    let base = run_strategy(&d, &cfg, StrategyKind::Dgl);
+    let base = run_strategy(&d, &cfg, StrategySpec::dgl());
     cfg.feat_dim_override = Some(d.feat_dim * 8);
-    let wide = run_strategy(&d, &cfg, StrategyKind::Dgl);
+    let wide = run_strategy(&d, &cfg, StrategySpec::dgl());
     let ratio = wide.bytes(TransferKind::Feature) as f64
         / base.bytes(TransferKind::Feature) as f64;
     assert!((7.0..9.0).contains(&ratio), "feature bytes ratio {ratio}");

@@ -3,7 +3,7 @@
 //! The coordinator strategies were rewritten from eager per-strategy
 //! epoch loops into op-stream builders executed by the shared
 //! `EpochDriver`. These tests pin the properties that refactor must
-//! preserve, for every `StrategyKind` at a fixed seed:
+//! preserve, for every `StrategySpec` at a fixed seed:
 //!
 //! * with `overlap` off, per-`TransferKind` byte totals are
 //!   bit-identical across parallel vs sequential lane execution and
@@ -22,7 +22,7 @@
 
 use hopgnn::cluster::network::NUM_KINDS;
 use hopgnn::config::RunConfig;
-use hopgnn::coordinator::{run_strategy, StrategyKind, ALL_STRATEGY_KINDS};
+use hopgnn::coordinator::{run_strategy, StrategySpec, ALL_LEGACY_SPECS};
 use hopgnn::graph::datasets::{load_spec, Dataset, DatasetSpec};
 use hopgnn::metrics::EpochMetrics;
 use std::sync::OnceLock;
@@ -79,10 +79,10 @@ fn assert_bytes_identical(a: &EpochMetrics, b: &EpochMetrics, what: &str) {
 #[test]
 fn parallel_lanes_match_sequential_for_every_strategy() {
     let d = dataset();
-    for kind in ALL_STRATEGY_KINDS {
+    for kind in ALL_LEGACY_SPECS {
         let seq = run_strategy(d, &cfg(false, false), kind);
         let par = run_strategy(d, &cfg(false, true), kind);
-        assert_bytes_identical(&seq, &par, kind.name());
+        assert_bytes_identical(&seq, &par, &kind.name());
         assert_eq!(
             seq.epoch_time.to_bits(),
             par.epoch_time.to_bits(),
@@ -104,10 +104,10 @@ fn parallel_lanes_match_sequential_for_every_strategy() {
 #[test]
 fn repeat_runs_are_deterministic_with_parallel_lanes() {
     let d = dataset();
-    for kind in ALL_STRATEGY_KINDS {
+    for kind in ALL_LEGACY_SPECS {
         let a = run_strategy(d, &cfg(false, true), kind);
         let b = run_strategy(d, &cfg(false, true), kind);
-        assert_bytes_identical(&a, &b, kind.name());
+        assert_bytes_identical(&a, &b, &kind.name());
         assert_eq!(a.epoch_time.to_bits(), b.epoch_time.to_bits(),
                    "{}: nondeterministic epoch time", kind.name());
     }
@@ -116,10 +116,10 @@ fn repeat_runs_are_deterministic_with_parallel_lanes() {
 #[test]
 fn overlap_moves_no_extra_bytes_and_never_slows() {
     let d = dataset();
-    for kind in ALL_STRATEGY_KINDS {
+    for kind in ALL_LEGACY_SPECS {
         let serial = run_strategy(d, &cfg(false, true), kind);
         let over = run_strategy(d, &cfg(true, true), kind);
-        assert_bytes_identical(&serial, &over, kind.name());
+        assert_bytes_identical(&serial, &over, &kind.name());
         assert!(
             over.epoch_time <= serial.epoch_time * (1.0 + 1e-12),
             "{}: overlap slowed the epoch ({} > {})",
@@ -141,7 +141,7 @@ fn overlap_moves_no_extra_bytes_and_never_slows() {
 #[test]
 fn communication_bound_strategies_gain_from_overlap() {
     let d = dataset();
-    for kind in [StrategyKind::Dgl, StrategyKind::HopGnnMgPg] {
+    for kind in [StrategySpec::dgl(), StrategySpec::hopgnn_mg_pg()] {
         let serial = run_strategy(d, &cfg(false, true), kind);
         let over = run_strategy(d, &cfg(true, true), kind);
         assert!(
@@ -163,7 +163,7 @@ fn communication_bound_strategies_gain_from_overlap() {
 #[test]
 fn phase_times_remain_consistent() {
     let d = dataset();
-    for kind in ALL_STRATEGY_KINDS {
+    for kind in ALL_LEGACY_SPECS {
         let m = run_strategy(d, &cfg(false, true), kind);
         assert!(m.epoch_time.is_finite() && m.epoch_time > 0.0,
                 "{}: bad epoch time", kind.name());

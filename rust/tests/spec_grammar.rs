@@ -1,0 +1,164 @@
+//! Exhaustive grammar locks for the composable `StrategySpec`.
+//!
+//! * the **full axis product** (7 bases × 2 micrograph × 2 pregather ×
+//!   4 merge = 112 combos) is partitioned by `validate()` into exactly
+//!   the documented legal set (14 specs), every legal spec's canonical
+//!   `Display` string parses back to the same value, and every illegal
+//!   combo's string is rejected by `FromStr`;
+//! * property test: emitting a legal spec's modifiers *explicitly* and
+//!   in any order parses back to the same spec (the canonical string is
+//!   just one spelling among many).
+
+use hopgnn::coordinator::{
+    Base, Merge, StrategySpec, ALL_BASES, ALL_LEGACY_SPECS, ALL_MERGES,
+};
+use hopgnn::util::prop;
+use hopgnn::util::rng::Rng;
+
+/// Every point of the raw axis product, legal or not.
+fn full_product() -> Vec<StrategySpec> {
+    let mut out = Vec::new();
+    for base in ALL_BASES {
+        for micrograph in [false, true] {
+            for pregather in [false, true] {
+                for merge in ALL_MERGES {
+                    out.push(StrategySpec {
+                        base,
+                        micrograph,
+                        pregather,
+                        merge,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn exhaustive_product_partitions_into_14_legal_specs() {
+    let all = full_product();
+    assert_eq!(all.len(), 7 * 2 * 2 * 4);
+    let legal: Vec<StrategySpec> = all
+        .iter()
+        .copied()
+        .filter(|s| s.validate().is_ok())
+        .collect();
+    // hopgnn: micrograph forced on, free pregather x merge = 8;
+    // the six fixed-schedule bases admit only the all-off point
+    assert_eq!(legal.len(), 14, "legal set changed: {legal:?}");
+    for base in ALL_BASES {
+        let per_base =
+            legal.iter().filter(|s| s.base == base).count();
+        let expect = if base == Base::HopGnn { 8 } else { 1 };
+        assert_eq!(per_base, expect, "{base:?}");
+    }
+    // every legacy spec is inside the legal set
+    for spec in ALL_LEGACY_SPECS {
+        assert!(legal.contains(&spec), "{spec} missing from legal set");
+    }
+}
+
+#[test]
+fn exhaustive_display_from_str_round_trip() {
+    for spec in full_product() {
+        let text = spec.to_string();
+        match spec.validate() {
+            Ok(()) => {
+                let back: StrategySpec = text.parse().unwrap_or_else(|e| {
+                    panic!("canonical '{text}' failed to parse: {e}")
+                });
+                assert_eq!(back, spec, "round-trip of '{text}'");
+                // the canonical string re-displays identically
+                assert_eq!(back.to_string(), text);
+            }
+            Err(rule) => match text.parse::<StrategySpec>() {
+                Err(e) => assert_eq!(
+                    e,
+                    format!("invalid strategy '{text}': {rule}"),
+                    "parse error must carry the violated rule"
+                ),
+                Ok(other) => {
+                    // Display is not injective over *illegal* values:
+                    // a handful collide with legacy aliases (e.g.
+                    // "hopgnn-mg"). Parsing must still never yield an
+                    // invalid spec — and never this illegal one.
+                    other.validate().unwrap_or_else(|e| {
+                        panic!("FromStr returned an invalid spec: {e}")
+                    });
+                    assert_ne!(
+                        other, spec,
+                        "the illegal combo itself must be unreachable"
+                    );
+                }
+            },
+        }
+    }
+}
+
+#[test]
+fn prop_modifier_order_is_irrelevant_for_explicit_spellings() {
+    // spell every axis explicitly (+/-mg, +/-pg, merge token) in a
+    // random order behind the base; any ordering must parse back to
+    // the same spec
+    prop::check(
+        "spec-grammar-order",
+        60,
+        |r| ((r.below(7), r.below(2)), (r.below(4), r.next_u64())),
+        |&((base_i, pg_i), (merge_i, seed))| {
+            let base = ALL_BASES[base_i];
+            // force legality: hopgnn keeps micrograph on, other bases
+            // get the all-off point with random spelling order only
+            let spec = if base == Base::HopGnn {
+                StrategySpec::hopgnn()
+                    .pregather(pg_i == 1)
+                    .merge(ALL_MERGES[merge_i])
+            } else {
+                StrategySpec::base_default(base)
+            };
+            let mut tokens = vec![
+                format!("{}mg", if spec.micrograph { '+' } else { '-' }),
+                format!("{}pg", if spec.pregather { '+' } else { '-' }),
+                match spec.merge {
+                    Merge::Off => "-merge".to_string(),
+                    m => format!("+{}", m.token()),
+                },
+            ];
+            let mut rng = Rng::new(seed);
+            rng.shuffle(&mut tokens);
+            let text =
+                format!("{}{}", spec.base.token(), tokens.join(""));
+            let parsed = text
+                .parse::<StrategySpec>()
+                .map_err(|e| format!("'{text}': {e}"))?;
+            if parsed != spec {
+                return Err(format!(
+                    "'{text}' parsed to {parsed:?}, expected {spec:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn canonical_strings_of_the_legacy_specs_are_stable() {
+    let canon: Vec<String> =
+        ALL_LEGACY_SPECS.iter().map(|s| s.to_string()).collect();
+    assert_eq!(
+        canon,
+        [
+            "dgl",
+            "p3",
+            "naive",
+            "hopgnn",
+            "hopgnn-merge-pg",
+            "hopgnn-merge",
+            "hopgnn+rd",
+            "hopgnn+fa",
+            "lo",
+            "ns",
+            "dgl-fb"
+        ]
+    );
+}

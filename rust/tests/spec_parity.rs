@@ -1,0 +1,230 @@
+//! The `StrategyKind` → `StrategySpec` redesign parity lock.
+//!
+//! The closed strategy enum was replaced by the composable
+//! `StrategySpec` (axes: base × micrograph × pregather × merge). This
+//! suite replays the *pre-redesign dispatch* — the exact constructor
+//! arms and steady-state reporting the deleted `StrategyKind::build` /
+//! `run_strategy(kind)` pair used — and locks every legacy alias,
+//! parsed through the new spec grammar and run through the new
+//! `run_strategy(spec)` path, to bit-identical `EpochMetrics`: every
+//! integer counter equal, every float equal to the bit, on two datasets
+//! in both serial and overlap modes.
+
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::hopgnn::HopGnn;
+use hopgnn::coordinator::locality_opt::LocalityOpt;
+use hopgnn::coordinator::model_centric::ModelCentric;
+use hopgnn::coordinator::naive_fc::NaiveFc;
+use hopgnn::coordinator::neutronstar::NeutronStar;
+use hopgnn::coordinator::p3::P3;
+use hopgnn::coordinator::{
+    run_strategy, SimEnv, Strategy, StrategySpec, ALL_LEGACY_SPECS,
+};
+use hopgnn::graph::datasets::{load_spec, Dataset, DatasetSpec};
+use hopgnn::metrics::EpochMetrics;
+use hopgnn::partition::PartitionAlgo;
+use std::sync::OnceLock;
+
+/// The 11 pre-redesign kinds by their primary CLI aliases, in the old
+/// enum's presentation order.
+const LEGACY_ALIASES: [&str; 11] = [
+    "dgl", "p3", "naive", "hopgnn", "+mg", "+pg", "rd", "fa", "lo", "ns",
+    "dgl-fb",
+];
+
+/// The pre-redesign `StrategyKind::build` arms, reproduced verbatim on
+/// the strategy constructors (which predate the redesign).
+fn legacy_build(alias: &str) -> Box<dyn Strategy> {
+    match alias {
+        "dgl" => Box::new(ModelCentric::new()),
+        "p3" => Box::new(P3::new()),
+        "naive" => Box::new(NaiveFc::new()),
+        "hopgnn" => Box::new(HopGnn::full()),
+        "+mg" => Box::new(HopGnn::mg_only()),
+        "+pg" => Box::new(HopGnn::mg_pg()),
+        "rd" => Box::new(HopGnn::random_merge()),
+        "fa" => Box::new(HopGnn::fabric_aware()),
+        "lo" => Box::new(LocalityOpt::new()),
+        "ns" => Box::new(NeutronStar::new(false)),
+        "dgl-fb" => Box::new(NeutronStar::new(true)),
+        other => panic!("not a legacy alias: {other}"),
+    }
+}
+
+/// The pre-redesign `adapts_across_epochs` (HopGNN full / RD / FA).
+fn legacy_adapts(alias: &str) -> bool {
+    matches!(alias, "hopgnn" | "rd" | "fa")
+}
+
+/// The pre-redesign `run_strategy(dataset, cfg, kind)`, replayed.
+fn legacy_run(d: &Dataset, cfg: &RunConfig, alias: &str) -> EpochMetrics {
+    let mut cfg = cfg.clone();
+    if alias == "p3" {
+        // StrategyKind::preferred_partition: P3 requires hash
+        cfg.partition_algo = PartitionAlgo::Hash;
+    }
+    let epochs = cfg.epochs;
+    let mut env = SimEnv::new(d, cfg);
+    let mut strat = legacy_build(alias);
+    let per_epoch = strat.run(&mut env, epochs);
+    let steady = if per_epoch.len() > 2 && legacy_adapts(alias) {
+        &per_epoch[per_epoch.len() - 1..]
+    } else {
+        &per_epoch[..]
+    };
+    EpochMetrics::average_of(steady)
+}
+
+fn dataset_a() -> &'static Dataset {
+    static D: OnceLock<Dataset> = OnceLock::new();
+    D.get_or_init(|| {
+        load_spec(&DatasetSpec {
+            name: "spec-parity-a",
+            num_vertices: 6_000,
+            num_edges: 42_000,
+            feat_dim: 64,
+            classes: 8,
+            num_communities: 30,
+            train_fraction: 0.4,
+            seed: 6161,
+        })
+    })
+}
+
+fn dataset_b() -> &'static Dataset {
+    static D: OnceLock<Dataset> = OnceLock::new();
+    D.get_or_init(|| {
+        load_spec(&DatasetSpec {
+            name: "spec-parity-b",
+            num_vertices: 9_000,
+            num_edges: 54_000,
+            feat_dim: 32,
+            classes: 6,
+            num_communities: 45,
+            train_fraction: 0.35,
+            seed: 7272,
+        })
+    })
+}
+
+fn cfg(overlap: bool) -> RunConfig {
+    RunConfig {
+        batch_size: 128,
+        num_servers: 4,
+        // 3 epochs > 2: exercises the adapting strategies' steady-state
+        // (last frozen epoch) reporting path on both dispatches
+        epochs: 3,
+        max_iterations: Some(2),
+        fanout: 5,
+        vmax: RunConfig::full_sim_vmax(3, 5),
+        seed: 77,
+        overlap,
+        ..Default::default()
+    }
+}
+
+/// Every field of `EpochMetrics`, integers equal and floats equal to
+/// the bit.
+fn assert_bit_identical(a: &EpochMetrics, b: &EpochMetrics, what: &str) {
+    assert_eq!(a.bytes_by_kind, b.bytes_by_kind, "{what}: bytes_by_kind");
+    assert_eq!(a.remote_requests, b.remote_requests, "{what}");
+    assert_eq!(a.remote_vertices, b.remote_vertices, "{what}");
+    assert_eq!(a.local_hits, b.local_hits, "{what}");
+    assert_eq!(a.cache_hits, b.cache_hits, "{what}");
+    assert_eq!(a.cache_misses, b.cache_misses, "{what}");
+    assert_eq!(a.cache_hit_bytes, b.cache_hit_bytes, "{what}");
+    assert_eq!(a.cache_miss_bytes, b.cache_miss_bytes, "{what}");
+    assert_eq!(a.cache_evict_bytes, b.cache_evict_bytes, "{what}");
+    assert_eq!(a.iterations, b.iterations, "{what}");
+    assert_eq!(a.dropped_roots, b.dropped_roots, "{what}");
+    for (x, y, field) in [
+        (a.epoch_time, b.epoch_time, "epoch_time"),
+        (a.time_sample, b.time_sample, "time_sample"),
+        (a.time_gather, b.time_gather, "time_gather"),
+        (a.time_compute, b.time_compute, "time_compute"),
+        (a.time_migrate, b.time_migrate, "time_migrate"),
+        (a.time_sync, b.time_sync, "time_sync"),
+        (
+            a.time_overlap_hidden,
+            b.time_overlap_hidden,
+            "time_overlap_hidden",
+        ),
+        (a.gpu_busy_fraction, b.gpu_busy_fraction, "gpu_busy_fraction"),
+        (
+            a.time_steps_per_iter,
+            b.time_steps_per_iter,
+            "time_steps_per_iter",
+        ),
+    ] {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: {field} diverged ({x} vs {y})"
+        );
+    }
+    assert_eq!(
+        a.per_server_busy.len(),
+        b.per_server_busy.len(),
+        "{what}: per_server_busy length"
+    );
+    for (s, (x, y)) in
+        a.per_server_busy.iter().zip(&b.per_server_busy).enumerate()
+    {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: per_server_busy[{s}] diverged"
+        );
+    }
+}
+
+#[test]
+fn every_legacy_alias_matches_the_pre_redesign_dispatch() {
+    for d in [dataset_a(), dataset_b()] {
+        for overlap in [false, true] {
+            let c = cfg(overlap);
+            for alias in LEGACY_ALIASES {
+                let old = legacy_run(d, &c, alias);
+                let spec: StrategySpec = alias.parse().unwrap();
+                let new = run_strategy(d, &c, spec);
+                assert_bit_identical(
+                    &old,
+                    &new,
+                    &format!(
+                        "{alias} (spec {spec}) overlap={overlap} on {}",
+                        d.name
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn the_alias_list_covers_exactly_the_legacy_spec_table() {
+    // the 11 aliases parse to the 11 legacy specs, in order
+    let parsed: Vec<StrategySpec> = LEGACY_ALIASES
+        .iter()
+        .map(|a| a.parse().unwrap())
+        .collect();
+    assert_eq!(parsed, ALL_LEGACY_SPECS);
+}
+
+#[test]
+fn new_compositions_run_without_legacy_equivalents() {
+    // the point of the redesign: combinations the enum could not
+    // express execute end to end (fabric-aware merge without
+    // pre-gathering, min-load merge without pre-gathering)
+    let d = dataset_a();
+    let c = cfg(false);
+    for spec_str in ["hopgnn+fa-pg", "hopgnn-pg", "hopgnn+rd-pg"] {
+        let spec: StrategySpec = spec_str.parse().unwrap();
+        assert!(
+            !ALL_LEGACY_SPECS.contains(&spec),
+            "{spec_str} should be a new combination"
+        );
+        let m = run_strategy(d, &c, spec);
+        assert!(m.epoch_time > 0.0, "{spec_str}: no epoch simulated");
+        assert!(m.total_bytes() > 0, "{spec_str}: nothing moved");
+    }
+}

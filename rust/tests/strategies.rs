@@ -3,7 +3,7 @@
 
 use hopgnn::cluster::TransferKind;
 use hopgnn::config::RunConfig;
-use hopgnn::coordinator::{run_strategy, StrategyKind};
+use hopgnn::coordinator::{run_strategy, StrategySpec};
 use hopgnn::graph::datasets::{load_spec, Dataset, DatasetSpec};
 use std::sync::OnceLock;
 
@@ -47,9 +47,9 @@ fn cfg() -> RunConfig {
 fn headline_ordering_hopgnn_beats_dgl_and_p3() {
     let d = dataset(1);
     let c = cfg();
-    let dgl = run_strategy(d, &c, StrategyKind::Dgl);
-    let p3 = run_strategy(d, &c, StrategyKind::P3);
-    let hop = run_strategy(d, &c, StrategyKind::HopGnn);
+    let dgl = run_strategy(d, &c, StrategySpec::dgl());
+    let p3 = run_strategy(d, &c, StrategySpec::p3());
+    let hop = run_strategy(d, &c, StrategySpec::hopgnn());
     assert!(
         hop.epoch_time < dgl.epoch_time,
         "HopGNN {} !< DGL {}",
@@ -73,10 +73,10 @@ fn ablation_monotone_improvement() {
     // time: DGL >= +MG >= +PG >= All (allowing small noise).
     let d = dataset(2);
     let c = cfg();
-    let dgl = run_strategy(d, &c, StrategyKind::Dgl).epoch_time;
-    let mg = run_strategy(d, &c, StrategyKind::HopGnnMgOnly).epoch_time;
-    let pg = run_strategy(d, &c, StrategyKind::HopGnnMgPg).epoch_time;
-    let all = run_strategy(d, &c, StrategyKind::HopGnn).epoch_time;
+    let dgl = run_strategy(d, &c, StrategySpec::dgl()).epoch_time;
+    let mg = run_strategy(d, &c, StrategySpec::hopgnn_mg()).epoch_time;
+    let pg = run_strategy(d, &c, StrategySpec::hopgnn_mg_pg()).epoch_time;
+    let all = run_strategy(d, &c, StrategySpec::hopgnn()).epoch_time;
     assert!(mg < dgl, "+MG {mg} !< DGL {dgl}");
     assert!(pg <= mg * 1.02, "+PG {pg} !<= +MG {mg}");
     assert!(all <= pg * 1.05, "All {all} !<= +PG {pg} (merging reverts)");
@@ -87,8 +87,8 @@ fn miss_rate_drops_with_micrographs() {
     // Fig 14's direction: micrograph training slashes the miss rate.
     let d = dataset(3);
     let c = cfg();
-    let dgl = run_strategy(d, &c, StrategyKind::Dgl);
-    let mg = run_strategy(d, &c, StrategyKind::HopGnnMgOnly);
+    let dgl = run_strategy(d, &c, StrategySpec::dgl());
+    let mg = run_strategy(d, &c, StrategySpec::hopgnn_mg());
     assert!(dgl.miss_rate() > 0.6, "DGL miss {}", dgl.miss_rate());
     assert!(
         mg.miss_rate() < dgl.miss_rate() * 0.6,
@@ -104,11 +104,11 @@ fn p3_hidden_dim_sensitivity() {
     let d = dataset(4);
     let mut c = cfg();
     c.hidden = 16;
-    let p3_16 = run_strategy(d, &c, StrategyKind::P3).epoch_time;
-    let dgl_16 = run_strategy(d, &c, StrategyKind::Dgl).epoch_time;
+    let p3_16 = run_strategy(d, &c, StrategySpec::p3()).epoch_time;
+    let dgl_16 = run_strategy(d, &c, StrategySpec::dgl()).epoch_time;
     c.hidden = 128;
-    let p3_128 = run_strategy(d, &c, StrategyKind::P3).epoch_time;
-    let dgl_128 = run_strategy(d, &c, StrategyKind::Dgl).epoch_time;
+    let p3_128 = run_strategy(d, &c, StrategySpec::p3()).epoch_time;
+    let dgl_128 = run_strategy(d, &c, StrategySpec::dgl()).epoch_time;
     let edge_16 = dgl_16 / p3_16;
     let edge_128 = dgl_128 / p3_128;
     assert!(edge_16 > 1.0, "P3 should win at h16 ({edge_16:.2}x)");
@@ -123,8 +123,8 @@ fn gpu_busy_fraction_ordering() {
     // Fig 20: HopGNN keeps the GPU busier than DGL.
     let d = dataset(5);
     let c = cfg();
-    let dgl = run_strategy(d, &c, StrategyKind::Dgl);
-    let hop = run_strategy(d, &c, StrategyKind::HopGnn);
+    let dgl = run_strategy(d, &c, StrategySpec::dgl());
+    let hop = run_strategy(d, &c, StrategySpec::hopgnn());
     assert!(
         hop.gpu_busy_fraction > dgl.gpu_busy_fraction,
         "busy: hop {} !> dgl {}",
@@ -137,13 +137,13 @@ fn gpu_busy_fraction_ordering() {
 fn feature_centric_strategies_move_fewer_feature_bytes() {
     let d = dataset(6);
     let c = cfg();
-    let dgl = run_strategy(d, &c, StrategyKind::Dgl);
-    let hop = run_strategy(d, &c, StrategyKind::HopGnn);
-    let lo = run_strategy(d, &c, StrategyKind::LocalityOpt);
+    let dgl = run_strategy(d, &c, StrategySpec::dgl());
+    let hop = run_strategy(d, &c, StrategySpec::hopgnn());
+    let lo = run_strategy(d, &c, StrategySpec::locality_opt());
     assert!(hop.bytes(TransferKind::Feature) < dgl.bytes(TransferKind::Feature));
     assert!(lo.bytes(TransferKind::Feature) <= hop.bytes(TransferKind::Feature));
     // P3 moves no raw features at all
-    let p3 = run_strategy(d, &c, StrategyKind::P3);
+    let p3 = run_strategy(d, &c, StrategySpec::p3());
     assert_eq!(p3.bytes(TransferKind::Feature), 0);
     assert!(p3.bytes(TransferKind::Hidden) > 0);
 }
@@ -178,12 +178,12 @@ fn more_servers_hopgnn_still_wins() {
     // so per-(model, server) root groups stay statistically balanced
     c.num_servers = 2;
     c.batch_size = 128 * 2;
-    let s2 = run_strategy(d, &c, StrategyKind::Dgl).epoch_time
-        / run_strategy(d, &c, StrategyKind::HopGnn).epoch_time;
+    let s2 = run_strategy(d, &c, StrategySpec::dgl()).epoch_time
+        / run_strategy(d, &c, StrategySpec::hopgnn()).epoch_time;
     c.num_servers = 6;
     c.batch_size = 128 * 6;
-    let s6 = run_strategy(d, &c, StrategyKind::Dgl).epoch_time
-        / run_strategy(d, &c, StrategyKind::HopGnn).epoch_time;
+    let s6 = run_strategy(d, &c, StrategySpec::dgl()).epoch_time
+        / run_strategy(d, &c, StrategySpec::hopgnn()).epoch_time;
     assert!(s2 > 1.2, "2 servers: speedup {s2:.2}x");
     assert!(s6 > 1.0, "6 servers: speedup {s6:.2}x");
 }
