@@ -2,16 +2,40 @@
 //! §Perf targets): sampler, dense-adjacency packing, gather planning,
 //! partitioner, feature synthesis. Uses the in-tree harness (median ±
 //! MAD) since criterion is not vendored.
+//!
+//! # CI throughput gate
+//!
+//! Beyond printing the table, this binary is the regression gate the
+//! `hotpath` CI job blocks on:
+//!
+//! ```text
+//! cargo bench --bench hotpath -- \
+//!     --json reports/hotpath.json \
+//!     --baseline benches/baseline.json --tolerance 30
+//! ```
+//!
+//! `--json` writes machine-readable results (median ± MAD per bench);
+//! `--baseline` compares each median against the checked-in
+//! `benches/baseline.json` and **exits 1** if any bench is more than
+//! `--tolerance` percent slower. The check is one-sided: being faster
+//! than baseline always passes (the baseline is deliberately
+//! conservative so shared-runner noise cannot flake the gate — it
+//! catches order-of-magnitude regressions, not single-digit drift).
+//! Refresh the file on a quiet machine with `--write-baseline
+//! benches/baseline.json` after an intentional perf change.
 
-use hopgnn::bench::harness::bench;
+use hopgnn::bench::harness::{bench, BenchResult};
 use hopgnn::featstore::FeatureStore;
 use hopgnn::graph::datasets::{load_spec, DatasetSpec};
 use hopgnn::partition::{partition, PartitionAlgo};
 use hopgnn::runtime::tensor::BatchBuffers;
 use hopgnn::sampler::{sample_micrograph, SampleConfig, SamplerKind};
+use hopgnn::util::cli::Cli;
+use hopgnn::util::json::{self, Value};
 use hopgnn::util::rng::Rng;
+use std::collections::BTreeMap;
 
-fn main() {
+fn run_benches() -> Vec<BenchResult> {
     let d = load_spec(&DatasetSpec {
         name: "bench",
         num_vertices: 100_000,
@@ -88,6 +112,117 @@ fn main() {
         );
     }));
 
+    results
+}
+
+/// Results as the baseline/report JSON shape:
+/// `{"benches": [{"name", "median_us", "mad_us", "iters"}, ...]}`.
+fn to_json(results: &[BenchResult], note: &str) -> Value {
+    let benches: Vec<Value> = results
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Value::Str(r.name.clone()));
+            o.insert(
+                "median_us".to_string(),
+                Value::Num(r.median_secs * 1e6),
+            );
+            o.insert("mad_us".to_string(), Value::Num(r.mad_secs * 1e6));
+            o.insert("iters".to_string(), Value::Num(r.iters as f64));
+            Value::Obj(o)
+        })
+        .collect();
+    let mut obj = BTreeMap::new();
+    if !note.is_empty() {
+        obj.insert("note".to_string(), Value::Str(note.to_string()));
+    }
+    obj.insert("benches".to_string(), Value::Arr(benches));
+    Value::Obj(obj)
+}
+
+/// Baseline medians by bench name (missing/garbled file is a hard
+/// error: the gate must not silently pass on a bad path).
+fn load_baseline(path: &str) -> Result<BTreeMap<String, f64>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("baseline {path}: {e}"))?;
+    let v = json::parse(&text)
+        .map_err(|e| format!("baseline {path}: {e:?}"))?;
+    let benches = v
+        .path("benches")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| format!("baseline {path}: no 'benches' array"))?;
+    let mut out = BTreeMap::new();
+    for b in benches {
+        let name = b
+            .path("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("baseline {path}: bench without name"))?;
+        let median = b
+            .path("median_us")
+            .and_then(Value::as_f64)
+            .filter(|m| *m > 0.0)
+            .ok_or_else(|| {
+                format!("baseline {path}: '{name}' has no median_us")
+            })?;
+        out.insert(name.to_string(), median);
+    }
+    Ok(out)
+}
+
+/// One-sided regression check: fail only when slower than baseline by
+/// more than `tolerance_pct`. Returns human-readable failures.
+fn check_regressions(
+    results: &[BenchResult],
+    baseline: &BTreeMap<String, f64>,
+    tolerance_pct: f64,
+) -> Vec<String> {
+    let mut failures = Vec::new();
+    for r in results {
+        let Some(&base_us) = baseline.get(&r.name) else {
+            // a new bench has no history yet: report, don't gate
+            eprintln!("note: '{}' not in baseline (new bench?)", r.name);
+            continue;
+        };
+        let cur_us = r.median_secs * 1e6;
+        let limit = base_us * (1.0 + tolerance_pct / 100.0);
+        if cur_us > limit {
+            failures.push(format!(
+                "{}: {:.1} us > {:.1} us (baseline {:.1} us + {:.0}%)",
+                r.name, cur_us, limit, base_us, tolerance_pct
+            ));
+        }
+    }
+    for name in baseline.keys() {
+        if !results.iter().any(|r| &r.name == name) {
+            failures.push(format!(
+                "baseline bench '{name}' no longer runs — refresh the \
+                 baseline with --write-baseline"
+            ));
+        }
+    }
+    failures
+}
+
+fn main() {
+    let cli = Cli::new(
+        "hotpath",
+        "hot-path micro-benchmarks + CI throughput regression gate",
+    )
+    .opt("json", "", "write results JSON to this path")
+    .opt("baseline", "", "compare against this baseline JSON; exit 1 on regression")
+    .opt("tolerance", "30", "allowed slowdown vs baseline, percent")
+    .opt("write-baseline", "", "write measured medians as a new baseline and exit")
+    .flag("bench", "ignored (cargo bench passes it)");
+    let a = match cli.parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+
+    let results = run_benches();
+
     println!("\nL3 hot-path micro-benchmarks:");
     for r in &results {
         println!("  {}", r.summary());
@@ -96,5 +231,63 @@ fn main() {
     println!("\ncsv:name,median_us");
     for r in &results {
         println!("csv:{},{:.1}", r.name, r.median_secs * 1e6);
+    }
+
+    let json_out = a.get_or("json", "");
+    if !json_out.is_empty() {
+        if let Some(dir) = std::path::Path::new(&json_out).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let v = to_json(&results, "");
+        if let Err(e) = std::fs::write(&json_out, json::write(&v, true)) {
+            eprintln!("could not write {json_out}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("[results written to {json_out}]");
+    }
+
+    let write_baseline = a.get_or("write-baseline", "");
+    if !write_baseline.is_empty() {
+        let v = to_json(
+            &results,
+            "hotpath throughput baseline: conservative medians; the CI \
+             gate fails only when slower than median_us + tolerance. \
+             Regenerate with: cargo bench --bench hotpath -- \
+             --write-baseline benches/baseline.json",
+        );
+        if let Err(e) =
+            std::fs::write(&write_baseline, json::write(&v, true))
+        {
+            eprintln!("could not write {write_baseline}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("[baseline written to {write_baseline}]");
+        return;
+    }
+
+    let baseline_path = a.get_or("baseline", "");
+    if !baseline_path.is_empty() {
+        let tolerance = a.get_f64("tolerance", 30.0);
+        let baseline = match load_baseline(&baseline_path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(1);
+            }
+        };
+        let failures = check_regressions(&results, &baseline, tolerance);
+        if failures.is_empty() {
+            eprintln!(
+                "[throughput gate passed: {} benches within {tolerance}% \
+                 of {baseline_path}]",
+                results.len()
+            );
+        } else {
+            eprintln!("throughput regressions vs {baseline_path}:");
+            for f in &failures {
+                eprintln!("  {f}");
+            }
+            std::process::exit(1);
+        }
     }
 }

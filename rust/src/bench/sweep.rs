@@ -13,10 +13,23 @@
 //! or, for the `bench sweep` CLI path, via the generic
 //! [`SweepGrid::table`].
 //!
-//! The four grid-shaped experiments (`hetero`, `cachesweep`, `overlap`,
-//! and the ablation figures) are all built on this engine; only
-//! trajectory experiments that need per-epoch history (Fig 17) still
-//! drive strategies directly.
+//! The grid-shaped experiments (`hetero`, `cachesweep`, `overlap`,
+//! `scale`, and the ablation figures) are all built on this engine;
+//! only trajectory experiments that need per-epoch history (Fig 17)
+//! still drive strategies directly.
+//!
+//! # Parallel execution (`--jobs`)
+//!
+//! Grid cells are independent, so [`SweepSpec::run`] executes them on a
+//! scoped worker pool ([`crate::util::pool`]). The worker count comes
+//! from [`SweepSpec::jobs`] when set, else the process-wide default
+//! ([`set_default_jobs`], wired to the `bench --jobs` flag; `0` =
+//! available parallelism). Results are written back in deterministic
+//! grid order and every cell seeds its own RNG from its config, so
+//! `--jobs 1` and `--jobs N` produce bit-identical grids and reports —
+//! locked by `tests/sweep_parallel.rs`. Only [`SweepCell::wall_secs`]
+//! (host wall-clock, reported by the `scale` experiment) varies with
+//! scheduling.
 
 use super::memo;
 use crate::cluster::FabricSpec;
@@ -25,8 +38,24 @@ use crate::coordinator::StrategySpec;
 use crate::featstore::cache::CachePolicy;
 use crate::graph::datasets;
 use crate::metrics::EpochMetrics;
+use crate::util::pool;
 use crate::util::table::{fmt_bytes, fmt_secs, Table};
-use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide default worker count for [`SweepSpec::run`] (`0` =
+/// auto: one worker per available hardware thread). Set once by the
+/// CLI's `--jobs`; [`SweepSpec::jobs`] overrides it per sweep.
+static DEFAULT_JOBS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide `--jobs` default (0 = available parallelism).
+pub fn set_default_jobs(jobs: usize) {
+    DEFAULT_JOBS.store(jobs, Ordering::Relaxed);
+}
+
+/// The current process-wide `--jobs` default (unresolved; 0 = auto).
+pub fn default_jobs() -> usize {
+    DEFAULT_JOBS.load(Ordering::Relaxed)
+}
 
 /// One point on an axis: a strategy, or a labeled batch of config
 /// patches applied through [`RunConfig::set`].
@@ -179,6 +208,9 @@ pub struct SweepSpec {
     pub base: RunConfig,
     pub strategy: StrategySpec,
     pub axes: Vec<Axis>,
+    /// Worker threads for [`Self::run`] (`None` = the process-wide
+    /// [`default_jobs`]; `Some(0)` = auto).
+    pub jobs: Option<usize>,
 }
 
 impl SweepSpec {
@@ -187,12 +219,19 @@ impl SweepSpec {
             base,
             strategy,
             axes: Vec::new(),
+            jobs: None,
         }
     }
 
     /// Append an axis (builder style). Later axes vary fastest.
     pub fn axis(mut self, axis: Axis) -> Self {
         self.axes.push(axis);
+        self
+    }
+
+    /// Pin the worker count for this sweep (builder style; `0` = auto).
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = Some(jobs);
         self
     }
 
@@ -244,13 +283,10 @@ impl SweepSpec {
             }
             // the runner loads datasets by name and panics on unknown
             // ones; catch that here so the fail-fast promise holds for
-            // the dataset axis too
-            if datasets::spec_by_name(&cfg.dataset).is_none() {
-                return Err(format!(
-                    "sweep cell has unknown dataset '{}'",
-                    cfg.dataset
-                ));
-            }
+            // the dataset axis too (named suite entries and the
+            // `synth:` grammar both validate without loading)
+            datasets::validate_name(&cfg.dataset)
+                .map_err(|e| format!("sweep cell: {e}"))?;
             // strategy resolution: a strategy axis wins, then a
             // `strategy =` config patch, then the sweep default
             let strategy =
@@ -271,26 +307,28 @@ impl SweepSpec {
         Ok(cells)
     }
 
-    /// Expand, warm the dataset memo for every distinct dataset, and
-    /// execute every cell through [`memo::run`].
+    /// Expand and execute every cell through [`memo::run`], on the
+    /// worker pool when more than one job is configured. Datasets and
+    /// partitions load through the memo's per-key entry locks, so
+    /// cells over distinct datasets load concurrently while identical
+    /// keys still load exactly once. Cell results land in deterministic
+    /// row-major grid order whatever the worker interleaving.
     pub fn run(&self) -> Result<SweepGrid, String> {
         let expanded = self.expand()?;
-        let mut seen = BTreeSet::new();
-        for (_, _, cfg) in &expanded {
-            if seen.insert(cfg.dataset.clone()) {
-                let _ = memo::dataset(&cfg.dataset);
-            }
-        }
-        let mut cells = Vec::with_capacity(expanded.len());
-        for (index, strategy, cfg) in expanded {
-            let metrics = memo::run(&cfg, strategy);
-            cells.push(SweepCell {
-                index,
-                strategy,
-                cfg,
+        let jobs =
+            pool::resolve_jobs(self.jobs.unwrap_or_else(default_jobs));
+        let cells = pool::run_indexed(expanded.len(), jobs, |i| {
+            let (index, strategy, cfg) = &expanded[i];
+            let t0 = std::time::Instant::now();
+            let metrics = memo::run(cfg, *strategy);
+            SweepCell {
+                index: index.clone(),
+                strategy: *strategy,
+                cfg: cfg.clone(),
                 metrics,
-            });
-        }
+                wall_secs: t0.elapsed().as_secs_f64(),
+            }
+        });
         Ok(SweepGrid {
             axes: self.axes.clone(),
             cells,
@@ -305,6 +343,12 @@ pub struct SweepCell {
     pub strategy: StrategySpec,
     pub cfg: RunConfig,
     pub metrics: EpochMetrics,
+    /// Host wall-clock spent executing this cell (including any
+    /// first-touch dataset/partition load the cell won the race for).
+    /// The one non-deterministic field: the `scale` experiment reports
+    /// it as simulated-seconds-per-wall-second; the parity-locked
+    /// reports never render it.
+    pub wall_secs: f64,
 }
 
 /// The executed product grid, indexable by per-axis positions.
@@ -513,6 +557,32 @@ mod tests {
         assert!(s.contains("straggler:0"), "{s}");
         // no strategy axis: the default strategy column is prepended
         assert!(s.contains("DGL"), "{s}");
+    }
+
+    #[test]
+    fn jobs_do_not_change_cell_metrics() {
+        // the full grid-level lock lives in tests/sweep_parallel.rs;
+        // this is the quick in-module smoke of the same property
+        let spec = || {
+            SweepSpec::new(tiny_base(), StrategySpec::dgl())
+                .axis(Axis::strategies(&[
+                    StrategySpec::dgl(),
+                    StrategySpec::hopgnn(),
+                ]))
+                .axis(Axis::overlap(&[false, true]))
+        };
+        let a = spec().jobs(1).run().unwrap();
+        let b = spec().jobs(4).run().unwrap();
+        assert_eq!(a.cells.len(), b.cells.len());
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ca.index, cb.index, "grid order must be stable");
+            assert_eq!(ca.strategy, cb.strategy);
+            assert_eq!(
+                ca.metrics.epoch_time.to_bits(),
+                cb.metrics.epoch_time.to_bits()
+            );
+            assert_eq!(ca.metrics.total_bytes(), cb.metrics.total_bytes());
+        }
     }
 
     #[test]

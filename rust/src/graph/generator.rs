@@ -6,9 +6,31 @@
 //! power-law degree sequence (Chung–Lu stubs) with a tunable fraction of
 //! intra-community edges. An R-MAT generator is included for adversarial
 //! low-locality workloads (used by ablation benches).
+//!
+//! # Memory-bounded chunk-streamed path
+//!
+//! Both generators also come in a chunk-streamed variant
+//! ([`community_graph_chunked`], [`rmat_graph_chunked`]) that builds
+//! the CSR with **counting-sort passes over fixed-size edge chunks**,
+//! never materializing the unsorted edge list: pass 1 streams the
+//! (deterministic, replayable) edge sequence and counts symmetrized
+//! degrees; pass 2 replays the identical sequence and scatters
+//! neighbors straight into the final CSR allocation, which is then
+//! sorted + deduplicated *in place*. Peak RSS is therefore
+//! `≈ 16·V + 8·E + 16·chunk` bytes (offsets + scatter cursors + the
+//! pre-dedup neighbor array + one chunk buffer) — e.g. ~1 GiB for a
+//! `V = 10⁷, E = 10⁸` graph — instead of the edge list *and* CSR
+//! coexisting. The small-graph generators are the one-chunk special
+//! case: [`community_graph`] and [`community_graph_chunked`] are locked
+//! bit-identical for every chunk size (this module's tests +
+//! `tests/generator_scale.rs`).
 
 use super::CsrGraph;
 use crate::util::rng::Rng;
+
+/// Default chunk size (edges buffered per counting-sort pass): 4 Mi
+/// edges = 32 MiB of buffer, far below the CSR arrays it avoids.
+pub const DEFAULT_CHUNK_EDGES: usize = 4 << 20;
 
 /// Parameters for the community-structured power-law generator.
 #[derive(Clone, Debug)]
@@ -44,14 +66,11 @@ pub struct GeneratedGraph {
     pub community: Vec<u32>,
 }
 
-pub fn community_graph(spec: &CommunityGraphSpec) -> GeneratedGraph {
-    let n = spec.num_vertices;
-    let k = spec.num_communities.max(1);
-    let mut rng = Rng::new(spec.seed);
-
-    // Contiguous community blocks of roughly equal size (block layout makes
-    // the ground truth easy to reason about in tests; partitioners never
-    // see it).
+/// Contiguous community blocks of roughly equal size (block layout makes
+/// the ground truth easy to reason about in tests; partitioners never
+/// see it). Returns per-vertex community ids and the block boundaries
+/// (`comm_start[c]..comm_start[c+1]` = community `c`).
+fn community_layout(n: usize, k: usize) -> (Vec<u32>, Vec<usize>) {
     let community: Vec<u32> = (0..n).map(|v| ((v * k) / n) as u32).collect();
     let mut comm_start = vec![0usize; k + 1];
     for v in 0..n {
@@ -62,20 +81,37 @@ pub fn community_graph(spec: &CommunityGraphSpec) -> GeneratedGraph {
             comm_start[c] = comm_start[c - 1];
         }
     }
+    (community, comm_start)
+}
 
-    // Power-law degree targets, scaled to hit num_edges total stubs.
-    let mut degs: Vec<f64> = (0..n)
-        .map(|_| 1.0 + rng.powerlaw(n, spec.alpha) as f64)
-        .collect();
-    let total: f64 = degs.iter().sum();
-    let scale = (2 * spec.num_edges) as f64 / total;
-    for d in degs.iter_mut() {
-        *d *= scale;
+/// Stream the community generator's edge sequence to `emit`, in the
+/// exact order (and from the exact RNG draws) the original in-memory
+/// generator used — so the stream is replayable: calling this twice
+/// with the same spec emits the identical sequence, which is what lets
+/// the chunked builder regenerate edges for its second pass instead of
+/// storing them. Degree targets are re-derived on the fly from a
+/// cloned RNG cursor (no `O(V)` f64 array); self-loops are filtered.
+fn stream_community_edges(
+    spec: &CommunityGraphSpec,
+    community: &[u32],
+    comm_start: &[usize],
+    mut emit: impl FnMut(u32, u32),
+) {
+    let n = spec.num_vertices;
+    // two cursors over one logical stream: `deg_rng` replays the n
+    // power-law degree draws; `rng` first consumes those same n draws
+    // (summing them for the stub scale) and then continues as the edge
+    // RNG — bit-identical to the historical "draw all degrees, scale,
+    // then draw edges" order.
+    let mut deg_rng = Rng::new(spec.seed);
+    let mut rng = deg_rng.clone();
+    let mut total = 0.0f64;
+    for _ in 0..n {
+        total += 1.0 + rng.powerlaw(n, spec.alpha) as f64;
     }
-
-    let mut edges = Vec::with_capacity(spec.num_edges + spec.num_edges / 8);
+    let scale = (2 * spec.num_edges) as f64 / total;
     for v in 0..n {
-        let dv = degs[v];
+        let dv = (1.0 + deg_rng.powerlaw(n, spec.alpha) as f64) * scale;
         let stubs = dv.floor() as usize + usize::from(rng.coin(dv.fract()));
         let c = community[v] as usize;
         let (cs, ce) = (comm_start[c], comm_start[c + 1]);
@@ -87,23 +123,51 @@ pub fn community_graph(spec: &CommunityGraphSpec) -> GeneratedGraph {
                 rng.below(n) as u32
             };
             if u != v as u32 {
-                edges.push((v as u32, u));
+                emit(v as u32, u);
             }
         }
     }
+}
+
+pub fn community_graph(spec: &CommunityGraphSpec) -> GeneratedGraph {
+    let n = spec.num_vertices;
+    let k = spec.num_communities.max(1);
+    let (community, comm_start) = community_layout(n, k);
+    let mut edges = Vec::with_capacity(spec.num_edges + spec.num_edges / 8);
+    stream_community_edges(spec, &community, &comm_start, |a, b| {
+        edges.push((a, b))
+    });
     GeneratedGraph {
         graph: CsrGraph::from_edges(n, &edges),
         community,
     }
 }
 
-/// R-MAT (Chakrabarti et al.) — skewed but community-free; the locality
-/// stress case.
-pub fn rmat_graph(n_log2: u32, num_edges: usize, seed: u64) -> CsrGraph {
+/// Chunk-streamed [`community_graph`]: identical output for every
+/// `chunk_edges` (the buffer only batches counting/scatter work), with
+/// peak memory bounded by the CSR arrays plus one chunk buffer.
+pub fn community_graph_chunked(
+    spec: &CommunityGraphSpec,
+    chunk_edges: usize,
+) -> GeneratedGraph {
+    let n = spec.num_vertices;
+    let k = spec.num_communities.max(1);
+    let (community, comm_start) = community_layout(n, k);
+    let graph = csr_from_stream(n, chunk_edges, |emit| {
+        stream_community_edges(spec, &community, &comm_start, emit)
+    });
+    GeneratedGraph { graph, community }
+}
+
+/// Stream the R-MAT edge sequence (replayable, self-loops filtered).
+fn stream_rmat_edges(
+    n_log2: u32,
+    num_edges: usize,
+    seed: u64,
+    mut emit: impl FnMut(u32, u32),
+) {
     let (a, b, c) = (0.57, 0.19, 0.19); // Graph500 defaults
-    let n = 1usize << n_log2;
     let mut rng = Rng::new(seed);
-    let mut edges = Vec::with_capacity(num_edges);
     for _ in 0..num_edges {
         let (mut x, mut y) = (0usize, 0usize);
         for _ in 0..n_log2 {
@@ -121,10 +185,130 @@ pub fn rmat_graph(n_log2: u32, num_edges: usize, seed: u64) -> CsrGraph {
             y = (y << 1) | dy;
         }
         if x != y {
-            edges.push((x as u32, y as u32));
+            emit(x as u32, y as u32);
         }
     }
-    CsrGraph::from_edges(n, &edges)
+}
+
+/// R-MAT (Chakrabarti et al.) — skewed but community-free; the locality
+/// stress case.
+pub fn rmat_graph(n_log2: u32, num_edges: usize, seed: u64) -> CsrGraph {
+    let mut edges = Vec::with_capacity(num_edges);
+    stream_rmat_edges(n_log2, num_edges, seed, |a, b| edges.push((a, b)));
+    CsrGraph::from_edges(1usize << n_log2, &edges)
+}
+
+/// Chunk-streamed [`rmat_graph`]: identical output for every chunk
+/// size, memory bounded like [`community_graph_chunked`].
+pub fn rmat_graph_chunked(
+    n_log2: u32,
+    num_edges: usize,
+    seed: u64,
+    chunk_edges: usize,
+) -> CsrGraph {
+    csr_from_stream(1usize << n_log2, chunk_edges, |emit| {
+        stream_rmat_edges(n_log2, num_edges, seed, emit)
+    })
+}
+
+/// Count one chunk's symmetrized degree contributions (pass 1).
+fn count_chunk(chunk: &[(u32, u32)], deg: &mut [u64]) {
+    for &(a, b) in chunk {
+        deg[a as usize] += 1;
+        deg[b as usize] += 1;
+    }
+}
+
+/// Scatter one chunk's edges (both directions) at the write cursors
+/// (pass 2).
+fn scatter_chunk(
+    chunk: &[(u32, u32)],
+    cursor: &mut [u64],
+    neighbors: &mut [u32],
+) {
+    for &(a, b) in chunk {
+        neighbors[cursor[a as usize] as usize] = b;
+        cursor[a as usize] += 1;
+        neighbors[cursor[b as usize] as usize] = a;
+        cursor[b as usize] += 1;
+    }
+}
+
+/// Build a symmetrized, sorted, deduplicated CSR from a replayable edge
+/// stream via two counting-sort passes over fixed-size chunks. The
+/// `stream` closure must emit the identical self-loop-free sequence on
+/// every call; equivalent to `CsrGraph::from_edges` on the materialized
+/// list (same per-vertex neighbor *sets*, so the same sorted CSR) —
+/// without ever holding that list.
+fn csr_from_stream(
+    n: usize,
+    chunk_edges: usize,
+    stream: impl Fn(&mut dyn FnMut(u32, u32)),
+) -> CsrGraph {
+    let chunk_cap = chunk_edges.max(1);
+    // grow the buffer lazily toward the chunk size: a huge requested
+    // chunk must not pre-allocate more than the stream will fill
+    let buf_cap = chunk_cap.min(1 << 22);
+
+    // pass 1: count symmetrized degrees, one chunk at a time
+    let mut deg = vec![0u64; n];
+    let mut chunk: Vec<(u32, u32)> = Vec::with_capacity(buf_cap);
+    stream(&mut |a, b| {
+        debug_assert!((a as usize) < n && (b as usize) < n);
+        debug_assert_ne!(a, b, "streams must filter self-loops");
+        chunk.push((a, b));
+        if chunk.len() >= chunk_cap {
+            count_chunk(&chunk, &mut deg);
+            chunk.clear();
+        }
+    });
+    count_chunk(&chunk, &mut deg);
+    chunk.clear();
+
+    // prefix-sum offsets; reuse the degree allocation as the scatter
+    // cursors (one less O(V) array at peak)
+    let mut offsets = vec![0u64; n + 1];
+    for v in 0..n {
+        offsets[v + 1] = offsets[v] + deg[v];
+    }
+    let mut cursor = deg;
+    cursor.copy_from_slice(&offsets[..n]);
+
+    // pass 2: replay the identical stream, scattering into the final
+    // allocation
+    let mut neighbors = vec![0u32; offsets[n] as usize];
+    stream(&mut |a, b| {
+        chunk.push((a, b));
+        if chunk.len() >= chunk_cap {
+            scatter_chunk(&chunk, &mut cursor, &mut neighbors);
+            chunk.clear();
+        }
+    });
+    scatter_chunk(&chunk, &mut cursor, &mut neighbors);
+    drop(chunk);
+    drop(cursor);
+
+    // in-place per-vertex sort + dedup, compacting within the same
+    // allocation (the write head never passes the read head)
+    let mut out_offsets = vec![0u64; n + 1];
+    let mut write = 0usize;
+    for v in 0..n {
+        let (s, e) = (offsets[v] as usize, offsets[v + 1] as usize);
+        neighbors[s..e].sort_unstable();
+        let mut prev = None;
+        for i in s..e {
+            let x = neighbors[i];
+            if prev != Some(x) {
+                neighbors[write] = x;
+                write += 1;
+                prev = Some(x);
+            }
+        }
+        out_offsets[v + 1] = write as u64;
+    }
+    neighbors.truncate(write);
+    neighbors.shrink_to_fit();
+    CsrGraph::from_sorted_parts(out_offsets, neighbors)
 }
 
 #[cfg(test)]
@@ -193,9 +377,37 @@ mod tests {
     }
 
     #[test]
+    fn chunked_is_bit_identical_to_unchunked() {
+        // the one-chunk special case *and* aggressive chunking must
+        // reproduce the in-memory generator exactly — CSR arrays and
+        // community labels both
+        let spec = CommunityGraphSpec {
+            num_vertices: 3000,
+            num_edges: 18_000,
+            num_communities: 24,
+            seed: 5,
+            ..Default::default()
+        };
+        let base = community_graph(&spec);
+        for chunk in [1, 97, 4096, usize::MAX] {
+            let g = community_graph_chunked(&spec, chunk);
+            assert_eq!(g.graph, base.graph, "chunk={chunk}");
+            assert_eq!(g.community, base.community, "chunk={chunk}");
+        }
+    }
+
+    #[test]
     fn rmat_shape() {
         let g = rmat_graph(10, 8000, 3);
         assert_eq!(g.num_vertices(), 1024);
         assert!(g.num_edges() > 4000);
+    }
+
+    #[test]
+    fn rmat_chunked_matches_unchunked() {
+        let base = rmat_graph(10, 8000, 3);
+        for chunk in [1, 513, 1 << 20] {
+            assert_eq!(rmat_graph_chunked(10, 8000, 3, chunk), base);
+        }
     }
 }

@@ -7,7 +7,7 @@ pub mod generator;
 /// Compressed-sparse-row graph. Stored symmetrized (GNN aggregation treats
 /// edges as undirected, matching DGL's default for these benchmarks);
 /// neighbor lists are sorted and deduplicated.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CsrGraph {
     offsets: Vec<u64>,
     neighbors: Vec<u32>,
@@ -61,6 +61,36 @@ impl CsrGraph {
             offsets: out_offsets,
             neighbors: out_neighbors,
         }
+    }
+
+    /// Build directly from finished CSR arrays: `offsets.len() == n+1`,
+    /// each adjacency list already sorted, deduplicated, self-loop-free,
+    /// and symmetric. The memory-bounded chunk-streamed generator path
+    /// (`generator::community_graph_chunked`) constructs these in place
+    /// without ever materializing an unsorted edge list; invariants are
+    /// spot-checked in debug builds only.
+    pub fn from_sorted_parts(offsets: Vec<u64>, neighbors: Vec<u32>) -> Self {
+        assert!(!offsets.is_empty(), "offsets must have n+1 entries");
+        assert_eq!(
+            *offsets.last().unwrap() as usize,
+            neighbors.len(),
+            "offsets must cover the neighbor array"
+        );
+        debug_assert!(offsets.windows(2).all(|w| w[0] <= w[1]));
+        #[cfg(debug_assertions)]
+        for v in 0..offsets.len() - 1 {
+            let list =
+                &neighbors[offsets[v] as usize..offsets[v + 1] as usize];
+            debug_assert!(
+                list.windows(2).all(|w| w[0] < w[1]),
+                "adjacency of {v} not sorted+deduped"
+            );
+            debug_assert!(
+                !list.contains(&(v as u32)),
+                "self-loop at {v}"
+            );
+        }
+        Self { offsets, neighbors }
     }
 
     #[inline]
@@ -153,5 +183,21 @@ mod tests {
     #[should_panic(expected = "edge out of range")]
     fn rejects_out_of_range() {
         CsrGraph::from_edges(2, &[(0, 5)]);
+    }
+
+    #[test]
+    fn from_sorted_parts_roundtrips() {
+        let g = tiny();
+        let g2 = CsrGraph::from_sorted_parts(
+            g.offsets.clone(),
+            g.neighbors.clone(),
+        );
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the neighbor array")]
+    fn from_sorted_parts_rejects_mismatched_arrays() {
+        CsrGraph::from_sorted_parts(vec![0, 2], vec![1]);
     }
 }

@@ -10,7 +10,7 @@
 //!   calibrate  measure real PJRT step time, report effective FLOP/s
 //!   info       list datasets, artifacts, experiments
 
-use hopgnn::bench::sweep::{Axis, SweepSpec};
+use hopgnn::bench::sweep::{set_default_jobs, Axis, SweepSpec};
 use hopgnn::bench::{
     resolve_experiment_ids, run_experiment, Report, Scale, ALL_EXPERIMENTS,
 };
@@ -76,6 +76,7 @@ fn cmd_reproduce(args: Vec<String>) -> i32 {
     let cli = Cli::new("hopgnn reproduce", "regenerate paper tables/figures")
         .opt("exp", "all", "experiment id (fig04..fig23, table1, table3) or 'all'")
         .opt("out", "reports", "output directory for markdown reports")
+        .opt("jobs", "1", "parallel sweep workers (0 = all cores)")
         .flag("quick", "reduced scale (CI-sized)");
     let a = match cli.parse(args) {
         Ok(a) => a,
@@ -84,6 +85,7 @@ fn cmd_reproduce(args: Vec<String>) -> i32 {
             return 2;
         }
     };
+    set_default_jobs(a.get_usize("jobs", 1));
     let scale = if a.has("quick") {
         Scale::quick()
     } else {
@@ -133,6 +135,7 @@ fn cmd_bench(args: Vec<String>) -> i32 {
          ('bench sweep' runs a declarative grid instead)",
     )
     .opt("out", "reports", "output directory for md/json reports")
+    .opt("jobs", "1", "parallel sweep workers (0 = all cores)")
     .flag("quick", "reduced scale (CI-sized)");
     let a = match cli.parse(args) {
         Ok(a) => a,
@@ -141,6 +144,7 @@ fn cmd_bench(args: Vec<String>) -> i32 {
             return 2;
         }
     };
+    set_default_jobs(a.get_usize("jobs", 1));
     let scale = if a.has("quick") {
         Scale::quick()
     } else {
@@ -238,6 +242,7 @@ fn cmd_bench_sweep(args: Vec<String>) -> i32 {
          pins the single strategy (instead of --strategies)",
     )
     .opt("out", "reports", "output directory for the md/json report")
+    .opt("jobs", "1", "parallel workers for grid cells (0 = all cores)")
     .flag("quick", "reduced scale (CI-sized)");
     let a = match cli.parse(args) {
         Ok(a) => a,
@@ -366,6 +371,7 @@ fn cmd_bench_sweep(args: Vec<String>) -> i32 {
         }
     }
 
+    sweep = sweep.jobs(a.get_usize("jobs", 1));
     let t0 = std::time::Instant::now();
     let grid = match sweep.run() {
         Ok(g) => g,
@@ -405,7 +411,8 @@ fn cmd_bench_sweep(args: Vec<String>) -> i32 {
 
 fn cmd_sim(args: Vec<String>) -> i32 {
     let cli = Cli::new("hopgnn sim", "simulate one training strategy")
-        .opt("dataset", "products-s", "dataset (arxiv-s|products-s|uk-s|in-s|it-s)")
+        .opt("dataset", "products-s",
+             "dataset (arxiv-s|products-s|uk-s|in-s|it-s|synth:v=..,e=..)")
         .opt("model", "gcn", "gcn|sage|gat|deepgcn|film")
         .opt("strategy", "hopgnn",
              "strategy spec (e.g. hopgnn+fa-pg) or legacy alias \

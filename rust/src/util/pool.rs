@@ -1,0 +1,121 @@
+//! Scoped worker pool for embarrassingly parallel job grids (std-only;
+//! the offline vendor set has no rayon).
+//!
+//! [`run_indexed`] executes jobs `0..n` on a fixed number of
+//! `std::thread::scope` workers pulling indices off a shared atomic
+//! counter, and returns the results **in job-index order** regardless
+//! of which worker finished first — the property the sweep engine's
+//! `--jobs` parity guarantee (`tests/sweep_parallel.rs`) is built on:
+//! parallelism may only change wall-clock, never what any cell computes
+//! or where its result lands.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Resolve a `--jobs` request: `0` means "auto" — one worker per
+/// available hardware thread (falling back to 1 if the platform cannot
+/// say).
+pub fn resolve_jobs(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Run `n` independent jobs on up to `workers` threads and return the
+/// results in job-index order.
+///
+/// `f(i)` must be pure with respect to shared state (interior
+/// synchronization like the `bench::memo` per-key entry locks is fine);
+/// it may be called from any worker thread. With `workers <= 1` (or a
+/// single job) everything runs inline on the caller's thread — the
+/// `--jobs 1` path is exactly the pre-pool sequential loop.
+pub fn run_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.clamp(1, n.max(1));
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    // each worker collects (index, result) pairs; the deterministic
+    // order is restored after the join, exactly like the epoch
+    // driver's lane reduction
+    let per_worker: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    });
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, t) in per_worker.into_iter().flatten() {
+        debug_assert!(slots[i].is_none(), "job {i} claimed twice");
+        slots[i] = Some(t);
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.unwrap_or_else(|| panic!("job {i} never claimed")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_are_in_index_order() {
+        for workers in [1, 2, 4, 9] {
+            let out = run_indexed(23, workers, |i| i * i);
+            let expect: Vec<usize> = (0..23).map(|i| i * i).collect();
+            assert_eq!(out, expect, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let out = run_indexed(100, 4, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        assert!(run_indexed(0, 4, |i| i).is_empty());
+        assert_eq!(run_indexed(1, 8, |i| i + 1), vec![1]);
+        // more workers than jobs is clamped, not an error
+        assert_eq!(run_indexed(2, 64, |i| i), vec![0, 1]);
+    }
+
+    #[test]
+    fn auto_jobs_resolves_to_at_least_one() {
+        assert!(resolve_jobs(0) >= 1);
+        assert_eq!(resolve_jobs(3), 3);
+    }
+}

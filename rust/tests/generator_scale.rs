@@ -1,0 +1,183 @@
+//! Property suite for the memory-bounded chunk-streamed generator
+//! (`graph::generator::community_graph_chunked`).
+//!
+//! Three properties, over randomized specs (`util::prop`):
+//!
+//! 1. **Chunk-size invariance** — the chunk is a buffering knob only:
+//!    1 k-edge and 1 M-edge chunks (and a random size) produce
+//!    bit-identical CSR arrays and community labels, all equal to the
+//!    in-memory generator (the one-chunk special case).
+//! 2. **Edge-count conservation** — symmetry (degree sum = 2·E) and
+//!    edge-count equality hold across chunk sizes.
+//! 3. **Degree-tail exponent** — the generated degree distribution's
+//!    Hill estimate tracks the requested power-law `alpha` (generous
+//!    tolerance; the sharp assertion is ordering: heavier-tailed specs
+//!    estimate heavier).
+
+use hopgnn::graph::generator::{
+    community_graph, community_graph_chunked, rmat_graph,
+    rmat_graph_chunked, CommunityGraphSpec,
+};
+use hopgnn::util::prop::{check, Shrink};
+use hopgnn::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+struct SpecCase {
+    spec: CommunityGraphSpec,
+    chunk: usize,
+}
+
+impl Shrink for SpecCase {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.spec.num_vertices > 500 {
+            let mut s = self.clone();
+            s.spec.num_vertices /= 2;
+            s.spec.num_edges /= 2;
+            out.push(s);
+        }
+        if self.chunk > 1 {
+            let mut s = self.clone();
+            s.chunk /= 2;
+            out.push(s);
+        }
+        out
+    }
+}
+
+fn gen_case(rng: &mut Rng) -> SpecCase {
+    let num_vertices = rng.range(500, 4000);
+    SpecCase {
+        spec: CommunityGraphSpec {
+            num_vertices,
+            num_edges: num_vertices * rng.range(3, 7),
+            num_communities: rng.range(4, 40),
+            p_intra: 0.5 + rng.f64() * 0.45,
+            alpha: 2.0 + rng.f64(),
+            seed: rng.next_u64(),
+        },
+        chunk: rng.range(1, 5000),
+    }
+}
+
+#[test]
+fn prop_chunk_size_invariance_1k_vs_1m() {
+    check("chunk_invariance", 12, gen_case, |case| {
+        let base = community_graph(&case.spec);
+        for chunk in [1_000usize, 1_000_000, case.chunk] {
+            let g = community_graph_chunked(&case.spec, chunk);
+            if g.graph != base.graph {
+                return Err(format!("CSR diverged at chunk={chunk}"));
+            }
+            if g.community != base.community {
+                return Err(format!("communities diverged at chunk={chunk}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edge_count_conservation() {
+    check("edge_conservation", 12, gen_case, |case| {
+        let small = community_graph_chunked(&case.spec, case.chunk).graph;
+        let large = community_graph_chunked(&case.spec, 1_000_000).graph;
+        if small.num_edges() != large.num_edges() {
+            return Err(format!(
+                "edge counts diverged: {} vs {}",
+                small.num_edges(),
+                large.num_edges()
+            ));
+        }
+        // symmetrized storage: degree sum is exactly twice the count
+        let degree_sum: usize = (0..small.num_vertices() as u32)
+            .map(|v| small.degree(v))
+            .sum();
+        if degree_sum != 2 * small.num_edges() {
+            return Err(format!(
+                "degree sum {degree_sum} != 2 x {} edges",
+                small.num_edges()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rmat_chunked_matches_unchunked_across_sizes() {
+    let base = rmat_graph(11, 20_000, 9);
+    for chunk in [1_000, 1_000_000] {
+        assert_eq!(
+            rmat_graph_chunked(11, 20_000, 9, chunk),
+            base,
+            "chunk={chunk}"
+        );
+    }
+}
+
+/// Hill estimator of the power-law exponent from the top-`k` degrees:
+/// for degree density ~ d^-alpha the tail index is alpha - 1, and
+/// alpha_hat = 1 + k / sum(ln(d_i / d_(k+1))).
+fn hill_alpha(graph: &hopgnn::graph::CsrGraph, k: usize) -> f64 {
+    let mut degs: Vec<f64> = (0..graph.num_vertices() as u32)
+        .map(|v| graph.degree(v) as f64)
+        .filter(|&d| d > 0.0)
+        .collect();
+    degs.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    assert!(degs.len() > k + 1, "not enough vertices for the tail");
+    let cutoff = degs[k];
+    let log_sum: f64 = degs[..k].iter().map(|d| (d / cutoff).ln()).sum();
+    1.0 + k as f64 / log_sum
+}
+
+#[test]
+fn degree_tail_exponent_tracks_alpha() {
+    // moderate average degree and weak communities keep dedup
+    // collisions (which truncate the tail) rare
+    let spec_for = |alpha: f64| CommunityGraphSpec {
+        num_vertices: 40_000,
+        num_edges: 200_000,
+        num_communities: 100,
+        p_intra: 0.3,
+        alpha,
+        seed: 4242,
+    };
+    let est_low =
+        hill_alpha(&community_graph_chunked(&spec_for(2.1), 8192).graph, 300);
+    let est_high =
+        hill_alpha(&community_graph_chunked(&spec_for(3.5), 8192).graph, 300);
+    // generous absolute band: stub rounding, dedup, and the +1 degree
+    // shift all bias the estimate, but not by a full unit
+    assert!(
+        (est_low - 2.1).abs() < 1.0,
+        "alpha=2.1 estimated {est_low}"
+    );
+    // the sharp property: a heavier requested tail must estimate
+    // heavier than a lighter one
+    assert!(
+        est_low + 0.3 < est_high,
+        "tail ordering violated: alpha=2.1 -> {est_low}, \
+         alpha=3.5 -> {est_high}"
+    );
+}
+
+/// The billion-edge acceptance path at one-tenth scale, kept out of the
+/// default suite (minutes of single-core RNG streaming):
+/// `cargo test --release -- --ignored generator_scale`. Peak RSS stays
+/// within the generator's stated `16 V + 8 E + chunk` budget because
+/// the unsorted edge list never materializes.
+#[test]
+#[ignore = "multi-minute: 1e8-edge chunk-streamed build"]
+fn hundred_million_edge_graph_builds_chunked() {
+    let spec = CommunityGraphSpec {
+        num_vertices: 10_000_000,
+        num_edges: 100_000_000,
+        num_communities: 25_000,
+        p_intra: 0.93,
+        alpha: 2.1,
+        seed: 1,
+    };
+    let g = community_graph_chunked(&spec, 4 << 20).graph;
+    assert_eq!(g.num_vertices(), 10_000_000);
+    assert!(g.num_edges() > 60_000_000, "edges {}", g.num_edges());
+}

@@ -1,0 +1,181 @@
+//! Parallel-sweep determinism lock: `--jobs 1` and `--jobs N` must
+//! produce bit-identical grids.
+//!
+//! The sweep engine executes grid cells on a scoped worker pool
+//! (`util::pool`) and writes results back in row-major grid order;
+//! every cell seeds its own RNG from its config, so worker interleaving
+//! can change wall-clock only — never metrics. This suite replays the
+//! two real grid shapes (the `hetero` fabric sweep and the `cachesweep`
+//! policy × capacity ladder) serially and with 4 workers, and asserts
+//! every `EpochMetrics` field equal — integers exactly, floats to the
+//! bit (the `tests/spec_parity.rs` idiom). `SweepCell::wall_secs` is
+//! the one documented non-deterministic field and is deliberately not
+//! compared.
+
+use hopgnn::bench::sweep::{Axis, SweepSpec};
+use hopgnn::cluster::FabricSpec;
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::StrategySpec;
+use hopgnn::featstore::cache::ALL_CACHE_POLICIES;
+use hopgnn::metrics::EpochMetrics;
+
+fn tiny_base() -> RunConfig {
+    RunConfig {
+        dataset: "arxiv-s".into(),
+        batch_size: 128,
+        epochs: 2,
+        max_iterations: Some(2),
+        fanout: 5,
+        vmax: RunConfig::full_sim_vmax(3, 5),
+        seed: 77,
+        ..Default::default()
+    }
+}
+
+/// Every field of `EpochMetrics`, integers equal and floats equal to
+/// the bit (mirrors `tests/spec_parity.rs::assert_bit_identical`).
+fn assert_bit_identical(a: &EpochMetrics, b: &EpochMetrics, what: &str) {
+    assert_eq!(a.bytes_by_kind, b.bytes_by_kind, "{what}: bytes_by_kind");
+    assert_eq!(a.remote_requests, b.remote_requests, "{what}");
+    assert_eq!(a.remote_vertices, b.remote_vertices, "{what}");
+    assert_eq!(a.local_hits, b.local_hits, "{what}");
+    assert_eq!(a.cache_hits, b.cache_hits, "{what}");
+    assert_eq!(a.cache_misses, b.cache_misses, "{what}");
+    assert_eq!(a.cache_hit_bytes, b.cache_hit_bytes, "{what}");
+    assert_eq!(a.cache_miss_bytes, b.cache_miss_bytes, "{what}");
+    assert_eq!(a.cache_evict_bytes, b.cache_evict_bytes, "{what}");
+    assert_eq!(a.iterations, b.iterations, "{what}");
+    assert_eq!(a.dropped_roots, b.dropped_roots, "{what}");
+    for (x, y, field) in [
+        (a.epoch_time, b.epoch_time, "epoch_time"),
+        (a.time_sample, b.time_sample, "time_sample"),
+        (a.time_gather, b.time_gather, "time_gather"),
+        (a.time_compute, b.time_compute, "time_compute"),
+        (a.time_migrate, b.time_migrate, "time_migrate"),
+        (a.time_sync, b.time_sync, "time_sync"),
+        (
+            a.time_overlap_hidden,
+            b.time_overlap_hidden,
+            "time_overlap_hidden",
+        ),
+        (a.gpu_busy_fraction, b.gpu_busy_fraction, "gpu_busy_fraction"),
+        (
+            a.time_steps_per_iter,
+            b.time_steps_per_iter,
+            "time_steps_per_iter",
+        ),
+    ] {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: {field} diverged ({x} vs {y})"
+        );
+    }
+    assert_eq!(
+        a.per_server_busy.len(),
+        b.per_server_busy.len(),
+        "{what}: per_server_busy length"
+    );
+    for (s, (x, y)) in
+        a.per_server_busy.iter().zip(&b.per_server_busy).enumerate()
+    {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: per_server_busy[{s}] diverged"
+        );
+    }
+}
+
+/// Run the same spec at jobs=1 and jobs=4 and lock the grids together.
+fn assert_jobs_parity(spec: impl Fn() -> SweepSpec, what: &str) {
+    let serial = spec().jobs(1).run().expect("serial sweep");
+    let parallel = spec().jobs(4).run().expect("parallel sweep");
+    assert_eq!(
+        serial.cells.len(),
+        parallel.cells.len(),
+        "{what}: cell count"
+    );
+    for (ca, cb) in serial.cells.iter().zip(&parallel.cells) {
+        assert_eq!(ca.index, cb.index, "{what}: grid order must be stable");
+        assert_eq!(ca.strategy, cb.strategy, "{what}: strategy at {:?}", ca.index);
+        assert_eq!(
+            ca.cfg.dataset, cb.cfg.dataset,
+            "{what}: config at {:?}",
+            ca.index
+        );
+        assert_bit_identical(
+            &ca.metrics,
+            &cb.metrics,
+            &format!("{what} cell {:?} ({})", ca.index, ca.strategy),
+        );
+    }
+}
+
+#[test]
+fn hetero_grid_is_jobs_invariant() {
+    // the hetero experiment's shape: fabric x strategy x overlap
+    let fabrics = [
+        FabricSpec::Uniform,
+        FabricSpec::HeteroMix,
+        FabricSpec::Straggler { server: 0 },
+    ];
+    let strategies = [
+        StrategySpec::dgl(),
+        StrategySpec::hopgnn_mg_pg(),
+        StrategySpec::hopgnn(),
+    ];
+    assert_jobs_parity(
+        || {
+            SweepSpec::new(tiny_base(), StrategySpec::dgl())
+                .axis(Axis::fabrics(&fabrics))
+                .axis(Axis::strategies(&strategies))
+                .axis(Axis::overlap(&[false, true]))
+        },
+        "hetero grid",
+    );
+}
+
+#[test]
+fn cachesweep_grid_is_jobs_invariant() {
+    // the cachesweep shape: policy x strategy x capacity; the cache
+    // tier's eviction bookkeeping is the stateful path most likely to
+    // betray accidental cross-cell sharing
+    let strategies = [StrategySpec::dgl(), StrategySpec::locality_opt()];
+    assert_jobs_parity(
+        || {
+            SweepSpec::new(
+                RunConfig {
+                    overlap: true,
+                    ..tiny_base()
+                },
+                StrategySpec::dgl(),
+            )
+            .axis(Axis::cache_policies(&ALL_CACHE_POLICIES))
+            .axis(Axis::strategies(&strategies))
+            .axis(Axis::cache_capacities_mb(&[0, 2, 8]))
+        },
+        "cachesweep grid",
+    );
+}
+
+#[test]
+fn multi_dataset_grid_is_jobs_invariant() {
+    // distinct datasets make racing first-touch loads through the
+    // memo's per-key entry locks the interesting case: two workers may
+    // load arxiv-s and a synth: dataset concurrently
+    assert_jobs_parity(
+        || {
+            SweepSpec::new(tiny_base(), StrategySpec::dgl())
+                .axis(Axis::key(
+                    "dataset",
+                    &["arxiv-s", "synth:v=2000,e=8000,d=16,c=4,seed=5"],
+                ))
+                .axis(Axis::strategies(&[
+                    StrategySpec::dgl(),
+                    StrategySpec::hopgnn(),
+                ]))
+        },
+        "multi-dataset grid",
+    );
+}
