@@ -1,7 +1,14 @@
 //! `cargo bench --bench hotpath` — L3 hot-path micro-benchmarks (the
 //! §Perf targets): sampler, dense-adjacency packing, gather planning,
-//! partitioner, feature synthesis. Uses the in-tree harness (median ±
-//! MAD) since criterion is not vendored.
+//! partitioner, feature synthesis, schedule building, program
+//! execution, and the epoch-sample memo tier. Uses the in-tree harness
+//! (median ± MAD) since criterion is not vendored.
+//!
+//! The sampler / planning / schedule benches run on the same reusable
+//! scratch state the strategies hold across iterations
+//! (`SampleScratch`, `ProgramBuilder` pools, `plan_into` /
+//! `build_into` buffers), so they measure the steady-state
+//! zero-allocation path — not first-touch growth.
 //!
 //! # CI throughput gate
 //!
@@ -11,28 +18,41 @@
 //! ```text
 //! cargo bench --bench hotpath -- \
 //!     --json reports/hotpath.json \
-//!     --baseline benches/baseline.json --tolerance 30
+//!     --baseline benches/baseline.json --tolerance 30 \
+//!     --summary "$GITHUB_STEP_SUMMARY"
 //! ```
 //!
 //! `--json` writes machine-readable results (median ± MAD per bench);
 //! `--baseline` compares each median against the checked-in
-//! `benches/baseline.json` and **exits 1** if any bench is more than
-//! `--tolerance` percent slower. The check is one-sided: being faster
-//! than baseline always passes (the baseline is deliberately
-//! conservative so shared-runner noise cannot flake the gate — it
-//! catches order-of-magnitude regressions, not single-digit drift).
-//! Refresh the file on a quiet machine with `--write-baseline
+//! `benches/baseline.json`, prints an old-vs-new delta table, and
+//! **exits 1** if any bench is more than `--tolerance` percent slower;
+//! `--summary` appends that delta table (markdown) to a file — in CI,
+//! the job summary. The check is one-sided: being faster than baseline
+//! always passes (the baseline is deliberately conservative so
+//! shared-runner noise cannot flake the gate — it catches
+//! order-of-magnitude regressions, not single-digit drift). Refresh
+//! the file on a quiet machine with `--write-baseline
 //! benches/baseline.json` after an intentional perf change.
 
 use hopgnn::bench::harness::{bench, BenchResult};
-use hopgnn::featstore::FeatureStore;
+use hopgnn::bench::memo;
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::{
+    EpochDriver, Op, ProgramBuilder, SimEnv, StrategySpec,
+};
+use hopgnn::featstore::pregather::{PlanScratch, PregatherPlan};
+use hopgnn::featstore::{FeatureStore, GatherPlan};
 use hopgnn::graph::datasets::{load_spec, DatasetSpec};
 use hopgnn::partition::{partition, PartitionAlgo};
 use hopgnn::runtime::tensor::BatchBuffers;
-use hopgnn::sampler::{sample_micrograph, SampleConfig, SamplerKind};
+use hopgnn::sampler::{
+    sample_batch_into, sample_micrograph, SampleConfig, SampleScratch,
+    SamplerKind,
+};
 use hopgnn::util::cli::Cli;
 use hopgnn::util::json::{self, Value};
 use hopgnn::util::rng::Rng;
+use hopgnn::util::stamp::StampedSet;
 use std::collections::BTreeMap;
 
 fn run_benches() -> Vec<BenchResult> {
@@ -57,26 +77,40 @@ fn run_benches() -> Vec<BenchResult> {
 
     let mut results = Vec::new();
 
-    // 1. node-wise 3-hop sampling (the per-iteration CPU hot loop)
+    // 1. node-wise 3-hop sampling (the per-iteration CPU hot loop),
+    //    through the scratch-based path the strategies use
     let mut rng = Rng::new(1);
-    let mut sampled = 0usize;
+    let mut scratch = SampleScratch::new();
+    let mut verts: Vec<u32> = Vec::new();
+    let mut sampled = 0u64;
     results.push(bench("sample_micrograph(3L,f10)", 0.5, || {
         let root = d.train_vertices[rng.below(d.train_vertices.len())];
-        let mg = sample_micrograph(&d.graph, root, &cfg, &mut rng);
-        sampled += mg.num_vertices();
+        verts.clear();
+        let stats = sample_batch_into(
+            &d.graph,
+            &[root],
+            &cfg,
+            &mut rng,
+            &mut scratch,
+            &mut verts,
+        );
+        sampled += stats.vertices;
     }));
+    std::hint::black_box(sampled);
 
-    // 2. gather planning (dedup + home classification, per server-step)
+    // 2. gather planning (dedup + home classification, per
+    //    server-step) into caller-owned buffers
     let mut rng = Rng::new(2);
-    let mgs: Vec<_> = (0..64)
-        .map(|_| {
-            let root = d.train_vertices[rng.below(d.train_vertices.len())];
-            sample_micrograph(&d.graph, root, &cfg, &mut rng)
-        })
+    let mut scratch = SampleScratch::new();
+    let roots: Vec<u32> = (0..64)
+        .map(|_| d.train_vertices[rng.below(d.train_vertices.len())])
         .collect();
+    let mut flat: Vec<u32> = Vec::new();
+    sample_batch_into(&d.graph, &roots, &cfg, &mut rng, &mut scratch, &mut flat);
+    let mut seen = StampedSet::default();
+    let mut plan = GatherPlan::default();
     results.push(bench("featstore.plan(64 micrographs)", 0.5, || {
-        let verts = mgs.iter().flat_map(|m| m.vertices.iter().copied());
-        let plan = store.plan(0, verts);
+        store.plan_into(0, flat.iter().copied(), &mut seen, &mut plan);
         std::hint::black_box(plan.remote_count());
     }));
 
@@ -110,6 +144,170 @@ fn run_benches() -> Vec<BenchResult> {
         std::hint::black_box(
             partition(&d.graph, 4, PartitionAlgo::MetisLike, 9).balance(),
         );
+    }));
+
+    // 6. schedule building: the full per-iteration emit path the
+    //    strategies run — scratch sampling into pooled payload
+    //    buffers, op emission, take + recycle (no execution)
+    let mut rng = Rng::new(4);
+    let mut scratch = SampleScratch::new();
+    let groups: Vec<Vec<u32>> = (0..4)
+        .map(|_| {
+            (0..16)
+                .map(|_| {
+                    d.train_vertices[rng.below(d.train_vertices.len())]
+                })
+                .collect()
+        })
+        .collect();
+    let mut b = ProgramBuilder::new(4);
+    results.push(bench("hopgnn.schedule_build(4srv,64 roots)", 0.5, || {
+        for (s, roots) in groups.iter().enumerate() {
+            let mut verts = b.vbuf();
+            let stats = sample_batch_into(
+                &d.graph,
+                roots,
+                &cfg,
+                &mut rng,
+                &mut scratch,
+                &mut verts,
+            );
+            b.op(s, Op::Sample {
+                vertices: stats.vertices,
+            });
+            b.op(s, Op::Gather {
+                vertices: verts,
+                overlap: true,
+            });
+            b.op(s, Op::Compute {
+                v: stats.vertices,
+                e: stats.edges,
+            });
+        }
+        b.barrier();
+        b.allreduce();
+        let program = b.take();
+        std::hint::black_box(&program);
+        b.recycle(program);
+    }));
+
+    // 7. merged pre-gather planning across visit steps (one dedup pass
+    //    over all steps, into reusable buffers)
+    let mut rng = Rng::new(5);
+    let mut scratch = SampleScratch::new();
+    let steps: Vec<Vec<u32>> = (0..4)
+        .map(|_| {
+            let roots: Vec<u32> = (0..16)
+                .map(|_| {
+                    d.train_vertices[rng.below(d.train_vertices.len())]
+                })
+                .collect();
+            let mut v = Vec::new();
+            sample_batch_into(
+                &d.graph,
+                &roots,
+                &cfg,
+                &mut rng,
+                &mut scratch,
+                &mut v,
+            );
+            v
+        })
+        .collect();
+    let mut ps = PlanScratch::default();
+    let mut pre = PregatherPlan::default();
+    results.push(bench("pregather.build(4 steps)", 0.5, || {
+        PregatherPlan::build_into(&store, 0, &steps, &mut ps, &mut pre);
+        std::hint::black_box(&pre);
+    }));
+
+    // 8. executing a prebuilt iteration program on the shared driver
+    //    (sequential lanes — the allocation-free execution path)
+    let run_cfg = RunConfig {
+        num_servers: 4,
+        parallel_lanes: false,
+        ..Default::default()
+    };
+    let env = SimEnv::with_partition(&d, run_cfg, p.clone());
+    let mut rng = Rng::new(6);
+    let mut scratch = SampleScratch::new();
+    let mut b = ProgramBuilder::new(4);
+    for s in 0..4 {
+        let roots: Vec<u32> = (0..16)
+            .map(|_| d.train_vertices[rng.below(d.train_vertices.len())])
+            .collect();
+        let mut verts = b.vbuf();
+        let stats = sample_batch_into(
+            &d.graph,
+            &roots,
+            &cfg,
+            &mut rng,
+            &mut scratch,
+            &mut verts,
+        );
+        b.op(s, Op::Sample {
+            vertices: stats.vertices,
+        });
+        b.op(s, Op::Gather {
+            vertices: verts,
+            overlap: true,
+        });
+        b.op(s, Op::Compute {
+            v: stats.vertices,
+            e: stats.edges,
+        });
+    }
+    b.barrier();
+    b.allreduce();
+    let program = b.take();
+    let mut driver = EpochDriver::new(&env);
+    results.push(bench("epoch_exec(4srv)", 0.5, || {
+        driver.exec(&program);
+    }));
+    std::hint::black_box(driver.finish().epoch_time);
+
+    // 9. the epoch-sample memo tier, sweep-shaped: the same hopgnn
+    //    cell sampled live vs replayed from its recorded tape. The
+    //    replay bench's warm-up call records the tape; every measured
+    //    call replays it — exactly what the second and later cells of
+    //    a sweep grid sharing one SampleKey do.
+    let spec = StrategySpec::hopgnn();
+    let mut ecfg = RunConfig {
+        dataset: "arxiv-s".into(),
+        batch_size: 256,
+        epochs: 1,
+        max_iterations: Some(4),
+        fanout: 5,
+        vmax: RunConfig::full_sim_vmax(3, 5),
+        seed: 42,
+        ..Default::default()
+    };
+    if let Some(pa) = spec.preferred_partition() {
+        ecfg.partition_algo = pa;
+    }
+    // the memo keys tapes by dataset address: use the process-lifetime
+    // lease, and precompute the partition once (it is epoch-invariant)
+    let ed = memo::dataset(&ecfg.dataset);
+    let epart = partition(
+        &ed.graph,
+        ecfg.num_servers,
+        ecfg.partition_algo,
+        ecfg.seed ^ 0x9A27,
+    );
+    let live_cfg = ecfg.clone();
+    results.push(bench("epoch.sample_live(hopgnn)", 1.0, || {
+        let mut env =
+            SimEnv::with_partition(ed, live_cfg.clone(), epart.clone());
+        std::hint::black_box(spec.build().run(&mut env, 1).len());
+    }));
+    let memo_cfg = RunConfig {
+        memo_samples: true,
+        ..ecfg
+    };
+    results.push(bench("epoch.sample_replay(hopgnn)", 1.0, || {
+        let mut env =
+            SimEnv::with_partition(ed, memo_cfg.clone(), epart.clone());
+        std::hint::black_box(spec.build().run(&mut env, 1).len());
     }));
 
     results
@@ -169,6 +367,37 @@ fn load_baseline(path: &str) -> Result<BTreeMap<String, f64>, String> {
     Ok(out)
 }
 
+/// Old-vs-new delta table (markdown — renders in a CI job summary and
+/// reads fine as plain text). Negative deltas are speedups.
+fn delta_table(
+    results: &[BenchResult],
+    baseline: &BTreeMap<String, f64>,
+) -> String {
+    let mut s = String::new();
+    s.push_str("### Hot-path throughput vs baseline\n\n");
+    s.push_str("| bench | baseline (us) | current (us) | delta |\n");
+    s.push_str("|---|---:|---:|---:|\n");
+    for r in results {
+        let cur = r.median_secs * 1e6;
+        match baseline.get(&r.name) {
+            Some(&base) => {
+                let pct = (cur - base) / base * 100.0;
+                s.push_str(&format!(
+                    "| {} | {:.1} | {:.1} | {:+.1}% |\n",
+                    r.name, base, cur, pct
+                ));
+            }
+            None => {
+                s.push_str(&format!(
+                    "| {} | - | {:.1} | new |\n",
+                    r.name, cur
+                ));
+            }
+        }
+    }
+    s
+}
+
 /// One-sided regression check: fail only when slower than baseline by
 /// more than `tolerance_pct`. Returns human-readable failures.
 fn check_regressions(
@@ -211,6 +440,7 @@ fn main() {
     .opt("json", "", "write results JSON to this path")
     .opt("baseline", "", "compare against this baseline JSON; exit 1 on regression")
     .opt("tolerance", "30", "allowed slowdown vs baseline, percent")
+    .opt("summary", "", "append the baseline delta table (markdown) to this file")
     .opt("write-baseline", "", "write measured medians as a new baseline and exit")
     .flag("bench", "ignored (cargo bench passes it)");
     let a = match cli.parse_env() {
@@ -231,6 +461,25 @@ fn main() {
     println!("\ncsv:name,median_us");
     for r in &results {
         println!("csv:{},{:.1}", r.name, r.median_secs * 1e6);
+    }
+
+    // the memo tier's reason to exist, stated directly: a replayed
+    // sweep cell vs its live-sampled twin
+    let med = |name: &str| {
+        results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.median_secs * 1e6)
+    };
+    if let (Some(live), Some(replay)) = (
+        med("epoch.sample_live(hopgnn)"),
+        med("epoch.sample_replay(hopgnn)"),
+    ) {
+        println!(
+            "\nmemo replay vs live sampling: {:.2}x \
+             ({live:.0} us -> {replay:.0} us per epoch)",
+            live / replay
+        );
     }
 
     let json_out = a.get_or("json", "");
@@ -275,6 +524,20 @@ fn main() {
                 std::process::exit(1);
             }
         };
+        let table = delta_table(&results, &baseline);
+        println!("\n{table}");
+        let summary_path = a.get_or("summary", "");
+        if !summary_path.is_empty() {
+            use std::io::Write as _;
+            let appended = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&summary_path)
+                .and_then(|mut f| writeln!(f, "{table}"));
+            if let Err(e) = appended {
+                eprintln!("could not append summary {summary_path}: {e}");
+            }
+        }
         let failures = check_regressions(&results, &baseline, tolerance);
         if failures.is_empty() {
             eprintln!(

@@ -129,6 +129,17 @@ impl NetStats {
         fabric.transfer_time(src, dst, bytes)
     }
 
+    /// Zero every counter, keeping the per-link buffers (the epoch
+    /// driver's lane scratch resets instead of reallocating per lane
+    /// set). A reset `NetStats` is indistinguishable from a fresh
+    /// `new(num_servers)`.
+    pub fn reset(&mut self) {
+        self.bytes_by_kind = [0; NUM_KINDS];
+        self.msgs_by_kind = [0; NUM_KINDS];
+        self.link_bytes.fill(0);
+        self.link_msgs.fill(0);
+    }
+
     pub fn total_bytes(&self) -> u64 {
         self.bytes_by_kind.iter().sum()
     }

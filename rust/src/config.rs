@@ -101,6 +101,15 @@ pub struct RunConfig {
     /// caller (`sim --strategy` / the harness); an explicit CLI
     /// `--strategy` always wins over the file.
     pub strategy: Option<StrategySpec>,
+    /// Opt into the cross-cell epoch-sample memo (`bench::memo`):
+    /// strategies record each epoch's deterministic sampling stream
+    /// once per process and replay it — bit-identically — in every
+    /// other cell whose sampling inputs match (sweeps differing only in
+    /// fabric/cache/overlap axes sample once). Not a config-file key:
+    /// the memo keys include the dataset's address, which is only
+    /// stable for the process-lifetime datasets `bench::memo::run`
+    /// leases, so only that entry point sets this.
+    pub memo_samples: bool,
 }
 
 impl Default for RunConfig {
@@ -129,6 +138,7 @@ impl Default for RunConfig {
             cache_mb: 64,
             cache_persist: false,
             strategy: None,
+            memo_samples: false,
         }
     }
 }

@@ -63,9 +63,10 @@ use super::ops::{Item, Op, Phase, Program};
 use super::SimEnv;
 use crate::cluster::{Clocks, NetStats};
 use crate::featstore::cache::FeatureCache;
-use crate::featstore::pregather::PregatherPlan;
-use crate::featstore::FeatureStore;
+use crate::featstore::pregather::{PlanScratch, PregatherPlan};
+use crate::featstore::{FeatureStore, GatherPlan};
 use crate::metrics::EpochMetrics;
+use crate::util::stamp::StampedSet;
 
 /// Minimum summed op weight in a lane set before the driver spawns
 /// worker threads (below this, sequential execution is faster).
@@ -89,6 +90,11 @@ pub struct EpochDriver<'e, 'a> {
     /// policy off). A cache is only ever touched by its own lane, so
     /// parallel lane execution stays bit-identical to sequential.
     caches: Vec<FeatureCache>,
+    /// One reusable execution scratch per server lane (accounting
+    /// deltas + gather-planning buffers), reset per lane run instead of
+    /// reallocated — the driver-side half of the zero-allocation
+    /// iteration hot path.
+    scratch: Vec<LaneScratch>,
     parallel_override: Option<bool>,
 }
 
@@ -131,6 +137,7 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
             m: EpochMetrics::default(),
             pending: vec![0.0f64; n],
             caches: caches.unwrap_or_else(|| env.build_caches()),
+            scratch: (0..n).map(|_| LaneScratch::new(n)).collect(),
             parallel_override,
         }
     }
@@ -162,6 +169,7 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
                         &mut self.m,
                         &mut self.pending,
                         &mut self.caches,
+                        &mut self.scratch,
                     );
                 }
                 Item::Barrier => {
@@ -253,14 +261,34 @@ fn expose_pending(clocks: &mut Clocks, pending: &mut [f64]) {
     }
 }
 
-/// Result of executing one lane: final clock, busy delta, remaining
-/// async-pending seconds, and lane-local accounting deltas.
-struct LaneOut {
-    t: f64,
-    busy_dt: f64,
-    pending: f64,
+/// Reusable per-lane execution state: the lane-local accounting deltas
+/// (`stats`, `m`) plus every gather-planning buffer a lane's ops need
+/// (`seen`/`plan` for plain and cache-routed gathers, `ps`/`pre` for
+/// merged pre-gathers). One scratch belongs to one server lane for the
+/// whole driver session — like the caches, it is only ever touched by
+/// its own lane, so parallel execution stays bit-identical — and is
+/// reset (keeping capacity) at the start of each lane run, so
+/// steady-state lane execution allocates nothing.
+struct LaneScratch {
     stats: NetStats,
     m: EpochMetrics,
+    seen: StampedSet,
+    plan: GatherPlan,
+    pre: PregatherPlan,
+    ps: PlanScratch,
+}
+
+impl LaneScratch {
+    fn new(num_servers: usize) -> Self {
+        Self {
+            stats: NetStats::new(num_servers),
+            m: EpochMetrics::default(),
+            seen: StampedSet::default(),
+            plan: GatherPlan::default(),
+            pre: PregatherPlan::default(),
+            ps: PlanScratch::default(),
+        }
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -274,18 +302,19 @@ fn exec_lanes(
     m: &mut EpochMetrics,
     pending: &mut [f64],
     caches: &mut [FeatureCache],
+    scratches: &mut [LaneScratch],
 ) {
-    let results: Vec<LaneOut> = if parallel {
-        std::thread::scope(|scope| {
+    if parallel {
+        let results: Vec<(f64, f64, f64)> = std::thread::scope(|scope| {
             let handles: Vec<_> = lanes
                 .iter()
-                .zip(caches.iter_mut())
+                .zip(caches.iter_mut().zip(scratches.iter_mut()))
                 .enumerate()
-                .map(|(s, (ops, cache))| {
+                .map(|(s, (ops, (cache, scratch)))| {
                     let t0 = clocks.now(s);
                     let p0 = pending[s];
                     scope.spawn(move || {
-                        run_lane(env, store, s, ops, t0, p0, cache)
+                        run_lane(env, store, s, ops, t0, p0, cache, scratch)
                     })
                 })
                 .collect();
@@ -293,32 +322,54 @@ fn exec_lanes(
                 .into_iter()
                 .map(|h| h.join().expect("lane worker panicked"))
                 .collect()
-        })
+        });
+        // deterministic reduction: server order, independent of which
+        // lane finished first
+        for (s, (t, busy_dt, pend)) in results.into_iter().enumerate() {
+            clocks.set(s, t);
+            clocks.add_busy(s, busy_dt);
+            stats.merge(&scratches[s].stats);
+            m.accumulate(&scratches[s].m);
+            pending[s] = pend;
+        }
     } else {
-        lanes
+        // run + reduce inline per lane, in server order. Lanes never
+        // read another lane's clock, pending slot, or the global
+        // accumulators, so reducing lane s before running lane s+1 is
+        // bit-identical to the collect-then-reduce parallel path — and
+        // allocation-free, which the parallel path (thread state, the
+        // results Vec) inherently is not.
+        for (s, (ops, (cache, scratch))) in lanes
             .iter()
-            .zip(caches.iter_mut())
+            .zip(caches.iter_mut().zip(scratches.iter_mut()))
             .enumerate()
-            .map(|(s, (ops, cache))| {
-                run_lane(env, store, s, ops, clocks.now(s), pending[s], cache)
-            })
-            .collect()
-    };
-    // deterministic reduction: server order, independent of which lane
-    // finished first
-    for (s, r) in results.into_iter().enumerate() {
-        clocks.set(s, r.t);
-        clocks.add_busy(s, r.busy_dt);
-        stats.merge(&r.stats);
-        m.accumulate(&r.m);
-        pending[s] = r.pending;
+        {
+            let (t, busy_dt, pend) = run_lane(
+                env,
+                store,
+                s,
+                ops,
+                clocks.now(s),
+                pending[s],
+                cache,
+                scratch,
+            );
+            clocks.set(s, t);
+            clocks.add_busy(s, busy_dt);
+            stats.merge(&scratch.stats);
+            m.accumulate(&scratch.m);
+            pending[s] = pend;
+        }
     }
 }
 
 /// Execute one server's ops starting from clock `t0` and async-pending
 /// `pending0`. Pure with respect to shared state: reads only shared
 /// immutable state, writes only lane-local accumulators (the feature
-/// `cache` belongs to this lane alone).
+/// `cache` and the `scratch` belong to this lane alone). Returns
+/// `(t, busy_dt, pending)`; the accounting deltas are left in the
+/// scratch for the caller to reduce.
+#[allow(clippy::too_many_arguments)]
 fn run_lane(
     env: &SimEnv,
     store: &FeatureStore,
@@ -327,8 +378,8 @@ fn run_lane(
     t0: f64,
     pending0: f64,
     cache: &mut FeatureCache,
-) -> LaneOut {
-    let n = env.num_servers();
+    scratch: &mut LaneScratch,
+) -> (f64, f64, f64) {
     let cfg = &env.cfg;
     let overlap_on = cfg.overlap;
     // heterogeneous compute: this server's cost-model seconds divide by
@@ -338,8 +389,16 @@ fn run_lane(
     let mut t = t0;
     let mut busy_dt = 0.0f64;
     let mut pending = pending0;
-    let mut stats = NetStats::new(n);
-    let mut m = EpochMetrics::default();
+    let LaneScratch {
+        stats,
+        m,
+        seen,
+        plan,
+        pre,
+        ps,
+    } = scratch;
+    stats.reset();
+    m.reset();
 
     let charge_compute = |dt: f64,
                           t: &mut f64,
@@ -382,13 +441,13 @@ fn run_lane(
                 m.time_sample += dt;
             }
             Op::Gather { vertices, overlap } => {
-                let plan = store.plan(server, vertices.iter().copied());
+                store.plan_into(server, vertices.iter().copied(), seen, plan);
                 let dt = store.sim_cost(
-                    &plan,
+                    plan,
                     &env.fabric,
                     &cfg.cost,
-                    &mut stats,
-                    &mut m,
+                    stats,
+                    m,
                 );
                 charge_transfer(
                     dt,
@@ -396,17 +455,17 @@ fn run_lane(
                     *overlap,
                     &mut t,
                     &mut pending,
-                    &mut m,
+                    &mut *m,
                 );
             }
             Op::GatherMerged { steps, overlap } => {
-                let plan = PregatherPlan::build(store, server, steps);
+                PregatherPlan::build_into(store, server, steps, ps, pre);
                 let dt = store.sim_cost(
-                    &plan.merged,
+                    &pre.merged,
                     &env.fabric,
                     &cfg.cost,
-                    &mut stats,
-                    &mut m,
+                    stats,
+                    m,
                 );
                 charge_transfer(
                     dt,
@@ -414,7 +473,7 @@ fn run_lane(
                     *overlap,
                     &mut t,
                     &mut pending,
-                    &mut m,
+                    &mut *m,
                 );
             }
             Op::CacheFetch { steps, overlap } => {
@@ -422,28 +481,27 @@ fn run_lane(
                 // transfer (and, in overlap mode, the pending stream);
                 // misses fetch exactly like a merged gather and are
                 // admitted for the next iteration
-                let res = cache.resolve(store, server, steps);
+                let deltas = cache.resolve_into(store, server, steps, seen, plan);
                 let dt = store.sim_cost_cached(
-                    &res.plan,
-                    res.hits,
+                    plan,
+                    deltas.hits,
                     &env.fabric,
                     &cfg.cost,
-                    &mut stats,
-                    &mut m,
+                    stats,
+                    m,
                 );
-                m.cache_hits += res.hits;
-                m.cache_misses += res.plan.remote_count();
-                m.cache_hit_bytes += res.hit_bytes;
-                m.cache_miss_bytes +=
-                    res.plan.remote_count() * store.feat_bytes;
-                m.cache_evict_bytes += res.evicted_bytes;
+                m.cache_hits += deltas.hits;
+                m.cache_misses += plan.remote_count();
+                m.cache_hit_bytes += deltas.hit_bytes;
+                m.cache_miss_bytes += plan.remote_count() * store.feat_bytes;
+                m.cache_evict_bytes += deltas.evicted_bytes;
                 charge_transfer(
                     dt,
                     Phase::Gather,
                     *overlap,
                     &mut t,
                     &mut pending,
-                    &mut m,
+                    &mut *m,
                 );
             }
             Op::Compute { v, e } => {
@@ -453,7 +511,7 @@ fn run_lane(
                     &mut t,
                     &mut busy_dt,
                     &mut pending,
-                    &mut m,
+                    &mut *m,
                 );
             }
             Op::ComputeSecs { secs } => {
@@ -462,7 +520,7 @@ fn run_lane(
                     &mut t,
                     &mut busy_dt,
                     &mut pending,
-                    &mut m,
+                    &mut *m,
                 );
             }
             Op::Migrate {
@@ -480,12 +538,12 @@ fn run_lane(
                     *overlap,
                     &mut t,
                     &mut pending,
-                    &mut m,
+                    &mut *m,
                 );
             }
             Op::Host { secs, phase } => {
                 t += secs;
-                phase_add(&mut m, *phase, *secs);
+                phase_add(m, *phase, *secs);
             }
             Op::Tally {
                 remote_requests,
@@ -499,13 +557,7 @@ fn run_lane(
         }
     }
 
-    LaneOut {
-        t,
-        busy_dt,
-        pending,
-        stats,
-        m,
-    }
+    (t, busy_dt, pending)
 }
 
 fn phase_add(m: &mut EpochMetrics, phase: Phase, dt: f64) {

@@ -31,11 +31,11 @@
 
 use super::merge::{MergeController, Selection};
 use super::ops::{Op, Phase, ProgramBuilder};
-use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};
+use super::{sample_group, EpochDriver, SampleTape, SimEnv, Strategy};
 use crate::cluster::TransferKind;
 use crate::featstore::cache::FeatureCache;
 use crate::metrics::EpochMetrics;
-use crate::sampler::Micrograph;
+use crate::sampler::SampleScratch;
 
 pub struct HopGnn {
     pub pregather: bool,
@@ -47,6 +47,26 @@ pub struct HopGnn {
     /// driver session builds its own cold caches).
     caches: Option<Vec<FeatureCache>>,
     epoch_idx: u64,
+    /// Reusable sampler scratch: one interner + buffer set for every
+    /// root of every iteration of every epoch.
+    scratch: SampleScratch,
+    /// Persistent program builder: op lanes, item vectors, and gather
+    /// payload buffers cycle through its pools (`take`/`recycle`), so
+    /// steady-state iterations emit their op stream with zero heap
+    /// allocation.
+    builder: Option<ProgramBuilder>,
+    /// `groups[d][s]` = model `d`'s mini-batch roots homed at server
+    /// `s` (the redistribution step), cleared and refilled per
+    /// iteration.
+    groups: Vec<Vec<Vec<u32>>>,
+    /// `slot_verts[t * n + srv]` = flattened sampled vertices trained
+    /// on `srv` at step `t` this iteration; the buffers are swapped
+    /// into gather ops and come back through the builder pools.
+    slot_verts: Vec<Vec<u32>>,
+    /// Summed vertex / edge counts per slot (the `Op::Compute`
+    /// operands).
+    slot_v: Vec<u64>,
+    slot_e: Vec<u64>,
 }
 
 impl HopGnn {
@@ -88,6 +108,12 @@ impl HopGnn {
             controller: None,
             caches: None,
             epoch_idx: 0,
+            scratch: SampleScratch::new(),
+            builder: None,
+            groups: Vec::new(),
+            slot_verts: Vec::new(),
+            slot_v: Vec::new(),
+            slot_e: Vec::new(),
         }
     }
 
@@ -129,6 +155,18 @@ impl Strategy for HopGnn {
         let schedule = controller.schedule.clone();
         let t_steps = schedule.num_steps();
 
+        // Sampled-epoch memoization: under `memo::run`, identical
+        // sampling inputs (dataset, sampler config, seed, epoch, and
+        // the merge trajectory captured by the schedule fingerprint)
+        // replay a recorded vertex tape instead of re-walking the
+        // graph. The fork below still runs either way so the parent
+        // RNG stream stays cell-independent.
+        let mut tape = SampleTape::for_epoch(
+            env,
+            0x40B,
+            self.epoch_idx,
+            schedule.fingerprint(),
+        );
         let mut rng = env.rng.fork(0x40B ^ self.epoch_idx);
         self.epoch_idx += 1;
 
@@ -147,13 +185,38 @@ impl Strategy for HopGnn {
             None => EpochDriver::new(env),
         };
 
+        let pregather = self.pregather;
+        let mut b = match self.builder.take() {
+            Some(b) if b.num_servers() == n => b,
+            _ => ProgramBuilder::new(n),
+        };
+        let HopGnn {
+            scratch,
+            groups,
+            slot_verts,
+            slot_v,
+            slot_e,
+            ..
+        } = self;
+        if groups.len() != n || groups.first().map(Vec::len) != Some(n) {
+            *groups = vec![vec![Vec::new(); n]; n];
+        }
+        for v in slot_verts.iter_mut() {
+            v.clear();
+        }
+        slot_verts.resize_with(t_steps * n, Vec::new);
+
         for minibatches in &iterations {
-            let mut b = ProgramBuilder::new(n);
             // (1) redistribution: group roots by home server; ship ids
-            let groups: Vec<Vec<Vec<u32>>> = minibatches
-                .iter()
-                .map(|mb| env.group_by_home(mb))
-                .collect();
+            for (d, mb) in minibatches.iter().enumerate() {
+                let per_server = &mut groups[d];
+                for g in per_server.iter_mut() {
+                    g.clear();
+                }
+                for &r in mb {
+                    per_server[env.partition.home(r) as usize].push(r);
+                }
+            }
             for (d, per_server) in groups.iter().enumerate() {
                 for (s, roots) in per_server.iter().enumerate() {
                     if s != d && !roots.is_empty() {
@@ -169,60 +232,69 @@ impl Strategy for HopGnn {
             }
 
             // (2) micrograph generation: sample each slot's groups at the
-            // server that will train them
-            // slot_mgs[t][srv] = micrographs trained on srv at step t
-            let mut slot_mgs: Vec<Vec<Vec<Micrograph>>> =
-                vec![(0..n).map(|_| Vec::new()).collect(); t_steps];
+            // server that will train them. slot_verts[t*n+srv] collects
+            // the flattened vertices trained on srv at step t; slot_v /
+            // slot_e the matching vertex/edge totals.
+            slot_v.clear();
+            slot_v.resize(t_steps * n, 0);
+            slot_e.clear();
+            slot_e.resize(t_steps * n, 0);
             for (d, per_server) in groups.iter().enumerate() {
                 for (t, loads) in slot_loads.iter_mut().enumerate() {
                     let srv = schedule.visits[d][t];
-                    for src in schedule.sources(d, t) {
+                    for src in std::iter::once(srv)
+                        .chain(schedule.extras[d][t].iter().copied())
+                    {
                         let roots = &per_server[src];
                         if roots.is_empty() {
                             continue;
                         }
                         loads[srv] += roots.len() as u64;
-                        let mgs = env.sample_micrographs(roots, &mut rng);
-                        b.op(srv, Op::Sample {
-                            vertices: mg_vertices(&mgs),
-                        });
-                        slot_mgs[t][srv].extend(mgs);
+                        let idx = t * n + srv;
+                        let (v, e) = sample_group(
+                            env,
+                            roots,
+                            &mut rng,
+                            scratch,
+                            &mut tape,
+                            &mut slot_verts[idx],
+                        );
+                        slot_v[idx] += v;
+                        slot_e[idx] += e;
+                        b.op(srv, Op::Sample { vertices: v });
                     }
                 }
             }
 
             // (3a) pre-gathering (§5.2): one merged fetch per server for
-            // the whole iteration
-            if self.pregather {
+            // the whole iteration. The per-step payload buffers are moved
+            // into the op and recycled through the builder pools.
+            if pregather {
                 for srv in 0..n {
-                    let steps: Vec<Vec<u32>> = slot_mgs
-                        .iter()
-                        .map(|slots| {
-                            slots[srv]
-                                .iter()
-                                .flat_map(|mg| mg.vertices.iter().copied())
-                                .collect()
-                        })
-                        .collect();
+                    let mut steps = b.sbuf();
+                    for t in 0..t_steps {
+                        let mut buf = b.vbuf();
+                        std::mem::swap(&mut buf, &mut slot_verts[t * n + srv]);
+                        steps.push(buf);
+                    }
                     b.op(srv, Op::gather_merged(cached, steps, true));
                 }
                 b.barrier();
             }
 
             // (3b) the T time steps
-            for (t, slots) in slot_mgs.iter().enumerate() {
-                for (srv, mgs) in slots.iter().enumerate() {
-                    if mgs.is_empty() {
+            for t in 0..t_steps {
+                for srv in 0..n {
+                    let idx = t * n + srv;
+                    if slot_v[idx] == 0 {
                         continue; // §5.1 special case: idle this step
                     }
-                    if !self.pregather {
-                        let verts: Vec<u32> = mgs
-                            .iter()
-                            .flat_map(|g| g.vertices.iter().copied())
-                            .collect();
+                    if !pregather {
+                        let mut verts = b.vbuf();
+                        std::mem::swap(&mut verts, &mut slot_verts[idx]);
                         b.op(srv, Op::gather(cached, verts, true));
                     }
-                    let (v, e) = (mg_vertices(mgs), mg_edges(mgs));
+                    let (v, e) = (slot_v[idx], slot_e[idx]);
                     ideal_secs[srv] +=
                         env.cfg.cost.train_time(&env.shape, v, e);
                     b.op(srv, Op::Compute { v, e });
@@ -260,9 +332,13 @@ impl Strategy for HopGnn {
 
             // (4) final gradient synchronization
             b.allreduce();
-            driver.exec(&b.finish());
+            let program = b.take();
+            driver.exec(&program);
+            b.recycle(program);
         }
 
+        tape.finish();
+        self.builder = Some(b);
         let (mut m, caches) = driver.finish_session();
         if env.cfg.cache_persist {
             self.caches = Some(caches);

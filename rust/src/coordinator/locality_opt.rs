@@ -9,15 +9,25 @@
 //! bound HopGNN approaches without the bias.
 
 use super::ops::{Op, Phase, ProgramBuilder};
-use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};
+use super::{EpochDriver, SimEnv, Strategy};
 use crate::cluster::TransferKind;
 use crate::featstore::cache::FeatureCache;
 use crate::metrics::EpochMetrics;
+use crate::sampler::{sample_batch_into, SampleScratch};
 
 pub struct LocalityOpt {
     /// Warm feature caches held across epochs under `--cache-persist`.
     caches: Option<Vec<FeatureCache>>,
     epoch_idx: u64,
+    /// Reusable sampler scratch (zero steady-state allocation).
+    scratch: SampleScratch,
+    /// Persistent program builder; op and payload buffers recycle
+    /// through its pools across iterations.
+    builder: Option<ProgramBuilder>,
+    /// Flattened iteration roots + per-home groups, reused per
+    /// iteration.
+    all: Vec<u32>,
+    groups: Vec<Vec<u32>>,
 }
 
 impl LocalityOpt {
@@ -25,6 +35,10 @@ impl LocalityOpt {
         Self {
             caches: None,
             epoch_idx: 0,
+            scratch: SampleScratch::new(),
+            builder: None,
+            all: Vec::new(),
+            groups: Vec::new(),
         }
     }
 }
@@ -51,14 +65,34 @@ impl Strategy for LocalityOpt {
             Some(c) => EpochDriver::with_caches(env, c),
             None => EpochDriver::new(env),
         };
+        let mut b = match self.builder.take() {
+            Some(b) if b.num_servers() == n => b,
+            _ => ProgramBuilder::new(n),
+        };
+        let scfg = env.cfg.sample_config();
+        let LocalityOpt {
+            scratch,
+            all,
+            groups,
+            ..
+        } = self;
+        if groups.len() != n {
+            *groups = vec![Vec::new(); n];
+        }
 
         for minibatches in &iterations {
-            let mut b = ProgramBuilder::new(n);
             // redistribute ALL roots of the iteration by home server;
             // each server's local model trains whatever landed on it
-            let all: Vec<u32> =
-                minibatches.iter().flatten().copied().collect();
-            let groups = env.group_by_home(&all);
+            all.clear();
+            for mb in minibatches {
+                all.extend_from_slice(mb);
+            }
+            for g in groups.iter_mut() {
+                g.clear();
+            }
+            for &r in all.iter() {
+                groups[env.partition.home(r) as usize].push(r);
+            }
             for (s, roots) in groups.iter().enumerate() {
                 if roots.is_empty() {
                     continue;
@@ -73,24 +107,33 @@ impl Strategy for LocalityOpt {
                     overlap: false,
                 });
 
-                let mgs = env.sample_micrographs(roots, &mut rng);
+                let mut verts = b.vbuf();
+                let stats = sample_batch_into(
+                    &env.dataset.graph,
+                    roots,
+                    &scfg,
+                    &mut rng,
+                    scratch,
+                    &mut verts,
+                );
                 b.op(s, Op::Sample {
-                    vertices: mg_vertices(&mgs),
+                    vertices: stats.vertices,
                 });
-                let verts: Vec<u32> = mgs
-                    .iter()
-                    .flat_map(|g| g.vertices.iter().copied())
-                    .collect();
-                let (v, e) = (mg_vertices(&mgs), mg_edges(&mgs));
                 // the few remote halo vertices LO's local micrographs
                 // still touch are exactly the hot-set a cache retains
                 b.op(s, Op::gather(cached, verts, true));
-                b.op(s, Op::Compute { v, e });
+                b.op(s, Op::Compute {
+                    v: stats.vertices,
+                    e: stats.edges,
+                });
             }
             b.allreduce();
-            driver.exec(&b.finish());
+            let program = b.take();
+            driver.exec(&program);
+            b.recycle(program);
         }
 
+        self.builder = Some(b);
         let (mut m, caches) = driver.finish_session();
         if env.cfg.cache_persist {
             self.caches = Some(caches);

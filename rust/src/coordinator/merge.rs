@@ -114,6 +114,39 @@ impl Schedule {
         }
     }
 
+    /// Order-sensitive structural hash (FNV-1a over `visits` and
+    /// `extras`, with length separators): any two schedules that would
+    /// shape a different sampling order hash differently. Keys the
+    /// cross-cell epoch-sample memo (`bench::memo`), so sweep cells
+    /// only share a recorded sampling tape while their merge
+    /// trajectories still agree.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |h: &mut u64, x: u64| {
+            *h ^= x;
+            *h = h.wrapping_mul(PRIME);
+        };
+        mix(&mut h, self.visits.len() as u64);
+        for row in &self.visits {
+            mix(&mut h, row.len() as u64);
+            for &s in row {
+                mix(&mut h, s as u64);
+            }
+        }
+        for row in &self.extras {
+            mix(&mut h, row.len() as u64);
+            for slot in row {
+                mix(&mut h, slot.len() as u64);
+                for &s in slot {
+                    mix(&mut h, s as u64);
+                }
+            }
+        }
+        h
+    }
+
     /// Invariant (Fig 10): each model still trains every home server's
     /// root group exactly once, and each step's primaries are distinct.
     pub fn validate(&self, num_servers: usize) -> Result<(), String> {
@@ -336,6 +369,24 @@ mod tests {
         s.validate(4).unwrap();
         assert_eq!(s.num_steps(), 4);
         assert_eq!(s.visits[1][2], 3);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_schedules() {
+        let a = Schedule::round_robin(4);
+        let b = Schedule::round_robin(4);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = Schedule::round_robin(4);
+        c.merge_step(1);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // extras placement matters, not just step count
+        let mut d = Schedule::round_robin(4);
+        d.merge_step(2);
+        assert_ne!(c.fingerprint(), d.fingerprint());
+        assert_ne!(
+            a.fingerprint(),
+            Schedule::round_robin(3).fingerprint()
+        );
     }
 
     #[test]

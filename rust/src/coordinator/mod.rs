@@ -78,6 +78,7 @@ pub use spec::{
     Base, Merge, StrategySpec, ALL_BASES, ALL_LEGACY_SPECS, ALL_MERGES,
 };
 
+use crate::bench::memo::{self, EpochTape, SampleGroup, SampleKey, TapeEntry};
 use crate::cluster::{Clocks, Fabric, ModelShape, NetStats, TransferKind};
 use crate::config::RunConfig;
 use crate::featstore::cache::{self, CachePolicy, FeatureCache};
@@ -85,9 +86,11 @@ use crate::featstore::FeatureStore;
 use crate::graph::datasets::Dataset;
 use crate::metrics::EpochMetrics;
 use crate::partition::{partition, Partition};
-use crate::sampler::{sample_micrograph, Micrograph};
+use crate::sampler::{
+    sample_batch_into, sample_micrograph, Micrograph, SampleScratch,
+};
 use crate::util::rng::Rng;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 /// Everything a strategy needs to simulate (or drive) one training run.
 pub struct SimEnv<'a> {
@@ -327,6 +330,100 @@ impl<'a> SimEnv<'a> {
         }
         groups
     }
+}
+
+/// Record/replay state for one epoch's sampling stream — the strategy
+/// side of the cross-cell epoch-sample memo (`bench::memo`).
+///
+/// All three modes are bit-identical by construction: `Record` is live
+/// sampling plus a copy into the tape, and `Replay` returns exactly
+/// what an identically-keyed `Record` run produced. In `Replay` the
+/// strategy's forked sampling RNG is simply never drawn from — the fork
+/// itself still happens, so the parent env stream (which the iteration
+/// shuffles consume) is untouched; the forked stream is private to the
+/// epoch, so leaving it unconsumed is unobservable.
+pub(crate) enum SampleTape {
+    /// Sample live, record nothing (memo off or over budget).
+    Off,
+    /// Sample live and copy each group into a tape to publish.
+    Record { entry: TapeEntry, tape: EpochTape },
+    /// Serve every group from a previously recorded tape.
+    Replay { tape: Arc<EpochTape>, cursor: usize },
+}
+
+impl SampleTape {
+    /// Resolve this epoch's tape: replay if an identically-keyed cell
+    /// already recorded it, record if the memo admits the key,
+    /// otherwise sample live.
+    pub(crate) fn for_epoch(
+        env: &SimEnv,
+        salt: u64,
+        epoch: u64,
+        schedule: u64,
+    ) -> Self {
+        if !env.cfg.memo_samples {
+            return SampleTape::Off;
+        }
+        let key = SampleKey::for_epoch(env, salt, epoch, schedule);
+        match memo::epoch_tape_entry(key) {
+            None => SampleTape::Off,
+            Some(entry) => match entry.get() {
+                Some(tape) => SampleTape::Replay {
+                    tape: Arc::clone(tape),
+                    cursor: 0,
+                },
+                None => SampleTape::Record {
+                    entry,
+                    tape: EpochTape::default(),
+                },
+            },
+        }
+    }
+
+    /// Publish a recorded tape (first same-key committer wins; `Off`
+    /// and `Replay` are no-ops).
+    pub(crate) fn finish(self) {
+        if let SampleTape::Record { entry, tape } = self {
+            memo::commit_tape(&entry, tape);
+        }
+    }
+}
+
+/// Sample one root group's micrographs — or replay them from the epoch
+/// tape. Appends the flattened micrograph vertices (sampling order,
+/// duplicates preserved) to `out` and returns the group's summed
+/// `(vertices, edges)`; content and order are identical across all
+/// three tape modes.
+pub(crate) fn sample_group(
+    env: &SimEnv,
+    roots: &[u32],
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+    tape: &mut SampleTape,
+    out: &mut Vec<u32>,
+) -> (u64, u64) {
+    if let SampleTape::Replay { tape, cursor } = tape {
+        let g = tape.groups.get(*cursor).unwrap_or_else(|| {
+            panic!(
+                "epoch tape exhausted at group {} (key collision?)",
+                *cursor
+            )
+        });
+        *cursor += 1;
+        out.extend_from_slice(&g.verts);
+        return (g.verts.len() as u64, g.edges);
+    }
+    let scfg = env.cfg.sample_config();
+    let start = out.len();
+    let stats =
+        sample_batch_into(&env.dataset.graph, roots, &scfg, rng, scratch, out);
+    if let SampleTape::Record { tape, .. } = tape {
+        tape.groups.push(SampleGroup {
+            verts: out[start..].to_vec(),
+            edges: stats.edges,
+        });
+    }
+    (stats.vertices, stats.edges)
 }
 
 /// Summed vertex count across micrographs (pre-dedup).

@@ -9,15 +9,24 @@
 //! dataloader when the driver's overlap mode is on.
 
 use super::ops::{Op, ProgramBuilder};
-use super::{mg_edges, mg_vertices, EpochDriver, SimEnv, Strategy};
+use super::{sample_group, EpochDriver, SampleTape, SimEnv, Strategy};
 use crate::featstore::cache::FeatureCache;
 use crate::metrics::EpochMetrics;
-use crate::sampler::Subgraph;
+use crate::sampler::SampleScratch;
+use crate::util::stamp::StampedSet;
 
 pub struct ModelCentric {
     /// Warm feature caches held across epochs under `--cache-persist`.
     caches: Option<Vec<FeatureCache>>,
     epoch_idx: u64,
+    /// Reusable sampler scratch (zero steady-state allocation).
+    scratch: SampleScratch,
+    /// Generation-stamped dedup set replaying `Subgraph::union_of`'s
+    /// first-occurrence order without rebuilding a hash set per batch.
+    seen: StampedSet,
+    /// Persistent program builder; op and payload buffers recycle
+    /// through its pools across iterations.
+    builder: Option<ProgramBuilder>,
 }
 
 impl ModelCentric {
@@ -25,6 +34,9 @@ impl ModelCentric {
         Self {
             caches: None,
             epoch_idx: 0,
+            scratch: SampleScratch::new(),
+            seen: StampedSet::default(),
+            builder: None,
         }
     }
 }
@@ -43,6 +55,9 @@ impl Strategy for ModelCentric {
     fn run_epoch(&mut self, env: &mut SimEnv) -> EpochMetrics {
         let n = env.num_servers();
         let cached = env.cfg.cache_enabled();
+        // Sampled-epoch memoization (baseline epochs have no merge
+        // schedule, so the schedule fingerprint slot is constant).
+        let mut tape = SampleTape::for_epoch(env, 0xD61, self.epoch_idx, 0);
         let mut rng = env.rng.fork(0xD61 ^ self.epoch_idx);
         self.epoch_idx += 1;
 
@@ -51,38 +66,58 @@ impl Strategy for ModelCentric {
             Some(c) => EpochDriver::with_caches(env, c),
             None => EpochDriver::new(env),
         };
+        let mut b = match self.builder.take() {
+            Some(b) if b.num_servers() == n => b,
+            _ => ProgramBuilder::new(n),
+        };
+        let ModelCentric { scratch, seen, .. } = self;
         for minibatches in &iterations {
-            let mut b = ProgramBuilder::new(n);
             for (server, roots) in minibatches.iter().enumerate() {
                 // sample the mini-batch's micrographs; DGL merges them
                 // into one subgraph (dedup) before gathering
-                let mgs = env.sample_micrographs(roots, &mut rng);
-                b.op(server, Op::Sample {
-                    vertices: mg_vertices(&mgs),
-                });
-                let sub = Subgraph::union_of(&mgs);
+                let mut concat = b.vbuf();
+                let (summed, edges) = sample_group(
+                    env,
+                    roots,
+                    &mut rng,
+                    scratch,
+                    &mut tape,
+                    &mut concat,
+                );
+                b.op(server, Op::Sample { vertices: summed });
 
                 // compute on the deduplicated subgraph:
-                // dedup factor = unique vertices / summed vertices
-                let edges = mg_edges(&mgs);
-                let summed = mg_vertices(&mgs);
+                // dedup factor = unique vertices / summed vertices.
+                // First-occurrence dedup matches Subgraph::union_of.
+                let mut uniq = b.vbuf();
+                seen.reset();
+                for &v in concat.iter() {
+                    if seen.insert(v) {
+                        uniq.push(v);
+                    }
+                }
+                b.give(concat);
                 let dedup = if summed == 0 {
                     1.0
                 } else {
-                    sub.vertices.len() as f64 / summed as f64
+                    uniq.len() as f64 / summed as f64
                 };
                 let e_ded = (edges as f64 * dedup) as u64;
-                let v_uniq = sub.vertices.len() as u64;
+                let v_uniq = uniq.len() as u64;
 
                 // gather: one batched fetch per remote source, served
                 // through the feature cache when one is configured
-                b.op(server, Op::gather(cached, sub.vertices, true));
+                b.op(server, Op::gather(cached, uniq, true));
                 b.op(server, Op::Compute { v: v_uniq, e: e_ded });
             }
             b.allreduce();
-            driver.exec(&b.finish());
+            let program = b.take();
+            driver.exec(&program);
+            b.recycle(program);
         }
 
+        tape.finish();
+        self.builder = Some(b);
         let (mut m, caches) = driver.finish_session();
         if env.cfg.cache_persist {
             self.caches = Some(caches);

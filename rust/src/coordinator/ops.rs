@@ -177,10 +177,29 @@ impl Program {
 
 /// Incremental [`Program`] construction: ops accumulate into the
 /// current lane set; any global item seals it.
+///
+/// A builder can be **persistent**: [`Self::take`] moves the built
+/// program out without consuming the builder, and [`Self::recycle`]
+/// harvests an executed program's storage — lane sets, item vectors,
+/// and the `Vec<u32>` / `Vec<Vec<u32>>` payloads inside gather ops —
+/// into free pools that [`Self::vbuf`] / [`Self::sbuf`] hand back out.
+/// A strategy that builds one program per iteration and recycles it
+/// after `EpochDriver::exec` therefore reaches a steady state where
+/// schedule construction allocates nothing (all buffers cycle at their
+/// high-water capacity); `tests/alloc_budget.rs` asserts this.
 pub struct ProgramBuilder {
     num_servers: usize,
     items: Vec<Item>,
     cur: Vec<Vec<Op>>,
+    /// Free `Vec<u32>` payload buffers (gather vertex lists).
+    vpool: Vec<Vec<u32>>,
+    /// Free `Vec<Vec<u32>>` step-list buffers (merged/cached gathers);
+    /// always empty of inner vectors (those live in `vpool`).
+    spool: Vec<Vec<Vec<u32>>>,
+    /// Free lane sets (length `num_servers`, all lanes empty).
+    lane_pool: Vec<Vec<Vec<Op>>>,
+    /// Free item vectors.
+    item_pool: Vec<Vec<Item>>,
 }
 
 impl ProgramBuilder {
@@ -189,6 +208,10 @@ impl ProgramBuilder {
             num_servers,
             items: Vec::new(),
             cur: vec![Vec::new(); num_servers],
+            vpool: Vec::new(),
+            spool: Vec::new(),
+            lane_pool: Vec::new(),
+            item_pool: Vec::new(),
         }
     }
 
@@ -204,10 +227,11 @@ impl ProgramBuilder {
 
     fn flush(&mut self) {
         if self.cur.iter().any(|l| !l.is_empty()) {
-            let lanes = std::mem::replace(
-                &mut self.cur,
-                vec![Vec::new(); self.num_servers],
-            );
+            let fresh = self
+                .lane_pool
+                .pop()
+                .unwrap_or_else(|| vec![Vec::new(); self.num_servers]);
+            let lanes = std::mem::replace(&mut self.cur, fresh);
             self.items.push(Item::Lanes(lanes));
         }
     }
@@ -233,6 +257,80 @@ impl ProgramBuilder {
             num_servers: self.num_servers,
             items: self.items,
         }
+    }
+
+    /// Move the built program out, leaving the builder empty and ready
+    /// for the next fragment (the persistent-builder twin of
+    /// [`Self::finish`]).
+    pub fn take(&mut self) -> Program {
+        self.flush();
+        let items = std::mem::replace(
+            &mut self.items,
+            self.item_pool.pop().unwrap_or_default(),
+        );
+        Program {
+            num_servers: self.num_servers,
+            items,
+        }
+    }
+
+    /// Harvest an executed program's storage back into the builder's
+    /// pools. Pair every [`Self::take`] with a `recycle` after
+    /// `EpochDriver::exec` and steady-state schedule construction stops
+    /// allocating.
+    pub fn recycle(&mut self, mut program: Program) {
+        debug_assert_eq!(program.num_servers, self.num_servers);
+        for item in program.items.drain(..) {
+            if let Item::Lanes(mut lanes) = item {
+                if lanes.len() != self.num_servers {
+                    continue; // foreign program; drop its lane set
+                }
+                for lane in &mut lanes {
+                    for op in lane.drain(..) {
+                        self.harvest(op);
+                    }
+                }
+                self.lane_pool.push(lanes);
+            }
+        }
+        self.item_pool.push(program.items);
+    }
+
+    /// Return an op's heap payloads to the pools.
+    fn harvest(&mut self, op: Op) {
+        match op {
+            Op::Gather { vertices, .. } => self.give(vertices),
+            Op::GatherMerged { steps, .. } | Op::CacheFetch { steps, .. } => {
+                self.give_steps(steps);
+            }
+            _ => {}
+        }
+    }
+
+    /// A cleared `Vec<u32>` from the payload pool (or a fresh one).
+    pub fn vbuf(&mut self) -> Vec<u32> {
+        self.vpool.pop().unwrap_or_default()
+    }
+
+    /// A cleared `Vec<Vec<u32>>` from the step-list pool (or a fresh
+    /// one).
+    pub fn sbuf(&mut self) -> Vec<Vec<u32>> {
+        self.spool.pop().unwrap_or_default()
+    }
+
+    /// Return an unused (or harvested) payload buffer to the pool.
+    pub fn give(&mut self, mut v: Vec<u32>) {
+        v.clear();
+        self.vpool.push(v);
+    }
+
+    /// Return a step-list buffer to the pool, recycling its inner
+    /// vectors as payload buffers.
+    pub fn give_steps(&mut self, mut steps: Vec<Vec<u32>>) {
+        for step in steps.drain(..) {
+            self.give(step);
+        }
+        self.spool.push(steps);
     }
 }
 
@@ -272,6 +370,73 @@ mod tests {
         let p = b.finish();
         assert_eq!(p.items.len(), 2);
         assert!(p.items.iter().all(|i| matches!(i, Item::Barrier)));
+    }
+
+    #[test]
+    fn take_recycle_round_trip_matches_finish() {
+        // A persistent builder cycled through take/recycle must emit
+        // programs identical in shape to one-shot finish() builds.
+        let build = |b: &mut ProgramBuilder| {
+            let mut verts = b.vbuf();
+            verts.extend([1u32, 2, 3]);
+            b.op(0, Op::Gather {
+                vertices: verts,
+                overlap: false,
+            });
+            let mut steps = b.sbuf();
+            let mut s0 = b.vbuf();
+            s0.extend([4u32, 5]);
+            steps.push(s0);
+            b.op(1, Op::GatherMerged {
+                steps,
+                overlap: true,
+            });
+            b.barrier();
+            b.allreduce();
+        };
+        let mut oneshot = ProgramBuilder::new(2);
+        build(&mut oneshot);
+        let want = oneshot.finish();
+
+        let mut b = ProgramBuilder::new(2);
+        for round in 0..3 {
+            build(&mut b);
+            let p = b.take();
+            assert_eq!(p.items.len(), want.items.len(), "round {round}");
+            assert_eq!(p.num_ops(), want.num_ops(), "round {round}");
+            assert_eq!(p.num_sync_points(), want.num_sync_points());
+            match (&p.items[0], &want.items[0]) {
+                (Item::Lanes(got), Item::Lanes(w)) => {
+                    assert_eq!(got.len(), w.len());
+                    match (&got[0][0], &w[0][0]) {
+                        (
+                            Op::Gather { vertices: g, .. },
+                            Op::Gather { vertices: e, .. },
+                        ) => assert_eq!(g, e, "round {round}"),
+                        other => panic!("unexpected ops {other:?}"),
+                    }
+                }
+                other => panic!("unexpected items {other:?}"),
+            }
+            b.recycle(p);
+        }
+    }
+
+    #[test]
+    fn recycled_buffers_come_back_cleared() {
+        let mut b = ProgramBuilder::new(1);
+        let mut v = b.vbuf();
+        v.extend([9u32, 8, 7]);
+        let cap = v.capacity();
+        b.op(0, Op::Gather {
+            vertices: v,
+            overlap: false,
+        });
+        let p = b.take();
+        b.recycle(p);
+        let v2 = b.vbuf();
+        assert!(v2.is_empty(), "harvested buffer must be cleared");
+        assert_eq!(v2.capacity(), cap, "harvested buffer keeps capacity");
     }
 
     #[test]

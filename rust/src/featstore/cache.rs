@@ -39,6 +39,7 @@
 use super::{FeatureStore, GatherPlan};
 use crate::partition::Partition;
 use crate::util::fxhash::{FxHashMap, FxHashSet};
+use crate::util::stamp::StampedSet;
 use std::collections::BTreeMap;
 
 /// Eviction/admission policy of a [`FeatureCache`].
@@ -105,6 +106,19 @@ pub struct CacheResolution {
     pub evicted_bytes: u64,
 }
 
+/// The accounting half of a [`CacheResolution`], for the buffer-reusing
+/// [`FeatureCache::resolve_into`] path where the miss plan lives in the
+/// caller's scratch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheDeltas {
+    /// Remote vertices served from the cache (no transfer).
+    pub hits: u64,
+    /// Bytes those hits would have moved: `hits * feat_bytes`.
+    pub hit_bytes: u64,
+    /// Bytes displaced by LRU eviction while admitting the misses.
+    pub evicted_bytes: u64,
+}
+
 /// One server's feature cache. All entries are one feature row
 /// (`feat_bytes`) wide; capacity is tracked in bytes so `RunConfig`'s
 /// MB knob maps directly onto it.
@@ -159,15 +173,33 @@ impl FeatureCache {
         server: usize,
         steps: &[Vec<u32>],
     ) -> CacheResolution {
-        let n = store.partition.num_parts;
-        let mut plan = GatherPlan {
-            server,
-            local: Vec::new(),
-            remote: vec![Vec::new(); n],
-        };
-        let mut seen = FxHashSet::default();
-        let mut hits = 0u64;
-        let mut evicted_bytes = 0u64;
+        let mut plan = GatherPlan::default();
+        let mut seen = StampedSet::default();
+        let deltas = self.resolve_into(store, server, steps, &mut seen, &mut plan);
+        CacheResolution {
+            plan,
+            hits: deltas.hits,
+            hit_bytes: deltas.hit_bytes,
+            evicted_bytes: deltas.evicted_bytes,
+        }
+    }
+
+    /// [`Self::resolve`] into a caller-owned miss plan + dedup scratch
+    /// (both reset here, keeping capacity). The cache's own admission
+    /// bookkeeping may still allocate — LRU/static state grows with
+    /// residency — but the per-fetch planning itself is allocation-free,
+    /// and with `CachePolicy::None` the whole resolution is.
+    pub fn resolve_into(
+        &mut self,
+        store: &FeatureStore,
+        server: usize,
+        steps: &[Vec<u32>],
+        seen: &mut StampedSet,
+        plan: &mut GatherPlan,
+    ) -> CacheDeltas {
+        plan.reset(server, store.partition.num_parts);
+        seen.reset();
+        let mut deltas = CacheDeltas::default();
         for v in steps.iter().flatten().copied() {
             if !seen.insert(v) {
                 continue;
@@ -178,20 +210,15 @@ impl FeatureCache {
             } else {
                 let a = self.access(v);
                 if a.hit {
-                    hits += 1;
+                    deltas.hits += 1;
                 } else {
                     plan.remote[home].push(v);
-                    evicted_bytes += a.evicted_bytes;
+                    deltas.evicted_bytes += a.evicted_bytes;
                 }
             }
         }
-        let hit_bytes = hits * self.feat_bytes;
-        CacheResolution {
-            plan,
-            hits,
-            hit_bytes,
-            evicted_bytes,
-        }
+        deltas.hit_bytes = deltas.hits * self.feat_bytes;
+        deltas
     }
 
     /// Look up one remote vertex and admit it on a miss.

@@ -26,6 +26,7 @@ use crate::cluster::{Clocks, CostModel, Fabric, NetStats, TransferKind};
 use crate::graph::datasets::Dataset;
 use crate::metrics::EpochMetrics;
 use crate::partition::Partition;
+use crate::util::stamp::StampedSet;
 
 /// Resolution of a feature gather for one server: which requested
 /// vertices are local, and which must be fetched from each remote server.
@@ -48,6 +49,19 @@ impl GatherPlan {
     /// Number of batched fetch operations (one per non-empty source).
     pub fn request_count(&self) -> u64 {
         self.remote.iter().filter(|v| !v.is_empty()).count() as u64
+    }
+
+    /// Clear for reuse under a (possibly different) server / cluster
+    /// size, keeping every buffer's capacity. The iteration hot path
+    /// replans into one `GatherPlan` per lane instead of allocating a
+    /// fresh one per gather op.
+    pub fn reset(&mut self, server: usize, num_parts: usize) {
+        self.server = server;
+        self.local.clear();
+        self.remote.resize_with(num_parts, Vec::new);
+        for r in &mut self.remote {
+            r.clear();
+        }
     }
 }
 
@@ -88,13 +102,26 @@ impl<'a> FeatureStore<'a> {
     /// pre-gathering, or per-step sets otherwise).
     pub fn plan(&self, server: usize, vertices: impl IntoIterator<Item = u32>)
                 -> GatherPlan {
-        let n = self.partition.num_parts;
-        let mut plan = GatherPlan {
-            server,
-            local: Vec::new(),
-            remote: vec![Vec::new(); n],
-        };
-        let mut seen = crate::util::fxhash::FxHashSet::default();
+        let mut plan = GatherPlan::default();
+        let mut seen = StampedSet::default();
+        self.plan_into(server, vertices, &mut seen, &mut plan);
+        plan
+    }
+
+    /// [`Self::plan`] into caller-owned buffers: `plan` is reset (keeping
+    /// capacity) and `seen` is the dedup scratch. One `(seen, plan)` pair
+    /// reused across a lane's gathers makes steady-state planning
+    /// allocation-free; output is identical to `plan` (same
+    /// first-occurrence dedup, same per-home ordering).
+    pub fn plan_into(
+        &self,
+        server: usize,
+        vertices: impl IntoIterator<Item = u32>,
+        seen: &mut StampedSet,
+        plan: &mut GatherPlan,
+    ) {
+        plan.reset(server, self.partition.num_parts);
+        seen.reset();
         for v in vertices {
             if !seen.insert(v) {
                 continue;
@@ -106,7 +133,6 @@ impl<'a> FeatureStore<'a> {
                 plan.remote[home].push(v);
             }
         }
-        plan
     }
 
     /// Cost/accounting core shared by [`Self::execute_sim`] and the

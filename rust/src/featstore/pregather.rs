@@ -14,8 +14,24 @@
 //! comparison Fig 16 plots.
 
 use super::{FeatureStore, GatherPlan};
+use crate::util::stamp::StampedSet;
+
+/// Reusable scratch for [`PregatherPlan::build_into`]: three
+/// generation-stamped sets (within-step dedup, cross-step dedup, and
+/// per-step distinct-source marking) that keep their storage across
+/// iterations, so steady-state pre-gather planning allocates nothing.
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    /// within-step vertex dedup (reset per step)
+    step_seen: StampedSet,
+    /// cross-step vertex dedup driving the merged plan
+    merged_seen: StampedSet,
+    /// distinct remote source servers this step (keys are server ids)
+    src_mark: StampedSet,
+}
 
 /// Outcome of planning one server's iteration with pre-gathering.
+#[derive(Debug, Default)]
 pub struct PregatherPlan {
     /// The single merged gather (deduplicated union over all steps).
     pub merged: GatherPlan,
@@ -32,26 +48,62 @@ impl PregatherPlan {
         server: usize,
         steps: &[Vec<u32>],
     ) -> PregatherPlan {
-        let mut union: Vec<u32> = Vec::new();
-        let mut per_step_requests = 0u64;
-        let mut per_step_remote_vertices = 0u64;
+        let mut out = PregatherPlan::default();
+        let mut scratch = PlanScratch::default();
+        Self::build_into(store, server, steps, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`Self::build`] into caller-owned buffers, in **one pass** over
+    /// the step vertex lists: the historical implementation planned each
+    /// step separately *and* replanned their concatenated union (every
+    /// vertex hashed twice, plus an O(iteration) union `Vec`); here the
+    /// per-step counters and the merged plan advance together per
+    /// vertex. Output is bit-identical — the merged plan dedups in
+    /// first-occurrence order over the raw step concatenation exactly as
+    /// `FeatureStore::plan` did, and the per-step counters dedup within
+    /// each step exactly as the discarded per-step plans did.
+    pub fn build_into(
+        store: &FeatureStore,
+        server: usize,
+        steps: &[Vec<u32>],
+        scratch: &mut PlanScratch,
+        out: &mut PregatherPlan,
+    ) {
+        let n = store.partition.num_parts;
+        out.merged.reset(server, n);
+        out.per_step_requests = 0;
+        out.per_step_remote_vertices = 0;
+        scratch.merged_seen.reset();
         for step in steps {
-            let plan = store.plan(server, step.iter().copied());
-            per_step_requests += plan.request_count();
-            per_step_remote_vertices += plan.remote_count();
-            union.extend(step.iter().copied());
-        }
-        let merged = store.plan(server, union);
-        PregatherPlan {
-            merged,
-            per_step_requests,
-            per_step_remote_vertices,
+            scratch.step_seen.reset();
+            scratch.src_mark.reset();
+            for &v in step {
+                let home = store.partition.home(v) as usize;
+                if scratch.step_seen.insert(v) && home != server {
+                    out.per_step_remote_vertices += 1;
+                    if scratch.src_mark.insert(home as u32) {
+                        out.per_step_requests += 1;
+                    }
+                }
+                if scratch.merged_seen.insert(v) {
+                    if home == server {
+                        out.merged.local.push(v);
+                    } else {
+                        out.merged.remote[home].push(v);
+                    }
+                }
+            }
         }
     }
 
     /// Redundant vertex transfers eliminated by pre-gathering.
+    /// Saturating: the merged plan can never exceed the per-step total,
+    /// but a hand-constructed plan (or future accounting change) should
+    /// report zero savings rather than wrap.
     pub fn savings(&self) -> u64 {
-        self.per_step_remote_vertices - self.merged.remote_count()
+        self.per_step_remote_vertices
+            .saturating_sub(self.merged.remote_count())
     }
 
     /// Peak extra host memory the pre-gathered features occupy (bytes) —
@@ -223,6 +275,41 @@ mod tests {
             plan.merged.remote_count() * fb + plan.savings() * fb
         );
         assert_eq!(plan.buffer_bytes(fb), union.len() as u64 * fb);
+    }
+
+    #[test]
+    fn build_into_reused_scratch_matches_fresh_build() {
+        // One warm (scratch, out) pair replayed across different servers
+        // and step shapes must reproduce the single-shot build exactly.
+        let d = tiny_test_dataset(11);
+        let p = partition(&d.graph, 4, PartitionAlgo::Hash, 11);
+        let fs = FeatureStore::new(&d, &p);
+        let mut scratch = PlanScratch::default();
+        let mut out = PregatherPlan::default();
+        for round in 0..6u32 {
+            let server = (round % 4) as usize;
+            let steps: Vec<Vec<u32>> = (0..=round)
+                .map(|t| (t * 13..t * 13 + 30 + round).collect())
+                .collect();
+            PregatherPlan::build_into(&fs, server, &steps, &mut scratch, &mut out);
+            let fresh = PregatherPlan::build(&fs, server, &steps);
+            assert_eq!(out.merged.server, fresh.merged.server);
+            assert_eq!(out.merged.local, fresh.merged.local, "round {round}");
+            assert_eq!(out.merged.remote, fresh.merged.remote, "round {round}");
+            assert_eq!(out.per_step_requests, fresh.per_step_requests);
+            assert_eq!(
+                out.per_step_remote_vertices,
+                fresh.per_step_remote_vertices
+            );
+        }
+    }
+
+    #[test]
+    fn savings_saturates_instead_of_wrapping() {
+        let mut plan = PregatherPlan::default();
+        plan.merged.remote = vec![vec![1, 2, 3]];
+        plan.per_step_remote_vertices = 1; // inconsistent hand-built state
+        assert_eq!(plan.savings(), 0, "must saturate, not underflow");
     }
 
     #[test]

@@ -19,14 +19,12 @@
 //! Quickstart: `cargo run --release --example quickstart` — or see
 //! `README.md`.
 
-// Deliberate seed-tree idioms, allowed crate-wide so the CI clippy gate
+// Deliberate seed-tree idiom, allowed crate-wide so the CI clippy gate
 // (`-D warnings`, blocking since the cache-subsystem PR) stays
 // deterministic: the zero-dependency substrate uses inherent
 // `from_str(&str) -> Option<Self>` parsers on every enum (no `FromStr`
-// because the error type would be the only use of an error enum), and
-// the simulation hot paths index parallel arrays by vertex id.
+// because the error type would be the only use of an error enum).
 #![allow(clippy::should_implement_trait)]
-#![allow(clippy::needless_range_loop)]
 
 pub mod bench;
 pub mod cluster;

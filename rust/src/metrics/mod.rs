@@ -111,6 +111,21 @@ impl EpochMetrics {
         self.bytes_by_kind = net.bytes_by_kind;
     }
 
+    /// Zero every field, keeping `per_server_busy`'s capacity. Used by
+    /// the epoch driver's reusable lane scratch; a reset metrics value
+    /// is indistinguishable from `EpochMetrics::default()`.
+    pub fn reset(&mut self) {
+        let per_server_busy = {
+            let mut v = std::mem::take(&mut self.per_server_busy);
+            v.clear();
+            v
+        };
+        *self = EpochMetrics {
+            per_server_busy,
+            ..EpochMetrics::default()
+        };
+    }
+
     /// Fold another metrics delta into this one (every additive field).
     /// Used by the epoch driver to reduce per-server lane deltas in
     /// deterministic server order; derived fields (`epoch_time`,

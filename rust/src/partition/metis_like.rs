@@ -96,11 +96,7 @@ pub fn partition(graph: &CsrGraph, num_parts: usize, seed: u64) -> Partition {
     for level in (0..maps.len()).rev() {
         let fine = &levels[level];
         let map = &maps[level];
-        let mut fine_part = vec![0u32; fine.len()];
-        for v in 0..fine.len() {
-            fine_part[v] = part[map[v] as usize];
-        }
-        part = fine_part;
+        part = map.iter().map(|&c| part[c as usize]).collect();
         refine(fine, &mut part, num_parts, 3);
     }
 
@@ -113,8 +109,8 @@ pub fn partition(graph: &CsrGraph, num_parts: usize, seed: u64) -> Partition {
 /// Total weight of cut edges (internal objective for restart selection).
 fn cut_weight(g: &WGraph, part: &[u32]) -> u64 {
     let mut cut = 0u64;
-    for v in 0..g.len() {
-        for &(u, w) in &g.adj[v] {
+    for (v, adj) in g.adj.iter().enumerate() {
+        for &(u, w) in adj {
             if part[v] != part[u as usize] {
                 cut += w;
             }

@@ -23,7 +23,7 @@ pub struct Partition {
     pub num_parts: usize,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PartitionAlgo {
     MetisLike,
     Heuristic,

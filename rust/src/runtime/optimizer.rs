@@ -125,12 +125,16 @@ impl Adam {
             .zip(&grads.tensors)
             .zip(self.m.tensors.iter_mut().zip(self.v.tensors.iter_mut()))
         {
-            for i in 0..p.len() {
-                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
-                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
-                let mh = m[i] / b1c;
-                let vh = v[i] / b2c;
-                p[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+            for ((p, &g), (m, v)) in p
+                .iter_mut()
+                .zip(g.iter())
+                .zip(m.iter_mut().zip(v.iter_mut()))
+            {
+                *m = self.beta1 * *m + (1.0 - self.beta1) * g;
+                *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
+                let mh = *m / b1c;
+                let vh = *v / b2c;
+                *p -= self.lr * mh / (vh.sqrt() + self.eps);
             }
         }
     }
@@ -144,8 +148,8 @@ pub struct Sgd {
 impl Sgd {
     pub fn step(&self, params: &mut ParamSet, grads: &ParamSet) {
         for (p, g) in params.tensors.iter_mut().zip(&grads.tensors) {
-            for i in 0..p.len() {
-                p[i] -= self.lr * g[i];
+            for (p, &g) in p.iter_mut().zip(g.iter()) {
+                *p -= self.lr * g;
             }
         }
     }

@@ -5,7 +5,7 @@
 //! spreads the sample across the graph, which is exactly why Table 1
 //! shows weaker micrograph locality for it at scale.
 
-use super::{Interner, Micrograph, SampleConfig};
+use super::{intern, Micrograph, SampleConfig, SampleScratch};
 use crate::graph::CsrGraph;
 use crate::util::rng::Rng;
 
@@ -15,15 +15,40 @@ pub fn sample(
     cfg: &SampleConfig,
     rng: &mut Rng,
 ) -> Micrograph {
-    let mut interner = Interner::new(root, cfg.vmax);
-    let mut edges: Vec<(u32, u32)> = vec![(0, 0)];
-    let mut frontier: Vec<u32> = vec![0];
+    let mut scratch = SampleScratch::new();
+    sample_into(graph, root, cfg, rng, &mut scratch);
+    scratch.take_micrograph(root, cfg.layers)
+}
+
+/// Scratch-based implementation: identical draw order and output to the
+/// historical allocating version (`sample` is now a thin wrapper).
+pub fn sample_into(
+    graph: &CsrGraph,
+    root: u32,
+    cfg: &SampleConfig,
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+) {
+    scratch.reset(root);
+    let SampleScratch {
+        map,
+        vertices,
+        depth: depths,
+        edges,
+        frontier,
+        next_frontier,
+        pool,
+        chosen,
+        picks,
+    } = scratch;
+    edges.push((0, 0));
+    frontier.push(0);
 
     for depth in 0..cfg.layers as u8 {
         // candidate pool: union of all frontier neighborhoods
-        let mut pool: Vec<u32> = Vec::new();
-        for &dst_local in &frontier {
-            let dst_global = interner.vertices[dst_local as usize];
+        pool.clear();
+        for &dst_local in frontier.iter() {
+            let dst_global = vertices[dst_local as usize];
             pool.extend_from_slice(graph.neighbors(dst_global));
         }
         pool.sort_unstable();
@@ -33,21 +58,27 @@ pub fn sample(
         }
         // budget: same expected size as node-wise at this hop
         let budget = (cfg.fanout * frontier.len()).min(pool.len());
-        let picks = rng.sample_distinct(pool.len(), budget);
-        let chosen: Vec<u32> = picks.into_iter().map(|i| pool[i]).collect();
+        rng.sample_distinct_into(pool.len(), budget, picks);
+        chosen.clear();
+        chosen.extend(picks.iter().map(|&i| pool[i]));
 
-        let mut next_frontier = Vec::new();
-        for &dst_local in &frontier {
-            let dst_global = interner.vertices[dst_local as usize];
+        next_frontier.clear();
+        for &dst_local in frontier.iter() {
+            let dst_global = vertices[dst_local as usize];
             let neigh = graph.neighbors(dst_global);
-            for &src_global in &chosen {
+            for &src_global in chosen.iter() {
                 // membership test via binary search (neighbors sorted)
                 if neigh.binary_search(&src_global).is_ok() {
-                    if let Some(src_local) =
-                        interner.intern(src_global, depth + 1)
-                    {
+                    if let Some(src_local) = intern(
+                        map,
+                        vertices,
+                        depths,
+                        src_global,
+                        depth + 1,
+                        cfg.vmax,
+                    ) {
                         edges.push((dst_local, src_local));
-                        if src_local as usize == interner.vertices.len() - 1
+                        if src_local as usize == vertices.len() - 1
                             && (depth + 1) < cfg.layers as u8
                         {
                             next_frontier.push(src_local);
@@ -57,18 +88,10 @@ pub fn sample(
                 }
             }
         }
-        frontier = next_frontier;
+        std::mem::swap(frontier, next_frontier);
         if frontier.is_empty() {
             break;
         }
-    }
-
-    Micrograph {
-        root,
-        vertices: interner.vertices,
-        depth: interner.depth,
-        edges,
-        layers: cfg.layers,
     }
 }
 

@@ -13,8 +13,9 @@ pub mod nodewise;
 
 use crate::graph::CsrGraph;
 use crate::partition::Partition;
+use crate::util::fxhash::FxHashSet;
 use crate::util::rng::Rng;
-use crate::util::fxhash::FxHashMap;
+use crate::util::stamp::StampedMap;
 
 /// Per-root computation graph from k-hop sampling.
 ///
@@ -88,7 +89,7 @@ impl Micrograph {
 }
 
 /// Sampling algorithm selector (Table 1 compares node-wise vs layer-wise).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SamplerKind {
     NodeWise,
     LayerWise,
@@ -126,6 +127,178 @@ pub fn sample_micrograph(
     }
 }
 
+/// Reusable sampler scratch state: the interner table plus every
+/// working buffer either sampler needs, cleared in O(used) and reused
+/// across all roots, iterations, and epochs.
+///
+/// The interner map is generation-stamped
+/// ([`crate::util::stamp::StampedMap`]), so "clearing" it is a counter
+/// bump and its storage is bounded by the set of vertices ever touched;
+/// the vectors keep their high-water capacity. One `SampleScratch`
+/// driven through [`sample_micrograph_into`] / [`sample_batch_into`]
+/// therefore samples arbitrarily many micrographs with zero
+/// steady-state heap allocation (asserted by `tests/alloc_budget.rs`),
+/// where the legacy [`sample_micrograph`] path allocated a fresh
+/// interner map and four vectors per root. Both paths share one
+/// sampler implementation, so they are draw-for-draw and
+/// vertex-for-vertex identical.
+#[derive(Default)]
+pub struct SampleScratch {
+    /// global vertex id -> local index for the current micrograph
+    pub(crate) map: StampedMap,
+    /// interned global vertex ids (`vertices[0]` is the root)
+    pub(crate) vertices: Vec<u32>,
+    /// discovery hop per interned vertex
+    pub(crate) depth: Vec<u8>,
+    /// `(dst_local, src_local)` sampled edges incl. self-loops
+    pub(crate) edges: Vec<(u32, u32)>,
+    /// current / next BFS frontier (local indices)
+    pub(crate) frontier: Vec<u32>,
+    pub(crate) next_frontier: Vec<u32>,
+    /// layer-wise candidate pool and chosen globals
+    pub(crate) pool: Vec<u32>,
+    pub(crate) chosen: Vec<u32>,
+    /// `sample_distinct_into` output buffer
+    pub(crate) picks: Vec<usize>,
+}
+
+impl SampleScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Prepare for a fresh micrograph rooted at `root`.
+    pub(crate) fn reset(&mut self, root: u32) {
+        self.map.reset();
+        self.vertices.clear();
+        self.depth.clear();
+        self.edges.clear();
+        self.frontier.clear();
+        self.next_frontier.clear();
+        self.map.insert(root, 0);
+        self.vertices.push(root);
+        self.depth.push(0);
+    }
+
+    /// Vertices of the most recently sampled micrograph.
+    pub fn vertices(&self) -> &[u32] {
+        &self.vertices
+    }
+
+    /// Sampled edge count (incl. self-loops) of the most recent
+    /// micrograph.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Move the buffers out as an owned [`Micrograph`] (the legacy
+    /// single-shot path; leaves the scratch empty but warm).
+    fn take_micrograph(&mut self, root: u32, layers: usize) -> Micrograph {
+        Micrograph {
+            root,
+            vertices: std::mem::take(&mut self.vertices),
+            depth: std::mem::take(&mut self.depth),
+            edges: std::mem::take(&mut self.edges),
+            layers,
+        }
+    }
+}
+
+/// Interner step shared by both samplers, operating on split scratch
+/// fields: resolve `v` to its local index, interning it at `depth` if
+/// new, or `None` once the `cap` (vmax) is reached.
+#[inline]
+pub(crate) fn intern(
+    map: &mut StampedMap,
+    vertices: &mut Vec<u32>,
+    depths: &mut Vec<u8>,
+    v: u32,
+    depth: u8,
+    cap: usize,
+) -> Option<u32> {
+    if let Some(i) = map.get(v) {
+        return Some(i);
+    }
+    if vertices.len() >= cap {
+        return None;
+    }
+    let i = vertices.len() as u32;
+    map.insert(v, i);
+    vertices.push(v);
+    depths.push(depth);
+    Some(i)
+}
+
+/// Sample one micrograph into `scratch` (no allocation once the scratch
+/// is warm). The result is readable through the scratch accessors until
+/// the next call.
+pub fn sample_micrograph_into(
+    graph: &CsrGraph,
+    root: u32,
+    cfg: &SampleConfig,
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+) {
+    match cfg.kind {
+        SamplerKind::NodeWise => {
+            nodewise::sample_into(graph, root, cfg, rng, scratch)
+        }
+        SamplerKind::LayerWise => {
+            layerwise::sample_into(graph, root, cfg, rng, scratch)
+        }
+    }
+}
+
+/// Totals for a batch of micrographs sampled through
+/// [`sample_batch_into`] — exactly the quantities the strategy
+/// schedule builders consume (`Op::Sample` / `Op::Compute` operands).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SampleStats {
+    /// Summed vertex count across the batch's micrographs.
+    pub vertices: u64,
+    /// Summed sampled-edge count (incl. self-loops).
+    pub edges: u64,
+    /// Summed count of non-leaf vertices (`depth < layers`).
+    pub nonleaf: u64,
+}
+
+impl SampleStats {
+    pub fn add(&mut self, other: SampleStats) {
+        self.vertices += other.vertices;
+        self.edges += other.edges;
+        self.nonleaf += other.nonleaf;
+    }
+}
+
+/// Sample a batch of roots through one scratch, appending each
+/// micrograph's vertices (in draw order) to `verts` and returning the
+/// batch totals. This is the strategies' hot path: the concatenated
+/// vertex list is byte-identical to flattening the equivalent
+/// `Vec<Micrograph>`, with zero steady-state allocation beyond growth
+/// of the caller's `verts` buffer toward its high-water mark.
+pub fn sample_batch_into(
+    graph: &CsrGraph,
+    roots: &[u32],
+    cfg: &SampleConfig,
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+    verts: &mut Vec<u32>,
+) -> SampleStats {
+    let mut stats = SampleStats::default();
+    for &root in roots {
+        sample_micrograph_into(graph, root, cfg, rng, scratch);
+        verts.extend_from_slice(&scratch.vertices);
+        stats.vertices += scratch.vertices.len() as u64;
+        stats.edges += scratch.edges.len() as u64;
+        stats.nonleaf += scratch
+            .depth
+            .iter()
+            .filter(|&&d| (d as usize) < cfg.layers)
+            .count() as u64;
+    }
+    stats
+}
+
 /// Union of a mini-batch's micrographs: the model-centric (DGL) unit.
 pub struct Subgraph {
     /// Unique global vertex ids across all member micrographs.
@@ -135,13 +308,13 @@ pub struct Subgraph {
 
 impl Subgraph {
     pub fn union_of(micrographs: &[Micrograph]) -> Self {
-        let mut seen: FxHashMap<u32, ()> = FxHashMap::default();
+        let mut seen: FxHashSet<u32> = FxHashSet::default();
         let mut vertices = Vec::new();
         let mut roots = Vec::with_capacity(micrographs.len());
         for mg in micrographs {
             roots.push(mg.root);
             for &v in &mg.vertices {
-                if seen.insert(v, ()).is_none() {
+                if seen.insert(v) {
                     vertices.push(v);
                 }
             }
@@ -166,43 +339,6 @@ impl Subgraph {
             acc += (per_part[home] - 1) as f64 / (self.vertices.len() - 1) as f64;
         }
         acc / self.roots.len() as f64
-    }
-}
-
-/// Helper shared by both samplers: local-index interner with a vmax cap.
-pub(crate) struct Interner {
-    map: FxHashMap<u32, u32>,
-    pub vertices: Vec<u32>,
-    pub depth: Vec<u8>,
-    cap: usize,
-}
-
-impl Interner {
-    pub fn new(root: u32, cap: usize) -> Self {
-        let mut map = FxHashMap::default();
-        map.insert(root, 0);
-        Self {
-            map,
-            vertices: vec![root],
-            depth: vec![0],
-            cap,
-        }
-    }
-
-    /// Intern `v` at `depth`; returns local index, or None if the cap is
-    /// reached and `v` is new.
-    pub fn intern(&mut self, v: u32, depth: u8) -> Option<u32> {
-        if let Some(&i) = self.map.get(&v) {
-            return Some(i);
-        }
-        if self.vertices.len() >= self.cap {
-            return None;
-        }
-        let i = self.vertices.len() as u32;
-        self.map.insert(v, i);
-        self.vertices.push(v);
-        self.depth.push(depth);
-        Some(i)
     }
 }
 
@@ -340,11 +476,84 @@ mod tests {
 
     #[test]
     fn interner_caps() {
-        let mut it = Interner::new(5, 3);
-        assert_eq!(it.intern(5, 0), Some(0));
-        assert_eq!(it.intern(6, 1), Some(1));
-        assert_eq!(it.intern(7, 1), Some(2));
-        assert_eq!(it.intern(8, 1), None); // cap
-        assert_eq!(it.intern(6, 2), Some(1)); // existing still resolves
+        let mut s = SampleScratch::new();
+        s.reset(5);
+        let SampleScratch {
+            map,
+            vertices,
+            depth,
+            ..
+        } = &mut s;
+        assert_eq!(intern(map, vertices, depth, 5, 0, 3), Some(0));
+        assert_eq!(intern(map, vertices, depth, 6, 1, 3), Some(1));
+        assert_eq!(intern(map, vertices, depth, 7, 1, 3), Some(2));
+        assert_eq!(intern(map, vertices, depth, 8, 1, 3), None); // cap
+        // existing still resolves
+        assert_eq!(intern(map, vertices, depth, 6, 2, 3), Some(1));
+    }
+
+    #[test]
+    fn scratch_sampling_matches_legacy_bit_for_bit() {
+        // One warm scratch reused across roots must reproduce the
+        // allocating path exactly: same vertices/depth/edges, same RNG
+        // trajectory.
+        let (g, _) = setup();
+        for kind in [SamplerKind::NodeWise, SamplerKind::LayerWise] {
+            let cfg = SampleConfig {
+                layers: 3,
+                fanout: 6,
+                vmax: 96,
+                kind,
+            };
+            let mut ra = Rng::new(31);
+            let mut rb = Rng::new(31);
+            let mut scratch = SampleScratch::new();
+            for i in 0..32u32 {
+                let root = (i * 61) % 2000;
+                let mg = sample_micrograph(&g, root, &cfg, &mut ra);
+                sample_micrograph_into(&g, root, &cfg, &mut rb, &mut scratch);
+                assert_eq!(mg.vertices, scratch.vertices, "{kind:?} root {root}");
+                assert_eq!(mg.depth, scratch.depth, "{kind:?} root {root}");
+                assert_eq!(mg.edges, scratch.edges, "{kind:?} root {root}");
+            }
+            assert_eq!(ra.next_u64(), rb.next_u64(), "{kind:?} stream diverged");
+        }
+    }
+
+    #[test]
+    fn sample_batch_into_matches_flattened_micrographs() {
+        let (g, _) = setup();
+        let cfg = SampleConfig {
+            layers: 2,
+            fanout: 5,
+            vmax: 64,
+            kind: SamplerKind::NodeWise,
+        };
+        let roots: Vec<u32> = (0..24).map(|i| (i * 83) % 2000).collect();
+        let mut ra = Rng::new(8);
+        let mut rb = Rng::new(8);
+        let mgs: Vec<Micrograph> = roots
+            .iter()
+            .map(|&r| sample_micrograph(&g, r, &cfg, &mut ra))
+            .collect();
+        let mut scratch = SampleScratch::new();
+        let mut verts = vec![999u32; 3]; // stale content is caller-owned
+        verts.clear();
+        let stats =
+            sample_batch_into(&g, &roots, &cfg, &mut rb, &mut scratch, &mut verts);
+        let flat: Vec<u32> =
+            mgs.iter().flat_map(|m| m.vertices.iter().copied()).collect();
+        assert_eq!(verts, flat);
+        assert_eq!(stats.vertices, flat.len() as u64);
+        assert_eq!(
+            stats.edges,
+            mgs.iter().map(|m| m.edges.len() as u64).sum::<u64>()
+        );
+        let nonleaf: u64 = mgs
+            .iter()
+            .flat_map(|m| m.depth.iter())
+            .filter(|&&d| (d as usize) < cfg.layers)
+            .count() as u64;
+        assert_eq!(stats.nonleaf, nonleaf);
     }
 }

@@ -3,7 +3,7 @@
 //! hop. The workhorse sampler for all end-to-end experiments (the paper
 //! uses fanout 10 throughout §7).
 
-use super::{Interner, Micrograph, SampleConfig};
+use super::{intern, Micrograph, SampleConfig, SampleScratch};
 use crate::graph::CsrGraph;
 use crate::util::rng::Rng;
 
@@ -13,30 +13,54 @@ pub fn sample(
     cfg: &SampleConfig,
     rng: &mut Rng,
 ) -> Micrograph {
-    let mut interner = Interner::new(root, cfg.vmax);
-    let mut edges: Vec<(u32, u32)> = Vec::new();
-    let mut frontier: Vec<u32> = vec![0]; // local indices
+    let mut scratch = SampleScratch::new();
+    sample_into(graph, root, cfg, rng, &mut scratch);
+    scratch.take_micrograph(root, cfg.layers)
+}
+
+/// Scratch-based implementation: identical draw order and output to the
+/// historical allocating version (`sample` is now a thin wrapper).
+pub fn sample_into(
+    graph: &CsrGraph,
+    root: u32,
+    cfg: &SampleConfig,
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+) {
+    scratch.reset(root);
+    let SampleScratch {
+        map,
+        vertices,
+        depth: depths,
+        edges,
+        frontier,
+        next_frontier,
+        picks,
+        ..
+    } = scratch;
+    frontier.push(0); // local indices
     edges.push((0, 0)); // root self-loop
 
     for depth in 0..cfg.layers as u8 {
-        let mut next_frontier = Vec::new();
-        for &dst_local in &frontier {
-            let dst_global = interner.vertices[dst_local as usize];
+        next_frontier.clear();
+        for &dst_local in frontier.iter() {
+            let dst_global = vertices[dst_local as usize];
             let neigh = graph.neighbors(dst_global);
             if neigh.is_empty() {
                 continue;
             }
             let k = cfg.fanout.min(neigh.len());
-            let picks = rng.sample_distinct(neigh.len(), k);
-            for pi in picks {
+            rng.sample_distinct_into(neigh.len(), k, picks);
+            for &pi in picks.iter() {
                 let src_global = neigh[pi];
-                if let Some(src_local) = interner.intern(src_global, depth + 1)
+                if let Some(src_local) =
+                    intern(map, vertices, depths, src_global, depth + 1, cfg.vmax)
                 {
                     edges.push((dst_local, src_local));
                     // newly discovered non-leaf vertex joins the next
                     // frontier and gets a self-loop (it participates in
                     // aggregations at shallower layers)
-                    if src_local as usize == interner.vertices.len() - 1
+                    if src_local as usize == vertices.len() - 1
                         && (depth + 1) < cfg.layers as u8
                     {
                         next_frontier.push(src_local);
@@ -45,18 +69,10 @@ pub fn sample(
                 }
             }
         }
-        frontier = next_frontier;
+        std::mem::swap(frontier, next_frontier);
         if frontier.is_empty() {
             break;
         }
-    }
-
-    Micrograph {
-        root,
-        vertices: interner.vertices,
-        depth: interner.depth,
-        edges,
-        layers: cfg.layers,
     }
 }
 

@@ -2,6 +2,7 @@
 //! clap / rand / proptest / criterion — see DESIGN.md "Vendored-crate
 //! constraint").
 
+pub mod alloc;
 pub mod cli;
 pub mod error;
 pub mod fxhash;
@@ -9,5 +10,6 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod stamp;
 pub mod stats;
 pub mod table;

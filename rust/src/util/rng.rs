@@ -126,24 +126,40 @@ impl Rng {
     /// Sample `k` distinct indices from `[0, n)` (Floyd's algorithm when
     /// k << n, full shuffle otherwise). Order is not specified.
     pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(k);
+        self.sample_distinct_into(n, k, &mut out);
+        out
+    }
+
+    /// [`Self::sample_distinct`] into a caller-owned buffer (cleared
+    /// first): the sampler hot loop reuses one buffer across all draws
+    /// so steady-state sampling allocates nothing. Draw-for-draw
+    /// identical to `sample_distinct` — both branches consume the
+    /// generator in the same order as the allocating version always
+    /// has, so replayed experiments stay bit-identical.
+    pub fn sample_distinct_into(
+        &mut self,
+        n: usize,
+        k: usize,
+        out: &mut Vec<usize>,
+    ) {
         assert!(k <= n, "cannot sample {k} from {n}");
+        out.clear();
         if k * 3 > n {
-            let mut all: Vec<usize> = (0..n).collect();
-            self.shuffle(&mut all);
-            all.truncate(k);
-            return all;
+            out.extend(0..n);
+            self.shuffle(out);
+            out.truncate(k);
+            return;
         }
         // Floyd: guarantees distinctness with expected O(k) work.
-        let mut chosen = Vec::with_capacity(k);
         for j in n - k..n {
             let t = self.below(j + 1);
-            if chosen.contains(&t) {
-                chosen.push(j);
+            if out.contains(&t) {
+                out.push(j);
             } else {
-                chosen.push(t);
+                out.push(t);
             }
         }
-        chosen
     }
 
     /// Weighted index draw proportional to `weights` (linear scan; fine for
@@ -243,6 +259,24 @@ mod tests {
             sorted.dedup();
             assert_eq!(sorted.len(), k, "duplicates for n={n} k={k}");
             assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_into_matches_allocating_version() {
+        // Both branches (shuffle and Floyd) must consume the stream
+        // identically — the scratch-based samplers rely on it.
+        for (n, k) in [(10, 10), (100, 3), (50, 25), (1, 1), (64, 0), (30, 11)]
+        {
+            let mut a = Rng::new(99);
+            let mut b = Rng::new(99);
+            let mut buf = vec![777usize; 4]; // stale content must not leak
+            for round in 0..5 {
+                let v = a.sample_distinct(n, k);
+                b.sample_distinct_into(n, k, &mut buf);
+                assert_eq!(v, buf, "n={n} k={k} round={round}");
+            }
+            assert_eq!(a.next_u64(), b.next_u64(), "stream diverged n={n}");
         }
     }
 

@@ -1,0 +1,121 @@
+//! Generation-stamped hash containers for allocation-free hot loops.
+//!
+//! A stamped set/map is cleared by bumping a generation counter instead
+//! of dropping its storage: `reset()` is O(1), membership is "present
+//! *and* stamped with the current generation", and the underlying
+//! `FxHashMap` keeps its capacity across resets. After a warm-up pass
+//! over the touched key range the containers stop allocating entirely,
+//! which is what lets the sampler and gather-planning scratch state
+//! ([`crate::sampler::SampleScratch`],
+//! [`crate::featstore::pregather::PlanScratch`]) run steady-state
+//! iterations with zero heap traffic. Memory is bounded by the set of
+//! keys ever touched (stale entries are overwritten in place on their
+//! next insert, never scanned).
+
+use crate::util::fxhash::FxHashMap;
+
+/// Reusable `u32` set with O(1) clear.
+#[derive(Debug, Default)]
+pub struct StampedSet {
+    gen: u64,
+    slots: FxHashMap<u32, u64>,
+}
+
+impl StampedSet {
+    /// Logically empty the set (O(1): bumps the generation).
+    #[inline]
+    pub fn reset(&mut self) {
+        self.gen += 1;
+    }
+
+    /// Insert `v`; returns `true` if it was not yet present this
+    /// generation (i.e. first occurrence since the last `reset`).
+    #[inline]
+    pub fn insert(&mut self, v: u32) -> bool {
+        let gen = self.gen;
+        match self.slots.insert(v, gen) {
+            Some(prev) => prev != gen,
+            None => true,
+        }
+    }
+
+    /// Membership in the current generation.
+    #[inline]
+    pub fn contains(&self, v: u32) -> bool {
+        self.slots.get(&v) == Some(&self.gen)
+    }
+}
+
+/// Reusable `u32 -> u32` map with O(1) clear (the sampler's local-index
+/// interner table).
+#[derive(Debug, Default)]
+pub struct StampedMap {
+    gen: u64,
+    slots: FxHashMap<u32, (u64, u32)>,
+}
+
+impl StampedMap {
+    /// Logically empty the map (O(1): bumps the generation).
+    #[inline]
+    pub fn reset(&mut self) {
+        self.gen += 1;
+    }
+
+    /// Value for `v` if it was inserted this generation.
+    #[inline]
+    pub fn get(&self, v: u32) -> Option<u32> {
+        match self.slots.get(&v) {
+            Some(&(gen, idx)) if gen == self.gen => Some(idx),
+            _ => None,
+        }
+    }
+
+    /// Insert or overwrite `v -> idx` in the current generation.
+    #[inline]
+    pub fn insert(&mut self, v: u32, idx: u32) {
+        self.slots.insert(v, (self.gen, idx));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_resets_in_o1_and_dedups_per_generation() {
+        let mut s = StampedSet::default();
+        assert!(s.insert(7));
+        assert!(!s.insert(7));
+        assert!(s.contains(7));
+        s.reset();
+        assert!(!s.contains(7), "stale generation must read as absent");
+        assert!(s.insert(7), "first occurrence again after reset");
+        assert!(!s.insert(7));
+    }
+
+    #[test]
+    fn map_generation_semantics() {
+        let mut m = StampedMap::default();
+        assert_eq!(m.get(5), None);
+        m.insert(5, 0);
+        m.insert(9, 1);
+        assert_eq!(m.get(5), Some(0));
+        assert_eq!(m.get(9), Some(1));
+        m.reset();
+        assert_eq!(m.get(5), None);
+        m.insert(5, 3);
+        assert_eq!(m.get(5), Some(3));
+    }
+
+    #[test]
+    fn many_generations_do_not_grow_past_touched_keys() {
+        let mut s = StampedSet::default();
+        for round in 0..100u32 {
+            s.reset();
+            for v in 0..32 {
+                assert!(s.insert(v), "round {round} vertex {v}");
+            }
+        }
+        assert_eq!(s.slots.len(), 32, "storage bounded by touched keys");
+    }
+}

@@ -1,0 +1,142 @@
+//! Allocation-budget lock for the iteration hot path: after a warm-up
+//! pass, steady-state iterations — scratch-based sampling, pooled
+//! program building, buffer-reusing gather planning, and sequential
+//! lane execution — must perform **zero** heap allocations.
+//!
+//! The test installs the counting global allocator
+//! (`util::alloc::CountingAlloc`) and drives the exact per-iteration
+//! shape the strategy schedule builders emit: sample into a pooled
+//! payload buffer, emit `Sample`/`Gather`/`GatherMerged`/`Compute`
+//! ops, `take()` the program, execute it on the shared `EpochDriver`,
+//! and `recycle()` the program back into the builder pools. The RNG is
+//! re-seeded per iteration so every iteration touches the same key
+//! set — exactly the steady state the generation-stamped scratch
+//! containers are warmed for.
+//!
+//! Scope (mirrors the documented zero-alloc envelope): sequential
+//! lanes (`parallel_lanes: false` — thread spawning allocates by
+//! nature), cache off (the LRU's recency list is tree-backed), memo
+//! off (recording copies tapes by design). This file is its own test
+//! binary with a single `#[test]`, so no concurrent test thread can
+//! contribute allocation events to the measured window.
+
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::{EpochDriver, Op, ProgramBuilder, SimEnv};
+use hopgnn::graph::datasets::tiny_test_dataset;
+use hopgnn::sampler::{sample_batch_into, SampleScratch};
+use hopgnn::util::alloc::{allocation_count, CountingAlloc};
+use hopgnn::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_iterations_allocate_nothing() {
+    let d = tiny_test_dataset(77);
+    let cfg = RunConfig {
+        num_servers: 4,
+        layers: 2,
+        fanout: 4,
+        vmax: 32,
+        parallel_lanes: false,
+        ..Default::default()
+    };
+    let n = cfg.num_servers;
+    let env = SimEnv::new(&d, cfg);
+    let scfg = env.cfg.sample_config();
+
+    // fixed per-server root groups (the schedule part of an iteration
+    // is allocated per epoch by the strategies, not per iteration)
+    let groups: Vec<Vec<u32>> = (0..n)
+        .map(|s| {
+            d.train_vertices
+                .iter()
+                .copied()
+                .skip(s * 16)
+                .take(16)
+                .collect()
+        })
+        .collect();
+
+    let mut driver = EpochDriver::new(&env);
+    let mut scratch = SampleScratch::new();
+    let mut b = ProgramBuilder::new(n);
+
+    let mut run_iteration =
+        |b: &mut ProgramBuilder,
+         driver: &mut EpochDriver,
+         scratch: &mut SampleScratch| {
+            // identical draws every iteration: the steady state the
+            // stamped scratch containers warm up to
+            let mut rng = Rng::new(7);
+            for (s, roots) in groups.iter().enumerate() {
+                // plain gather path (FeatureStore::plan_into)
+                let mut verts = b.vbuf();
+                let stats = sample_batch_into(
+                    &d.graph,
+                    roots,
+                    &scfg,
+                    &mut rng,
+                    scratch,
+                    &mut verts,
+                );
+                b.op(s, Op::Sample {
+                    vertices: stats.vertices,
+                });
+                b.op(s, Op::Gather {
+                    vertices: verts,
+                    overlap: true,
+                });
+                // merged pre-gather path (PregatherPlan::build_into)
+                let mut steps = b.sbuf();
+                let mut step = b.vbuf();
+                let pre = sample_batch_into(
+                    &d.graph,
+                    roots,
+                    &scfg,
+                    &mut rng,
+                    scratch,
+                    &mut step,
+                );
+                steps.push(step);
+                b.op(s, Op::GatherMerged {
+                    steps,
+                    overlap: true,
+                });
+                b.op(s, Op::Compute {
+                    v: stats.vertices + pre.vertices,
+                    e: stats.edges + pre.edges,
+                });
+            }
+            b.barrier();
+            b.allreduce();
+            let program = b.take();
+            driver.exec(&program);
+            b.recycle(program);
+        };
+
+    // warm-up: fill the stamped containers, pool buffers, and lane
+    // vectors to their steady-state capacities
+    for _ in 0..3 {
+        run_iteration(&mut b, &mut driver, &mut scratch);
+    }
+
+    let before = allocation_count();
+    for _ in 0..5 {
+        run_iteration(&mut b, &mut driver, &mut scratch);
+    }
+    let after = allocation_count();
+
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state iterations must not allocate \
+         ({} events across 5 iterations)",
+        after - before
+    );
+
+    // the session still closes with coherent accounting
+    let m = driver.finish();
+    assert!(m.epoch_time > 0.0);
+    assert!(m.total_bytes() > 0);
+}

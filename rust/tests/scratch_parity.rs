@@ -1,0 +1,212 @@
+//! Epoch-sample memo parity lock: sampling through the cross-cell tape
+//! memo (`bench::memo`, `RunConfig::memo_samples`) must be bit-identical
+//! to sampling live — in *all three* tape modes.
+//!
+//! The first memoized run **records** each epoch's sampling stream
+//! (live sampling plus a copy into the tape), every later identically-
+//! keyed run **replays** it, and a run with the flag off never touches
+//! the memo. The tape key (`bench::memo::SampleKey`) deliberately
+//! excludes the axes that only price the sampled work — fabric, cache
+//! policy/capacity, overlap, lane parallelism — so sweep cells varying
+//! those axes share one tape. This suite locks every `EpochMetrics`
+//! field across all of it: integers exactly, floats to the bit (the
+//! `tests/spec_parity.rs` idiom).
+//!
+//! The memoized runs take their dataset from `bench::memo::dataset`
+//! (the process-lifetime lease) because the tape key includes the
+//! dataset address — exactly the invariant `bench::memo::run` relies
+//! on.
+
+use hopgnn::bench::memo;
+use hopgnn::cluster::FabricSpec;
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::{SimEnv, StrategySpec};
+use hopgnn::featstore::cache::CachePolicy;
+use hopgnn::metrics::EpochMetrics;
+
+fn base_cfg(seed: u64) -> RunConfig {
+    RunConfig {
+        dataset: "arxiv-s".into(),
+        batch_size: 128,
+        epochs: 3,
+        max_iterations: Some(2),
+        fanout: 5,
+        vmax: RunConfig::full_sim_vmax(3, 5),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Run `spec` for `cfg.epochs` epochs and return the per-epoch metrics.
+fn run_epochs(cfg: &RunConfig, spec: StrategySpec) -> Vec<EpochMetrics> {
+    let d = memo::dataset(&cfg.dataset);
+    let mut cfg = cfg.clone();
+    if let Some(pa) = spec.preferred_partition() {
+        cfg.partition_algo = pa;
+    }
+    let epochs = cfg.epochs;
+    let mut env = SimEnv::new(d, cfg);
+    spec.build().run(&mut env, epochs)
+}
+
+/// Every field of `EpochMetrics`, integers equal and floats equal to
+/// the bit (mirrors `tests/spec_parity.rs::assert_bit_identical`).
+fn assert_bit_identical(a: &EpochMetrics, b: &EpochMetrics, what: &str) {
+    assert_eq!(a.bytes_by_kind, b.bytes_by_kind, "{what}: bytes_by_kind");
+    assert_eq!(a.remote_requests, b.remote_requests, "{what}");
+    assert_eq!(a.remote_vertices, b.remote_vertices, "{what}");
+    assert_eq!(a.local_hits, b.local_hits, "{what}");
+    assert_eq!(a.cache_hits, b.cache_hits, "{what}");
+    assert_eq!(a.cache_misses, b.cache_misses, "{what}");
+    assert_eq!(a.cache_hit_bytes, b.cache_hit_bytes, "{what}");
+    assert_eq!(a.cache_miss_bytes, b.cache_miss_bytes, "{what}");
+    assert_eq!(a.cache_evict_bytes, b.cache_evict_bytes, "{what}");
+    assert_eq!(a.iterations, b.iterations, "{what}");
+    assert_eq!(a.dropped_roots, b.dropped_roots, "{what}");
+    for (x, y, field) in [
+        (a.epoch_time, b.epoch_time, "epoch_time"),
+        (a.time_sample, b.time_sample, "time_sample"),
+        (a.time_gather, b.time_gather, "time_gather"),
+        (a.time_compute, b.time_compute, "time_compute"),
+        (a.time_migrate, b.time_migrate, "time_migrate"),
+        (a.time_sync, b.time_sync, "time_sync"),
+        (
+            a.time_overlap_hidden,
+            b.time_overlap_hidden,
+            "time_overlap_hidden",
+        ),
+        (a.gpu_busy_fraction, b.gpu_busy_fraction, "gpu_busy_fraction"),
+        (
+            a.time_steps_per_iter,
+            b.time_steps_per_iter,
+            "time_steps_per_iter",
+        ),
+    ] {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: {field} diverged ({x} vs {y})"
+        );
+    }
+    assert_eq!(
+        a.per_server_busy.len(),
+        b.per_server_busy.len(),
+        "{what}: per_server_busy length"
+    );
+    for (s, (x, y)) in
+        a.per_server_busy.iter().zip(&b.per_server_busy).enumerate()
+    {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: per_server_busy[{s}] diverged"
+        );
+    }
+}
+
+fn assert_epochs_identical(
+    a: &[EpochMetrics],
+    b: &[EpochMetrics],
+    what: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{what}: epoch count");
+    for (e, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_bit_identical(x, y, &format!("{what} epoch {e}"));
+    }
+}
+
+/// Live / record / replay runs of one spec are indistinguishable.
+#[test]
+fn memoized_sampling_is_bit_identical_per_epoch() {
+    for (spec, name) in [
+        (StrategySpec::dgl(), "dgl"),
+        (StrategySpec::locality_opt(), "lo"),
+        (StrategySpec::hopgnn_mg(), "hopgnn+mg"),
+        (StrategySpec::hopgnn_mg_pg(), "hopgnn+mg+pg"),
+        (StrategySpec::hopgnn(), "hopgnn"),
+    ] {
+        let live = base_cfg(9100);
+        let memoized = RunConfig {
+            memo_samples: true,
+            ..live.clone()
+        };
+        let off = run_epochs(&live, spec);
+        // first memoized run records the tapes...
+        let record = run_epochs(&memoized, spec);
+        // ...the second replays them
+        let replay = run_epochs(&memoized, spec);
+        assert_epochs_identical(&off, &record, &format!("{name} record"));
+        assert_epochs_identical(&off, &replay, &format!("{name} replay"));
+    }
+}
+
+/// The sweep-sharing property: cells that differ only in pricing axes
+/// (overlap, fabric, cache) share one tape, and each replayed cell is
+/// bit-identical to its own live-sampled twin.
+#[test]
+fn pricing_axes_share_one_tape_without_observable_effect() {
+    let spec = StrategySpec::hopgnn();
+    let cells = [
+        base_cfg(9200),
+        RunConfig {
+            overlap: true,
+            ..base_cfg(9200)
+        },
+        RunConfig {
+            fabric: FabricSpec::HeteroMix,
+            ..base_cfg(9200)
+        },
+        RunConfig {
+            cache_policy: CachePolicy::Lru,
+            cache_mb: 16,
+            ..base_cfg(9200)
+        },
+    ];
+    // the first memoized cell records; every later cell with the same
+    // sampling inputs replays its tape (same seed + dataset + sampler
+    // config — only pricing differs)
+    for (i, cell) in cells.iter().enumerate() {
+        let live = run_epochs(cell, spec);
+        let memoized = run_epochs(
+            &RunConfig {
+                memo_samples: true,
+                ..cell.clone()
+            },
+            spec,
+        );
+        assert_epochs_identical(
+            &live,
+            &memoized,
+            &format!("pricing cell {i}"),
+        );
+    }
+}
+
+/// The public entry point (`bench::memo::run`, which the sweep engine
+/// uses per cell) matches the uncached `run_strategy` reporting path.
+#[test]
+fn memo_run_matches_run_strategy() {
+    let cfg = base_cfg(9300);
+    for spec in [
+        StrategySpec::dgl(),
+        StrategySpec::hopgnn(),
+        StrategySpec::locality_opt(),
+    ] {
+        let d = memo::dataset(&cfg.dataset);
+        let uncached =
+            hopgnn::coordinator::run_strategy(d, &cfg, spec);
+        let cached = memo::run(&cfg, spec);
+        // run twice so both the record and the replay path are covered
+        let replayed = memo::run(&cfg, spec);
+        assert_bit_identical(
+            &uncached,
+            &cached,
+            &format!("memo::run record ({})", spec.name()),
+        );
+        assert_bit_identical(
+            &uncached,
+            &replayed,
+            &format!("memo::run replay ({})", spec.name()),
+        );
+    }
+}
