@@ -1,7 +1,8 @@
 //! `cargo bench --bench hotpath` — L3 hot-path micro-benchmarks (the
 //! §Perf targets): sampler, dense-adjacency packing, gather planning,
-//! partitioner, feature synthesis, schedule building, program
-//! execution, and the epoch-sample memo tier. Uses the in-tree harness
+//! the feature-tier walk, partitioner, feature synthesis, schedule
+//! building, program execution, and the epoch-sample memo tier. Uses
+//! the in-tree harness
 //! (median ± MAD) since criterion is not vendored.
 //!
 //! The sampler / planning / schedule benches run on the same reusable
@@ -41,6 +42,7 @@ use hopgnn::coordinator::{
     EpochDriver, Op, ProgramBuilder, SimEnv, StrategySpec,
 };
 use hopgnn::featstore::pregather::{PlanScratch, PregatherPlan};
+use hopgnn::featstore::tier::{build_stacks, TierSpec};
 use hopgnn::featstore::{FeatureStore, GatherPlan};
 use hopgnn::graph::datasets::{load_spec, DatasetSpec};
 use hopgnn::partition::{partition, PartitionAlgo};
@@ -112,6 +114,26 @@ fn run_benches() -> Vec<BenchResult> {
     results.push(bench("featstore.plan(64 micrographs)", 0.5, || {
         store.plan_into(0, flat.iter().copied(), &mut seen, &mut plan);
         std::hint::black_box(plan.remote_count());
+    }));
+
+    // 2b. the tiered walk over the same request stream: probe a warm
+    //     hbm+dram LRU hierarchy row by row, then plan the residual
+    //     remote fetches — the CacheFetch hot path with a stack on
+    let tier_spec = TierSpec::parse("hbm:1m:lru+dram:4m:lru+remote")
+        .expect("bench tier spec parses");
+    let mut stacks =
+        build_stacks(&tier_spec, store.feat_bytes, &p, None, None);
+    let stack = &mut stacks[0];
+    let tier_steps = vec![flat.clone()];
+    let mut tseen = StampedSet::default();
+    let mut tplan = GatherPlan::default();
+    // warm pass: fill the tiers so the bench measures steady-state
+    // hits and promotions, not first-touch admission
+    stack.resolve_into(&store, 0, &tier_steps, &mut tseen, &mut tplan);
+    results.push(bench("featstore.tier_walk(64 micrographs)", 0.5, || {
+        let deltas =
+            stack.resolve_into(&store, 0, &tier_steps, &mut tseen, &mut tplan);
+        std::hint::black_box(deltas.cache_hits());
     }));
 
     // 3. dense adjacency + feature packing (PJRT staging hot path)

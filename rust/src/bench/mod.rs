@@ -15,6 +15,7 @@ pub mod scalebench;
 pub mod sensitivity;
 pub mod sweep;
 pub mod table3;
+pub mod tiersweep;
 
 use crate::util::json::{self, Value};
 use crate::util::table::Table;
@@ -166,7 +167,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig04", "fig05", "fig07", "table1", "fig11", "fig12", "fig13",
     "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
     "fig21", "fig22", "fig23", "table3", "overlap", "cachesweep",
-    "hetero", "scale",
+    "tiersweep", "hetero", "scale",
 ];
 
 /// Fail-fast id resolution for the `bench` CLI: validate *and dedupe*
@@ -226,6 +227,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> Result<Report, String> {
         "table3" => table3::table3_accuracy(scale),
         "overlap" => Ok(overlap::overlap_sweep(scale)),
         "cachesweep" => Ok(cachesweep::cachesweep(scale)),
+        "tiersweep" => Ok(tiersweep::tiersweep(scale)),
         "hetero" => Ok(hetero::hetero(scale)),
         "scale" => Ok(scalebench::scalebench(scale)),
         _ => Err(format!(

@@ -36,6 +36,7 @@ use crate::cluster::FabricSpec;
 use crate::config::RunConfig;
 use crate::coordinator::StrategySpec;
 use crate::featstore::cache::CachePolicy;
+use crate::featstore::tier::TierSpec;
 use crate::graph::datasets;
 use crate::metrics::EpochMetrics;
 use crate::util::pool;
@@ -140,6 +141,21 @@ impl Axis {
                 .map(|&b| AxisValue::Patch {
                     label: if b { "overlap" } else { "serial" }.to_string(),
                     kv: vec![("overlap".to_string(), b.to_string())],
+                })
+                .collect(),
+        )
+    }
+
+    /// Feature tier-stack axis over parsed [`TierSpec`]s (one cell per
+    /// stack, labeled by the canonical spec spelling).
+    pub fn tiers(specs: &[TierSpec]) -> Self {
+        Self::new(
+            "tiers",
+            specs
+                .iter()
+                .map(|t| AxisValue::Patch {
+                    label: t.name(),
+                    kv: vec![("tiers".to_string(), t.name())],
                 })
                 .collect(),
         )
@@ -557,6 +573,26 @@ mod tests {
         assert!(s.contains("straggler:0"), "{s}");
         // no strategy axis: the default strategy column is prepended
         assert!(s.contains("DGL"), "{s}");
+    }
+
+    #[test]
+    fn tiers_axis_patches_the_stack_per_cell() {
+        let spec = SweepSpec::new(tiny_base(), StrategySpec::dgl()).axis(
+            Axis::tiers(&[
+                TierSpec::remote_only(),
+                TierSpec::parse("hbm:1m:lru+dram:4m:lru+remote").unwrap(),
+            ]),
+        );
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].2.tiers, Some(TierSpec::remote_only()));
+        assert_eq!(
+            cells[1].2.tiers,
+            Some(TierSpec::parse("hbm:1m:lru+dram:4m:lru+remote").unwrap())
+        );
+        // labels are the canonical spec spellings
+        assert_eq!(spec.axes[0].label(0), "remote");
+        assert_eq!(spec.axes[0].label(1), "hbm:1m:lru+dram:4m:lru+remote");
     }
 
     #[test]

@@ -35,6 +35,7 @@
 //! `tests/fabric_parity.rs`.
 
 use super::network::NetworkModel;
+use crate::util::specs;
 
 /// Cross-rack links of a `rack:<k>` fabric run at `base bandwidth / 4`
 /// (a classic 4:1 oversubscribed spine).
@@ -67,20 +68,35 @@ pub enum FabricSpec {
 impl FabricSpec {
     /// Parse `uniform`, `rack:<k>`, `hetero-mix`, or `straggler:<s>`.
     pub fn from_str(s: &str) -> Option<Self> {
+        Self::parse(s).ok()
+    }
+
+    /// [`Self::from_str`] with the shared [`specs`] error style, so
+    /// `--fabric` rejections read like `--tiers` and `synth:` ones.
+    pub fn parse(s: &str) -> Result<Self, String> {
         if let Some(k) = s.strip_prefix("rack:") {
-            return k
-                .parse()
-                .ok()
-                .filter(|&racks| racks >= 1)
-                .map(|racks| Self::Rack { racks });
+            let racks =
+                specs::parse_count(&format!("fabric spec '{s}'"), k)?;
+            if racks < 1 {
+                return Err(format!(
+                    "fabric spec '{s}': rack count must be >= 1"
+                ));
+            }
+            return Ok(Self::Rack { racks });
         }
         if let Some(sv) = s.strip_prefix("straggler:") {
-            return sv.parse().ok().map(|server| Self::Straggler { server });
+            let server =
+                specs::parse_count(&format!("fabric spec '{s}'"), sv)?;
+            return Ok(Self::Straggler { server });
         }
         match s {
-            "uniform" => Some(Self::Uniform),
-            "hetero-mix" | "hetero" => Some(Self::HeteroMix),
-            _ => None,
+            "uniform" => Ok(Self::Uniform),
+            "hetero-mix" | "hetero" => Ok(Self::HeteroMix),
+            _ => Err(specs::unknown_spec(
+                "fabric",
+                s,
+                &["uniform", "rack:<k>", "hetero-mix", "straggler:<s>"],
+            )),
         }
     }
 

@@ -95,6 +95,10 @@ pub struct NetStats {
     pub link_bytes: Vec<u64>,
     /// per-link message counts: link[src * n + dst]
     pub link_msgs: Vec<u64>,
+    /// bytes sent per source server (row sums of `link_bytes`).
+    pub sent_bytes: Vec<u64>,
+    /// bytes received per destination server (column sums).
+    pub recv_bytes: Vec<u64>,
 }
 
 impl NetStats {
@@ -105,6 +109,8 @@ impl NetStats {
             msgs_by_kind: [0; NUM_KINDS],
             link_bytes: vec![0; num_servers * num_servers],
             link_msgs: vec![0; num_servers * num_servers],
+            sent_bytes: vec![0; num_servers],
+            recv_bytes: vec![0; num_servers],
         }
     }
 
@@ -126,6 +132,8 @@ impl NetStats {
         self.msgs_by_kind[kind.index()] += 1;
         self.link_bytes[src * self.num_servers + dst] += bytes;
         self.link_msgs[src * self.num_servers + dst] += 1;
+        self.sent_bytes[src] += bytes;
+        self.recv_bytes[dst] += bytes;
         fabric.transfer_time(src, dst, bytes)
     }
 
@@ -138,6 +146,8 @@ impl NetStats {
         self.msgs_by_kind = [0; NUM_KINDS];
         self.link_bytes.fill(0);
         self.link_msgs.fill(0);
+        self.sent_bytes.fill(0);
+        self.recv_bytes.fill(0);
     }
 
     pub fn total_bytes(&self) -> u64 {
@@ -169,11 +179,22 @@ impl NetStats {
         for (dst, src) in self.link_msgs.iter_mut().zip(&other.link_msgs) {
             *dst += src;
         }
+        for (dst, src) in self.sent_bytes.iter_mut().zip(&other.sent_bytes) {
+            *dst += src;
+        }
+        for (dst, src) in self.recv_bytes.iter_mut().zip(&other.recv_bytes) {
+            *dst += src;
+        }
     }
 
     /// Conservation invariant, checked at the end of every
     /// `EpochDriver` session: per-kind byte totals == per-link byte
-    /// totals, and per-kind message counts == per-link message counts.
+    /// totals, per-kind message counts == per-link message counts, and
+    /// per-server byte conservation — each server's sent bytes equal
+    /// its `link_bytes` row sum, its received bytes the column sum, and
+    /// the cluster's total sent equals total received (transfers are
+    /// recorded atomically, so in-flight bytes are structurally zero at
+    /// session close; a nonzero residual means a counter was corrupted).
     pub fn validate(&self) -> Result<(), String> {
         let by_link: u64 = self.link_bytes.iter().sum();
         let by_kind: u64 = self.total_bytes();
@@ -188,6 +209,32 @@ impl NetStats {
             return Err(format!(
                 "message accounting mismatch: links {msgs_link} != kinds \
                  {msgs_kind}"
+            ));
+        }
+        let n = self.num_servers;
+        for s in 0..n {
+            let row: u64 = self.link_bytes[s * n..(s + 1) * n].iter().sum();
+            if row != self.sent_bytes[s] {
+                return Err(format!(
+                    "server {s} sent-byte mismatch: links {row} != sent {}",
+                    self.sent_bytes[s]
+                ));
+            }
+            let col: u64 = (0..n).map(|d| self.link_bytes[d * n + s]).sum();
+            if col != self.recv_bytes[s] {
+                return Err(format!(
+                    "server {s} recv-byte mismatch: links {col} != received \
+                     {}",
+                    self.recv_bytes[s]
+                ));
+            }
+        }
+        let sent: u64 = self.sent_bytes.iter().sum();
+        let recv: u64 = self.recv_bytes.iter().sum();
+        if sent != recv {
+            return Err(format!(
+                "cluster byte conservation: sent {sent} != received {recv} \
+                 (bytes in flight at session close)"
             ));
         }
         Ok(())
@@ -262,6 +309,34 @@ mod tests {
         s.record(&f, 0, 1, 64, TransferKind::Control);
         s.link_msgs[1] += 1; // corrupt the per-link message count
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_enforces_per_server_byte_conservation() {
+        let f = uniform(3);
+        let mut s = NetStats::new(3);
+        s.record(&f, 0, 1, 100, TransferKind::Feature);
+        s.record(&f, 1, 2, 60, TransferKind::Feature);
+        s.record(&f, 2, 0, 15, TransferKind::Gradient);
+        assert_eq!(s.sent_bytes, vec![100, 60, 15]);
+        assert_eq!(s.recv_bytes, vec![15, 100, 60]);
+        s.validate().unwrap();
+        // a lost sent record breaks the per-server row sum...
+        let mut bad = s.clone();
+        bad.sent_bytes[0] -= 1;
+        let e = bad.validate().unwrap_err();
+        assert!(e.contains("sent-byte mismatch"), "{e}");
+        // ...as does a lost receive record on the column sum
+        let mut bad = s.clone();
+        bad.recv_bytes[2] += 1;
+        let e = bad.validate().unwrap_err();
+        assert!(e.contains("recv-byte mismatch"), "{e}");
+        // merge preserves the invariant
+        let mut merged = NetStats::new(3);
+        merged.merge(&s);
+        merged.merge(&s);
+        assert_eq!(merged.sent_bytes, vec![200, 120, 30]);
+        merged.validate().unwrap();
     }
 
     #[test]

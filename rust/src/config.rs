@@ -10,12 +10,13 @@ use crate::cluster::{
 };
 use crate::coordinator::StrategySpec;
 use crate::featstore::cache::CachePolicy;
+use crate::featstore::tier::TierSpec;
 use crate::partition::PartitionAlgo;
 use crate::sampler::{SampleConfig, SamplerKind};
 
 /// Every key [`RunConfig::set`] accepts (primary spellings), listed in
 /// unknown-key errors so a config-file typo names its alternatives.
-pub const VALID_KEYS: [&str; 26] = [
+pub const VALID_KEYS: [&str; 27] = [
     "dataset",
     "model",
     "layers",
@@ -42,6 +43,7 @@ pub const VALID_KEYS: [&str; 26] = [
     "cache",
     "cache_mb",
     "cache_persist",
+    "tiers",
 ];
 
 #[derive(Clone, Debug)]
@@ -96,6 +98,15 @@ pub struct RunConfig {
     /// the next epoch's driver session instead of starting cold. Off =
     /// the per-epoch caches of the cache-subsystem PR, byte-for-byte.
     pub cache_persist: bool,
+    /// Per-server memory tier stack (`--tiers` / `tiers` key), e.g.
+    /// `hbm:2g+dram:16g+remote`. `None` falls back to the legacy
+    /// single-cache knobs: `cache`/`cache_mb` alias
+    /// `dram:<n>m:<policy>+remote` (see [`Self::effective_tiers`]),
+    /// locked bit-identical by `tests/tier_parity.rs`. Note an
+    /// explicit `Some` — even the bare `remote` stack — keeps the
+    /// `CacheFetch` path active, so `--tiers remote` reproduces the
+    /// capacity-0 cache metrics, not the uncached gather path.
+    pub tiers: Option<TierSpec>,
     /// Strategy pinned by the config file (`strategy = hopgnn+fa-pg`,
     /// spec grammar or legacy alias). `None` leaves the choice to the
     /// caller (`sim --strategy` / the harness); an explicit CLI
@@ -137,6 +148,7 @@ impl Default for RunConfig {
             cache_policy: CachePolicy::None,
             cache_mb: 64,
             cache_persist: false,
+            tiers: None,
             strategy: None,
             memo_samples: false,
         }
@@ -170,14 +182,29 @@ impl RunConfig {
         }
     }
 
-    /// Whether gathers should be routed through the feature cache.
+    /// Whether gathers should be routed through the tier stack (the
+    /// `CacheFetch` path). On when a `--tiers` stack is set — even a
+    /// cache-less `remote`-only one — or a legacy cache policy is.
     pub fn cache_enabled(&self) -> bool {
-        self.cache_policy != CachePolicy::None
+        self.tiers.is_some() || self.cache_policy != CachePolicy::None
     }
 
     /// Feature-cache capacity per server, in bytes.
     pub fn cache_bytes(&self) -> u64 {
         (self.cache_mb as u64) << 20
+    }
+
+    /// The tier stack this config resolves gathers through: the
+    /// explicit `tiers` spec, or the legacy `cache`/`cache_mb` knobs
+    /// folded into their tier-grammar alias
+    /// (`--cache lru --cache-mb 64` ≡ `--tiers dram:64m:lru+remote`).
+    pub fn effective_tiers(&self) -> TierSpec {
+        match &self.tiers {
+            Some(spec) => spec.clone(),
+            None => {
+                TierSpec::single_cache(self.cache_policy, self.cache_bytes())
+            }
+        }
     }
 
     pub fn sample_config(&self) -> SampleConfig {
@@ -275,6 +302,7 @@ impl RunConfig {
             }
             "cache_mb" => self.cache_mb = us(val)?,
             "cache_persist" => self.cache_persist = bl(val)?,
+            "tiers" => self.tiers = Some(TierSpec::parse(val)?),
             _ => {
                 return Err(format!(
                     "unknown config key '{key}'; valid keys: {}",
@@ -378,6 +406,32 @@ mod tests {
         assert_eq!(d.fabric, FabricSpec::Uniform, "must default uniform");
         assert!(RunConfig::from_kv("fabric = mesh").is_err());
         assert!(RunConfig::from_kv("fabric = rack:0").is_err());
+    }
+
+    #[test]
+    fn tiers_knob_parses_and_aliases_the_cache_knobs() {
+        let cfg = RunConfig::from_kv("tiers = hbm:2g+dram:16g+remote").unwrap();
+        assert!(cfg.cache_enabled());
+        assert_eq!(
+            cfg.tiers.as_ref().unwrap().name(),
+            "hbm:2g:lru+dram:16g:lru+remote"
+        );
+        // the remote-only stack still routes through CacheFetch
+        let cfg = RunConfig::from_kv("tiers = remote").unwrap();
+        assert!(cfg.cache_enabled());
+        assert_eq!(cfg.effective_tiers(), TierSpec::remote_only());
+        // legacy cache knobs fold into the tier grammar
+        let legacy = RunConfig::from_kv("cache = lru\ncache_mb = 64\n").unwrap();
+        assert_eq!(
+            legacy.effective_tiers(),
+            TierSpec::parse("dram:64m:lru+remote").unwrap()
+        );
+        let d = RunConfig::default();
+        assert_eq!(d.effective_tiers(), TierSpec::remote_only());
+        assert!(!d.cache_enabled(), "tiers must default off (parity)");
+        // tier errors surface the shared spec grammar's messages
+        let e = RunConfig::from_kv("tiers = dram:64m").unwrap_err();
+        assert!(e.contains("remote"), "{e}");
     }
 
     #[test]

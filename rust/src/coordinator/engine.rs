@@ -34,22 +34,26 @@
 //! inline and the driver reproduces the historical eager loops'
 //! accounting exactly.
 //!
-//! ## Feature caching
+//! ## The tiered feature store
 //!
-//! The driver owns one [`FeatureCache`] per server lane (built from
-//! [`crate::config::RunConfig::cache_policy`], or handed in warm via
-//! [`EpochDriver::with_caches`] when
+//! The driver owns one [`TierStack`] per server lane (built from
+//! [`crate::config::RunConfig::tiers`] — or the legacy
+//! `cache_policy`/`cache_mb` two-tier alias — or handed in warm via
+//! [`EpochDriver::with_tiers`] when
 //! [`crate::config::RunConfig::cache_persist`] keeps them alive across
 //! epochs). [`Op::CacheFetch`] ops resolve their request through the
-//! lane's cache before touching the network: hits move zero bytes and
-//! zero transfer seconds — in both serial and overlap modes, so with
-//! overlap on a hit also never enters the async pending stream — while
-//! misses cost exactly what the equivalent `GatherMerged` would and
-//! are admitted per the eviction policy. Caches are lane-private,
-//! keeping parallel lane execution bit-identical to sequential; a
-//! capacity-0 cache reproduces the uncached driver bit-for-bit
-//! (`tests/cache_parity.rs`). [`EpochDriver::finish_session`] returns
-//! the caches so a strategy can carry them into its next epoch.
+//! lane's tier stack before touching the network: each hit is priced
+//! by the tier that holds the row (hbm free, dram staged, ssd staged +
+//! flash read — see [`crate::featstore::tier`]) and moves zero network
+//! bytes — in both serial and overlap modes, so with overlap on a hit
+//! also never enters the async pending stream — while full misses cost
+//! exactly what the equivalent `GatherMerged` would and are admitted
+//! per the stack's placement policies. Stacks are lane-private,
+//! keeping parallel lane execution bit-identical to sequential; the
+//! single-dram stack reproduces the legacy cache bit-for-bit and a
+//! capacity-0 stack the uncached driver (`tests/cache_parity.rs`,
+//! `tests/tier_parity.rs`). [`EpochDriver::finish_session`] returns
+//! the stacks so a strategy can carry them into its next epoch.
 //!
 //! ## The cluster fabric
 //!
@@ -62,8 +66,8 @@
 use super::ops::{Item, Op, Phase, Program};
 use super::SimEnv;
 use crate::cluster::{Clocks, NetStats};
-use crate::featstore::cache::FeatureCache;
 use crate::featstore::pregather::{PlanScratch, PregatherPlan};
+use crate::featstore::tier::{TierKind, TierStack, NUM_TIER_KINDS};
 use crate::featstore::{FeatureStore, GatherPlan};
 use crate::metrics::EpochMetrics;
 use crate::util::stamp::StampedSet;
@@ -86,10 +90,11 @@ pub struct EpochDriver<'e, 'a> {
     m: EpochMetrics,
     /// Per-server asynchronous transfer time not yet hidden or exposed.
     pending: Vec<f64>,
-    /// One feature cache per server lane (all no-op with the cache
-    /// policy off). A cache is only ever touched by its own lane, so
-    /// parallel lane execution stays bit-identical to sequential.
-    caches: Vec<FeatureCache>,
+    /// One feature tier stack per server lane (an empty remote-only
+    /// stack with the tiers off). A stack is only ever touched by its
+    /// own lane, so parallel lane execution stays bit-identical to
+    /// sequential.
+    tiers: Vec<TierStack>,
     /// One reusable execution scratch per server lane (accounting
     /// deltas + gather-planning buffers), reset per lane run instead of
     /// reallocated — the driver-side half of the zero-allocation
@@ -103,29 +108,26 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
         Self::with_parts(env, None, None)
     }
 
-    /// `new` with warm feature caches carried over from a previous
-    /// epoch session (the `--cache-persist` path; see
+    /// `new` with warm feature tier stacks carried over from a
+    /// previous epoch session (the `--cache-persist` path; see
     /// [`Self::finish_session`]).
-    pub fn with_caches(
-        env: &'e SimEnv<'a>,
-        caches: Vec<FeatureCache>,
-    ) -> Self {
-        // hard assert: exec_lanes zips lanes with caches, so a wrong
-        // length would silently drop server lanes in release builds
+    pub fn with_tiers(env: &'e SimEnv<'a>, tiers: Vec<TierStack>) -> Self {
+        // hard assert: exec_lanes zips lanes with tier stacks, so a
+        // wrong length would silently drop server lanes in release
         assert_eq!(
-            caches.len(),
+            tiers.len(),
             env.num_servers(),
-            "persisted caches do not match the env's server count"
+            "persisted tier stacks do not match the env's server count"
         );
-        Self::with_parts(env, Some(caches), None)
+        Self::with_parts(env, Some(tiers), None)
     }
 
-    /// Full constructor: optional warm caches, optional forced
+    /// Full constructor: optional warm tier stacks, optional forced
     /// lane-parallelism decision (tests assert bit-parity between the
     /// two modes through this entry point).
     fn with_parts(
         env: &'e SimEnv<'a>,
-        caches: Option<Vec<FeatureCache>>,
+        tiers: Option<Vec<TierStack>>,
         parallel_override: Option<bool>,
     ) -> Self {
         let n = env.num_servers();
@@ -136,7 +138,7 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
             stats: NetStats::new(n),
             m: EpochMetrics::default(),
             pending: vec![0.0f64; n],
-            caches: caches.unwrap_or_else(|| env.build_caches()),
+            tiers: tiers.unwrap_or_else(|| env.build_tiers()),
             scratch: (0..n).map(|_| LaneScratch::new(n)).collect(),
             parallel_override,
         }
@@ -168,7 +170,7 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
                         &mut self.stats,
                         &mut self.m,
                         &mut self.pending,
-                        &mut self.caches,
+                        &mut self.tiers,
                         &mut self.scratch,
                     );
                 }
@@ -220,11 +222,11 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
         self.finish_session().0
     }
 
-    /// [`Self::finish`] that also hands the per-lane feature caches
+    /// [`Self::finish`] that also hands the per-lane tier stacks
     /// back, so a strategy running with
     /// [`crate::config::RunConfig::cache_persist`] can seed its next
-    /// epoch's session via [`Self::with_caches`].
-    pub fn finish_session(mut self) -> (EpochMetrics, Vec<FeatureCache>) {
+    /// epoch's session via [`Self::with_tiers`].
+    pub fn finish_session(mut self) -> (EpochMetrics, Vec<TierStack>) {
         expose_pending(&mut self.clocks, &mut self.pending);
         self.stats.validate().expect("byte accounting");
         self.m.absorb_net(&self.stats);
@@ -233,7 +235,7 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
         self.m.per_server_busy = (0..self.env.num_servers())
             .map(|s| self.clocks.busy_time(s))
             .collect();
-        (self.m, self.caches)
+        (self.m, self.tiers)
     }
 
     /// One-shot: execute `program` in a fresh session and finish.
@@ -301,20 +303,20 @@ fn exec_lanes(
     stats: &mut NetStats,
     m: &mut EpochMetrics,
     pending: &mut [f64],
-    caches: &mut [FeatureCache],
+    tiers: &mut [TierStack],
     scratches: &mut [LaneScratch],
 ) {
     if parallel {
         let results: Vec<(f64, f64, f64)> = std::thread::scope(|scope| {
             let handles: Vec<_> = lanes
                 .iter()
-                .zip(caches.iter_mut().zip(scratches.iter_mut()))
+                .zip(tiers.iter_mut().zip(scratches.iter_mut()))
                 .enumerate()
-                .map(|(s, (ops, (cache, scratch)))| {
+                .map(|(s, (ops, (stack, scratch)))| {
                     let t0 = clocks.now(s);
                     let p0 = pending[s];
                     scope.spawn(move || {
-                        run_lane(env, store, s, ops, t0, p0, cache, scratch)
+                        run_lane(env, store, s, ops, t0, p0, stack, scratch)
                     })
                 })
                 .collect();
@@ -339,9 +341,9 @@ fn exec_lanes(
         // bit-identical to the collect-then-reduce parallel path — and
         // allocation-free, which the parallel path (thread state, the
         // results Vec) inherently is not.
-        for (s, (ops, (cache, scratch))) in lanes
+        for (s, (ops, (stack, scratch))) in lanes
             .iter()
-            .zip(caches.iter_mut().zip(scratches.iter_mut()))
+            .zip(tiers.iter_mut().zip(scratches.iter_mut()))
             .enumerate()
         {
             let (t, busy_dt, pend) = run_lane(
@@ -351,7 +353,7 @@ fn exec_lanes(
                 ops,
                 clocks.now(s),
                 pending[s],
-                cache,
+                stack,
                 scratch,
             );
             clocks.set(s, t);
@@ -366,7 +368,7 @@ fn exec_lanes(
 /// Execute one server's ops starting from clock `t0` and async-pending
 /// `pending0`. Pure with respect to shared state: reads only shared
 /// immutable state, writes only lane-local accumulators (the feature
-/// `cache` and the `scratch` belong to this lane alone). Returns
+/// tier `stack` and the `scratch` belong to this lane alone). Returns
 /// `(t, busy_dt, pending)`; the accounting deltas are left in the
 /// scratch for the caller to reduce.
 #[allow(clippy::too_many_arguments)]
@@ -377,7 +379,7 @@ fn run_lane(
     ops: &[Op],
     t0: f64,
     pending0: f64,
-    cache: &mut FeatureCache,
+    stack: &mut TierStack,
     scratch: &mut LaneScratch,
 ) -> (f64, f64, f64) {
     let cfg = &env.cfg;
@@ -477,24 +479,48 @@ fn run_lane(
                 );
             }
             Op::CacheFetch { steps, overlap } => {
-                // resolve through this lane's cache: hits skip the
+                // walk this lane's tier stack: hits are served (and
+                // priced) by the tier that holds the row — hbm free,
+                // dram staged, ssd staged + flash — skipping the
                 // transfer (and, in overlap mode, the pending stream);
-                // misses fetch exactly like a merged gather and are
-                // admitted for the next iteration
-                let deltas = cache.resolve_into(store, server, steps, seen, plan);
-                let dt = store.sim_cost_cached(
+                // the residual plan fetches exactly like a merged
+                // gather and is admitted per the placement policies
+                let deltas =
+                    stack.resolve_into(store, server, steps, seen, plan);
+                let fb = store.feat_bytes;
+                let hits = deltas.cache_hits();
+                let remote = plan.remote_count();
+                let mut dt = store.sim_cost_cached(
                     plan,
-                    deltas.hits,
+                    deltas.staged_hit_rows,
                     &env.fabric,
                     &cfg.cost,
                     stats,
                     m,
                 );
-                m.cache_hits += deltas.hits;
-                m.cache_misses += plan.remote_count();
-                m.cache_hit_bytes += deltas.hit_bytes;
-                m.cache_miss_bytes += plan.remote_count() * store.feat_bytes;
+                // gated so stacks without flash add no float ops to
+                // the legacy cost path (x + 0.0 is not bitwise id)
+                let ssd = deltas.ssd_seconds(fb);
+                if ssd > 0.0 {
+                    dt += ssd;
+                }
+                m.cache_hits += hits;
+                m.cache_misses += remote;
+                m.cache_hit_bytes += hits * fb;
+                m.cache_miss_bytes += remote * fb;
                 m.cache_evict_bytes += deltas.evicted_bytes;
+                for k in 0..NUM_TIER_KINDS {
+                    m.tier_hits[k] += deltas.hits_at[k];
+                    m.tier_hit_bytes[k] += deltas.hits_at[k] * fb;
+                    m.tier_miss_bytes[k] += deltas.misses_at[k] * fb;
+                    m.tier_promote_bytes[k] += deltas.promote_bytes_at[k];
+                    m.tier_demote_bytes[k] += deltas.demote_bytes_at[k];
+                }
+                // the backstop never misses: residual fetches are
+                // remote-tier hits in the per-tier view
+                let ri = TierKind::Remote.index();
+                m.tier_hits[ri] += remote;
+                m.tier_hit_bytes[ri] += remote * fb;
                 charge_transfer(
                     dt,
                     Phase::Gather,
@@ -907,18 +933,18 @@ mod tests {
     }
 
     #[test]
-    fn warm_caches_carry_across_driver_sessions() {
+    fn warm_tiers_carry_across_driver_sessions() {
         let d = tiny_test_dataset(209);
         let env = SimEnv::new(&d, cache_cfg(CachePolicy::Lru, 64, false));
         let prog = cache_program(false);
         // session 1 starts cold: first fetch misses, re-fetch hits
         let mut s1 = EpochDriver::new(&env);
         s1.exec(&prog);
-        let (m1, caches) = s1.finish_session();
+        let (m1, tiers) = s1.finish_session();
         assert!(m1.cache_hits > 0);
         assert!(m1.cache_misses > 0);
-        // session 2 seeded with session 1's caches: every fetch hits
-        let mut s2 = EpochDriver::with_caches(&env, caches);
+        // session 2 seeded with session 1's stacks: every fetch hits
+        let mut s2 = EpochDriver::with_tiers(&env, tiers);
         s2.exec(&prog);
         let (m2, _) = s2.finish_session();
         assert_eq!(m2.cache_misses, 0, "warm session must not re-fetch");
@@ -927,6 +953,50 @@ mod tests {
         // a fresh session still starts cold (persistence is opt-in)
         let m3 = EpochDriver::run(&env, &prog);
         assert_eq!(m3.cache_hits, m1.cache_hits);
+    }
+
+    #[test]
+    fn tier_kind_prices_the_hit_hbm_free_ssd_flash() {
+        use crate::featstore::tier::TierSpec;
+        let d = tiny_test_dataset(210);
+        let cfg = |tiers: &str| RunConfig {
+            tiers: Some(TierSpec::parse(tiers).unwrap()),
+            ..cache_cfg(CachePolicy::None, 0, false)
+        };
+        let prog = cache_program(false);
+        let run = |spec| EpochDriver::run(&SimEnv::new(&d, cfg(spec)), &prog);
+        let hbm = run("hbm:64m:lru+remote");
+        let dram = run("dram:64m:lru+remote");
+        let ssd = run("ssd:64m:lru+remote");
+        // same residency trajectory, different per-hit price
+        assert!(hbm.cache_hits > 0);
+        assert_eq!(hbm.cache_hits, dram.cache_hits);
+        assert_eq!(dram.cache_hits, ssd.cache_hits);
+        assert!(
+            hbm.epoch_time < dram.epoch_time,
+            "hbm hits skip staging: {} !< {}",
+            hbm.epoch_time,
+            dram.epoch_time
+        );
+        assert!(
+            dram.epoch_time < ssd.epoch_time,
+            "ssd hits pay the flash read: {} !< {}",
+            dram.epoch_time,
+            ssd.epoch_time
+        );
+        // per-tier accounting lands in the right slots
+        assert_eq!(hbm.tier_hits[TierKind::Hbm.index()], hbm.cache_hits);
+        assert_eq!(dram.tier_hits[TierKind::Dram.index()], dram.cache_hits);
+        assert_eq!(ssd.tier_hits[TierKind::Ssd.index()], ssd.cache_hits);
+        assert_eq!(
+            dram.tier_hits[TierKind::Remote.index()],
+            dram.cache_misses
+        );
+        // bytes conserved across the tier view too
+        assert_eq!(
+            dram.tier_hit_bytes.iter().sum::<u64>(),
+            dram.cache_hit_bytes + dram.cache_miss_bytes
+        );
     }
 
     #[test]

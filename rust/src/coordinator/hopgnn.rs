@@ -33,7 +33,7 @@ use super::merge::{MergeController, Selection};
 use super::ops::{Op, Phase, ProgramBuilder};
 use super::{sample_group, EpochDriver, SampleTape, SimEnv, Strategy};
 use crate::cluster::TransferKind;
-use crate::featstore::cache::FeatureCache;
+use crate::featstore::tier::TierStack;
 use crate::metrics::EpochMetrics;
 use crate::sampler::SampleScratch;
 
@@ -42,10 +42,10 @@ pub struct HopGnn {
     pub merging: bool,
     pub selection: Selection,
     controller: Option<MergeController>,
-    /// Warm feature caches carried across epochs when
+    /// Warm feature tier stacks carried across epochs when
     /// `RunConfig::cache_persist` is set (otherwise every epoch's
-    /// driver session builds its own cold caches).
-    caches: Option<Vec<FeatureCache>>,
+    /// driver session builds its own cold stacks).
+    tiers: Option<Vec<TierStack>>,
     epoch_idx: u64,
     /// Reusable sampler scratch: one interner + buffer set for every
     /// root of every iteration of every epoch.
@@ -106,7 +106,7 @@ impl HopGnn {
             merging,
             selection,
             controller: None,
-            caches: None,
+            tiers: None,
             epoch_idx: 0,
             scratch: SampleScratch::new(),
             builder: None,
@@ -180,8 +180,8 @@ impl Strategy for HopGnn {
         // observed lane busy time by this measures each server's
         // effective slowdown for the fabric-aware controller
         let mut ideal_secs = vec![0.0f64; n];
-        let mut driver = match self.caches.take() {
-            Some(c) => EpochDriver::with_caches(env, c),
+        let mut driver = match self.tiers.take() {
+            Some(t) => EpochDriver::with_tiers(env, t),
             None => EpochDriver::new(env),
         };
 
@@ -339,9 +339,9 @@ impl Strategy for HopGnn {
 
         tape.finish();
         self.builder = Some(b);
-        let (mut m, caches) = driver.finish_session();
+        let (mut m, tiers) = driver.finish_session();
         if env.cfg.cache_persist {
-            self.caches = Some(caches);
+            self.tiers = Some(tiers);
         }
         m.iterations = iterations.len() as u64;
         m.time_steps_per_iter = t_steps as f64;

@@ -11,13 +11,14 @@
 use super::ops::{Op, Phase, ProgramBuilder};
 use super::{EpochDriver, SimEnv, Strategy};
 use crate::cluster::TransferKind;
-use crate::featstore::cache::FeatureCache;
+use crate::featstore::tier::TierStack;
 use crate::metrics::EpochMetrics;
 use crate::sampler::{sample_batch_into, SampleScratch};
 
 pub struct LocalityOpt {
-    /// Warm feature caches held across epochs under `--cache-persist`.
-    caches: Option<Vec<FeatureCache>>,
+    /// Warm feature tier stacks held across epochs under
+    /// `--cache-persist`.
+    tiers: Option<Vec<TierStack>>,
     epoch_idx: u64,
     /// Reusable sampler scratch (zero steady-state allocation).
     scratch: SampleScratch,
@@ -33,7 +34,7 @@ pub struct LocalityOpt {
 impl LocalityOpt {
     pub fn new() -> Self {
         Self {
-            caches: None,
+            tiers: None,
             epoch_idx: 0,
             scratch: SampleScratch::new(),
             builder: None,
@@ -61,8 +62,8 @@ impl Strategy for LocalityOpt {
         self.epoch_idx += 1;
 
         let iterations = env.epoch_iterations();
-        let mut driver = match self.caches.take() {
-            Some(c) => EpochDriver::with_caches(env, c),
+        let mut driver = match self.tiers.take() {
+            Some(t) => EpochDriver::with_tiers(env, t),
             None => EpochDriver::new(env),
         };
         let mut b = match self.builder.take() {
@@ -134,9 +135,9 @@ impl Strategy for LocalityOpt {
         }
 
         self.builder = Some(b);
-        let (mut m, caches) = driver.finish_session();
+        let (mut m, tiers) = driver.finish_session();
         if env.cfg.cache_persist {
-            self.caches = Some(caches);
+            self.tiers = Some(tiers);
         }
         m.iterations = iterations.len() as u64;
         m.time_steps_per_iter = 1.0;

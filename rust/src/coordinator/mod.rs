@@ -12,9 +12,10 @@
 //! per-server lanes on worker threads (bit-identical to sequential
 //! execution), models gather/compute overlap when
 //! [`crate::config::RunConfig::overlap`] is on, and owns one
-//! [`crate::featstore::cache::FeatureCache`] per lane so cache-routed
-//! gathers ([`ops::Op::CacheFetch`]) can skip transfers for hot remote
-//! rows when [`crate::config::RunConfig::cache_policy`] is set.
+//! [`crate::featstore::tier::TierStack`] per lane so cache-routed
+//! gathers ([`ops::Op::CacheFetch`]) can serve hot remote rows from
+//! the configured memory tiers ([`crate::config::RunConfig::tiers`],
+//! or the legacy `cache_policy`/`cache_mb` two-tier alias).
 //!
 //! ## Strategy specs: the ablation space as a product of axes
 //!
@@ -81,7 +82,8 @@ pub use spec::{
 use crate::bench::memo::{self, EpochTape, SampleGroup, SampleKey, TapeEntry};
 use crate::cluster::{Clocks, Fabric, ModelShape, NetStats, TransferKind};
 use crate::config::RunConfig;
-use crate::featstore::cache::{self, CachePolicy, FeatureCache};
+use crate::featstore::cache::{self, CachePolicy};
+use crate::featstore::tier::{self, TierStack};
 use crate::featstore::FeatureStore;
 use crate::graph::datasets::Dataset;
 use crate::metrics::EpochMetrics;
@@ -109,10 +111,13 @@ pub struct SimEnv<'a> {
     /// remainders) — strategies report this in
     /// [`EpochMetrics::dropped_roots`] instead of silently losing it.
     pub dropped_roots: u64,
-    /// Global vertex ranking backing the static cache policies, built
-    /// once per env (the ranking depends only on config + dataset, so
-    /// every epoch's caches pin identical sets). Empty for `None`/LRU.
-    cache_rank: OnceLock<Vec<u32>>,
+    /// Global vertex rankings backing the static tier policies, built
+    /// once per env (each ranking depends only on config + dataset, so
+    /// every epoch's tier stacks pin identical sets). A multi-tier
+    /// spec can mix policies, so both rankings are cached separately
+    /// and computed only if some tier actually uses them.
+    degree_rank: OnceLock<Vec<u32>>,
+    profile_rank: OnceLock<Vec<u32>>,
 }
 
 impl<'a> SimEnv<'a> {
@@ -146,7 +151,8 @@ impl<'a> SimEnv<'a> {
             feat_bytes: (feat_dim * 4) as u64,
             rng,
             dropped_roots: 0,
-            cache_rank: OnceLock::new(),
+            degree_rank: OnceLock::new(),
+            profile_rank: OnceLock::new(),
         }
     }
 
@@ -162,33 +168,36 @@ impl<'a> SimEnv<'a> {
         )
     }
 
-    /// Build one feature cache per server lane for an epoch session
-    /// (caches are per-epoch state owned by the `EpochDriver`; the
-    /// static pin rankings are computed once per env and shared).
-    pub fn build_caches(&self) -> Vec<FeatureCache> {
-        let rank = match self.cfg.cache_policy {
-            CachePolicy::Degree | CachePolicy::Precomputed => {
-                Some(self.cache_rank().as_slice())
-            }
-            _ => None,
-        };
-        cache::build_caches(
-            self.cfg.cache_policy,
-            self.cfg.cache_bytes(),
+    /// Build one feature tier stack per server lane for an epoch
+    /// session (stacks are per-epoch state owned by the `EpochDriver`;
+    /// the static pin rankings are computed once per env and shared).
+    /// The spec comes from [`RunConfig::effective_tiers`], so `--tiers`
+    /// and the legacy `--cache`/`--cache-mb` aliases take one path.
+    pub fn build_tiers(&self) -> Vec<TierStack> {
+        let spec = self.cfg.effective_tiers();
+        let degree = spec
+            .uses_policy(CachePolicy::Degree)
+            .then(|| self.degree_rank().as_slice());
+        let profile = spec
+            .uses_policy(CachePolicy::Precomputed)
+            .then(|| self.profile_rank().as_slice());
+        tier::build_stacks(
+            &spec,
             self.feat_bytes,
-            rank,
             &self.partition,
+            degree,
+            profile,
         )
     }
 
-    fn cache_rank(&self) -> &Vec<u32> {
-        self.cache_rank.get_or_init(|| match self.cfg.cache_policy {
-            CachePolicy::Degree => cache::rank_by_degree(&self.dataset.graph),
-            CachePolicy::Precomputed => cache::rank_by_profile(
-                &self.sampler_profile(),
-                &self.dataset.graph,
-            ),
-            _ => Vec::new(),
+    fn degree_rank(&self) -> &Vec<u32> {
+        self.degree_rank
+            .get_or_init(|| cache::rank_by_degree(&self.dataset.graph))
+    }
+
+    fn profile_rank(&self) -> &Vec<u32> {
+        self.profile_rank.get_or_init(|| {
+            cache::rank_by_profile(&self.sampler_profile(), &self.dataset.graph)
         })
     }
 

@@ -51,14 +51,16 @@ pub enum Op {
     /// Iteration-level merged gather (§5.2 pre-gathering): one
     /// deduplicated fetch for all `steps` of the iteration.
     GatherMerged { steps: Vec<Vec<u32>>, overlap: bool },
-    /// Cache-mediated gather: the dedup union of `steps` is resolved
-    /// through this lane's [`crate::featstore::cache::FeatureCache`] —
-    /// hits skip the transfer entirely (in overlap mode they also never
-    /// enter the async pending stream), misses are fetched like a
-    /// `GatherMerged` and admitted. With a capacity-0 cache this is
-    /// bit-identical to `Gather`/`GatherMerged` (`tests/cache_parity`).
-    /// Emitted by the strategy builders in place of the plain gathers
-    /// when [`crate::config::RunConfig::cache_enabled`] holds.
+    /// Tier-mediated gather: the dedup union of `steps` is resolved
+    /// through this lane's [`crate::featstore::tier::TierStack`] — a
+    /// hit is priced by the tier that holds the row and skips the
+    /// transfer entirely (in overlap mode it also never enters the
+    /// async pending stream), full misses are fetched like a
+    /// `GatherMerged` and admitted per the placement policies. With a
+    /// capacity-0 stack this is bit-identical to
+    /// `Gather`/`GatherMerged` (`tests/cache_parity`). Emitted by the
+    /// strategy builders in place of the plain gathers when
+    /// [`crate::config::RunConfig::cache_enabled`] holds.
     CacheFetch { steps: Vec<Vec<u32>>, overlap: bool },
     /// GNN training compute over `v` vertices / `e` edges (busy time,
     /// cost-model derived).

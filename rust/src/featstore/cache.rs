@@ -162,6 +162,115 @@ impl FeatureCache {
         self.used
     }
 
+    /// Capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    /// Can this cache ever hold a row? A capacity below one feature row
+    /// admits nothing, so lookups on it are pointless — the tier walk
+    /// skips such levels entirely, which is what makes a capacity-0
+    /// level bit-identical to the level not existing at all.
+    pub fn can_serve(&self) -> bool {
+        self.feat_bytes > 0 && self.feat_bytes <= self.capacity
+    }
+
+    /// Is `v` in the static policies' admissible set?
+    pub fn is_pinned(&self, v: u32) -> bool {
+        self.pinned.contains(&v)
+    }
+
+    /// Look up `v` without admitting it: on an LRU hit the row is
+    /// touched to most-recently-used, on a static hit nothing mutates.
+    pub fn probe(&mut self, v: u32) -> bool {
+        match self.policy {
+            CachePolicy::None => false,
+            CachePolicy::Lru => {
+                if self.recency.contains_key(&v) {
+                    self.touch(v);
+                    true
+                } else {
+                    false
+                }
+            }
+            CachePolicy::Degree | CachePolicy::Precomputed => {
+                self.resident.contains(&v)
+            }
+        }
+    }
+
+    /// Admit `v` per the policy (the miss half of an access). Returns
+    /// the bytes displaced and the displaced vertex, if any — with
+    /// fixed-size rows at most one row is ever evicted per admission.
+    /// LRU admits unconditionally (capacity permitting); the static
+    /// policies fill only their pinned set and never evict.
+    pub fn admit(&mut self, v: u32) -> (u64, Option<u32>) {
+        match self.policy {
+            CachePolicy::None => (0, None),
+            CachePolicy::Lru => {
+                let mut evicted_bytes = 0u64;
+                let mut victim = None;
+                if self.can_serve() {
+                    while self.used + self.feat_bytes > self.capacity {
+                        match self.evict_one() {
+                            Some(w) => {
+                                evicted_bytes += self.feat_bytes;
+                                victim = Some(w);
+                            }
+                            None => break,
+                        }
+                    }
+                    debug_assert!(
+                        evicted_bytes <= self.feat_bytes,
+                        "fixed-size rows evict at most one row per admit"
+                    );
+                    self.used += self.feat_bytes;
+                    self.touch(v);
+                }
+                (evicted_bytes, victim)
+            }
+            CachePolicy::Degree | CachePolicy::Precomputed => {
+                // fill-on-miss: a pinned vertex becomes resident the
+                // first time it is fetched; unpinned vertices bypass
+                if self.pinned.contains(&v) && !self.resident.contains(&v) {
+                    self.resident.insert(v);
+                    self.used += self.feat_bytes;
+                }
+                (0, None)
+            }
+        }
+    }
+
+    /// Drop `v`'s row (the promotion half of a tier move). Static
+    /// policies keep `v` in their pinned set, so it may refill on a
+    /// later demotion or miss.
+    pub fn remove(&mut self, v: u32) -> bool {
+        match self.policy {
+            CachePolicy::None => false,
+            CachePolicy::Lru => {
+                if let Some(tick) = self.recency.remove(&v) {
+                    self.order.remove(&tick);
+                    self.used -= self.feat_bytes;
+                    true
+                } else {
+                    false
+                }
+            }
+            CachePolicy::Degree | CachePolicy::Precomputed => {
+                if self.resident.remove(&v) {
+                    self.used -= self.feat_bytes;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
     /// Resolve a (possibly multi-step) fetch: deduplicate the request
     /// in first-seen order — exactly like [`FeatureStore::plan`] — and
     /// split the remote vertices into cache hits and a miss-only
@@ -221,56 +330,18 @@ impl FeatureCache {
         deltas
     }
 
-    /// Look up one remote vertex and admit it on a miss.
+    /// Look up one remote vertex and admit it on a miss — a single-tier
+    /// access is exactly a [`Self::probe`] followed by [`Self::admit`],
+    /// which is what locks the two-tier special case of the tier walk
+    /// ([`super::tier::TierStack`]) bit-identical to this path.
     fn access(&mut self, v: u32) -> Access {
-        match self.policy {
-            CachePolicy::None => Access {
-                hit: false,
-                evicted_bytes: 0,
-            },
-            CachePolicy::Lru => self.access_lru(v),
-            CachePolicy::Degree | CachePolicy::Precomputed => {
-                if self.resident.contains(&v) {
-                    Access {
-                        hit: true,
-                        evicted_bytes: 0,
-                    }
-                } else {
-                    // fill-on-miss: a pinned vertex becomes resident the
-                    // first time it is fetched; unpinned vertices bypass
-                    if self.pinned.contains(&v) {
-                        self.resident.insert(v);
-                        self.used += self.feat_bytes;
-                    }
-                    Access {
-                        hit: false,
-                        evicted_bytes: 0,
-                    }
-                }
-            }
-        }
-    }
-
-    fn access_lru(&mut self, v: u32) -> Access {
-        if self.recency.contains_key(&v) {
-            self.touch(v);
+        if self.probe(v) {
             return Access {
                 hit: true,
                 evicted_bytes: 0,
             };
         }
-        let mut evicted_bytes = 0u64;
-        if self.feat_bytes > 0 && self.feat_bytes <= self.capacity {
-            while self.used + self.feat_bytes > self.capacity {
-                let freed = self.evict_one();
-                if freed == 0 {
-                    break;
-                }
-                evicted_bytes += freed;
-            }
-            self.used += self.feat_bytes;
-            self.touch(v);
-        }
+        let (evicted_bytes, _victim) = self.admit(v);
         Access {
             hit: false,
             evicted_bytes,
@@ -286,16 +357,13 @@ impl FeatureCache {
         self.order.insert(self.tick, v);
     }
 
-    /// Evict the least-recently-used row; returns the bytes freed.
-    fn evict_one(&mut self) -> u64 {
-        let victim = match self.order.iter().next() {
-            Some((&tick, &v)) => (tick, v),
-            None => return 0,
-        };
-        self.order.remove(&victim.0);
-        self.recency.remove(&victim.1);
+    /// Evict the least-recently-used row; returns the victim vertex.
+    fn evict_one(&mut self) -> Option<u32> {
+        let (&tick, &v) = self.order.iter().next()?;
+        self.order.remove(&tick);
+        self.recency.remove(&v);
         self.used -= self.feat_bytes;
-        self.feat_bytes
+        Some(v)
     }
 }
 
@@ -362,18 +430,37 @@ fn pin_top(
     capacity_bytes: u64,
     feat_bytes: u64,
 ) -> FxHashSet<u32> {
+    pin_top_offset(rank, partition, server, capacity_bytes, feat_bytes, 0)
+}
+
+/// [`pin_top`] starting `skip_entries` qualifying vertices down the
+/// ranking — how a multi-tier stack gives each static tier its own
+/// disjoint slice of the ranking (the fastest tier takes the top).
+pub fn pin_top_offset(
+    rank: &[u32],
+    partition: &Partition,
+    server: usize,
+    capacity_bytes: u64,
+    feat_bytes: u64,
+    skip_entries: usize,
+) -> FxHashSet<u32> {
     let entries = if feat_bytes == 0 {
         0
     } else {
         (capacity_bytes / feat_bytes) as usize
     };
+    let mut skipped = 0usize;
     let mut pinned = FxHashSet::default();
     for &v in rank {
         if pinned.len() >= entries {
             break;
         }
         if partition.home(v) as usize != server {
-            pinned.insert(v);
+            if skipped < skip_entries {
+                skipped += 1;
+            } else {
+                pinned.insert(v);
+            }
         }
     }
     pinned

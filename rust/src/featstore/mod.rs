@@ -1,26 +1,37 @@
-//! Distributed feature store.
+//! Distributed multi-tier feature store.
 //!
 //! Each server owns the feature shard of its partition (the paper
 //! implements this as a Golang cache fronted by gRPC; here the shard map
 //! is the `Partition` and transfers run through the cluster's network
 //! accounting). The store answers one question for the strategies: *for
-//! this set of vertices needed on server `s`, what is served locally and
-//! what must move, from whom?* — plus two tiers that shrink the remote
-//! side of the answer:
+//! this set of vertices needed on server `s`, what is served locally,
+//! what is served from which memory tier, and what must move, from
+//! whom?* Three layers shrink the remote side of the answer:
 //!
 //! * the pre-gathering planner (§5.2, [`pregather`]) deduplicates an
 //!   entire iteration's remote fetches into one batched transfer per
 //!   source server — *intra*-iteration redundancy;
-//! * the per-server feature cache ([`cache`]) keeps hot remote rows
-//!   resident *across* iterations, behind pluggable eviction policies
-//!   (LRU, degree-weighted static, RapidGNN-style precomputed
-//!   schedule). Cache hits skip the network transfer entirely; see
-//!   [`cache`] for the policy semantics and
-//!   [`crate::coordinator::ops::Op::CacheFetch`] for how the epoch
-//!   driver executes cache-mediated gathers.
+//! * the per-server **tier stack** ([`tier`]) places hot remote rows
+//!   across an HBM / DRAM / SSD hierarchy over the mandatory `remote`
+//!   backstop, Quiver-style: each tier has a capacity and its own
+//!   placement policy (LRU promotion/demotion or static degree/
+//!   schedule pinning), each hit is priced by where the row lives
+//!   (device-free, host staging, flash read, fabric link), and the
+//!   `--tiers` spec grammar drives the whole stack;
+//! * the single-tier [`cache`] is the building block the stack
+//!   composes — one [`cache::FeatureCache`] per tier — and the legacy
+//!   `--cache`/`--cache-mb` surface is the two-tier
+//!   `dram:<n>m:<policy>+remote` special case, locked bit-identical by
+//!   `tests/tier_parity.rs`.
+//!
+//! Tier walks happen inside
+//! [`crate::coordinator::ops::Op::CacheFetch`] on the epoch driver's
+//! per-lane hot path (serial and overlap), reusing the lane's scratch
+//! buffers so steady-state iterations stay allocation-free.
 
 pub mod cache;
 pub mod pregather;
+pub mod tier;
 
 use crate::cluster::{Clocks, CostModel, Fabric, NetStats, TransferKind};
 use crate::graph::datasets::Dataset;

@@ -1,0 +1,847 @@
+//! Multi-tier feature store: a per-server **tier stack** in front of
+//! [`GatherPlan`] resolution, generalizing the single
+//! [`FeatureCache`] into the Quiver-style HBM / DRAM / SSD / remote
+//! placement hierarchy.
+//!
+//! A stack is described by a [`TierSpec`] — the `--tiers` grammar,
+//! same shape as `--fabric` specs (see [`crate::util::specs`]):
+//!
+//! ```text
+//! hbm:2g+dram:16g+remote          # two LRU cache tiers over the network
+//! hbm:1g:degree+dram:8g:degree+remote   # static degree-hot pinning
+//! dram:64m:lru+remote             # the legacy single-cache special case
+//! remote                          # no cache tiers at all
+//! ```
+//!
+//! Each segment is `kind[:capacity[:policy]]`; capacities use the
+//! shared byte grammar (`512k`/`64m`/`2g`/bytes), policies are the
+//! [`CachePolicy`] names (default `lru`), tiers must run fastest to
+//! slowest, and every stack ends in the mandatory `remote` backstop.
+//!
+//! ## Access path and pricing
+//!
+//! A [`TierStack::resolve_into`] walk looks each deduplicated remote
+//! vertex up fastest-tier-first:
+//!
+//! * **hbm** hit — the row is already in device memory: no transfer,
+//!   no host staging, no time at all.
+//! * **dram** hit — no transfer, but the row pays host→device staging
+//!   via [`CostModel::stage_time`](crate::cluster::CostModel) exactly
+//!   like a local shard read (this is the legacy cache behavior — the
+//!   two-tier `dram+remote` stack is locked bit-identical to
+//!   [`FeatureCache`] by `tests/tier_parity.rs`).
+//! * **ssd** hit — staged like dram, plus an SSD read priced by
+//!   [`SSD_READ_LATENCY`] / [`SSD_READ_BANDWIDTH`] (one latency per
+//!   fetch op that touches the SSD, bandwidth per byte).
+//! * **remote** — the backstop never misses: the row is fetched over
+//!   the cluster fabric, priced per (src, dst) link by
+//!   [`Fabric::transfer_time`](crate::cluster::Fabric) through
+//!   [`NetStats::record`](crate::cluster::NetStats).
+//!
+//! ## Placement policies
+//!
+//! * `lru` tiers admit misses at the fastest LRU tier and cascade the
+//!   displaced victim *down* the stack (demotion); a hit below another
+//!   serving tier moves the row *up* one serving level (promotion),
+//!   with the victim of that move demoted into the vacated slot.
+//! * `degree` / `schedule` tiers pin a static slice of the global
+//!   ranking — the fastest static tier takes the top ranks, each
+//!   slower one the next slice down ([`cache::pin_top_offset`]) — and
+//!   fill on first miss, never evicting. Static tiers refuse
+//!   promotion into themselves and re-admit demoted rows only if
+//!   pinned; anything else falling off the stack is evicted.
+//!
+//! Rows leaving the stack entirely are counted in
+//! [`TierDeltas::evicted_bytes`]; every move between tiers lands in
+//! the per-kind promote/demote byte counters that
+//! [`crate::metrics::EpochMetrics`] aggregates.
+//!
+//! The walk runs inside the epoch driver's per-lane hot path, so it
+//! uses the caller's scratch ([`StampedSet`], [`GatherPlan`]) and the
+//! fixed-size [`TierDeltas`] accounting block — zero heap allocations
+//! at steady state (`tests/alloc_budget.rs` proves it with a static
+//! two-cache-tier stack configured).
+
+use super::cache::{self, CachePolicy, FeatureCache};
+use super::{FeatureStore, GatherPlan};
+use crate::partition::Partition;
+use crate::util::fxhash::FxHashSet;
+use crate::util::specs;
+use crate::util::stamp::StampedSet;
+
+/// Number of [`TierKind`]s — sizes the fixed per-kind accounting
+/// arrays in [`TierDeltas`] and [`crate::metrics::EpochMetrics`].
+pub const NUM_TIER_KINDS: usize = 4;
+
+/// Seconds of setup latency charged once per fetch op that reads ≥ 1
+/// row from an `ssd` tier (NVMe-class random read).
+pub const SSD_READ_LATENCY: f64 = 100e-6;
+/// SSD sequential read bandwidth, bytes/second (NVMe-class).
+pub const SSD_READ_BANDWIDTH: f64 = 2.0e9;
+
+/// Where a tier's rows live — fixes both the walk order (declared
+/// fastest to slowest) and how a hit is priced (module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TierKind {
+    /// Device memory: hits are free (no staging, no transfer).
+    Hbm,
+    /// Host memory: hits pay host→device staging (the legacy cache).
+    Dram,
+    /// Local flash: hits pay staging plus the SSD read.
+    Ssd,
+    /// The mandatory backstop: fetch over the cluster fabric.
+    Remote,
+}
+
+/// Every kind, fastest first — index order of the per-kind arrays.
+pub const ALL_TIER_KINDS: [TierKind; NUM_TIER_KINDS] =
+    [TierKind::Hbm, TierKind::Dram, TierKind::Ssd, TierKind::Remote];
+
+impl TierKind {
+    /// Position in the per-kind accounting arrays (fastest = 0).
+    pub const fn index(self) -> usize {
+        match self {
+            Self::Hbm => 0,
+            Self::Dram => 1,
+            Self::Ssd => 2,
+            Self::Remote => 3,
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "hbm" => Some(Self::Hbm),
+            "dram" => Some(Self::Dram),
+            "ssd" => Some(Self::Ssd),
+            "remote" => Some(Self::Remote),
+            _ => None,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            Self::Hbm => "hbm",
+            Self::Dram => "dram",
+            Self::Ssd => "ssd",
+            Self::Remote => "remote",
+        }
+    }
+}
+
+/// One cache tier of a [`TierSpec`]: kind + capacity + policy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TierLevelSpec {
+    pub kind: TierKind,
+    pub capacity_bytes: u64,
+    pub policy: CachePolicy,
+}
+
+/// A parsed `--tiers` spec: the cache tiers, fastest first. The
+/// `remote` backstop is mandatory in the grammar and implicit here.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TierSpec {
+    pub levels: Vec<TierLevelSpec>,
+}
+
+impl TierSpec {
+    /// Parse `kind[:capacity[:policy]]+...+remote` (module docs).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let segs: Vec<&str> = s.split('+').collect();
+        let (last, cache_segs) = segs.split_last().expect("split is non-empty");
+        if *last != "remote" {
+            return Err(format!(
+                "tiers spec '{s}': must end with the 'remote' backstop \
+                 (e.g. dram:64m:lru+remote)"
+            ));
+        }
+        let mut levels = Vec::with_capacity(cache_segs.len());
+        for seg in cache_segs {
+            let ctx = format!("tiers segment '{seg}'");
+            let mut parts = seg.split(':');
+            let kind_s = parts.next().unwrap_or("");
+            let kind = TierKind::from_str(kind_s).ok_or_else(|| {
+                specs::unknown_spec(
+                    "tier kind",
+                    kind_s,
+                    &["hbm", "dram", "ssd", "remote"],
+                )
+            })?;
+            if kind == TierKind::Remote {
+                return Err(format!(
+                    "tiers spec '{s}': 'remote' is the backstop — it takes \
+                     no capacity or policy and must come last"
+                ));
+            }
+            let cap_s = parts.next().ok_or_else(|| {
+                format!("{ctx}: cache tier needs a capacity (e.g. {kind_s}:64m)",)
+            })?;
+            let capacity_bytes = specs::parse_bytes(&ctx, cap_s)?;
+            let policy = match parts.next() {
+                None => CachePolicy::Lru,
+                Some(p) => CachePolicy::from_str(p)
+                    .filter(|&p| p != CachePolicy::None)
+                    .ok_or_else(|| {
+                        specs::unknown_spec(
+                            "tier policy",
+                            p,
+                            &["lru", "degree", "schedule"],
+                        )
+                    })?,
+            };
+            if parts.next().is_some() {
+                return Err(format!(
+                    "{ctx}: expected kind:capacity[:policy], got extra fields"
+                ));
+            }
+            levels.push(TierLevelSpec {
+                kind,
+                capacity_bytes,
+                policy,
+            });
+        }
+        for w in levels.windows(2) {
+            if w[1].kind <= w[0].kind {
+                return Err(format!(
+                    "tiers spec '{s}': tiers must run fastest to slowest \
+                     (hbm, dram, ssd) with each kind at most once"
+                ));
+            }
+        }
+        Ok(Self { levels })
+    }
+
+    /// Canonical spelling (always spells the policy; round-trips
+    /// through [`Self::parse`]).
+    pub fn name(&self) -> String {
+        let mut out = String::new();
+        for l in &self.levels {
+            out.push_str(l.kind.name());
+            out.push(':');
+            out.push_str(&specs::fmt_bytes_spec(l.capacity_bytes));
+            out.push(':');
+            out.push_str(l.policy.name());
+            out.push('+');
+        }
+        out.push_str("remote");
+        out
+    }
+
+    /// The stack with no cache tiers: every remote row fetched over
+    /// the fabric (still walks the — empty — stack, so its metrics are
+    /// bit-identical to a capacity-0 cache, not to the uncached path).
+    pub fn remote_only() -> Self {
+        Self { levels: Vec::new() }
+    }
+
+    /// The legacy `--cache <policy> --cache-mb <n>` alias:
+    /// one dram tier over remote (`dram:<n>m:<policy>+remote`), or
+    /// [`Self::remote_only`] for `CachePolicy::None`.
+    pub fn single_cache(policy: CachePolicy, capacity_bytes: u64) -> Self {
+        match policy {
+            CachePolicy::None => Self::remote_only(),
+            _ => Self {
+                levels: vec![TierLevelSpec {
+                    kind: TierKind::Dram,
+                    capacity_bytes,
+                    policy,
+                }],
+            },
+        }
+    }
+
+    /// Does any cache tier use `policy`? (Decides which global
+    /// rankings [`build_stacks`] needs.)
+    pub fn uses_policy(&self, policy: CachePolicy) -> bool {
+        self.levels.iter().any(|l| l.policy == policy)
+    }
+}
+
+/// One materialized tier of a [`TierStack`].
+pub struct TierLevel {
+    pub kind: TierKind,
+    pub cache: FeatureCache,
+}
+
+/// One server's tier stack: the cache tiers fastest-first, walked by
+/// [`Self::resolve_into`]; the remote backstop is the residual
+/// [`GatherPlan`] the walk leaves behind.
+pub struct TierStack {
+    levels: Vec<TierLevel>,
+    feat_bytes: u64,
+}
+
+/// Fixed-size accounting block of one [`TierStack::resolve_into`]
+/// walk — everything the epoch driver folds into
+/// [`crate::metrics::EpochMetrics`], with no heap in sight.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierDeltas {
+    /// Rows served per tier kind (remote stays 0 here; the driver
+    /// counts the residual plan's fetches under the remote index).
+    pub hits_at: [u64; NUM_TIER_KINDS],
+    /// Lookups that probed a tier of this kind and missed.
+    pub misses_at: [u64; NUM_TIER_KINDS],
+    /// Bytes promoted *into* a tier of this kind.
+    pub promote_bytes_at: [u64; NUM_TIER_KINDS],
+    /// Bytes demoted *into* a tier of this kind.
+    pub demote_bytes_at: [u64; NUM_TIER_KINDS],
+    /// Hit rows that pay host→device staging (dram + ssd hits; hbm
+    /// rows are already on device).
+    pub staged_hit_rows: u64,
+    /// Hit rows read from an ssd tier (priced by the SSD constants).
+    pub ssd_hit_rows: u64,
+    /// Bytes that fell off the bottom of the stack entirely.
+    pub evicted_bytes: u64,
+}
+
+impl TierDeltas {
+    /// Rows served by any cache tier (the legacy `cache_hits`).
+    pub fn cache_hits(&self) -> u64 {
+        self.hits_at.iter().sum()
+    }
+
+    /// Extra seconds for the ssd reads of this walk: one setup
+    /// latency if any row came off flash, plus bytes over bandwidth.
+    /// Exactly 0.0 when no ssd tier was hit, so stacks without flash
+    /// add no float operations to the legacy cost path.
+    pub fn ssd_seconds(&self, feat_bytes: u64) -> f64 {
+        if self.ssd_hit_rows == 0 {
+            0.0
+        } else {
+            SSD_READ_LATENCY
+                + (self.ssd_hit_rows * feat_bytes) as f64 / SSD_READ_BANDWIDTH
+        }
+    }
+}
+
+impl TierStack {
+    pub fn new(levels: Vec<TierLevel>, feat_bytes: u64) -> Self {
+        Self { levels, feat_bytes }
+    }
+
+    /// The materialized cache tiers, fastest first.
+    pub fn levels(&self) -> &[TierLevel] {
+        &self.levels
+    }
+
+    pub fn feat_bytes(&self) -> u64 {
+        self.feat_bytes
+    }
+
+    /// Resolve a (possibly multi-step) fetch through the stack:
+    /// deduplicate the request in first-seen order — exactly like
+    /// [`FeatureStore::plan_into`] — walk each remote vertex down the
+    /// tiers, and leave the full misses in `plan.remote` for the
+    /// driver to price over the fabric. Allocation-free: `plan` and
+    /// `seen` are caller-owned scratch, reset (capacity kept) here.
+    pub fn resolve_into(
+        &mut self,
+        store: &FeatureStore,
+        server: usize,
+        steps: &[Vec<u32>],
+        seen: &mut StampedSet,
+        plan: &mut GatherPlan,
+    ) -> TierDeltas {
+        plan.reset(server, store.partition.num_parts);
+        seen.reset();
+        let mut d = TierDeltas::default();
+        for v in steps.iter().flatten().copied() {
+            if !seen.insert(v) {
+                continue;
+            }
+            let home = store.partition.home(v) as usize;
+            if home == server {
+                plan.local.push(v);
+                continue;
+            }
+            match self.lookup(v, &mut d) {
+                Some(level) => {
+                    let kind = self.levels[level].kind;
+                    d.hits_at[kind.index()] += 1;
+                    if kind != TierKind::Hbm {
+                        d.staged_hit_rows += 1;
+                    }
+                    if kind == TierKind::Ssd {
+                        d.ssd_hit_rows += 1;
+                    }
+                    self.promote(level, v, &mut d);
+                }
+                None => {
+                    plan.remote[home].push(v);
+                    self.admit_miss(v, &mut d);
+                }
+            }
+        }
+        d
+    }
+
+    /// Walk the tiers fastest-first; `Some(level)` of the hit, `None`
+    /// for a full miss. Levels that can never hold a row are skipped
+    /// outright (no probe, no miss count) — see
+    /// [`FeatureCache::can_serve`].
+    fn lookup(&mut self, v: u32, d: &mut TierDeltas) -> Option<usize> {
+        for i in 0..self.levels.len() {
+            let lvl = &mut self.levels[i];
+            if !lvl.cache.can_serve() {
+                continue;
+            }
+            if lvl.cache.probe(v) {
+                return Some(i);
+            }
+            d.misses_at[lvl.kind.index()] += 1;
+        }
+        None
+    }
+
+    /// On a hit below the top: move `v` one serving level up if that
+    /// level is LRU (static tiers refuse promotion — their contents
+    /// are the pinned ranking slice), demoting the displaced victim
+    /// into the slot `v` vacated.
+    fn promote(&mut self, from: usize, v: u32, d: &mut TierDeltas) {
+        let dest = match (0..from)
+            .rev()
+            .find(|&i| self.levels[i].cache.can_serve())
+        {
+            Some(i) => i,
+            None => return,
+        };
+        if self.levels[dest].cache.policy() != CachePolicy::Lru {
+            return;
+        }
+        self.levels[from].cache.remove(v);
+        let (_, victim) = self.levels[dest].cache.admit(v);
+        d.promote_bytes_at[self.levels[dest].kind.index()] += self.feat_bytes;
+        if let Some(w) = victim {
+            self.demote(from, w, d);
+        }
+    }
+
+    /// Cascade a displaced row down the stack starting at `level`:
+    /// LRU tiers admit it (possibly displacing their own victim
+    /// further down), static tiers re-admit only their pinned rows,
+    /// and anything past the last tier is evicted outright.
+    fn demote(&mut self, mut level: usize, mut w: u32, d: &mut TierDeltas) {
+        loop {
+            if level >= self.levels.len() {
+                d.evicted_bytes += self.feat_bytes;
+                return;
+            }
+            let lvl = &mut self.levels[level];
+            if !lvl.cache.can_serve() {
+                level += 1;
+                continue;
+            }
+            match lvl.cache.policy() {
+                CachePolicy::Lru => {
+                    let (_, victim) = lvl.cache.admit(w);
+                    d.demote_bytes_at[lvl.kind.index()] += self.feat_bytes;
+                    match victim {
+                        Some(x) => {
+                            w = x;
+                            level += 1;
+                        }
+                        None => return,
+                    }
+                }
+                _ => {
+                    if lvl.cache.is_pinned(w) && lvl.cache.probe(w) {
+                        // already resident below (can only happen if a
+                        // pinned row was duplicated upward); drop it
+                        return;
+                    }
+                    if lvl.cache.is_pinned(w) {
+                        lvl.cache.admit(w);
+                        d.demote_bytes_at[lvl.kind.index()] += self.feat_bytes;
+                        return;
+                    }
+                    level += 1;
+                }
+            }
+        }
+    }
+
+    /// Admit a full miss: the fastest LRU tier takes it (victim
+    /// demoted down), or the static tier that pins it fills. A miss no
+    /// tier wants stays uncached — exactly the legacy unpinned path.
+    fn admit_miss(&mut self, v: u32, d: &mut TierDeltas) {
+        for i in 0..self.levels.len() {
+            let lvl = &mut self.levels[i];
+            if !lvl.cache.can_serve() {
+                continue;
+            }
+            match lvl.cache.policy() {
+                CachePolicy::Lru => {
+                    let (_, victim) = lvl.cache.admit(v);
+                    if let Some(w) = victim {
+                        self.demote(i + 1, w, d);
+                    }
+                    return;
+                }
+                CachePolicy::Degree | CachePolicy::Precomputed => {
+                    if lvl.cache.is_pinned(v) {
+                        lvl.cache.admit(v);
+                        return;
+                    }
+                }
+                CachePolicy::None => {}
+            }
+        }
+    }
+}
+
+/// Build one [`TierStack`] per server from a spec. The static
+/// policies consume the global rankings: each static tier of a stack
+/// pins its own slice — the fastest tier the top ranks, each slower
+/// tier offset past the entries of the faster tiers that share its
+/// ranking (so a single static tier gets offset 0, the legacy set).
+pub fn build_stacks(
+    spec: &TierSpec,
+    feat_bytes: u64,
+    partition: &Partition,
+    degree_rank: Option<&[u32]>,
+    profile_rank: Option<&[u32]>,
+) -> Vec<TierStack> {
+    (0..partition.num_parts)
+        .map(|server| {
+            let mut skip_by_policy = [0usize; 2]; // [degree, schedule]
+            let levels = spec
+                .levels
+                .iter()
+                .map(|l| {
+                    let entries = if feat_bytes == 0 {
+                        0
+                    } else {
+                        (l.capacity_bytes / feat_bytes) as usize
+                    };
+                    let pinned = match l.policy {
+                        CachePolicy::Degree => {
+                            let r = degree_rank
+                                .expect("degree tier needs the degree ranking");
+                            let skip = skip_by_policy[0];
+                            skip_by_policy[0] += entries;
+                            cache::pin_top_offset(
+                                r,
+                                partition,
+                                server,
+                                l.capacity_bytes,
+                                feat_bytes,
+                                skip,
+                            )
+                        }
+                        CachePolicy::Precomputed => {
+                            let r = profile_rank
+                                .expect("schedule tier needs the profile ranking");
+                            let skip = skip_by_policy[1];
+                            skip_by_policy[1] += entries;
+                            cache::pin_top_offset(
+                                r,
+                                partition,
+                                server,
+                                l.capacity_bytes,
+                                feat_bytes,
+                                skip,
+                            )
+                        }
+                        _ => FxHashSet::default(),
+                    };
+                    TierLevel {
+                        kind: l.kind,
+                        cache: FeatureCache::new(
+                            l.policy,
+                            l.capacity_bytes,
+                            feat_bytes,
+                            pinned,
+                        ),
+                    }
+                })
+                .collect();
+            TierStack::new(levels, feat_bytes)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny_test_dataset;
+    use crate::partition::{partition, PartitionAlgo};
+
+    fn fixture() -> (crate::graph::datasets::Dataset, Partition) {
+        let d = tiny_test_dataset(90);
+        let p = partition(&d.graph, 2, PartitionAlgo::Hash, 90);
+        (d, p)
+    }
+
+    fn resolve(
+        stack: &mut TierStack,
+        fs: &FeatureStore,
+        server: usize,
+        step: Vec<u32>,
+    ) -> (TierDeltas, u64) {
+        let mut seen = StampedSet::default();
+        let mut plan = GatherPlan::default();
+        let d =
+            stack.resolve_into(fs, server, &[step], &mut seen, &mut plan);
+        (d, plan.remote_count())
+    }
+
+    #[test]
+    fn spec_grammar_roundtrips_canonically() {
+        for s in [
+            "remote",
+            "dram:64m:lru+remote",
+            "hbm:2g:lru+dram:16g:lru+remote",
+            "hbm:1g:degree+dram:8g:degree+remote",
+            "hbm:512k:lru+dram:4m:degree+ssd:1g:schedule+remote",
+            "dram:0:lru+remote",
+        ] {
+            let spec = TierSpec::parse(s).unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(spec.name(), s, "canonical spelling must roundtrip");
+            assert_eq!(TierSpec::parse(&spec.name()), Ok(spec));
+        }
+        // defaults: policy lru, spelled out in the canonical name
+        assert_eq!(
+            TierSpec::parse("hbm:2g+dram:16g+remote").unwrap().name(),
+            "hbm:2g:lru+dram:16g:lru+remote"
+        );
+    }
+
+    #[test]
+    fn spec_grammar_rejects_malformed_stacks() {
+        for (s, needle) in [
+            ("", "must end with the 'remote' backstop"),
+            ("dram:64m", "must end with the 'remote' backstop"),
+            ("remote+dram:64m:lru", "must end with the 'remote' backstop"),
+            ("dram:64m+remote+remote", "must come last"),
+            ("remote:2g+remote", "must come last"),
+            ("nvme:2g+remote", "unknown tier kind 'nvme'"),
+            ("dram+remote", "needs a capacity"),
+            ("dram:64m:arc+remote", "unknown tier policy 'arc'"),
+            ("dram:64m:none+remote", "unknown tier policy 'none'"),
+            ("dram:64m:lru:x+remote", "extra fields"),
+            ("dram:64m+hbm:2g+remote", "fastest to slowest"),
+            ("dram:64m+dram:32m+remote", "fastest to slowest"),
+            ("dram:64q+remote", "cannot parse"),
+        ] {
+            let e = TierSpec::parse(s).unwrap_err();
+            assert!(e.contains(needle), "'{s}': got '{e}'");
+        }
+    }
+
+    #[test]
+    fn legacy_aliases_map_onto_the_grammar() {
+        assert_eq!(
+            TierSpec::single_cache(CachePolicy::Lru, 64 << 20),
+            TierSpec::parse("dram:64m:lru+remote").unwrap()
+        );
+        assert_eq!(
+            TierSpec::single_cache(CachePolicy::None, 64 << 20),
+            TierSpec::remote_only()
+        );
+        assert_eq!(TierSpec::remote_only(), TierSpec::parse("remote").unwrap());
+        assert!(!TierSpec::remote_only().uses_policy(CachePolicy::Lru));
+        assert!(TierSpec::single_cache(CachePolicy::Degree, 1 << 20)
+            .uses_policy(CachePolicy::Degree));
+    }
+
+    #[test]
+    fn single_dram_tier_walk_matches_feature_cache_exactly() {
+        // the two-tier special case: same hit/evict/miss trajectory as
+        // the legacy FeatureCache on the same stream
+        let (d, p) = fixture();
+        let fs = FeatureStore::new(&d, &p);
+        let fb = fs.feat_bytes;
+        let spec = TierSpec::parse("dram:8k:lru+remote").unwrap();
+        let mut stacks = build_stacks(&spec, fb, &p, None, None);
+        let mut legacy = FeatureCache::new(
+            CachePolicy::Lru,
+            8 << 10,
+            fb,
+            FxHashSet::default(),
+        );
+        for i in 0..12u32 {
+            let step: Vec<u32> =
+                ((i * 29) % 250..(i * 29) % 250 + 60).collect();
+            let (td, misses) = resolve(&mut stacks[0], &fs, 0, step.clone());
+            let lr = legacy.resolve(&fs, 0, &[step]);
+            assert_eq!(td.cache_hits(), lr.hits);
+            assert_eq!(td.staged_hit_rows, lr.hits);
+            assert_eq!(td.evicted_bytes, lr.evicted_bytes);
+            assert_eq!(misses, lr.plan.remote_count());
+            assert_eq!(td.promote_bytes_at, [0; NUM_TIER_KINDS]);
+            assert_eq!(td.demote_bytes_at, [0; NUM_TIER_KINDS]);
+        }
+    }
+
+    #[test]
+    fn hbm_hits_skip_staging_and_ssd_hits_pay_flash() {
+        let (d, p) = fixture();
+        let fs = FeatureStore::new(&d, &p);
+        let fb = fs.feat_bytes;
+        let remote: Vec<u32> = (0..400u32)
+            .filter(|&v| p.home(v) as usize != 0)
+            .take(8)
+            .collect();
+        // hbm big enough for everything: second pass hits on device
+        let spec = TierSpec::parse("hbm:1m:lru+remote").unwrap();
+        let mut stacks = build_stacks(&spec, fb, &p, None, None);
+        resolve(&mut stacks[0], &fs, 0, remote.clone());
+        let (td, misses) = resolve(&mut stacks[0], &fs, 0, remote.clone());
+        assert_eq!(td.hits_at[TierKind::Hbm.index()], 8);
+        assert_eq!(td.staged_hit_rows, 0, "hbm rows are already on device");
+        assert_eq!(td.ssd_seconds(fb), 0.0);
+        assert_eq!(misses, 0);
+        // ssd tier: staged + flash-priced
+        let spec = TierSpec::parse("ssd:1m:lru+remote").unwrap();
+        let mut stacks = build_stacks(&spec, fb, &p, None, None);
+        resolve(&mut stacks[0], &fs, 0, remote.clone());
+        let (td, _) = resolve(&mut stacks[0], &fs, 0, remote);
+        assert_eq!(td.ssd_hit_rows, 8);
+        assert_eq!(td.staged_hit_rows, 8);
+        let want = SSD_READ_LATENCY + (8 * fb) as f64 / SSD_READ_BANDWIDTH;
+        assert_eq!(td.ssd_seconds(fb).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn lru_ladder_promotes_on_hit_and_demotes_victims() {
+        let (d, p) = fixture();
+        let fs = FeatureStore::new(&d, &p);
+        let fb = fs.feat_bytes;
+        let remote: Vec<u32> = (0..400u32)
+            .filter(|&v| p.home(v) as usize != 0)
+            .collect();
+        let (a, b) = (remote[0], remote[1]);
+        // hbm holds 1 row, dram holds 2
+        let spec = TierSpec {
+            levels: vec![
+                TierLevelSpec {
+                    kind: TierKind::Hbm,
+                    capacity_bytes: fb,
+                    policy: CachePolicy::Lru,
+                },
+                TierLevelSpec {
+                    kind: TierKind::Dram,
+                    capacity_bytes: 2 * fb,
+                    policy: CachePolicy::Lru,
+                },
+            ],
+        };
+        let mut stack = build_stacks(&spec, fb, &p, None, None).remove(0);
+        // miss a: admitted at hbm (fastest LRU tier)
+        let (d1, _) = resolve(&mut stack, &fs, 0, vec![a]);
+        assert_eq!(d1.cache_hits(), 0);
+        assert_eq!(stack.levels()[0].cache.used_bytes(), fb);
+        // miss b: hbm full -> a demoted to dram, b takes hbm
+        let (_, _) = resolve(&mut stack, &fs, 0, vec![b]);
+        assert_eq!(stack.levels()[1].cache.used_bytes(), fb);
+        // hit a in dram: promoted back to hbm, b demoted down
+        let (d3, _) = resolve(&mut stack, &fs, 0, vec![a]);
+        assert_eq!(d3.hits_at[TierKind::Dram.index()], 1);
+        assert_eq!(d3.promote_bytes_at[TierKind::Hbm.index()], fb);
+        assert_eq!(d3.demote_bytes_at[TierKind::Dram.index()], fb);
+        assert_eq!(d3.evicted_bytes, 0, "b landed in dram, nothing evicted");
+        // hit a again: now at hbm, no movement
+        let (d4, _) = resolve(&mut stack, &fs, 0, vec![a]);
+        assert_eq!(d4.hits_at[TierKind::Hbm.index()], 1);
+        assert_eq!(d4.promote_bytes_at, [0; NUM_TIER_KINDS]);
+        // capacities never exceeded
+        for lvl in stack.levels() {
+            assert!(lvl.cache.used_bytes() <= lvl.cache.capacity_bytes());
+        }
+    }
+
+    #[test]
+    fn static_ladder_pins_disjoint_ranking_slices() {
+        let (d, p) = fixture();
+        let fs = FeatureStore::new(&d, &p);
+        let fb = fs.feat_bytes;
+        let rank = cache::rank_by_degree(&d.graph);
+        let spec = TierSpec {
+            levels: vec![
+                TierLevelSpec {
+                    kind: TierKind::Hbm,
+                    capacity_bytes: 4 * fb,
+                    policy: CachePolicy::Degree,
+                },
+                TierLevelSpec {
+                    kind: TierKind::Dram,
+                    capacity_bytes: 4 * fb,
+                    policy: CachePolicy::Degree,
+                },
+            ],
+        };
+        let mut stack =
+            build_stacks(&spec, fb, &p, Some(&rank), None).remove(0);
+        let top: Vec<u32> = rank
+            .iter()
+            .copied()
+            .filter(|&v| p.home(v) as usize != 0)
+            .take(8)
+            .collect();
+        // first pass fills both pinned slices, second pass hits: the
+        // top 4 in hbm, the next 4 in dram
+        resolve(&mut stack, &fs, 0, top.clone());
+        let (td, misses) = resolve(&mut stack, &fs, 0, top);
+        assert_eq!(td.hits_at[TierKind::Hbm.index()], 4);
+        assert_eq!(td.hits_at[TierKind::Dram.index()], 4);
+        assert_eq!(misses, 0);
+        assert_eq!(
+            td.promote_bytes_at,
+            [0; NUM_TIER_KINDS],
+            "static tiers refuse promotion"
+        );
+    }
+
+    #[test]
+    fn remote_only_stack_serves_nothing_and_moves_nothing() {
+        let (d, p) = fixture();
+        let fs = FeatureStore::new(&d, &p);
+        let mut stack = build_stacks(
+            &TierSpec::remote_only(),
+            fs.feat_bytes,
+            &p,
+            None,
+            None,
+        )
+        .remove(0);
+        for i in 0..4u32 {
+            let step: Vec<u32> = (i * 50..i * 50 + 80).collect();
+            let (td, _) = resolve(&mut stack, &fs, 0, step.clone());
+            assert_eq!(td, TierDeltas::default());
+        }
+    }
+
+    #[test]
+    fn used_bytes_never_exceed_capacity_under_random_streams() {
+        // promotion/demotion invariant, across mixed stacks
+        let (d, p) = fixture();
+        let fs = FeatureStore::new(&d, &p);
+        let fb = fs.feat_bytes;
+        let rank = cache::rank_by_degree(&d.graph);
+        for spec_s in [
+            "hbm:2k:lru+dram:4k:lru+remote",
+            "hbm:1k:lru+dram:8k:degree+remote",
+            "hbm:2k:degree+dram:2k:lru+ssd:8k:lru+remote",
+        ] {
+            let spec = TierSpec::parse(spec_s).unwrap();
+            let mut stack =
+                build_stacks(&spec, fb, &p, Some(&rank), None).remove(0);
+            let mut x = 41u64;
+            for _ in 0..200 {
+                // cheap xorshift stream
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                let start = (x % 360) as u32;
+                let step: Vec<u32> = (start..start + 40).collect();
+                resolve(&mut stack, &fs, 0, step);
+                for lvl in stack.levels() {
+                    assert!(
+                        lvl.cache.used_bytes() <= lvl.cache.capacity_bytes(),
+                        "{spec_s}: {} over capacity",
+                        lvl.kind.name()
+                    );
+                }
+            }
+        }
+    }
+}

@@ -55,6 +55,7 @@ use super::generator::{
 };
 use super::CsrGraph;
 use crate::util::rng::Rng;
+use crate::util::specs;
 
 /// A loaded dataset: topology + labels (+ feature *generator*, so large
 /// feature matrices are never materialized unless a numeric run needs
@@ -164,27 +165,14 @@ pub struct SynthSpec {
     pub chunk_edges: usize,
 }
 
-/// Parse `1e9` / `250_000` / `4096` into a count.
+/// Parse `1e9` / `250_000` / `4096` into a count (shared grammar:
+/// [`specs::parse_count`] under the `synth key '<k>'` subject).
 fn parse_count(key: &str, s: &str) -> Result<usize, String> {
-    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
-    let x: f64 = cleaned
-        .parse()
-        .map_err(|_| format!("synth key '{key}': cannot parse number '{s}'"))?;
-    if !x.is_finite() || x < 0.0 || x > 9.0e15 {
-        return Err(format!("synth key '{key}': value '{s}' out of range"));
-    }
-    let r = x.round();
-    if (x - r).abs() > 1e-6 * x.abs().max(1.0) {
-        return Err(format!("synth key '{key}': expected an integer, got '{s}'"));
-    }
-    Ok(r as usize)
+    specs::parse_count(&format!("synth key '{key}'"), s)
 }
 
 fn parse_frac(key: &str, s: &str) -> Result<f64, String> {
-    s.parse::<f64>()
-        .ok()
-        .filter(|x| x.is_finite())
-        .ok_or_else(|| format!("synth key '{key}': cannot parse number '{s}'"))
+    specs::parse_frac(&format!("synth key '{key}'"), s)
 }
 
 impl SynthSpec {
@@ -205,9 +193,8 @@ impl SynthSpec {
         let mut seed = 42u64;
         let mut chunk = DEFAULT_CHUNK_EDGES;
         for pair in body.split(',').filter(|p| !p.is_empty()) {
-            let (key, val) = pair.split_once('=').ok_or_else(|| {
-                format!("synth spec '{name}': expected key=value, got '{pair}'")
-            })?;
+            let (key, val) =
+                specs::split_kv(&format!("synth spec '{name}'"), pair)?;
             match key {
                 "v" => v = Some(parse_count(key, val)?),
                 "e" => e = Some(parse_count(key, val)?),
@@ -220,9 +207,13 @@ impl SynthSpec {
                 "seed" => seed = parse_count(key, val)? as u64,
                 "chunk" => chunk = parse_count(key, val)?,
                 _ => {
-                    return Err(format!(
-                        "synth spec '{name}': unknown key '{key}' \
-                         (valid: v,e,k,p,alpha,d,c,train,seed,chunk)"
+                    return Err(specs::unknown_key(
+                        &format!("synth spec '{name}'"),
+                        key,
+                        &[
+                            "v", "e", "k", "p", "alpha", "d", "c", "train",
+                            "seed", "chunk",
+                        ],
                     ))
                 }
             }

@@ -18,6 +18,7 @@ use hopgnn::cluster::{FabricSpec, ModelFamily};
 use hopgnn::config::RunConfig;
 use hopgnn::coordinator::{run_strategy, StrategySpec};
 use hopgnn::featstore::cache::CachePolicy;
+use hopgnn::featstore::tier::TierSpec;
 use hopgnn::graph::datasets::{load, ALL_SPECS};
 use hopgnn::partition::{partition, PartitionAlgo};
 use hopgnn::runtime::{Engine, Manifest};
@@ -201,7 +202,8 @@ fn cmd_bench(args: Vec<String>) -> i32 {
 
 /// `hopgnn bench sweep [--quick] [--out DIR] --strategies <specs>
 /// [--datasets ...] [--fabrics ...] [--cache ...] [--cache-mb ...]
-/// [--overlap off|on|both] [--set k=v,...]` — build a `SweepSpec`
+/// [--tiers ...] [--overlap off|on|both] [--set k=v,...]` — build a
+/// `SweepSpec`
 /// from the flags, run the full cartesian grid through the engine, and
 /// write a `sweep` report (md + JSON) with one row per cell.
 /// Parse a comma-separated CLI list, trimming items and prefixing
@@ -234,6 +236,11 @@ fn cmd_bench_sweep(args: Vec<String>) -> i32 {
     )
     .opt("cache", "", "comma-separated cache-policy axis")
     .opt("cache-mb", "", "comma-separated capacity axis (MiB)")
+    .opt(
+        "tiers",
+        "",
+        "comma-separated tier-stack axis (e.g. remote,dram:64m:lru+remote)",
+    )
     .opt("overlap", "", "overlap axis: off|on|both")
     .opt(
         "set",
@@ -355,6 +362,18 @@ fn cmd_bench_sweep(args: Vec<String>) -> i32 {
         shape.push(format!("{} capacities", list.len()));
         sweep = sweep.axis(Axis::cache_capacities_mb(&list));
     }
+    let tiers = a.get_or("tiers", "");
+    if !tiers.is_empty() {
+        let list = match parse_list(&tiers, "--tiers", TierSpec::parse) {
+            Ok(list) => list,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        shape.push(format!("{} tier stacks", list.len()));
+        sweep = sweep.axis(Axis::tiers(&list));
+    }
     shape.push(format!("{} strategies", specs.len()));
     sweep = sweep.axis(Axis::strategies(&specs));
     match a.get_or("overlap", "").as_str() {
@@ -430,6 +449,9 @@ fn cmd_sim(args: Vec<String>) -> i32 {
         .opt("cache", "none",
              "feature-cache policy (none|lru|degree|schedule)")
         .opt("cache-mb", "64", "feature-cache capacity per server, MiB")
+        .opt("tiers", "",
+             "feature tier stack kind:cap[:policy]+..+remote \
+              (overrides --cache/--cache-mb)")
         .flag("cache-persist", "keep feature caches warm across epochs")
         .flag("overlap", "hide async gathers behind compute (pipelining)")
         .flag("sequential", "disable parallel per-server op lanes");
@@ -472,6 +494,15 @@ fn cmd_sim(args: Vec<String>) -> i32 {
                 eprintln!("{e}");
                 return 2;
             }
+        }
+    }
+    // --tiers defaults to "" (unset), so only a typed spec reaches the
+    // config; it then shadows the legacy --cache/--cache-mb pair
+    let tiers = a.get_or("tiers", "");
+    if !tiers.is_empty() && (!from_file || a.explicit("tiers")) {
+        if let Err(e) = cfg.set("tiers", &tiers) {
+            eprintln!("{e}");
+            return 2;
         }
     }
     if !from_file || a.explicit("batch") {
@@ -535,9 +566,8 @@ fn cmd_sim(args: Vec<String>) -> i32 {
     println!("{}", m.breakdown_table().render());
     if cfg.cache_enabled() {
         println!(
-            "cache {} ({} MiB/server): {:.1}% hit rate, {} saved, {} evicted",
-            cfg.cache_policy.name(),
-            cfg.cache_mb,
+            "tiers {} (per server): {:.1}% hit rate, {} saved, {} evicted",
+            cfg.effective_tiers().name(),
             m.cache_hit_rate() * 100.0,
             fmt_bytes(m.cache_hit_bytes),
             fmt_bytes(m.cache_evict_bytes),
@@ -797,6 +827,10 @@ fn cmd_info(_args: Vec<String>) -> i32 {
          still parse"
     );
     println!("fabrics: uniform, rack:<k>, hetero-mix, straggler:<s>");
+    println!(
+        "tiers: kind:cap[:policy]+..+remote over hbm|dram|ssd|remote \
+         (e.g. hbm:2g+dram:16g+remote, dram:64m:lru+remote, remote)"
+    );
     println!("experiments: {}", ALL_EXPERIMENTS.join(", "));
     match Manifest::load_default() {
         Ok(m) => {

@@ -2,6 +2,7 @@
 
 use crate::cluster::network::NUM_KINDS;
 use crate::cluster::{NetStats, TransferKind};
+use crate::featstore::tier::NUM_TIER_KINDS;
 use crate::util::table::{fmt_bytes, fmt_secs, Table};
 
 /// Everything one simulated (or real) epoch produces.
@@ -45,6 +46,20 @@ pub struct EpochMetrics {
     pub cache_miss_bytes: u64,
     /// Bytes displaced by eviction while admitting misses.
     pub cache_evict_bytes: u64,
+    /// Per-tier-kind rows served, indexed by
+    /// [`crate::featstore::tier::TierKind::index`] (hbm, dram, ssd,
+    /// remote). The remote slot counts the backstop fetches; the cache
+    /// slots sum to `cache_hits`.
+    pub tier_hits: [u64; NUM_TIER_KINDS],
+    /// Per-tier-kind bytes served (`tier_hits * feat_bytes`).
+    pub tier_hit_bytes: [u64; NUM_TIER_KINDS],
+    /// Bytes whose lookup probed a tier of this kind and missed there
+    /// (a row descending the stack misses once per tier it passes).
+    pub tier_miss_bytes: [u64; NUM_TIER_KINDS],
+    /// Bytes promoted *into* a tier of this kind on a lower-tier hit.
+    pub tier_promote_bytes: [u64; NUM_TIER_KINDS],
+    /// Bytes demoted *into* a tier of this kind by displacement.
+    pub tier_demote_bytes: [u64; NUM_TIER_KINDS],
     /// GPU busy fraction proxy (Fig 20).
     pub gpu_busy_fraction: f64,
     /// Per-server busy (compute) seconds — the observed lane times.
@@ -150,6 +165,13 @@ impl EpochMetrics {
         self.cache_hit_bytes += other.cache_hit_bytes;
         self.cache_miss_bytes += other.cache_miss_bytes;
         self.cache_evict_bytes += other.cache_evict_bytes;
+        for k in 0..NUM_TIER_KINDS {
+            self.tier_hits[k] += other.tier_hits[k];
+            self.tier_hit_bytes[k] += other.tier_hit_bytes[k];
+            self.tier_miss_bytes[k] += other.tier_miss_bytes[k];
+            self.tier_promote_bytes[k] += other.tier_promote_bytes[k];
+            self.tier_demote_bytes[k] += other.tier_demote_bytes[k];
+        }
         self.gpu_busy_fraction += other.gpu_busy_fraction;
         if !other.per_server_busy.is_empty() {
             if self.per_server_busy.is_empty() {
@@ -196,6 +218,13 @@ impl EpochMetrics {
         out.cache_hit_bytes /= nu;
         out.cache_miss_bytes /= nu;
         out.cache_evict_bytes /= nu;
+        for k in 0..NUM_TIER_KINDS {
+            out.tier_hits[k] /= nu;
+            out.tier_hit_bytes[k] /= nu;
+            out.tier_miss_bytes[k] /= nu;
+            out.tier_promote_bytes[k] /= nu;
+            out.tier_demote_bytes[k] /= nu;
+        }
         out.gpu_busy_fraction /= n;
         for b in out.per_server_busy.iter_mut() {
             *b /= n;
@@ -288,6 +317,28 @@ mod tests {
         assert_eq!(avg.cache_hits, 30);
         assert_eq!(avg.cache_hit_bytes, 3000);
         assert_eq!(avg.cache_evict_bytes, 200);
+    }
+
+    #[test]
+    fn tier_arrays_accumulate_and_average() {
+        let a = EpochMetrics {
+            tier_hits: [4, 2, 0, 6],
+            tier_hit_bytes: [400, 200, 0, 600],
+            tier_miss_bytes: [100, 300, 0, 0],
+            tier_promote_bytes: [200, 0, 0, 0],
+            tier_demote_bytes: [0, 200, 0, 0],
+            ..Default::default()
+        };
+        let mut sum = EpochMetrics::default();
+        sum.accumulate(&a);
+        sum.accumulate(&a);
+        assert_eq!(sum.tier_hits, [8, 4, 0, 12]);
+        assert_eq!(sum.tier_promote_bytes, [400, 0, 0, 0]);
+        let avg = EpochMetrics::average_of(&[a.clone(), a]);
+        assert_eq!(avg.tier_hits, [4, 2, 0, 6]);
+        assert_eq!(avg.tier_hit_bytes, [400, 200, 0, 600]);
+        assert_eq!(avg.tier_miss_bytes, [100, 300, 0, 0]);
+        assert_eq!(avg.tier_demote_bytes, [0, 200, 0, 0]);
     }
 
     #[test]

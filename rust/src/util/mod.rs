@@ -10,6 +10,7 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod specs;
 pub mod stamp;
 pub mod stats;
 pub mod table;

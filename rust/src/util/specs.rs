@@ -1,0 +1,142 @@
+//! Shared spec-string grammar: the one place that splits, parses, and
+//! complains about the CLI's little languages.
+//!
+//! Three front-end grammars ride on this module so they parse and error
+//! uniformly (same shapes, same message style, same fail-fast sweep
+//! validation):
+//!
+//! * `--fabric` — `uniform` / `rack:<k>` / `hetero-mix` /
+//!   `straggler:<s>` ([`crate::cluster::FabricSpec`]);
+//! * `synth:` dataset names — `synth:v=1e6,e=1e7,seed=3`
+//!   ([`crate::graph::datasets::SynthSpec`]);
+//! * `--tiers` — `hbm:2g+dram:16g:lru+remote`
+//!   ([`crate::featstore::tier::TierSpec`]).
+//!
+//! The helpers take a `subject` (or `ctx`) string naming the thing being
+//! parsed — e.g. `synth key 'v'` or `tiers segment 'dram:64m'` — so
+//! every error self-identifies without the caller re-wrapping it.
+
+/// Split one `key=value` pair, erroring in the shared style:
+/// `"{ctx}: expected key=value, got '{pair}'"`.
+pub fn split_kv<'a>(ctx: &str, pair: &'a str) -> Result<(&'a str, &'a str), String> {
+    pair.split_once('=')
+        .ok_or_else(|| format!("{ctx}: expected key=value, got '{pair}'"))
+}
+
+/// The shared unknown-key error, listing every valid key:
+/// `"{ctx}: unknown key '{key}' (valid: a,b,c)"`.
+pub fn unknown_key(ctx: &str, key: &str, valid: &[&str]) -> String {
+    format!("{ctx}: unknown key '{key}' (valid: {})", valid.join(","))
+}
+
+/// The shared unknown-spec error for whole-string grammars, listing the
+/// valid forms pipe-separated: `"unknown {kind} '{got}' (a|b|c)"`.
+pub fn unknown_spec(kind: &str, got: &str, forms: &[&str]) -> String {
+    format!("unknown {kind} '{got}' ({})", forms.join("|"))
+}
+
+/// Parse `1e9` / `250_000` / `4096` into a count. Accepts scientific
+/// notation and `_` group separators; rejects non-integers, negatives,
+/// and anything above 9e15 (where f64 still represents every integer).
+pub fn parse_count(subject: &str, s: &str) -> Result<usize, String> {
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    let x: f64 = cleaned
+        .parse()
+        .map_err(|_| format!("{subject}: cannot parse number '{s}'"))?;
+    if !x.is_finite() || x < 0.0 || x > 9.0e15 {
+        return Err(format!("{subject}: value '{s}' out of range"));
+    }
+    let r = x.round();
+    if (x - r).abs() > 1e-6 * x.abs().max(1.0) {
+        return Err(format!("{subject}: expected an integer, got '{s}'"));
+    }
+    Ok(r as usize)
+}
+
+/// Parse a finite float (fractions, exponents — anything f64).
+pub fn parse_frac(subject: &str, s: &str) -> Result<f64, String> {
+    s.parse::<f64>()
+        .ok()
+        .filter(|x| x.is_finite())
+        .ok_or_else(|| format!("{subject}: cannot parse number '{s}'"))
+}
+
+/// Parse a byte capacity: a count with an optional binary-unit suffix —
+/// `512k` (KiB), `64m` (MiB), `2g` (GiB), or a bare byte count.
+pub fn parse_bytes(subject: &str, s: &str) -> Result<u64, String> {
+    let (body, shift) = match s.chars().last() {
+        Some('k') | Some('K') => (&s[..s.len() - 1], 10u32),
+        Some('m') | Some('M') => (&s[..s.len() - 1], 20),
+        Some('g') | Some('G') => (&s[..s.len() - 1], 30),
+        _ => (s, 0),
+    };
+    if body.is_empty() {
+        return Err(format!(
+            "{subject}: cannot parse capacity '{s}' (use e.g. 512k, 64m, 2g, \
+             or a byte count)"
+        ));
+    }
+    let n = parse_count(subject, body)? as u64;
+    n.checked_shl(shift)
+        .filter(|&b| b >> shift == n)
+        .ok_or_else(|| format!("{subject}: capacity '{s}' overflows"))
+}
+
+/// Render a byte capacity in the same grammar [`parse_bytes`] reads, at
+/// the largest exact unit — so every spec round-trips canonically.
+pub fn fmt_bytes_spec(bytes: u64) -> String {
+    const G: u64 = 1 << 30;
+    const M: u64 = 1 << 20;
+    const K: u64 = 1 << 10;
+    if bytes > 0 && bytes % G == 0 {
+        format!("{}g", bytes / G)
+    } else if bytes > 0 && bytes % M == 0 {
+        format!("{}m", bytes / M)
+    } else if bytes > 0 && bytes % K == 0 {
+        format!("{}k", bytes / K)
+    } else {
+        format!("{bytes}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_split_errors_in_the_shared_style() {
+        assert_eq!(split_kv("spec 'x'", "a=b"), Ok(("a", "b")));
+        let e = split_kv("spec 'x'", "ab").unwrap_err();
+        assert_eq!(e, "spec 'x': expected key=value, got 'ab'");
+    }
+
+    #[test]
+    fn unknown_key_lists_the_valid_keys() {
+        let e = unknown_key("synth spec 's'", "fanout", &["v", "e", "k"]);
+        assert_eq!(e, "synth spec 's': unknown key 'fanout' (valid: v,e,k)");
+    }
+
+    #[test]
+    fn counts_accept_scientific_and_underscores() {
+        assert_eq!(parse_count("t", "1e6"), Ok(1_000_000));
+        assert_eq!(parse_count("t", "250_000"), Ok(250_000));
+        assert!(parse_count("t", "1.5").unwrap_err().contains("integer"));
+        assert!(parse_count("t", "-4").unwrap_err().contains("out of range"));
+        assert!(parse_count("t", "x").unwrap_err().contains("cannot parse"));
+    }
+
+    #[test]
+    fn byte_capacities_parse_and_roundtrip() {
+        assert_eq!(parse_bytes("t", "512k"), Ok(512 << 10));
+        assert_eq!(parse_bytes("t", "64m"), Ok(64 << 20));
+        assert_eq!(parse_bytes("t", "2g"), Ok(2 << 30));
+        assert_eq!(parse_bytes("t", "4096"), Ok(4096));
+        assert_eq!(parse_bytes("t", "0"), Ok(0));
+        assert!(parse_bytes("t", "g").is_err());
+        assert!(parse_bytes("t", "1.5m").is_err());
+        for b in [0u64, 4096, 512 << 10, 64 << 20, 2 << 30, 12345] {
+            let s = fmt_bytes_spec(b);
+            assert_eq!(parse_bytes("t", &s), Ok(b), "{b} -> {s}");
+        }
+    }
+}

@@ -15,13 +15,17 @@
 //!
 //! Scope (mirrors the documented zero-alloc envelope): sequential
 //! lanes (`parallel_lanes: false` — thread spawning allocates by
-//! nature), cache off (the LRU's recency list is tree-backed), memo
-//! off (recording copies tapes by design). This file is its own test
-//! binary with a single `#[test]`, so no concurrent test thread can
-//! contribute allocation events to the measured window.
+//! nature), a *static* tier stack configured (`degree`-pinned hbm +
+//! dram tiers — the `CacheFetch` walk fills the pinned sets during
+//! warm-up and then runs allocation-free; LRU tiers are excluded
+//! because their recency list is tree-backed), memo off (recording
+//! copies tapes by design). This file is its own test binary with a
+//! single `#[test]`, so no concurrent test thread can contribute
+//! allocation events to the measured window.
 
 use hopgnn::config::RunConfig;
 use hopgnn::coordinator::{EpochDriver, Op, ProgramBuilder, SimEnv};
+use hopgnn::featstore::tier::TierSpec;
 use hopgnn::graph::datasets::tiny_test_dataset;
 use hopgnn::sampler::{sample_batch_into, SampleScratch};
 use hopgnn::util::alloc::{allocation_count, CountingAlloc};
@@ -39,6 +43,12 @@ fn steady_state_iterations_allocate_nothing() {
         fanout: 4,
         vmax: 32,
         parallel_lanes: false,
+        // static degree hierarchy: pinned sets fill on first touch and
+        // never churn, so the tier walk stays allocation-free once warm
+        tiers: Some(
+            TierSpec::parse("hbm:4k:degree+dram:16k:degree+remote")
+                .expect("static tier spec parses"),
+        ),
         ..Default::default()
     };
     let n = cfg.num_servers;
@@ -103,9 +113,23 @@ fn steady_state_iterations_allocate_nothing() {
                     steps,
                     overlap: true,
                 });
+                // tiered fetch path (TierStack::resolve_into walking
+                // the static hbm+dram hierarchy)
+                let mut csteps = b.sbuf();
+                let mut cstep = b.vbuf();
+                let tier = sample_batch_into(
+                    &d.graph,
+                    roots,
+                    &scfg,
+                    &mut rng,
+                    scratch,
+                    &mut cstep,
+                );
+                csteps.push(cstep);
+                b.op(s, Op::gather_merged(true, csteps, true));
                 b.op(s, Op::Compute {
-                    v: stats.vertices + pre.vertices,
-                    e: stats.edges + pre.edges,
+                    v: stats.vertices + pre.vertices + tier.vertices,
+                    e: stats.edges + pre.edges + tier.edges,
                 });
             }
             b.barrier();

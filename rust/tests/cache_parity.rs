@@ -220,6 +220,31 @@ fn cached_runs_replay_bit_identically_for_every_policy() {
 }
 
 #[test]
+fn legacy_cache_knobs_alias_the_tier_grammar() {
+    // `--cache <policy> --cache-mb 16` must be indistinguishable from
+    // `--tiers dram:16m:<policy>+remote` set through the config
+    // grammar (the full-field lock lives in tests/tier_parity.rs; this
+    // pins the `cfg.set("tiers", ...)` round trip at run level)
+    let d = dataset();
+    for policy in ALL_CACHE_POLICIES {
+        let legacy = run_strategy(d, &cfg(true, policy, 16), StrategySpec::dgl());
+        let mut tiered_cfg = cfg(true, CachePolicy::None, 0);
+        tiered_cfg
+            .set("tiers", &format!("dram:16m:{}+remote", policy.name()))
+            .expect("tier spec parses through the config grammar");
+        let tiered = run_strategy(d, &tiered_cfg, StrategySpec::dgl());
+        assert_bit_identical(&legacy, &tiered, policy.name());
+        assert_eq!(legacy.cache_hits, tiered.cache_hits, "{}", policy.name());
+        assert_eq!(
+            legacy.cache_evict_bytes,
+            tiered.cache_evict_bytes,
+            "{}",
+            policy.name()
+        );
+    }
+}
+
+#[test]
 fn parallel_lanes_match_sequential_with_cache_on() {
     let d = dataset();
     for policy in ALL_CACHE_POLICIES {

@@ -1,0 +1,332 @@
+//! Tier-stack parity and placement-policy locks.
+//!
+//! The multi-tier feature store (`featstore::tier`) generalizes the
+//! single [`FeatureCache`]; these tests pin the generalization down at
+//! the strategy level:
+//!
+//! * **legacy alias parity** — a `--cache <policy> --cache-mb <n>`
+//!   config and its `--tiers dram:<n>m:<policy>+remote` spelling
+//!   produce bit-identical epochs: *every* [`EpochMetrics`] field,
+//!   serial and overlap, for every gather-emitting strategy;
+//! * **remote-only parity** — the cache-less `remote` stack reproduces
+//!   the capacity-0 legacy cache to the bit (non-serving tiers are
+//!   skipped, not probed);
+//! * **placement properties** — hit rate is monotone in a single
+//!   tier's capacity (LRU stack inclusion) and in a static
+//!   degree-pinned hierarchy's total capacity (pinned-slice unions
+//!   grow); LRU promotion respects the fast tier's capacity
+//!   (promoted-in minus demoted-out never exceeds it); per-tier hit
+//!   slots partition the legacy aggregate counters.
+
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::{run_strategy, StrategySpec};
+use hopgnn::featstore::cache::CachePolicy;
+use hopgnn::featstore::tier::{TierKind, TierSpec};
+use hopgnn::graph::datasets::{load_spec, Dataset, DatasetSpec};
+use hopgnn::metrics::EpochMetrics;
+use std::sync::OnceLock;
+
+fn dataset() -> &'static Dataset {
+    static D: OnceLock<Dataset> = OnceLock::new();
+    D.get_or_init(|| {
+        load_spec(&DatasetSpec {
+            name: "tier-parity",
+            num_vertices: 8_000,
+            num_edges: 56_000,
+            feat_dim: 64,
+            classes: 8,
+            num_communities: 40,
+            train_fraction: 0.4,
+            seed: 1717,
+        })
+    })
+}
+
+fn base_cfg(overlap: bool) -> RunConfig {
+    RunConfig {
+        batch_size: 128,
+        num_servers: 4,
+        epochs: 2,
+        max_iterations: Some(3),
+        fanout: 5,
+        vmax: RunConfig::full_sim_vmax(3, 5),
+        seed: 77,
+        overlap,
+        ..Default::default()
+    }
+}
+
+fn legacy_cfg(overlap: bool, policy: CachePolicy, mb: usize) -> RunConfig {
+    RunConfig {
+        cache_policy: policy,
+        cache_mb: mb,
+        ..base_cfg(overlap)
+    }
+}
+
+fn tiers_cfg(overlap: bool, spec: &str) -> RunConfig {
+    RunConfig {
+        tiers: Some(TierSpec::parse(spec).expect("test tier spec parses")),
+        ..base_cfg(overlap)
+    }
+}
+
+/// Strategies whose builders emit feature gathers (the tier-routed
+/// ops); includes the adaptive full system — bit-identical epoch times
+/// force its merge trajectory to be identical too.
+const CACHED_KINDS: [StrategySpec; 5] = [
+    StrategySpec::dgl(),
+    StrategySpec::locality_opt(),
+    StrategySpec::hopgnn_mg(),
+    StrategySpec::hopgnn_mg_pg(),
+    StrategySpec::hopgnn(),
+];
+
+macro_rules! eq_bits {
+    ($a:expr, $b:expr, $what:expr, $field:ident) => {
+        assert_eq!(
+            $a.$field.to_bits(),
+            $b.$field.to_bits(),
+            "{}: {} diverged ({} vs {})",
+            $what,
+            stringify!($field),
+            $a.$field,
+            $b.$field
+        );
+    };
+}
+
+macro_rules! eq_exact {
+    ($a:expr, $b:expr, $what:expr, $field:ident) => {
+        assert_eq!(
+            $a.$field, $b.$field,
+            "{}: {} diverged",
+            $what,
+            stringify!($field)
+        );
+    };
+}
+
+/// Every [`EpochMetrics`] field, floats compared by bit pattern.
+fn assert_every_field_identical(
+    a: &EpochMetrics,
+    b: &EpochMetrics,
+    what: &str,
+) {
+    eq_bits!(a, b, what, epoch_time);
+    eq_bits!(a, b, what, time_sample);
+    eq_bits!(a, b, what, time_gather);
+    eq_bits!(a, b, what, time_compute);
+    eq_bits!(a, b, what, time_migrate);
+    eq_bits!(a, b, what, time_sync);
+    eq_bits!(a, b, what, time_overlap_hidden);
+    eq_bits!(a, b, what, gpu_busy_fraction);
+    eq_bits!(a, b, what, time_steps_per_iter);
+    eq_exact!(a, b, what, bytes_by_kind);
+    eq_exact!(a, b, what, remote_requests);
+    eq_exact!(a, b, what, remote_vertices);
+    eq_exact!(a, b, what, local_hits);
+    eq_exact!(a, b, what, cache_hits);
+    eq_exact!(a, b, what, cache_misses);
+    eq_exact!(a, b, what, cache_hit_bytes);
+    eq_exact!(a, b, what, cache_miss_bytes);
+    eq_exact!(a, b, what, cache_evict_bytes);
+    eq_exact!(a, b, what, tier_hits);
+    eq_exact!(a, b, what, tier_hit_bytes);
+    eq_exact!(a, b, what, tier_miss_bytes);
+    eq_exact!(a, b, what, tier_promote_bytes);
+    eq_exact!(a, b, what, tier_demote_bytes);
+    eq_exact!(a, b, what, iterations);
+    eq_exact!(a, b, what, dropped_roots);
+    assert_eq!(
+        a.per_server_busy.len(),
+        b.per_server_busy.len(),
+        "{what}: per_server_busy length"
+    );
+    for (i, (x, y)) in
+        a.per_server_busy.iter().zip(&b.per_server_busy).enumerate()
+    {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: per_server_busy[{i}] diverged"
+        );
+    }
+}
+
+#[test]
+fn legacy_cache_knobs_are_bit_identical_to_their_tier_spec() {
+    // the acceptance lock: `--cache lru --cache-mb 16` IS
+    // `--tiers dram:16m:lru+remote`, in every field, in both lanes
+    let d = dataset();
+    for overlap in [false, true] {
+        for kind in CACHED_KINDS {
+            let legacy = run_strategy(
+                d,
+                &legacy_cfg(overlap, CachePolicy::Lru, 16),
+                kind,
+            );
+            let tiered =
+                run_strategy(d, &tiers_cfg(overlap, "dram:16m:lru+remote"), kind);
+            assert_every_field_identical(
+                &legacy,
+                &tiered,
+                &format!("{} overlap={overlap}", kind.name()),
+            );
+            assert!(legacy.cache_hits > 0, "{}: no reuse", kind.name());
+        }
+    }
+}
+
+#[test]
+fn every_policy_aliases_its_tier_spelling() {
+    let d = dataset();
+    for (policy, spec) in [
+        (CachePolicy::Lru, "dram:4m:lru+remote"),
+        (CachePolicy::Degree, "dram:4m:degree+remote"),
+        (CachePolicy::Precomputed, "dram:4m:schedule+remote"),
+    ] {
+        let legacy =
+            run_strategy(d, &legacy_cfg(false, policy, 4), StrategySpec::dgl());
+        let tiered =
+            run_strategy(d, &tiers_cfg(false, spec), StrategySpec::dgl());
+        assert_every_field_identical(&legacy, &tiered, policy.name());
+    }
+}
+
+#[test]
+fn remote_only_stack_matches_capacity_zero_to_the_bit() {
+    // non-serving tiers are skipped, not probed: an explicit `remote`
+    // stack, a capacity-0 LRU, and a capacity-0 tier segment are all
+    // the same machine
+    let d = dataset();
+    for overlap in [false, true] {
+        for kind in [StrategySpec::dgl(), StrategySpec::hopgnn()] {
+            let zero = run_strategy(
+                d,
+                &legacy_cfg(overlap, CachePolicy::Lru, 0),
+                kind,
+            );
+            let remote =
+                run_strategy(d, &tiers_cfg(overlap, "remote"), kind);
+            let zero_seg =
+                run_strategy(d, &tiers_cfg(overlap, "dram:0:lru+remote"), kind);
+            let what = format!("{} overlap={overlap}", kind.name());
+            assert_every_field_identical(&zero, &remote, &what);
+            assert_every_field_identical(&zero, &zero_seg, &what);
+            assert_eq!(remote.cache_hits, 0, "{what}");
+            assert_eq!(
+                remote.tier_hits[TierKind::Remote.index()],
+                remote.cache_misses,
+                "{what}: backstop fetches must fill the remote slot"
+            );
+        }
+    }
+}
+
+#[test]
+fn hit_rate_monotone_in_single_tier_capacity() {
+    // LRU stack inclusion: a bigger tier serves a superset of requests
+    let d = dataset();
+    let mut prev = -1.0f64;
+    for mb in [1usize, 2, 8, 32] {
+        let m = run_strategy(
+            d,
+            &tiers_cfg(false, &format!("dram:{mb}m:lru+remote")),
+            StrategySpec::dgl(),
+        );
+        let rate = m.cache_hit_rate();
+        assert!(
+            rate + 1e-12 >= prev,
+            "hit rate fell from {prev} to {rate} at {mb} MiB"
+        );
+        prev = rate;
+    }
+    assert!(prev > 0.0, "largest capacity never hit");
+}
+
+#[test]
+fn degree_hierarchy_hit_rate_monotone_in_capacity() {
+    // static degree tiers pin disjoint slices of one global ranking, so
+    // the union pinned by a (c, 4c) hierarchy grows with c
+    let d = dataset();
+    let mut prev = -1.0f64;
+    for (h, dr) in [(1usize, 2usize), (2, 4), (4, 8)] {
+        let spec = format!("hbm:{h}m:degree+dram:{dr}m:degree+remote");
+        let m = run_strategy(
+            d,
+            &tiers_cfg(false, &spec),
+            StrategySpec::dgl(),
+        );
+        let rate = m.cache_hit_rate();
+        assert!(
+            rate + 1e-12 >= prev,
+            "{spec}: hit rate fell from {prev} to {rate}"
+        );
+        prev = rate;
+    }
+    assert!(prev > 0.0, "largest hierarchy never hit");
+}
+
+#[test]
+fn promotion_respects_the_fast_tier_capacity() {
+    // occupancy bound: bytes entering hbm (promotions + admissions)
+    // minus bytes displaced down into dram can never exceed the hbm
+    // capacity — so promoted-in is bounded by demoted-out + capacity
+    let d = dataset();
+    let hbm_bytes: u64 = 1 << 20;
+    // one epoch: the reported metrics are exact, not epoch-averaged
+    let cfg = RunConfig {
+        epochs: 1,
+        ..tiers_cfg(false, "hbm:1m:lru+dram:8m:lru+remote")
+    };
+    let m = run_strategy(d, &cfg, StrategySpec::dgl());
+    let hi = TierKind::Hbm.index();
+    let di = TierKind::Dram.index();
+    assert!(m.tier_hits[di] > 0, "no lower-tier hits to promote");
+    assert!(m.tier_promote_bytes[hi] > 0, "no promotions happened");
+    assert!(
+        m.tier_promote_bytes[hi] <= m.tier_demote_bytes[di] + hbm_bytes,
+        "promotion overfilled hbm: {} promoted in, {} demoted out, {} cap",
+        m.tier_promote_bytes[hi],
+        m.tier_demote_bytes[di],
+        hbm_bytes
+    );
+}
+
+#[test]
+fn tier_slots_partition_the_aggregate_counters() {
+    let d = dataset();
+    let fb = 64 * 4; // feat_dim 64 × f32
+    for spec in [
+        "dram:8m:lru+remote",
+        "hbm:2m:lru+dram:8m:lru+remote",
+        "hbm:2m:degree+dram:8m:degree+remote",
+        "dram:2m:lru+ssd:8m:lru+remote",
+    ] {
+        // one epoch: epoch-averaging floors every counter separately,
+        // which would break the exact multiplicative relations below
+        let cfg = RunConfig {
+            epochs: 1,
+            ..tiers_cfg(false, spec)
+        };
+        let m = run_strategy(d, &cfg, StrategySpec::dgl());
+        let ri = TierKind::Remote.index();
+        let cache_tier_hits: u64 = m.tier_hits[..ri].iter().sum();
+        assert_eq!(cache_tier_hits, m.cache_hits, "{spec}");
+        assert_eq!(m.tier_hits[ri], m.cache_misses, "{spec}");
+        let hit_bytes: u64 = m.tier_hit_bytes.iter().sum();
+        assert_eq!(
+            hit_bytes,
+            m.cache_hit_bytes + m.cache_miss_bytes,
+            "{spec}: tier hit bytes must partition the request volume"
+        );
+        for k in 0..m.tier_hits.len() {
+            assert_eq!(
+                m.tier_hit_bytes[k],
+                m.tier_hits[k] * fb,
+                "{spec}: tier {k} bytes != rows × feat_bytes"
+            );
+        }
+    }
+}
