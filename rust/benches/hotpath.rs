@@ -39,7 +39,7 @@ use hopgnn::bench::harness::{bench, BenchResult};
 use hopgnn::bench::memo;
 use hopgnn::config::RunConfig;
 use hopgnn::coordinator::{
-    EpochDriver, Op, ProgramBuilder, SimEnv, StrategySpec,
+    EpochDriver, LaneDispatch, Op, ProgramBuilder, SimEnv, StrategySpec,
 };
 use hopgnn::featstore::pregather::{PlanScratch, PregatherPlan};
 use hopgnn::featstore::tier::{build_stacks, TierSpec};
@@ -288,6 +288,54 @@ fn run_benches() -> Vec<BenchResult> {
     }));
     std::hint::black_box(driver.finish().epoch_time);
 
+    // 8b. lane dispatch on a many-small-fragments program: 16
+    //     barrier-separated fragments of 4 lanes x ~34 op-weight each,
+    //     the small-but-frequent regime the old 4096 work threshold
+    //     pushed back onto the serial path because a thread spawn per
+    //     fragment cost more than it bought. Same program, three
+    //     forced dispatch modes, each on a session-persistent driver —
+    //     the pool's workers outlive every measured call, so the pool
+    //     bench measures steady-state dispatch, not pool construction.
+    let mut rng = Rng::new(7);
+    for _ in 0..16 {
+        for s in 0..4 {
+            let mut verts = b.vbuf();
+            verts.extend((0..32).map(|_| {
+                d.train_vertices[rng.below(d.train_vertices.len())]
+            }));
+            b.op(s, Op::Sample { vertices: 16 });
+            b.op(s, Op::Gather {
+                vertices: verts,
+                overlap: false,
+            });
+            b.op(s, Op::Compute { v: 16, e: 48 });
+        }
+        b.barrier();
+    }
+    b.allreduce();
+    let frag_program = b.take();
+    let mut pool_driver = EpochDriver::builder(&env)
+        .dispatch(LaneDispatch::Pool)
+        .build();
+    results.push(bench("engine.lanes_dispatch(pool)", 0.5, || {
+        pool_driver.exec(&frag_program);
+    }));
+    std::hint::black_box(pool_driver.finish().epoch_time);
+    let mut spawn_driver = EpochDriver::builder(&env)
+        .dispatch(LaneDispatch::SpawnPerItem)
+        .build();
+    results.push(bench("engine.lanes_dispatch(spawn)", 0.5, || {
+        spawn_driver.exec(&frag_program);
+    }));
+    std::hint::black_box(spawn_driver.finish().epoch_time);
+    let mut serial_driver = EpochDriver::builder(&env)
+        .dispatch(LaneDispatch::Serial)
+        .build();
+    results.push(bench("engine.lanes_dispatch(serial)", 0.5, || {
+        serial_driver.exec(&frag_program);
+    }));
+    std::hint::black_box(serial_driver.finish().epoch_time);
+
     // 9. the epoch-sample memo tier, sweep-shaped: the same hopgnn
     //    cell sampled live vs replayed from its recorded tape. The
     //    replay bench's warm-up call records the tape; every measured
@@ -501,6 +549,19 @@ fn main() {
             "\nmemo replay vs live sampling: {:.2}x \
              ({live:.0} us -> {replay:.0} us per epoch)",
             live / replay
+        );
+    }
+    // the lane pool's reason to exist, stated directly: the same
+    // many-small-fragments program dispatched through the persistent
+    // pool vs the legacy spawn-per-fragment scope
+    if let (Some(pool), Some(spawn)) = (
+        med("engine.lanes_dispatch(pool)"),
+        med("engine.lanes_dispatch(spawn)"),
+    ) {
+        println!(
+            "pool vs spawn-per-item lane dispatch: {:.2}x \
+             ({spawn:.0} us -> {pool:.0} us per 16-fragment program)",
+            spawn / pool
         );
     }
 

@@ -15,6 +15,13 @@
 //! block on that key alone and the expensive computation still runs
 //! exactly once. (The previous design held the table mutex across the
 //! whole load, which would have serialized every parallel cell.)
+//!
+//! Sweep cells now execute on budgeted pool runners (`--jobs` splits
+//! one thread budget between cell runners and each cell's epoch
+//! lanes; see `crate::bench::sweep` and `crate::util::pool`), so the
+//! per-key locking here may also be contended by a cell runner while
+//! its sibling's lane workers are busy — the same rule applies:
+//! distinct keys never serialize each other.
 
 use crate::config::RunConfig;
 use crate::coordinator::{SimEnv, StrategySpec};

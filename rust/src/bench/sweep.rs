@@ -21,15 +21,21 @@
 //! # Parallel execution (`--jobs`)
 //!
 //! Grid cells are independent, so [`SweepSpec::run`] executes them on a
-//! scoped worker pool ([`crate::util::pool`]). The worker count comes
-//! from [`SweepSpec::jobs`] when set, else the process-wide default
-//! ([`set_default_jobs`], wired to the `bench --jobs` flag; `0` =
-//! available parallelism). Results are written back in deterministic
-//! grid order and every cell seeds its own RNG from its config, so
-//! `--jobs 1` and `--jobs N` produce bit-identical grids and reports —
-//! locked by `tests/sweep_parallel.rs`. Only [`SweepCell::wall_secs`]
-//! (host wall-clock, reported by the `scale` experiment) varies with
-//! scheduling.
+//! scoped worker pool ([`crate::util::pool`]). `--jobs N` is a *total
+//! thread budget*, not just a cell-worker count: with `C` cells,
+//! `min(N, C)` runners execute cells concurrently and each runner's
+//! epoch drivers get a lane allowance of `N / min(N, C)` threads
+//! ([`crate::util::pool::LaneAllowanceGuard`], installed inside the
+//! cell closure on whichever thread runs it). The split depends only
+//! on the budget and the cell count, so nested cell x lane parallelism
+//! never oversubscribes the budget (`tests/pool_budget.rs`) and
+//! `--jobs 1` vs `--jobs N` — with or without `parallel_lanes` —
+//! produce bit-identical grids and reports, locked by
+//! `tests/sweep_parallel.rs`. The budget comes from [`SweepSpec::jobs`]
+//! when set, else the process-wide [`crate::util::pool::thread_budget`]
+//! (wired to the CLI `--jobs` flags; `0` = available parallelism).
+//! Only [`SweepCell::wall_secs`] (host wall-clock, reported by the
+//! `scale` experiment) varies with scheduling.
 
 use super::memo;
 use crate::cluster::FabricSpec;
@@ -41,22 +47,6 @@ use crate::graph::datasets;
 use crate::metrics::EpochMetrics;
 use crate::util::pool;
 use crate::util::table::{fmt_bytes, fmt_secs, Table};
-use std::sync::atomic::{AtomicUsize, Ordering};
-
-/// Process-wide default worker count for [`SweepSpec::run`] (`0` =
-/// auto: one worker per available hardware thread). Set once by the
-/// CLI's `--jobs`; [`SweepSpec::jobs`] overrides it per sweep.
-static DEFAULT_JOBS: AtomicUsize = AtomicUsize::new(0);
-
-/// Set the process-wide `--jobs` default (0 = available parallelism).
-pub fn set_default_jobs(jobs: usize) {
-    DEFAULT_JOBS.store(jobs, Ordering::Relaxed);
-}
-
-/// The current process-wide `--jobs` default (unresolved; 0 = auto).
-pub fn default_jobs() -> usize {
-    DEFAULT_JOBS.load(Ordering::Relaxed)
-}
 
 /// One point on an axis: a strategy, or a labeled batch of config
 /// patches applied through [`RunConfig::set`].
@@ -224,8 +214,8 @@ pub struct SweepSpec {
     pub base: RunConfig,
     pub strategy: StrategySpec,
     pub axes: Vec<Axis>,
-    /// Worker threads for [`Self::run`] (`None` = the process-wide
-    /// [`default_jobs`]; `Some(0)` = auto).
+    /// Thread budget for [`Self::run`] (`None` = the process-wide
+    /// [`crate::util::pool::thread_budget`]; `Some(0)` = auto).
     pub jobs: Option<usize>,
 }
 
@@ -245,7 +235,9 @@ impl SweepSpec {
         self
     }
 
-    /// Pin the worker count for this sweep (builder style; `0` = auto).
+    /// Pin this sweep's total thread budget — cell runners x epoch
+    /// lanes (builder style; `0` = all cores). Unset falls back to the
+    /// process-wide [`crate::util::pool::thread_budget`].
     pub fn jobs(mut self, jobs: usize) -> Self {
         self.jobs = Some(jobs);
         self
@@ -331,9 +323,16 @@ impl SweepSpec {
     /// row-major grid order whatever the worker interleaving.
     pub fn run(&self) -> Result<SweepGrid, String> {
         let expanded = self.expand()?;
-        let jobs =
-            pool::resolve_jobs(self.jobs.unwrap_or_else(default_jobs));
-        let cells = pool::run_indexed(expanded.len(), jobs, |i| {
+        let budget = pool::resolve_jobs(
+            self.jobs.unwrap_or_else(pool::thread_budget),
+        );
+        // deterministic budget split: every cell runner gets the same
+        // lane allowance, a pure function of (budget, cell count) —
+        // never of which worker picks up which cell
+        let runners = budget.min(expanded.len()).max(1);
+        let lane_share = budget / runners;
+        let cells = pool::run_indexed(expanded.len(), runners, |i| {
+            let _lanes = pool::LaneAllowanceGuard::set(lane_share);
             let (index, strategy, cfg) = &expanded[i];
             let t0 = std::time::Instant::now();
             let metrics = memo::run(cfg, *strategy);

@@ -11,13 +11,28 @@
 //!
 //! Each [`Item::Lanes`] executes one op lane per server. Lanes are
 //! independent by construction (an op only touches its own server's
-//! clock; byte records are pure sums), so the driver runs them on
-//! `std::thread::scope` workers when there is enough work to amortize
-//! the spawns, then reduces lane-local `NetStats`/metrics deltas in
-//! server order. The lane executor is the same function in both modes
-//! and the reduction order is fixed, so parallel execution is
-//! **bit-identical** to sequential execution — `deterministic` tests
-//! hold with lanes enabled.
+//! clock; byte records are pure sums), so the driver dispatches them
+//! to a session-persistent [`crate::util::pool::LanePool`]: parked
+//! worker threads created once per session (or carried across epochs
+//! by the strategy, see [`SessionState`]), woken per fragment to claim
+//! lane indices off an atomic word, with the dispatching thread
+//! claiming alongside them. Lane results land in each lane's
+//! [`LaneScratch`] result slot and are reduced in server order after
+//! the fragment drains, so parallel execution is **bit-identical** to
+//! sequential execution — `deterministic` tests hold with lanes
+//! enabled, and `tests/parity.rs` / `tests/fabric_parity.rs` lock it.
+//!
+//! The pool engages when [`crate::config::RunConfig::parallel_lanes`]
+//! is on, the fragment's summed [`Op::weight`] reaches the dispatch
+//! threshold (`HOPGNN_PARALLEL_THRESHOLD`, default
+//! [`DEFAULT_PARALLEL_WORK_THRESHOLD`]), and the
+//! [`crate::util::pool::lane_allowance`] grants this driver more than
+//! one thread — inside `bench sweep --jobs N` that allowance is the
+//! driver's deterministic share of the `--jobs` budget, so nested
+//! cell × lane parallelism never oversubscribes. [`LaneDispatch`]
+//! forces a mode explicitly: the parity tests pin `Serial`/`Pool`, and
+//! the `engine.lanes_dispatch` hot-path bench keeps the legacy
+//! `SpawnPerItem` path around to measure what the pool saves.
 //!
 //! ## Gather/compute overlap
 //!
@@ -70,11 +85,63 @@ use crate::featstore::pregather::{PlanScratch, PregatherPlan};
 use crate::featstore::tier::{TierKind, TierStack, NUM_TIER_KINDS};
 use crate::featstore::{FeatureStore, GatherPlan};
 use crate::metrics::EpochMetrics;
+use crate::util::pool::{self, IndexedCells, LanePool};
 use crate::util::stamp::StampedSet;
 
-/// Minimum summed op weight in a lane set before the driver spawns
-/// worker threads (below this, sequential execution is faster).
-const PARALLEL_WORK_THRESHOLD: usize = 4096;
+/// Default minimum summed [`Op::weight`] in a lane set before the
+/// driver dispatches it to the lane pool (below this, sequential
+/// execution is faster). The pre-pool spawn-per-fragment driver needed
+/// 4096 to amortize `std::thread::scope` spawn+join; pool dispatch
+/// (unpark + atomic claim) is over an order of magnitude cheaper per
+/// fragment — measured by the `engine.lanes_dispatch` hot-path bench —
+/// so small-but-frequent lane sets now parallelize too.
+pub const DEFAULT_PARALLEL_WORK_THRESHOLD: usize = 1024;
+
+/// The dispatch threshold, overridable via the
+/// `HOPGNN_PARALLEL_THRESHOLD` environment variable (read once per
+/// process; `0` parallelizes every multi-lane fragment). Both sides of
+/// the threshold are bit-identical by construction — the override is a
+/// wall-clock tuning knob only.
+fn parallel_work_threshold() -> usize {
+    static CACHED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("HOPGNN_PARALLEL_THRESHOLD")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(DEFAULT_PARALLEL_WORK_THRESHOLD)
+    })
+}
+
+/// How an [`EpochDriver`] executes multi-lane fragments. `Auto` is the
+/// production mode; the forced modes exist so parity tests and the
+/// dispatch bench can pin a mechanism regardless of config, work size,
+/// or the machine's lane allowance.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LaneDispatch {
+    /// [`crate::config::RunConfig::parallel_lanes`], the work
+    /// threshold, and the lane allowance decide per fragment.
+    #[default]
+    Auto,
+    /// Always sequential, regardless of config.
+    Serial,
+    /// Always the persistent lane pool, sized one thread per server
+    /// (ignoring the budget allowance).
+    Pool,
+    /// Legacy pre-pool path: `std::thread::scope` spawn per fragment.
+    /// Kept for the `engine.lanes_dispatch` bench comparison.
+    SpawnPerItem,
+}
+
+/// Cross-epoch driver state a strategy can thread between sessions via
+/// [`EpochDriver::finish_state`] / [`DriverBuilder`]: the per-lane
+/// feature tier stacks (warm rows, when
+/// [`crate::config::RunConfig::cache_persist`] wants them) and the
+/// persistent lane pool (so a whole training run pays the lane-worker
+/// spawn cost once, not once per epoch).
+pub struct SessionState {
+    pub tiers: Vec<TierStack>,
+    pub pool: Option<LanePool>,
+}
 
 /// One epoch's execution session. Strategies stream [`Program`]
 /// fragments (typically one per iteration) through [`Self::exec`] so
@@ -96,52 +163,104 @@ pub struct EpochDriver<'e, 'a> {
     /// sequential.
     tiers: Vec<TierStack>,
     /// One reusable execution scratch per server lane (accounting
-    /// deltas + gather-planning buffers), reset per lane run instead of
-    /// reallocated — the driver-side half of the zero-allocation
-    /// iteration hot path.
+    /// deltas + gather-planning buffers + the lane result slot), reset
+    /// per lane run instead of reallocated — the driver-side half of
+    /// the zero-allocation iteration hot path, in every dispatch mode.
     scratch: Vec<LaneScratch>,
-    parallel_override: Option<bool>,
+    dispatch: LaneDispatch,
+    /// The persistent lane workers, created lazily on the first
+    /// fragment that wants them (or handed in warm via the builder).
+    pool: Option<LanePool>,
+    /// Set when pool creation was declined (lane allowance of 1), so
+    /// the decision is made once per session, not per fragment.
+    no_pool: bool,
 }
 
-impl<'e, 'a> EpochDriver<'e, 'a> {
-    pub fn new(env: &'e SimEnv<'a>) -> Self {
-        Self::with_parts(env, None, None)
-    }
+/// Builder-style construction for [`EpochDriver`] sessions: optional
+/// warm [`SessionState`] pieces (tier stacks, lane pool) and an
+/// optional forced [`LaneDispatch`]. Replaces the old positional
+/// `Option` threading that tests used to force lane modes.
+pub struct DriverBuilder<'e, 'a> {
+    env: &'e SimEnv<'a>,
+    tiers: Option<Vec<TierStack>>,
+    pool: Option<LanePool>,
+    dispatch: LaneDispatch,
+}
 
-    /// `new` with warm feature tier stacks carried over from a
-    /// previous epoch session (the `--cache-persist` path; see
-    /// [`Self::finish_session`]).
-    pub fn with_tiers(env: &'e SimEnv<'a>, tiers: Vec<TierStack>) -> Self {
-        // hard assert: exec_lanes zips lanes with tier stacks, so a
-        // wrong length would silently drop server lanes in release
+impl<'e, 'a> DriverBuilder<'e, 'a> {
+    /// Seed the session with warm feature tier stacks carried over
+    /// from a previous epoch (the `--cache-persist` path; see
+    /// [`EpochDriver::finish_state`]).
+    pub fn tiers(mut self, tiers: Vec<TierStack>) -> Self {
+        // hard assert: lane execution zips lanes with tier stacks, so
+        // a wrong length would silently drop server lanes in release
         assert_eq!(
             tiers.len(),
-            env.num_servers(),
+            self.env.num_servers(),
             "persisted tier stacks do not match the env's server count"
         );
-        Self::with_parts(env, Some(tiers), None)
+        self.tiers = Some(tiers);
+        self
     }
 
-    /// Full constructor: optional warm tier stacks, optional forced
-    /// lane-parallelism decision (tests assert bit-parity between the
-    /// two modes through this entry point).
-    fn with_parts(
-        env: &'e SimEnv<'a>,
-        tiers: Option<Vec<TierStack>>,
-        parallel_override: Option<bool>,
-    ) -> Self {
+    /// Reuse a lane pool from a previous session instead of spawning
+    /// fresh workers.
+    pub fn pool(mut self, pool: LanePool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Force a lane dispatch mode (parity tests, the dispatch bench).
+    pub fn dispatch(mut self, dispatch: LaneDispatch) -> Self {
+        self.dispatch = dispatch;
+        self
+    }
+
+    pub fn build(self) -> EpochDriver<'e, 'a> {
+        let env = self.env;
         let n = env.num_servers();
-        Self {
+        EpochDriver {
             env,
             store: env.store(),
             clocks: Clocks::new(n),
             stats: NetStats::new(n),
             m: EpochMetrics::default(),
             pending: vec![0.0f64; n],
-            tiers: tiers.unwrap_or_else(|| env.build_tiers()),
+            tiers: self.tiers.unwrap_or_else(|| env.build_tiers()),
             scratch: (0..n).map(|_| LaneScratch::new(n)).collect(),
-            parallel_override,
+            dispatch: self.dispatch,
+            pool: self.pool,
+            no_pool: false,
         }
+    }
+
+    /// One-shot convenience: build, execute `program`, finish.
+    pub fn run(self, program: &Program) -> EpochMetrics {
+        let mut driver = self.build();
+        driver.exec(program);
+        driver.finish()
+    }
+}
+
+impl<'e, 'a> EpochDriver<'e, 'a> {
+    pub fn builder(env: &'e SimEnv<'a>) -> DriverBuilder<'e, 'a> {
+        DriverBuilder {
+            env,
+            tiers: None,
+            pool: None,
+            dispatch: LaneDispatch::Auto,
+        }
+    }
+
+    pub fn new(env: &'e SimEnv<'a>) -> Self {
+        Self::builder(env).build()
+    }
+
+    /// `new` with warm feature tier stacks carried over from a
+    /// previous epoch session (the `--cache-persist` path; see
+    /// [`Self::finish_session`]).
+    pub fn with_tiers(env: &'e SimEnv<'a>, tiers: Vec<TierStack>) -> Self {
+        Self::builder(env).tiers(tiers).build()
     }
 
     /// Execute one schedule fragment against the session state.
@@ -151,28 +270,76 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
         for item in &program.items {
             match item {
                 Item::Lanes(lanes) => {
-                    let work: usize = lanes
-                        .iter()
-                        .flat_map(|l| l.iter().map(Op::weight))
-                        .sum();
                     let active =
                         lanes.iter().filter(|l| !l.is_empty()).count();
-                    let parallel = self.parallel_override.unwrap_or(
-                        self.env.cfg.parallel_lanes
-                            && work >= PARALLEL_WORK_THRESHOLD,
-                    ) && active > 1;
-                    exec_lanes(
-                        self.env,
-                        &self.store,
-                        lanes,
-                        parallel,
-                        &mut self.clocks,
-                        &mut self.stats,
-                        &mut self.m,
-                        &mut self.pending,
-                        &mut self.tiers,
-                        &mut self.scratch,
-                    );
+                    let wanted = active > 1
+                        && match self.dispatch {
+                            LaneDispatch::Serial => false,
+                            LaneDispatch::Pool
+                            | LaneDispatch::SpawnPerItem => true,
+                            LaneDispatch::Auto => {
+                                self.env.cfg.parallel_lanes && {
+                                    let work: usize = lanes
+                                        .iter()
+                                        .flat_map(|l| {
+                                            l.iter().map(Op::weight)
+                                        })
+                                        .sum();
+                                    work >= parallel_work_threshold()
+                                }
+                            }
+                        };
+                    if wanted
+                        && self.dispatch == LaneDispatch::SpawnPerItem
+                    {
+                        exec_lanes_spawn(
+                            self.env,
+                            &self.store,
+                            lanes,
+                            &mut self.clocks,
+                            &mut self.stats,
+                            &mut self.m,
+                            &mut self.pending,
+                            &mut self.tiers,
+                            &mut self.scratch,
+                        );
+                        continue;
+                    }
+                    let pool = if wanted {
+                        ensure_pool(
+                            &mut self.pool,
+                            &mut self.no_pool,
+                            n,
+                            self.dispatch == LaneDispatch::Pool,
+                        )
+                    } else {
+                        None
+                    };
+                    match pool {
+                        Some(pool) => exec_lanes_pool(
+                            pool,
+                            self.env,
+                            &self.store,
+                            lanes,
+                            &mut self.clocks,
+                            &mut self.stats,
+                            &mut self.m,
+                            &mut self.pending,
+                            &mut self.tiers,
+                            &mut self.scratch,
+                        ),
+                        None => exec_lanes_serial(
+                            self.env,
+                            &self.store,
+                            lanes,
+                            &mut self.clocks,
+                            &mut self.stats,
+                            &mut self.m,
+                            &mut self.pending,
+                            &mut self.tiers,
+                            &mut self.scratch,
+                        ),
+                    }
                 }
                 Item::Barrier => {
                     // async transfers keep flowing while a server waits
@@ -219,14 +386,24 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
     /// `iterations`, `time_steps_per_iter`, and `dropped_roots` are not
     /// known here.
     pub fn finish(self) -> EpochMetrics {
-        self.finish_session().0
+        self.finish_state().0
     }
 
     /// [`Self::finish`] that also hands the per-lane tier stacks
     /// back, so a strategy running with
     /// [`crate::config::RunConfig::cache_persist`] can seed its next
-    /// epoch's session via [`Self::with_tiers`].
-    pub fn finish_session(mut self) -> (EpochMetrics, Vec<TierStack>) {
+    /// epoch's session via [`Self::with_tiers`]. (The lane pool is
+    /// dropped; use [`Self::finish_state`] to keep it too.)
+    pub fn finish_session(self) -> (EpochMetrics, Vec<TierStack>) {
+        let (m, state) = self.finish_state();
+        (m, state.tiers)
+    }
+
+    /// [`Self::finish`] that hands back everything worth carrying into
+    /// the next epoch's session ([`SessionState`]): the tier stacks
+    /// and the persistent lane pool, re-seeded through
+    /// [`DriverBuilder::tiers`] / [`DriverBuilder::pool`].
+    pub fn finish_state(mut self) -> (EpochMetrics, SessionState) {
         expose_pending(&mut self.clocks, &mut self.pending);
         self.stats.validate().expect("byte accounting");
         self.m.absorb_net(&self.stats);
@@ -235,23 +412,47 @@ impl<'e, 'a> EpochDriver<'e, 'a> {
         self.m.per_server_busy = (0..self.env.num_servers())
             .map(|s| self.clocks.busy_time(s))
             .collect();
-        (self.m, self.tiers)
+        (
+            self.m,
+            SessionState {
+                tiers: self.tiers,
+                pool: self.pool,
+            },
+        )
     }
 
     /// One-shot: execute `program` in a fresh session and finish.
     pub fn run(env: &SimEnv, program: &Program) -> EpochMetrics {
-        Self::run_inner(env, program, None)
+        Self::builder(env).run(program)
     }
+}
 
-    fn run_inner(
-        env: &SimEnv,
-        program: &Program,
-        parallel_override: Option<bool>,
-    ) -> EpochMetrics {
-        let mut driver = EpochDriver::with_parts(env, None, parallel_override);
-        driver.exec(program);
-        driver.finish()
+/// Create (once per session) the lane pool for a driver that decided
+/// to parallelize. `forced` ([`LaneDispatch::Pool`]) sizes one thread
+/// per server regardless of the budget allowance; `Auto` respects
+/// [`pool::lane_allowance`] and declines (serial fallback, remembered
+/// in `no_pool`) when the allowance grants a single thread.
+fn ensure_pool<'p>(
+    pool: &'p mut Option<LanePool>,
+    no_pool: &mut bool,
+    num_servers: usize,
+    forced: bool,
+) -> Option<&'p mut LanePool> {
+    if pool.is_none() && !*no_pool {
+        let threads = if forced {
+            num_servers
+        } else {
+            num_servers.min(pool::lane_allowance())
+        };
+        if threads > 1 {
+            // the dispatching thread claims lanes too, so spawn one
+            // fewer worker than the thread allowance
+            *pool = Some(LanePool::new(threads - 1));
+        } else {
+            *no_pool = true;
+        }
     }
+    pool.as_mut()
 }
 
 fn expose_pending(clocks: &mut Clocks, pending: &mut [f64]) {
@@ -278,6 +479,11 @@ struct LaneScratch {
     plan: GatherPlan,
     pre: PregatherPlan,
     ps: PlanScratch,
+    /// The lane run's `(clock, busy_dt, pending)` result, written by
+    /// whichever thread ran the lane and reduced in server order by
+    /// the dispatcher — a reused slot, so parallel dispatch allocates
+    /// nothing either.
+    out: (f64, f64, f64),
 }
 
 impl LaneScratch {
@@ -289,16 +495,40 @@ impl LaneScratch {
             plan: GatherPlan::default(),
             pre: PregatherPlan::default(),
             ps: PlanScratch::default(),
+            out: (0.0, 0.0, 0.0),
         }
     }
 }
 
+/// Deterministic lane reduction: server order, independent of which
+/// thread finished which lane first — the property that makes every
+/// parallel mode bit-identical to sequential execution.
+fn reduce_lanes(
+    clocks: &mut Clocks,
+    stats: &mut NetStats,
+    m: &mut EpochMetrics,
+    pending: &mut [f64],
+    scratches: &[LaneScratch],
+) {
+    for (s, scratch) in scratches.iter().enumerate() {
+        let (t, busy_dt, pend) = scratch.out;
+        clocks.set(s, t);
+        clocks.add_busy(s, busy_dt);
+        stats.merge(&scratch.stats);
+        m.accumulate(&scratch.m);
+        pending[s] = pend;
+    }
+}
+
+/// Run + reduce inline per lane, in server order. Lanes never read
+/// another lane's clock, pending slot, or the global accumulators, so
+/// reducing lane s before running lane s+1 is bit-identical to the
+/// run-all-then-reduce parallel paths.
 #[allow(clippy::too_many_arguments)]
-fn exec_lanes(
+fn exec_lanes_serial(
     env: &SimEnv,
     store: &FeatureStore,
     lanes: &[Vec<Op>],
-    parallel: bool,
     clocks: &mut Clocks,
     stats: &mut NetStats,
     m: &mut EpochMetrics,
@@ -306,63 +536,111 @@ fn exec_lanes(
     tiers: &mut [TierStack],
     scratches: &mut [LaneScratch],
 ) {
-    if parallel {
-        let results: Vec<(f64, f64, f64)> = std::thread::scope(|scope| {
-            let handles: Vec<_> = lanes
-                .iter()
-                .zip(tiers.iter_mut().zip(scratches.iter_mut()))
-                .enumerate()
-                .map(|(s, (ops, (stack, scratch)))| {
-                    let t0 = clocks.now(s);
-                    let p0 = pending[s];
-                    scope.spawn(move || {
-                        run_lane(env, store, s, ops, t0, p0, stack, scratch)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("lane worker panicked"))
-                .collect()
+    for (s, (ops, (stack, scratch))) in lanes
+        .iter()
+        .zip(tiers.iter_mut().zip(scratches.iter_mut()))
+        .enumerate()
+    {
+        let (t, busy_dt, pend) = run_lane(
+            env,
+            store,
+            s,
+            ops,
+            clocks.now(s),
+            pending[s],
+            stack,
+            scratch,
+        );
+        clocks.set(s, t);
+        clocks.add_busy(s, busy_dt);
+        stats.merge(&scratch.stats);
+        m.accumulate(&scratch.m);
+        pending[s] = pend;
+    }
+}
+
+/// Dispatch the fragment to the session's persistent lane pool: the
+/// parked workers plus this thread claim lane indices, write results
+/// into the per-lane scratch slots, and the fragment is reduced in
+/// server order once it drains.
+#[allow(clippy::too_many_arguments)]
+fn exec_lanes_pool(
+    pool: &mut LanePool,
+    env: &SimEnv,
+    store: &FeatureStore,
+    lanes: &[Vec<Op>],
+    clocks: &mut Clocks,
+    stats: &mut NetStats,
+    m: &mut EpochMetrics,
+    pending: &mut [f64],
+    tiers: &mut [TierStack],
+    scratches: &mut [LaneScratch],
+) {
+    {
+        let clocks_ro: &Clocks = clocks;
+        let pending_ro: &[f64] = pending;
+        let tier_cells = IndexedCells::new(tiers);
+        let scratch_cells = IndexedCells::new(scratches);
+        pool.run(lanes.len(), &|s: usize| {
+            // safety: the pool's claim loop hands each lane index to
+            // exactly one thread per dispatch
+            let stack = unsafe { tier_cells.get(s) };
+            let scratch = unsafe { scratch_cells.get(s) };
+            let out = run_lane(
+                env,
+                store,
+                s,
+                &lanes[s],
+                clocks_ro.now(s),
+                pending_ro[s],
+                stack,
+                &mut *scratch,
+            );
+            scratch.out = out;
         });
-        // deterministic reduction: server order, independent of which
-        // lane finished first
-        for (s, (t, busy_dt, pend)) in results.into_iter().enumerate() {
-            clocks.set(s, t);
-            clocks.add_busy(s, busy_dt);
-            stats.merge(&scratches[s].stats);
-            m.accumulate(&scratches[s].m);
-            pending[s] = pend;
-        }
-    } else {
-        // run + reduce inline per lane, in server order. Lanes never
-        // read another lane's clock, pending slot, or the global
-        // accumulators, so reducing lane s before running lane s+1 is
-        // bit-identical to the collect-then-reduce parallel path — and
-        // allocation-free, which the parallel path (thread state, the
-        // results Vec) inherently is not.
+    }
+    reduce_lanes(clocks, stats, m, pending, scratches);
+}
+
+/// Legacy parallel path: one `std::thread::scope` spawn per lane, per
+/// fragment. Only reachable via [`LaneDispatch::SpawnPerItem`] — kept
+/// so the `engine.lanes_dispatch` bench can measure what the pool
+/// saves, and as a parity reference for the spawn-era semantics.
+#[allow(clippy::too_many_arguments)]
+fn exec_lanes_spawn(
+    env: &SimEnv,
+    store: &FeatureStore,
+    lanes: &[Vec<Op>],
+    clocks: &mut Clocks,
+    stats: &mut NetStats,
+    m: &mut EpochMetrics,
+    pending: &mut [f64],
+    tiers: &mut [TierStack],
+    scratches: &mut [LaneScratch],
+) {
+    std::thread::scope(|scope| {
         for (s, (ops, (stack, scratch))) in lanes
             .iter()
             .zip(tiers.iter_mut().zip(scratches.iter_mut()))
             .enumerate()
         {
-            let (t, busy_dt, pend) = run_lane(
-                env,
-                store,
-                s,
-                ops,
-                clocks.now(s),
-                pending[s],
-                stack,
-                scratch,
-            );
-            clocks.set(s, t);
-            clocks.add_busy(s, busy_dt);
-            stats.merge(&scratch.stats);
-            m.accumulate(&scratch.m);
-            pending[s] = pend;
+            let t0 = clocks.now(s);
+            let p0 = pending[s];
+            scope.spawn(move || {
+                scratch.out = run_lane(
+                    env,
+                    store,
+                    s,
+                    ops,
+                    t0,
+                    p0,
+                    stack,
+                    &mut *scratch,
+                );
+            });
         }
-    }
+    });
+    reduce_lanes(clocks, stats, m, pending, scratches);
 }
 
 /// Execute one server's ops starting from clock `t0` and async-pending
@@ -398,6 +676,8 @@ fn run_lane(
         plan,
         pre,
         ps,
+        // `out` is the caller's result slot, written after this returns
+        ..
     } = scratch;
     stats.reset();
     m.reset();
@@ -638,24 +918,121 @@ mod tests {
     }
 
     #[test]
-    fn sequential_and_parallel_lanes_are_bit_identical() {
+    fn sequential_pool_and_spawn_lanes_are_bit_identical() {
         let d = tiny_test_dataset(200);
         let prog = demo_program(4);
         let env = SimEnv::new(&d, env_with(false, true));
-        let seq = EpochDriver::run_inner(&env, &prog, Some(false));
-        let par = EpochDriver::run_inner(&env, &prog, Some(true));
-        assert_eq!(seq.total_bytes(), par.total_bytes());
-        for k in 0..crate::cluster::network::NUM_KINDS {
-            assert_eq!(seq.bytes_by_kind[k], par.bytes_by_kind[k]);
+        let run = |dispatch| {
+            EpochDriver::builder(&env).dispatch(dispatch).run(&prog)
+        };
+        let seq = run(LaneDispatch::Serial);
+        for (what, par) in [
+            ("pool", run(LaneDispatch::Pool)),
+            ("spawn-per-item", run(LaneDispatch::SpawnPerItem)),
+        ] {
+            assert_eq!(seq.total_bytes(), par.total_bytes(), "{what}");
+            for k in 0..crate::cluster::network::NUM_KINDS {
+                assert_eq!(
+                    seq.bytes_by_kind[k], par.bytes_by_kind[k],
+                    "{what}"
+                );
+            }
+            assert_eq!(
+                seq.epoch_time.to_bits(),
+                par.epoch_time.to_bits(),
+                "{what}"
+            );
+            assert_eq!(
+                seq.gpu_busy_fraction.to_bits(),
+                par.gpu_busy_fraction.to_bits(),
+                "{what}"
+            );
+            assert_eq!(
+                seq.time_gather.to_bits(),
+                par.time_gather.to_bits(),
+                "{what}"
+            );
+            assert_eq!(seq.remote_vertices, par.remote_vertices, "{what}");
+            assert_eq!(seq.local_hits, par.local_hits, "{what}");
         }
-        assert_eq!(seq.epoch_time.to_bits(), par.epoch_time.to_bits());
-        assert_eq!(
-            seq.gpu_busy_fraction.to_bits(),
-            par.gpu_busy_fraction.to_bits()
-        );
-        assert_eq!(seq.time_gather.to_bits(), par.time_gather.to_bits());
-        assert_eq!(seq.remote_vertices, par.remote_vertices);
-        assert_eq!(seq.local_hits, par.local_hits);
+    }
+
+    #[test]
+    fn pool_persists_across_fragments_and_sessions() {
+        // one pool serves every fragment of a session, and the
+        // session state hands it to the next session untouched
+        let d = tiny_test_dataset(212);
+        let env = SimEnv::new(&d, env_with(false, true));
+        let prog = demo_program(4);
+        let mut s1 = EpochDriver::builder(&env)
+            .dispatch(LaneDispatch::Pool)
+            .build();
+        s1.exec(&prog);
+        s1.exec(&prog);
+        let (_, state) = s1.finish_state();
+        let pool = state.pool.expect("forced pool dispatch spawns a pool");
+        assert_eq!(pool.workers(), 3, "one thread per server, one claims");
+        let mut s2 = EpochDriver::builder(&env)
+            .dispatch(LaneDispatch::Pool)
+            .pool(pool)
+            .build();
+        s2.exec(&prog);
+        let (m2, state2) = s2.finish_state();
+        assert!(state2.pool.is_some(), "the warm pool survives finish");
+        // and a serial one-shot of the same program matches bitwise
+        let serial = EpochDriver::builder(&env)
+            .dispatch(LaneDispatch::Serial)
+            .run(&prog);
+        assert_eq!(m2.epoch_time.to_bits(), serial.epoch_time.to_bits());
+        assert_eq!(m2.total_bytes(), serial.total_bytes());
+    }
+
+    #[test]
+    fn both_sides_of_the_work_threshold_are_bit_identical() {
+        // Auto dispatch: `small` stays under the default threshold
+        // (sequential), `big` crosses it (pool) — both must match the
+        // forced-serial run bit for bit, so the threshold (and its
+        // HOPGNN_PARALLEL_THRESHOLD override) can only move wall-clock
+        let d = tiny_test_dataset(211);
+        let env = SimEnv::new(&d, env_with(false, true));
+        let prog_with = |verts: u32| {
+            let mut b = ProgramBuilder::new(4);
+            for _ in 0..4 {
+                for s in 0..4 {
+                    b.op(s, Op::Gather {
+                        vertices: (0..verts).collect(),
+                        overlap: false,
+                    });
+                    b.op(s, Op::Compute { v: verts as u64, e: 6 });
+                }
+                b.barrier();
+            }
+            b.allreduce();
+            b.finish()
+        };
+        let small = prog_with(8); // 4 lanes x (8 + 1) x 4 frags << 1024
+        let big = prog_with(400); // 4 lanes x 401 per fragment >= 1024
+        for (what, prog) in [("small", &small), ("big", &big)] {
+            let auto = EpochDriver::builder(&env).run(prog);
+            let serial = EpochDriver::builder(&env)
+                .dispatch(LaneDispatch::Serial)
+                .run(prog);
+            assert_eq!(
+                auto.epoch_time.to_bits(),
+                serial.epoch_time.to_bits(),
+                "{what}: epoch_time"
+            );
+            assert_eq!(
+                auto.total_bytes(),
+                serial.total_bytes(),
+                "{what}: bytes"
+            );
+            assert_eq!(
+                auto.time_gather.to_bits(),
+                serial.time_gather.to_bits(),
+                "{what}: time_gather"
+            );
+        }
     }
 
     #[test]
@@ -862,8 +1239,12 @@ mod tests {
         };
         let env_seq = SimEnv::new(&d, cfg(false));
         let env_par = SimEnv::new(&d, cfg(true));
-        let seq = EpochDriver::run_inner(&env_seq, &prog, Some(false));
-        let par = EpochDriver::run_inner(&env_par, &prog, Some(true));
+        let seq = EpochDriver::builder(&env_seq)
+            .dispatch(LaneDispatch::Serial)
+            .run(&prog);
+        let par = EpochDriver::builder(&env_par)
+            .dispatch(LaneDispatch::Pool)
+            .run(&prog);
         assert_eq!(seq.total_bytes(), par.total_bytes());
         assert_eq!(seq.epoch_time.to_bits(), par.epoch_time.to_bits());
         assert_eq!(seq.cache_hits, par.cache_hits);

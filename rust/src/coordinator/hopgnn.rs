@@ -36,6 +36,7 @@ use crate::cluster::TransferKind;
 use crate::featstore::tier::TierStack;
 use crate::metrics::EpochMetrics;
 use crate::sampler::SampleScratch;
+use crate::util::pool::LanePool;
 
 pub struct HopGnn {
     pub pregather: bool,
@@ -46,6 +47,10 @@ pub struct HopGnn {
     /// `RunConfig::cache_persist` is set (otherwise every epoch's
     /// driver session builds its own cold stacks).
     tiers: Option<Vec<TierStack>>,
+    /// The persistent lane-executor pool, carried across epochs like
+    /// the scratch/builder state: the whole run pays the lane-worker
+    /// spawn cost once.
+    pool: Option<LanePool>,
     epoch_idx: u64,
     /// Reusable sampler scratch: one interner + buffer set for every
     /// root of every iteration of every epoch.
@@ -107,6 +112,7 @@ impl HopGnn {
             selection,
             controller: None,
             tiers: None,
+            pool: None,
             epoch_idx: 0,
             scratch: SampleScratch::new(),
             builder: None,
@@ -180,10 +186,14 @@ impl Strategy for HopGnn {
         // observed lane busy time by this measures each server's
         // effective slowdown for the fabric-aware controller
         let mut ideal_secs = vec![0.0f64; n];
-        let mut driver = match self.tiers.take() {
-            Some(t) => EpochDriver::with_tiers(env, t),
-            None => EpochDriver::new(env),
-        };
+        let mut db = EpochDriver::builder(env);
+        if let Some(t) = self.tiers.take() {
+            db = db.tiers(t);
+        }
+        if let Some(p) = self.pool.take() {
+            db = db.pool(p);
+        }
+        let mut driver = db.build();
 
         let pregather = self.pregather;
         let mut b = match self.builder.take() {
@@ -339,10 +349,11 @@ impl Strategy for HopGnn {
 
         tape.finish();
         self.builder = Some(b);
-        let (mut m, tiers) = driver.finish_session();
+        let (mut m, state) = driver.finish_state();
         if env.cfg.cache_persist {
-            self.tiers = Some(tiers);
+            self.tiers = Some(state.tiers);
         }
+        self.pool = state.pool;
         m.iterations = iterations.len() as u64;
         m.time_steps_per_iter = t_steps as f64;
         m.dropped_roots = env.dropped_roots;

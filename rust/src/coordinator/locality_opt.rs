@@ -14,11 +14,16 @@ use crate::cluster::TransferKind;
 use crate::featstore::tier::TierStack;
 use crate::metrics::EpochMetrics;
 use crate::sampler::{sample_batch_into, SampleScratch};
+use crate::util::pool::LanePool;
 
 pub struct LocalityOpt {
     /// Warm feature tier stacks held across epochs under
     /// `--cache-persist`.
     tiers: Option<Vec<TierStack>>,
+    /// The persistent lane-executor pool, carried across epochs like
+    /// the scratch/builder state: the whole run pays the lane-worker
+    /// spawn cost once.
+    pool: Option<LanePool>,
     epoch_idx: u64,
     /// Reusable sampler scratch (zero steady-state allocation).
     scratch: SampleScratch,
@@ -35,6 +40,7 @@ impl LocalityOpt {
     pub fn new() -> Self {
         Self {
             tiers: None,
+            pool: None,
             epoch_idx: 0,
             scratch: SampleScratch::new(),
             builder: None,
@@ -62,10 +68,14 @@ impl Strategy for LocalityOpt {
         self.epoch_idx += 1;
 
         let iterations = env.epoch_iterations();
-        let mut driver = match self.tiers.take() {
-            Some(t) => EpochDriver::with_tiers(env, t),
-            None => EpochDriver::new(env),
-        };
+        let mut db = EpochDriver::builder(env);
+        if let Some(t) = self.tiers.take() {
+            db = db.tiers(t);
+        }
+        if let Some(p) = self.pool.take() {
+            db = db.pool(p);
+        }
+        let mut driver = db.build();
         let mut b = match self.builder.take() {
             Some(b) if b.num_servers() == n => b,
             _ => ProgramBuilder::new(n),
@@ -135,10 +145,11 @@ impl Strategy for LocalityOpt {
         }
 
         self.builder = Some(b);
-        let (mut m, tiers) = driver.finish_session();
+        let (mut m, state) = driver.finish_state();
         if env.cfg.cache_persist {
-            self.tiers = Some(tiers);
+            self.tiers = Some(state.tiers);
         }
+        self.pool = state.pool;
         m.iterations = iterations.len() as u64;
         m.time_steps_per_iter = 1.0;
         m.dropped_roots = env.dropped_roots;

@@ -73,7 +73,7 @@ pub mod ops;
 pub mod p3;
 pub mod spec;
 
-pub use engine::EpochDriver;
+pub use engine::{DriverBuilder, EpochDriver, LaneDispatch, SessionState};
 pub use ops::{Op, Phase, Program, ProgramBuilder};
 pub use spec::{
     Base, Merge, StrategySpec, ALL_BASES, ALL_LEGACY_SPECS, ALL_MERGES,

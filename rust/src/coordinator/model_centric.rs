@@ -13,12 +13,17 @@ use super::{sample_group, EpochDriver, SampleTape, SimEnv, Strategy};
 use crate::featstore::tier::TierStack;
 use crate::metrics::EpochMetrics;
 use crate::sampler::SampleScratch;
+use crate::util::pool::LanePool;
 use crate::util::stamp::StampedSet;
 
 pub struct ModelCentric {
     /// Warm feature tier stacks held across epochs under
     /// `--cache-persist`.
     tiers: Option<Vec<TierStack>>,
+    /// The persistent lane-executor pool, carried across epochs like
+    /// the scratch/builder state: the whole run pays the lane-worker
+    /// spawn cost once.
+    pool: Option<LanePool>,
     epoch_idx: u64,
     /// Reusable sampler scratch (zero steady-state allocation).
     scratch: SampleScratch,
@@ -34,6 +39,7 @@ impl ModelCentric {
     pub fn new() -> Self {
         Self {
             tiers: None,
+            pool: None,
             epoch_idx: 0,
             scratch: SampleScratch::new(),
             seen: StampedSet::default(),
@@ -63,10 +69,14 @@ impl Strategy for ModelCentric {
         self.epoch_idx += 1;
 
         let iterations = env.epoch_iterations();
-        let mut driver = match self.tiers.take() {
-            Some(t) => EpochDriver::with_tiers(env, t),
-            None => EpochDriver::new(env),
-        };
+        let mut db = EpochDriver::builder(env);
+        if let Some(t) = self.tiers.take() {
+            db = db.tiers(t);
+        }
+        if let Some(p) = self.pool.take() {
+            db = db.pool(p);
+        }
+        let mut driver = db.build();
         let mut b = match self.builder.take() {
             Some(b) if b.num_servers() == n => b,
             _ => ProgramBuilder::new(n),
@@ -119,10 +129,11 @@ impl Strategy for ModelCentric {
 
         tape.finish();
         self.builder = Some(b);
-        let (mut m, tiers) = driver.finish_session();
+        let (mut m, state) = driver.finish_state();
         if env.cfg.cache_persist {
-            self.tiers = Some(tiers);
+            self.tiers = Some(state.tiers);
         }
+        self.pool = state.pool;
         m.iterations = iterations.len() as u64;
         m.time_steps_per_iter = 1.0;
         m.dropped_roots = env.dropped_roots;

@@ -10,7 +10,7 @@
 //!   calibrate  measure real PJRT step time, report effective FLOP/s
 //!   info       list datasets, artifacts, experiments
 
-use hopgnn::bench::sweep::{set_default_jobs, Axis, SweepSpec};
+use hopgnn::bench::sweep::{Axis, SweepSpec};
 use hopgnn::bench::{
     resolve_experiment_ids, run_experiment, Report, Scale, ALL_EXPERIMENTS,
 };
@@ -25,6 +25,7 @@ use hopgnn::runtime::{Engine, Manifest};
 use hopgnn::sampler::{sample_micrograph, SampleConfig, SamplerKind};
 use hopgnn::train::{OrderPolicy, Trainer};
 use hopgnn::util::cli::Cli;
+use hopgnn::util::pool::set_thread_budget;
 use hopgnn::util::rng::Rng;
 use hopgnn::util::table::{fmt_bytes, fmt_secs, Table};
 
@@ -77,7 +78,8 @@ fn cmd_reproduce(args: Vec<String>) -> i32 {
     let cli = Cli::new("hopgnn reproduce", "regenerate paper tables/figures")
         .opt("exp", "all", "experiment id (fig04..fig23, table1, table3) or 'all'")
         .opt("out", "reports", "output directory for markdown reports")
-        .opt("jobs", "1", "parallel sweep workers (0 = all cores)")
+        .opt("jobs", "1", "total thread budget: sweep cells x epoch \
+              lanes (0 = all cores)")
         .flag("quick", "reduced scale (CI-sized)");
     let a = match cli.parse(args) {
         Ok(a) => a,
@@ -86,7 +88,7 @@ fn cmd_reproduce(args: Vec<String>) -> i32 {
             return 2;
         }
     };
-    set_default_jobs(a.get_usize("jobs", 1));
+    set_thread_budget(a.get_usize("jobs", 1));
     let scale = if a.has("quick") {
         Scale::quick()
     } else {
@@ -136,7 +138,8 @@ fn cmd_bench(args: Vec<String>) -> i32 {
          ('bench sweep' runs a declarative grid instead)",
     )
     .opt("out", "reports", "output directory for md/json reports")
-    .opt("jobs", "1", "parallel sweep workers (0 = all cores)")
+    .opt("jobs", "1", "total thread budget: sweep cells x epoch lanes \
+          (0 = all cores)")
     .flag("quick", "reduced scale (CI-sized)");
     let a = match cli.parse(args) {
         Ok(a) => a,
@@ -145,7 +148,7 @@ fn cmd_bench(args: Vec<String>) -> i32 {
             return 2;
         }
     };
-    set_default_jobs(a.get_usize("jobs", 1));
+    set_thread_budget(a.get_usize("jobs", 1));
     let scale = if a.has("quick") {
         Scale::quick()
     } else {
@@ -249,7 +252,8 @@ fn cmd_bench_sweep(args: Vec<String>) -> i32 {
          pins the single strategy (instead of --strategies)",
     )
     .opt("out", "reports", "output directory for the md/json report")
-    .opt("jobs", "1", "parallel workers for grid cells (0 = all cores)")
+    .opt("jobs", "1", "total thread budget: grid cells x epoch lanes \
+          (0 = all cores)")
     .flag("quick", "reduced scale (CI-sized)");
     let a = match cli.parse(args) {
         Ok(a) => a,
@@ -390,6 +394,7 @@ fn cmd_bench_sweep(args: Vec<String>) -> i32 {
         }
     }
 
+    set_thread_budget(a.get_usize("jobs", 1));
     sweep = sweep.jobs(a.get_usize("jobs", 1));
     let t0 = std::time::Instant::now();
     let grid = match sweep.run() {
@@ -453,6 +458,8 @@ fn cmd_sim(args: Vec<String>) -> i32 {
              "feature tier stack kind:cap[:policy]+..+remote \
               (overrides --cache/--cache-mb)")
         .flag("cache-persist", "keep feature caches warm across epochs")
+        .opt("jobs", "0",
+             "thread budget for parallel op lanes (0 = all cores)")
         .flag("overlap", "hide async gathers behind compute (pipelining)")
         .flag("sequential", "disable parallel per-server op lanes");
     let a = match cli.parse(args) {
@@ -462,6 +469,7 @@ fn cmd_sim(args: Vec<String>) -> i32 {
             return 2;
         }
     };
+    set_thread_budget(a.get_usize("jobs", 0));
     let from_file = a.get("config").is_some_and(|s| !s.is_empty());
     let mut cfg = if from_file {
         match RunConfig::from_kv_file(a.get("config").unwrap()) {

@@ -1,15 +1,59 @@
-//! Scoped worker pool for embarrassingly parallel job grids (std-only;
-//! the offline vendor set has no rayon).
+//! The process's one parallelism substrate (std-only; the offline
+//! vendor set has no rayon): a scoped pool for job grids, a persistent
+//! pool for epoch lane execution, and the global `--jobs` thread budget
+//! both draw from.
 //!
-//! [`run_indexed`] executes jobs `0..n` on a fixed number of
-//! `std::thread::scope` workers pulling indices off a shared atomic
-//! counter, and returns the results **in job-index order** regardless
-//! of which worker finished first — the property the sweep engine's
-//! `--jobs` parity guarantee (`tests/sweep_parallel.rs`) is built on:
-//! parallelism may only change wall-clock, never what any cell computes
-//! or where its result lands.
+//! ## The `--jobs` thread budget
+//!
+//! Every thread this crate spawns comes from one budget
+//! ([`set_thread_budget`], wired to the CLI `--jobs` flags; `0` =
+//! unset). The sweep engine splits it deterministically: with `B`
+//! budget threads and `C` grid cells, `min(B, C)` cell runners execute
+//! cells concurrently and each runner's epoch drivers may use
+//! `B / min(B, C)` threads for lane execution (the
+//! [`LaneAllowanceGuard`]). The split depends only on `(B, C)` — never
+//! on which worker picks up which cell — so `bench sweep --jobs N`
+//! with `parallel_lanes` on runs at most `B` live threads total
+//! (`tests/pool_budget.rs` asserts it through [`peak_workers`])
+//! instead of the pre-budget `cells × lanes` oversubscription.
+//! Standalone drivers outside a sweep (`sim`, unit tests) see an
+//! uncapped allowance when no budget is set, matching the historical
+//! spawn-per-lane degree.
+//!
+//! ## [`run_indexed`] — scoped grid pool
+//!
+//! Executes jobs `0..n` on a fixed number of workers pulling indices
+//! off a shared atomic counter and returns the results **in job-index
+//! order** regardless of which worker finished first — the property
+//! the sweep engine's `--jobs` parity guarantee
+//! (`tests/sweep_parallel.rs`) is built on: parallelism may only
+//! change wall-clock, never what any cell computes or where its result
+//! lands. The calling thread is worker #0, so `workers` is the *total*
+//! thread count, not an increment on top of the caller.
+//!
+//! ## [`LanePool`] — persistent lane executor
+//!
+//! `run_indexed`'s scoped spawns are fine for seconds-scale sweep
+//! cells but far too heavy for the epoch driver's microseconds-scale
+//! `Item::Lanes` fragments (one per iteration step). [`LanePool`]
+//! keeps its workers alive across dispatches — parked between
+//! fragments, woken by an unpark + generation bump, claiming lane
+//! indices off a generation-tagged atomic word (no channels). The
+//! dispatching thread participates in the claim loop, blocks until
+//! every lane of the fragment completed, and only then returns — which
+//! is what makes handing the workers a borrowed closure sound. A
+//! panicking lane task is caught, recorded, and re-raised on the
+//! dispatcher *after* the fragment drains, so parked workers are never
+//! deadlocked by a dying session. Strategies hold the pool across
+//! epochs next to their scratch/builder state, so a whole training run
+//! pays the thread-spawn cost once.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle, Thread};
+use std::time::Duration;
 
 /// Resolve a `--jobs` request: `0` means "auto" — one worker per
 /// available hardware thread (falling back to 1 if the platform cannot
@@ -24,7 +68,149 @@ pub fn resolve_jobs(requested: usize) -> usize {
     }
 }
 
-/// Run `n` independent jobs on up to `workers` threads and return the
+/// The process-wide `--jobs` thread budget (`0` = unset). Sweeps
+/// without an explicit per-spec `jobs` fall back to it, and it caps
+/// the lane allowance of standalone epoch drivers.
+static THREAD_BUDGET: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the global `--jobs` budget (the CLI entry points call this
+/// once, before any sweep or driver runs). `0` = unset: sweeps resolve
+/// to auto, standalone lane pools are uncapped (legacy spawn-per-lane
+/// degree).
+pub fn set_thread_budget(jobs: usize) {
+    THREAD_BUDGET.store(jobs, Ordering::Relaxed);
+}
+
+/// The installed `--jobs` budget (`0` = unset).
+pub fn thread_budget() -> usize {
+    THREAD_BUDGET.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    /// Per-driver lane-thread allowance installed by the sweep
+    /// engine's budget split (`0` = no guard active). Thread-local —
+    /// the guard is installed inside the cell-runner closure, on
+    /// whichever thread executes the cell, so concurrent sweeps (the
+    /// test harness) can never race each other's split.
+    static LANE_ALLOWANCE: std::cell::Cell<usize> =
+        const { std::cell::Cell::new(0) };
+}
+
+/// How many threads one epoch driver may use for parallel lane
+/// execution (including the dispatching thread). Inside a sweep cell
+/// this is the [`LaneAllowanceGuard`] share of the budget; outside one
+/// it is the whole budget, or uncapped (`usize::MAX`) when no budget
+/// was set — the historical one-thread-per-lane degree.
+pub fn lane_allowance() -> usize {
+    match LANE_ALLOWANCE.with(|c| c.get()) {
+        0 => match thread_budget() {
+            0 => usize::MAX,
+            b => b,
+        },
+        k => k,
+    }
+}
+
+/// RAII installer for the sweep engine's per-cell lane allowance on
+/// the current thread; restores the previous value on drop. Drivers
+/// read the allowance when they first need a lane pool, so the guard
+/// must live for the duration of the cell run that installed it.
+pub struct LaneAllowanceGuard {
+    prev: usize,
+}
+
+impl LaneAllowanceGuard {
+    pub fn set(allowance: usize) -> Self {
+        Self {
+            prev: LANE_ALLOWANCE
+                .with(|c| c.replace(allowance.max(1))),
+        }
+    }
+}
+
+impl Drop for LaneAllowanceGuard {
+    fn drop(&mut self) {
+        LANE_ALLOWANCE.with(|c| c.set(self.prev));
+    }
+}
+
+/// Live count of pool-spawned threads (sweep grid workers + lane pool
+/// workers; the participating caller threads are not spawned and not
+/// counted).
+static LIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+/// High-water mark of [`LIVE_WORKERS`] since the last reset.
+static PEAK_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+fn register_worker() {
+    let live = LIVE_WORKERS.fetch_add(1, Ordering::SeqCst) + 1;
+    PEAK_WORKERS.fetch_max(live, Ordering::SeqCst);
+}
+
+/// Decrements the live-worker count when a worker thread exits (runs
+/// in the worker via drop, so a panicking worker still unregisters).
+struct WorkerGuard;
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Currently live pool-spawned threads.
+pub fn live_workers() -> usize {
+    LIVE_WORKERS.load(Ordering::SeqCst)
+}
+
+/// High-water mark of live pool-spawned threads since
+/// [`reset_peak_workers`]. Under a budget of `B` this never exceeds
+/// `B - 1` (the caller is the remaining thread).
+pub fn peak_workers() -> usize {
+    PEAK_WORKERS.load(Ordering::SeqCst)
+}
+
+/// Reset the peak to the current live count (test hook).
+pub fn reset_peak_workers() {
+    PEAK_WORKERS.store(live_workers(), Ordering::SeqCst);
+}
+
+/// Shared-reference access to disjoint `&mut` elements of a slice,
+/// for claim-loop workers that each own a distinct index.
+///
+/// The claim protocols in this module hand every index to exactly one
+/// worker, which makes the aliasing contract trivially satisfiable —
+/// but the compiler cannot see that through a shared closure, hence
+/// the unsafe accessor.
+pub struct IndexedCells<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _slice: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for IndexedCells<'_, T> {}
+unsafe impl<T: Send> Sync for IndexedCells<'_, T> {}
+
+impl<'a, T> IndexedCells<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _slice: PhantomData,
+        }
+    }
+
+    /// # Safety
+    ///
+    /// At most one thread may hold the reference for index `i` at any
+    /// time (guaranteed when `i` was claimed off an atomic counter).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "index {i} out of bounds ({})", self.len);
+        unsafe { &mut *self.ptr.add(i) }
+    }
+}
+
+/// Run `n` independent jobs on up to `workers` threads **total**
+/// (`workers - 1` spawned, the caller is worker #0) and return the
 /// results in job-index order.
 ///
 /// `f(i)` must be pure with respect to shared state (interior
@@ -42,42 +228,290 @@ where
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
-    // each worker collects (index, result) pairs; the deterministic
-    // order is restored after the join, exactly like the epoch
-    // driver's lane reduction
-    let per_worker: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                let next = &next;
-                let f = &f;
-                scope.spawn(move || {
-                    let mut out = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        out.push((i, f(i)));
-                    }
-                    out
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("pool worker panicked"))
-            .collect()
-    });
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    for (i, t) in per_worker.into_iter().flatten() {
-        debug_assert!(slots[i].is_none(), "job {i} claimed twice");
-        slots[i] = Some(t);
+    {
+        let cells = IndexedCells::new(&mut slots);
+        let claim = |_w: usize| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let out = f(i);
+            // safety: `i` came off the shared counter, so this worker
+            // is the only one touching slot `i`
+            unsafe { *cells.get(i) = Some(out) };
+        };
+        std::thread::scope(|scope| {
+            for w in 1..workers {
+                let claim = &claim;
+                // registered from the spawning side so the peak
+                // accounting can never lag the spawn
+                register_worker();
+                scope.spawn(move || {
+                    let _guard = WorkerGuard;
+                    claim(w)
+                });
+            }
+            claim(0);
+        });
     }
     slots
         .into_iter()
         .enumerate()
         .map(|(i, s)| s.unwrap_or_else(|| panic!("job {i} never claimed")))
         .collect()
+}
+
+/// Lane indices fit in the low bits of the claim word; the rest tags
+/// the dispatch generation so a worker waking from a long sleep can
+/// never claim into (or run the dangling closure of) a generation it
+/// did not observe. 16 bits bound the lane count at 65535 servers —
+/// far above any simulated cluster — and leave 48 generation bits
+/// (years of microsecond-scale dispatches before wrap).
+const IDX_BITS: u32 = 16;
+const IDX_MASK: u64 = (1 << IDX_BITS) - 1;
+
+fn claim_tag(generation: u64) -> u64 {
+    generation << IDX_BITS
+}
+
+/// The published fragment: a type-erased borrowed task closure plus
+/// its lane count. Only dereferenced by claim loops that validated the
+/// generation, which is what makes holding a raw pointer across
+/// threads sound.
+#[derive(Clone, Copy)]
+struct LaneJob {
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+}
+
+unsafe impl Send for LaneJob {}
+
+/// The mutex-guarded dispatch slot: generation, current job, and the
+/// dispatcher thread to unpark when the last lane finishes. The mutex
+/// is taken once per worker per dispatch (snapshot) and once per
+/// dispatch for the final wake — never inside the per-lane loop.
+struct JobSlot {
+    generation: u64,
+    job: Option<LaneJob>,
+    caller: Option<Thread>,
+}
+
+struct PoolShared {
+    /// Latest published generation; workers park while it matches the
+    /// one they last served.
+    epoch: AtomicU64,
+    /// Generation-tagged lane claim word (see [`IDX_BITS`]).
+    claim: AtomicU64,
+    /// Lanes completed in the current generation.
+    done: AtomicUsize,
+    shutdown: AtomicBool,
+    slot: Mutex<JobSlot>,
+    /// First panic payload of the current generation, re-raised on the
+    /// dispatcher after the fragment drains.
+    panicked: Mutex<Option<String>>,
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Claim and execute lanes of generation `generation` until the claim
+/// word runs out of indices or moves to another generation. Panics are
+/// caught and recorded so `done` always reaches `n` and parked peers
+/// are never deadlocked.
+fn claim_loop(
+    sh: &PoolShared,
+    generation: u64,
+    f: &(dyn Fn(usize) + Sync),
+    n: usize,
+) {
+    let tag = claim_tag(generation);
+    loop {
+        let cur = sh.claim.load(Ordering::Acquire);
+        if cur & !IDX_MASK != tag {
+            return; // the claim word belongs to another generation
+        }
+        let idx = (cur & IDX_MASK) as usize;
+        if idx >= n {
+            return;
+        }
+        if sh
+            .claim
+            .compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            )
+            .is_err()
+        {
+            continue;
+        }
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(idx))) {
+            let msg = panic_message(payload);
+            sh.panicked.lock().unwrap().get_or_insert(msg);
+        }
+        // Release pairs with the dispatcher's Acquire on `done`: lane
+        // results written above are visible once it observes the count
+        let finished = sh.done.fetch_add(1, Ordering::Release) + 1;
+        if finished == n {
+            if let Some(t) = sh.slot.lock().unwrap().caller.as_ref() {
+                t.unpark();
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    let _guard = WorkerGuard;
+    let sh = &*shared;
+    let mut seen = 0u64;
+    loop {
+        if sh.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let e = sh.epoch.load(Ordering::Acquire);
+        if e == seen {
+            thread::park();
+            continue;
+        }
+        seen = e;
+        // snapshot under the slot mutex: the lock acquisition is also
+        // what makes every dispatcher-side write (the program, the
+        // scratch slices) visible to this worker
+        let (generation, job) = {
+            let slot = sh.slot.lock().unwrap();
+            (slot.generation, slot.job)
+        };
+        let Some(job) = job else { continue };
+        // the slot may already hold a generation newer than `e`; the
+        // claim loop runs under the snapshot's own generation either way
+        let f = unsafe { &*job.f };
+        claim_loop(sh, generation, f, job.n);
+    }
+}
+
+/// A persistent pool of parked lane workers (see the module docs for
+/// the dispatch protocol). Created once per driver session — or held
+/// across epochs by a strategy — instead of spawning threads per
+/// `Item::Lanes` fragment.
+pub struct LanePool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl LanePool {
+    /// Spawn `workers` persistent lane workers. Total parallelism of a
+    /// dispatch is `workers + 1`: the dispatching thread claims lanes
+    /// too.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            epoch: AtomicU64::new(0),
+            claim: AtomicU64::new(0),
+            done: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            slot: Mutex::new(JobSlot {
+                generation: 0,
+                job: None,
+                caller: None,
+            }),
+            panicked: Mutex::new(None),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                register_worker();
+                thread::Builder::new()
+                    .name(format!("lane-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn lane worker")
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// Spawned (non-dispatcher) worker count.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Dispatch one fragment: run `f(0..n)` across the workers plus
+    /// the calling thread, blocking until every lane completed.
+    ///
+    /// If any lane panicked, the first panic is re-raised here — after
+    /// the fragment drained, so no worker is left parked mid-claim.
+    /// `&mut self` makes dispatch exclusive at compile time (the
+    /// protocol has one in-flight generation).
+    pub fn run(&mut self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        assert!(
+            n <= IDX_MASK as usize,
+            "lane count {n} exceeds the claim-word index capacity"
+        );
+        let sh = &*self.shared;
+        // Erase the borrow's lifetime to publish it to the workers.
+        // Sound because this call does not return until `done == n`
+        // and late wakers validate the generation tag before every
+        // claim, so `f` is never dereferenced after this frame ends.
+        let erased: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f) };
+        let generation = sh.epoch.load(Ordering::Relaxed) + 1;
+        {
+            let mut slot = sh.slot.lock().unwrap();
+            slot.generation = generation;
+            slot.job = Some(LaneJob { f: erased, n });
+            slot.caller = Some(thread::current());
+        }
+        sh.done.store(0, Ordering::Relaxed);
+        sh.claim.store(claim_tag(generation), Ordering::Release);
+        sh.epoch.store(generation, Ordering::Release);
+        for h in &self.handles {
+            h.thread().unpark();
+        }
+        // the dispatcher is claimant #0
+        claim_loop(sh, generation, f, n);
+        // wait out straggler lanes: spin briefly (fragments are
+        // microseconds-scale), then park; the timeout is a lost-wakeup
+        // backstop, correctness only needs the done count
+        let mut spins = 0u32;
+        while sh.done.load(Ordering::Acquire) < n {
+            if spins < 1 << 14 {
+                spins += 1;
+                std::hint::spin_loop();
+            } else {
+                thread::park_timeout(Duration::from_millis(1));
+            }
+        }
+        // retire the job so no later waker can even snapshot it
+        sh.slot.lock().unwrap().job = None;
+        if let Some(msg) = sh.panicked.lock().unwrap().take() {
+            panic!(
+                "lane worker panicked: {msg}; epoch session aborted \
+                 (all lanes drained, no worker left parked)"
+            );
+        }
+    }
+}
+
+impl Drop for LanePool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        for h in &self.handles {
+            h.thread().unpark();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -117,5 +551,112 @@ mod tests {
     fn auto_jobs_resolves_to_at_least_one() {
         assert!(resolve_jobs(0) >= 1);
         assert_eq!(resolve_jobs(3), 3);
+    }
+
+    #[test]
+    fn lane_pool_runs_every_task_exactly_once_per_dispatch() {
+        let mut pool = LanePool::new(3);
+        assert_eq!(pool.workers(), 3);
+        let hits: Vec<AtomicUsize> =
+            (0..16).map(|_| AtomicUsize::new(0)).collect();
+        // many generations through the same parked workers — the
+        // whole point of the pool
+        for round in 0..200 {
+            pool.run(16, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(
+                    h.load(Ordering::Relaxed),
+                    round + 1,
+                    "task {i} after round {round}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lane_pool_tasks_see_and_mutate_disjoint_slots() {
+        let mut pool = LanePool::new(2);
+        let mut data = vec![0usize; 64];
+        {
+            let cells = IndexedCells::new(&mut data);
+            pool.run(64, &|i| {
+                // safety: each index claimed exactly once
+                unsafe { *cells.get(i) = i * 7 };
+            });
+        }
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i * 7);
+        }
+    }
+
+    #[test]
+    fn lane_pool_zero_tasks_is_a_no_op() {
+        let mut pool = LanePool::new(2);
+        pool.run(0, &|_| panic!("must not run"));
+    }
+
+    #[test]
+    fn panicking_lane_aborts_the_session_with_a_clear_message() {
+        // the satellite lock: a dying lane must re-raise on the
+        // dispatcher instead of deadlocking parked peers
+        let ran = AtomicUsize::new(0);
+        let mut pool = LanePool::new(2);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                if i == 3 {
+                    panic!("lane 3 exploded on purpose");
+                }
+            });
+        }))
+        .expect_err("the dispatch must re-raise the lane panic");
+        let msg = panic_message(err);
+        assert!(
+            msg.contains("lane 3 exploded on purpose"),
+            "panic must carry the lane's own message: {msg}"
+        );
+        assert!(
+            msg.contains("epoch session aborted"),
+            "panic must say the session aborted: {msg}"
+        );
+        // every lane still ran (the fragment drained despite the
+        // panic), and the pool is neither deadlocked nor poisoned:
+        // a fresh dispatch works and drop joins cleanly
+        assert_eq!(ran.load(Ordering::Relaxed), 8);
+        let ok = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn worker_accounting_tracks_spawns() {
+        // the counters are process-global and sibling unit tests spawn
+        // pools concurrently, so only lower bounds are race-free here;
+        // exact join-back-to-zero accounting is locked by
+        // tests/pool_budget.rs, which owns its whole process
+        let pool = LanePool::new(3);
+        assert!(live_workers() >= 3);
+        assert!(peak_workers() >= 3);
+        drop(pool);
+    }
+
+    #[test]
+    fn lane_allowance_guard_nests_and_restores_on_drop() {
+        // thread-local, so this is exact even with concurrent tests
+        {
+            let _g = LaneAllowanceGuard::set(7);
+            assert_eq!(lane_allowance(), 7);
+            {
+                let _inner = LaneAllowanceGuard::set(3);
+                assert_eq!(lane_allowance(), 3);
+            }
+            assert_eq!(lane_allowance(), 7);
+        }
+        // unset again: falls back to the budget (uncapped when 0)
+        assert!(lane_allowance() >= 1);
     }
 }

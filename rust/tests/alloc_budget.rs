@@ -14,8 +14,11 @@
 //! containers are warmed for.
 //!
 //! Scope (mirrors the documented zero-alloc envelope): sequential
-//! lanes (`parallel_lanes: false` — thread spawning allocates by
-//! nature), a *static* tier stack configured (`degree`-pinned hbm +
+//! lanes (`parallel_lanes: false` — the persistent lane pool's
+//! dispatch path is allocation-free too once the pool exists, but its
+//! lazy construction plus worker wakeups inside the measured window
+//! would make the count scheduling-dependent, so the lock pins the
+//! serial path), a *static* tier stack configured (`degree`-pinned hbm +
 //! dram tiers — the `CacheFetch` walk fills the pinned sets during
 //! warm-up and then runs allocation-free; LRU tiers are excluded
 //! because their recency list is tree-backed), memo off (recording

@@ -1,0 +1,77 @@
+//! Thread-budget lock: total live worker threads under
+//! `bench sweep --jobs N` never exceed the budget, regardless of lane
+//! parallelism.
+//!
+//! The sweep engine splits one `--jobs` budget deterministically:
+//! `runners = budget.min(cells).max(1)` cell runners, each granting
+//! its per-cell `EpochDriver`s a lane allowance of `budget / runners`.
+//! Callers participate everywhere (the sweep caller is cell runner #0,
+//! a lane pool's dispatcher claims lanes too), so *spawned* threads —
+//! what `util::pool`'s worker accounting counts — must stay at or
+//! under `budget - 1`.
+//!
+//! This suite lives in its own integration-test file on purpose: the
+//! live/peak worker counters are process-global, so it must not share
+//! a test binary (= a process) with suites that spawn workers
+//! concurrently, and the `HOPGNN_PARALLEL_THRESHOLD` override below
+//! must be set before the engine first reads it.
+
+use hopgnn::bench::sweep::{Axis, SweepSpec};
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::StrategySpec;
+use hopgnn::util::pool;
+
+#[test]
+fn sweep_thread_count_never_exceeds_the_jobs_budget() {
+    // force every multi-lane fragment onto the parallel path so the
+    // lane pools are guaranteed to engage (the default work threshold
+    // could otherwise route tiny test fragments serially and leave
+    // the nested path unexercised)
+    std::env::set_var("HOPGNN_PARALLEL_THRESHOLD", "0");
+    pool::reset_peak_workers();
+
+    // 2 cells under a budget of 6: runners = 2, lane share = 3 each,
+    // so each cell runner sizes a lane pool of min(4 servers, 3) = 3
+    // claim threads = 2 spawned workers. Worst-case spawned threads:
+    // 1 extra cell runner + 2 x 2 lane workers = 5 = budget - 1.
+    let budget = 6;
+    let strategies = [StrategySpec::dgl(), StrategySpec::hopgnn()];
+    let grid = SweepSpec::new(
+        RunConfig {
+            dataset: "arxiv-s".into(),
+            batch_size: 256,
+            epochs: 2,
+            max_iterations: Some(2),
+            fanout: 5,
+            vmax: RunConfig::full_sim_vmax(3, 5),
+            seed: 77,
+            parallel_lanes: true,
+            ..Default::default()
+        },
+        StrategySpec::dgl(),
+    )
+    .axis(Axis::strategies(&strategies))
+    .jobs(budget)
+    .run()
+    .expect("budgeted sweep");
+    assert_eq!(grid.cells.len(), 2, "grid shape");
+
+    let peak = pool::peak_workers();
+    assert!(
+        peak <= budget - 1,
+        "spawned threads exceeded the --jobs budget: peak {peak} \
+         workers + 1 caller > {budget}"
+    );
+    assert!(
+        peak >= 3,
+        "lane pools never engaged under the budget split (peak {peak} \
+         spawned workers; expected at least 1 cell runner + 2 lane \
+         workers) — did the parallel threshold override get read too \
+         late?"
+    );
+    assert_eq!(
+        pool::live_workers(),
+        0,
+        "worker threads leaked past the sweep (pools must join on drop)"
+    );
+}

@@ -160,6 +160,58 @@ fn cachesweep_grid_is_jobs_invariant() {
 }
 
 #[test]
+fn nested_lane_parallelism_is_jobs_invariant() {
+    // the nested path: one --jobs budget split between cell runners
+    // and epoch lanes. The reference grid runs jobs=1 with serial
+    // lanes; the nested grids run parallel_lanes on under budgets that
+    // land on both sides of the split. With 2 cells, jobs=2 gives each
+    // runner a lane share of 1 (lane pools decline — the budget is
+    // honored by staying serial inside cells), while jobs=8 gives a
+    // share of 4 (real lane pools engage). Either way every
+    // EpochMetrics field must be bit-identical to the serial
+    // reference: the pool's server-order reduction is deterministic by
+    // construction, and this is the lock on that claim.
+    let strategies = [StrategySpec::dgl(), StrategySpec::hopgnn()];
+    let grid = |parallel_lanes: bool, jobs: usize| {
+        SweepSpec::new(
+            RunConfig {
+                batch_size: 256,
+                parallel_lanes,
+                ..tiny_base()
+            },
+            StrategySpec::dgl(),
+        )
+        .axis(Axis::strategies(&strategies))
+        .jobs(jobs)
+        .run()
+        .expect("nested sweep")
+    };
+    let reference = grid(false, 1);
+    for jobs in [2usize, 8] {
+        let nested = grid(true, jobs);
+        assert_eq!(
+            reference.cells.len(),
+            nested.cells.len(),
+            "nested jobs={jobs}: cell count"
+        );
+        for (ca, cb) in reference.cells.iter().zip(&nested.cells) {
+            assert_eq!(
+                ca.index, cb.index,
+                "nested jobs={jobs}: grid order must be stable"
+            );
+            assert_bit_identical(
+                &ca.metrics,
+                &cb.metrics,
+                &format!(
+                    "nested jobs={jobs} cell {:?} ({})",
+                    ca.index, ca.strategy
+                ),
+            );
+        }
+    }
+}
+
+#[test]
 fn multi_dataset_grid_is_jobs_invariant() {
     // distinct datasets make racing first-touch loads through the
     // memo's per-key entry locks the interesting case: two workers may
