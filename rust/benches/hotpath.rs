@@ -51,6 +51,9 @@ use hopgnn::sampler::{
     sample_batch_into, sample_micrograph, SampleConfig, SampleScratch,
     SamplerKind,
 };
+use hopgnn::serve::{
+    LaneOut, ServeLane, ServeOpts, ServeSchedule, WorkloadSpec,
+};
 use hopgnn::util::cli::Cli;
 use hopgnn::util::json::{self, Value};
 use hopgnn::util::rng::Rng;
@@ -378,6 +381,36 @@ fn run_benches() -> Vec<BenchResult> {
         let mut env =
             SimEnv::with_partition(ed, memo_cfg.clone(), epart.clone());
         std::hint::black_box(spec.build().run(&mut env, 1).len());
+    }));
+
+    // 10. the serving request loop: one warmed lane replaying its
+    //     share of a seeded request stream end to end — admission,
+    //     micro-batch coalescing, scratch sampling, the tier walk,
+    //     and forward pricing. Static degree tiers + a pre-warmed
+    //     (lane, out) pair, so this measures the steady-state
+    //     zero-allocation path tests/alloc_budget.rs locks.
+    let serve_run_cfg = RunConfig {
+        num_servers: 4,
+        layers: 3,
+        fanout: 10,
+        vmax: 1111,
+        tiers: Some(
+            TierSpec::parse("hbm:4m:degree+dram:16m:degree+remote")
+                .expect("bench serve tier spec parses"),
+        ),
+        ..Default::default()
+    };
+    let senv = SimEnv::with_partition(&d, serve_run_cfg, p.clone());
+    let swl = WorkloadSpec::parse("poisson:rate=500,dur=0.1,seed=23")
+        .expect("bench workload spec parses");
+    let sched = ServeSchedule::generate(&senv, &swl);
+    let mut lane = ServeLane::new(&senv, 0, &ServeOpts::default());
+    let mut lane_out = LaneOut::new(4, sched.per_server[0].len());
+    // warm pass: fill the pinned tiers and buffer capacities
+    lane.run(&sched, &mut lane_out);
+    results.push(bench("serve.request_loop", 0.5, || {
+        lane.run(&sched, &mut lane_out);
+        std::hint::black_box(lane_out.completions.len());
     }));
 
     results

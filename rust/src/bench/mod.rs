@@ -13,6 +13,7 @@ pub mod overall;
 pub mod overlap;
 pub mod scalebench;
 pub mod sensitivity;
+pub mod servebench;
 pub mod sweep;
 pub mod table3;
 pub mod tiersweep;
@@ -167,7 +168,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig04", "fig05", "fig07", "table1", "fig11", "fig12", "fig13",
     "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
     "fig21", "fig22", "fig23", "table3", "overlap", "cachesweep",
-    "tiersweep", "hetero", "scale",
+    "tiersweep", "hetero", "scale", "serve",
 ];
 
 /// Fail-fast id resolution for the `bench` CLI: validate *and dedupe*
@@ -230,6 +231,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> Result<Report, String> {
         "tiersweep" => Ok(tiersweep::tiersweep(scale)),
         "hetero" => Ok(hetero::hetero(scale)),
         "scale" => Ok(scalebench::scalebench(scale)),
+        "serve" => servebench::servebench(scale),
         _ => Err(format!(
             "unknown experiment '{id}'; known: {}",
             ALL_EXPERIMENTS.join(", ")
@@ -281,6 +283,7 @@ mod tests {
         assert!(e.contains("'nope', 'alsonope'"), "{e}");
         assert!(e.contains("known ids"), "{e}");
         assert!(e.contains("cachesweep"), "lists the valid ids: {e}");
+        assert!(e.contains("serve"), "lists the serve experiment: {e}");
         assert!(resolve_experiment_ids(&[]).unwrap().is_empty());
     }
 

@@ -1,0 +1,381 @@
+//! The `serve` experiment: online inference serving over the sweep
+//! engine's grid — what tail latency and sustained QPS does a request
+//! stream see per (workload × tier stack × fabric × strategy base)?
+//!
+//! The grid is *declared* on [`super::sweep::SweepSpec`] (same axes,
+//! same fail-fast expansion/validation, same `--jobs` budget split as
+//! the training sweeps) but *executed* through the serving engine
+//! ([`crate::serve::engine`]) instead of the epoch runner: each cell
+//! generates its workload's request schedule and serves it through
+//! per-server lanes with warm tier stacks. The strategy axis pins the
+//! partitioner the serving fleet inherited from training (P³ forces
+//! hash partitioning, everything else keeps the config's partitioner)
+//! — locality at serve time is a property of how the graph was placed.
+//!
+//! Every cell's report must pass [`crate::serve::ServeMetrics::validate`]:
+//! a cell that drops requests at the admission queue fails the whole
+//! experiment rather than reporting a truncated (and flattering)
+//! latency distribution.
+
+use super::sweep::{Axis, AxisValue, ExpandedCell, SweepSpec};
+use super::tiersweep::SWEEP_FABRICS;
+use super::{memo, Report, Scale};
+use crate::cluster::ModelFamily;
+use crate::config::RunConfig;
+use crate::coordinator::{SimEnv, StrategySpec};
+use crate::featstore::tier::TierSpec;
+use crate::serve::{serve, ServeOpts, ServeReport, WorkloadSpec};
+use crate::util::pool;
+use crate::util::table::{fmt_secs, Table};
+
+/// Strategy bases the serving fleet can inherit its placement from:
+/// the DGL baseline keeps the config's locality-aware partitioner;
+/// P³ forces hash partitioning, so the same request stream pays more
+/// remote gathers.
+pub const SERVE_STRATEGIES: [StrategySpec; 2] =
+    [StrategySpec::dgl(), StrategySpec::p3()];
+
+/// The workload ladder: steady Poisson at two rates, an MMPP burst
+/// train, and a diurnal sinusoid (quick mode trims rates and duration
+/// for CI).
+pub fn workload_specs(scale: Scale) -> Vec<WorkloadSpec> {
+    let raw: &[&str] = if scale.quick {
+        &[
+            "poisson:rate=200,dur=0.2",
+            "bursty:rate=200,mult=8,dwell=0.02,dur=0.2",
+        ]
+    } else {
+        &[
+            "poisson:rate=500,dur=1",
+            "poisson:rate=2000,dur=1",
+            "bursty:rate=500,mult=8,dwell=0.05,dur=1",
+            "diurnal:rate=500,period=0.5,depth=0.8,dur=1",
+        ]
+    };
+    raw.iter()
+        .map(|s| WorkloadSpec::parse(s).expect("static workload specs parse"))
+        .collect()
+}
+
+/// Tier-stack ladder for serving: the remote-only baseline, the plain
+/// DRAM cache, and (full scale) a two-level degree-pinned hierarchy.
+pub fn serve_stacks(scale: Scale) -> Vec<TierSpec> {
+    let raw: &[&str] = if scale.quick {
+        &["remote", "dram:8m:lru+remote"]
+    } else {
+        &[
+            "remote",
+            "dram:64m:lru+remote",
+            "hbm:16m:degree+dram:64m:degree+remote",
+        ]
+    };
+    raw.iter()
+        .map(|s| TierSpec::parse(s).expect("static tier specs parse"))
+        .collect()
+}
+
+/// Workload axis: one cell per spec, patched through the `workload`
+/// config key (so a bad spec fails the sweep at expansion, like every
+/// other axis).
+pub fn workload_axis(specs: &[WorkloadSpec]) -> Axis {
+    Axis::patches(
+        "workload",
+        specs
+            .iter()
+            .map(|w| (w.name(), vec![("workload".to_string(), w.name())]))
+            .collect(),
+    )
+}
+
+fn cfg_for(scale: Scale, ds: &str) -> RunConfig {
+    let model = ModelFamily::Gcn;
+    RunConfig {
+        dataset: ds.into(),
+        model,
+        layers: model.default_layers(),
+        batch_size: scale.batch,
+        epochs: scale.epochs,
+        max_iterations: scale.max_iterations,
+        vmax: RunConfig::full_sim_vmax(model.default_layers(), 10),
+        fanout: 10,
+        ..Default::default()
+    }
+}
+
+/// Serve one expanded cell: memoized dataset + partition (the strategy
+/// base's preferred partitioner wins, as in [`memo::run`]), then the
+/// full generate-and-serve pipeline on the cell's workload.
+pub fn serve_cell(
+    cfg: &RunConfig,
+    strategy: StrategySpec,
+    opts: &ServeOpts,
+) -> ServeReport {
+    let d = memo::dataset(&cfg.dataset);
+    let mut cfg = cfg.clone();
+    if let Some(pa) = strategy.preferred_partition() {
+        cfg.partition_algo = pa;
+    }
+    let part = memo::partition_for(
+        d,
+        cfg.num_servers,
+        cfg.partition_algo,
+        cfg.seed ^ 0x9A27,
+    );
+    let wl = cfg
+        .workload
+        .expect("serve cell has a workload (validated at expansion)");
+    let env = SimEnv::with_partition(d, cfg, part);
+    serve(&env, &wl, opts)
+}
+
+/// Expand a serve sweep and execute every cell through the serving
+/// engine. Reports come back in the sweep's row-major grid order.
+///
+/// Same `--jobs` discipline as [`SweepSpec::run`]: the budget splits
+/// between cell runners and each cell's serve lanes
+/// ([`pool::LaneAllowanceGuard`]), so `--jobs 1` and `--jobs N` grids
+/// are bit-identical (`tests/serve_parity.rs`).
+pub fn run_serve_grid(
+    spec: &SweepSpec,
+    opts: &ServeOpts,
+) -> Result<(Vec<ExpandedCell>, Vec<ServeReport>), String> {
+    let expanded = spec.expand()?;
+    for (index, _, cfg) in &expanded {
+        if cfg.workload.is_none() {
+            return Err(format!(
+                "serve sweep cell {} has no workload — set `workload =` \
+                 in the base config or add a workload axis \
+                 (--workload poisson:rate=500,...)",
+                cell_label(&spec.axes, index)
+            ));
+        }
+    }
+    let budget =
+        pool::resolve_jobs(spec.jobs.unwrap_or_else(pool::thread_budget));
+    let runners = budget.min(expanded.len()).max(1);
+    let lane_share = budget / runners;
+    let reports = pool::run_indexed(expanded.len(), runners, |i| {
+        let _lanes = pool::LaneAllowanceGuard::set(lane_share);
+        let (_, strategy, cfg) = &expanded[i];
+        serve_cell(cfg, *strategy, opts)
+    });
+    Ok((expanded, reports))
+}
+
+/// Human label for one grid cell (axis labels joined in axis order).
+pub fn cell_label(axes: &[Axis], index: &[usize]) -> String {
+    index
+        .iter()
+        .enumerate()
+        .map(|(d, &i)| axes[d].label(i))
+        .collect::<Vec<_>>()
+        .join(" x ")
+}
+
+/// One row per cell: axis labels plus the serving headline — tail
+/// quantiles, sustained QPS, coalescing, cache contribution, drops.
+/// Shared by the `serve` experiment and the `bench sweep --workload`
+/// CLI path.
+pub fn serve_table(
+    axes: &[Axis],
+    expanded: &[ExpandedCell],
+    reports: &[ServeReport],
+) -> Table {
+    let has_strategy_axis = axes
+        .iter()
+        .any(|a| matches!(a.values.first(), Some(AxisValue::Strategy(_))));
+    let mut headers: Vec<String> = Vec::new();
+    if !has_strategy_axis {
+        headers.push("strategy".to_string());
+    }
+    headers.extend(axes.iter().map(|a| a.name.clone()));
+    for h in [
+        "served", "p50", "p95", "p99", "mean", "qps", "req/batch",
+        "hit rate", "dropped",
+    ] {
+        headers.push(h.to_string());
+    }
+    let mut t = Table::new(headers);
+    for ((index, strategy, _), rep) in expanded.iter().zip(reports) {
+        let m = &rep.metrics;
+        let mut row: Vec<String> = Vec::new();
+        if !has_strategy_axis {
+            row.push(strategy.name());
+        }
+        for (d, &i) in index.iter().enumerate() {
+            row.push(axes[d].label(i));
+        }
+        row.push(format!("{}/{}", m.served, m.offered));
+        row.push(fmt_secs(m.p50()));
+        row.push(fmt_secs(m.p95()));
+        row.push(fmt_secs(m.p99()));
+        row.push(fmt_secs(m.mean_latency()));
+        row.push(format!("{:.0}", m.qps()));
+        row.push(format!("{:.1}", m.mean_batch()));
+        row.push(format!(
+            "{:.1}%",
+            m.transport.cache_hit_rate() * 100.0
+        ));
+        row.push(m.dropped.to_string());
+        t.row(row);
+    }
+    t
+}
+
+/// The `serve` experiment: tail latency + QPS per (workload × stack ×
+/// fabric × strategy base) cell, plus the decomposition of where a
+/// request's time goes on the richest stack.
+pub fn servebench(scale: Scale) -> Result<Report, String> {
+    let ds = if scale.quick { "arxiv-s" } else { "products-s" };
+    let stacks = serve_stacks(scale);
+    let workloads = workload_specs(scale);
+    let opts = ServeOpts::default();
+    let spec = SweepSpec::new(cfg_for(scale, ds), StrategySpec::dgl())
+        .axis(Axis::fabrics(&SWEEP_FABRICS))
+        .axis(Axis::strategies(&SERVE_STRATEGIES))
+        .axis(Axis::tiers(&stacks))
+        .axis(workload_axis(&workloads));
+    let (expanded, reports) = run_serve_grid(&spec, &opts)?;
+    // a dropped request is a truncated latency distribution, not a
+    // result — fail the experiment with the offending cell named
+    for ((index, _, _), rep) in expanded.iter().zip(&reports) {
+        rep.metrics.validate().map_err(|e| {
+            format!("serve cell {}: {e}", cell_label(&spec.axes, index))
+        })?;
+    }
+    let mut r = Report::new(
+        "serve",
+        "online serving: tail latency and sustained QPS per cell",
+    );
+    r.section(
+        format!("latency / throughput grid (GCN on {ds}, 4 servers)"),
+        serve_table(&spec.axes, &expanded, &reports),
+    );
+    // decomposition on the representative cell: uniform fabric, DGL
+    // placement, richest stack, first workload
+    let rep_index = vec![0, 0, stacks.len() - 1, 0];
+    let rep_flat = (stacks.len() - 1) * workloads.len();
+    r.section(
+        format!(
+            "latency decomposition — {}",
+            cell_label(&spec.axes, &rep_index)
+        ),
+        reports[rep_flat].metrics.latency_table(),
+    );
+    r.note(
+        "latency = queue (admission wait + micro-batch window) + \
+         gather (sampling + tier walk + priced feature transfers) + \
+         compute (forward-only on the home server's speed multiplier); \
+         p50/p95/p99 are streaming P2 estimates over request totals",
+    );
+    r.note(
+        "qps is sustained throughput: served requests over the stream \
+         makespan, not the offered arrival rate — an overloaded cell \
+         would fall behind its workload before it ever drops",
+    );
+    r.note(
+        "the strategy axis pins the partitioner the fleet inherited \
+         from training (P3 = hash): worse placement shows up directly \
+         as gather-heavy tails on the remote-only stack",
+    );
+    r.note(
+        "tier stacks persist across the run (early requests warm the \
+         cache the tail is served from); every cell passed \
+         ServeMetrics::validate — zero requests dropped or unaccounted",
+    );
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_scale() -> Scale {
+        Scale {
+            epochs: 2,
+            max_iterations: Some(2),
+            batch: 128,
+            quick: true,
+        }
+    }
+
+    fn tiny_spec(workload: &str, tiers: &str) -> SweepSpec {
+        let mut cfg = cfg_for(tiny_scale(), "arxiv-s");
+        cfg.workload =
+            Some(WorkloadSpec::parse(workload).expect("workload parses"));
+        cfg.tiers = Some(TierSpec::parse(tiers).expect("tiers parse"));
+        SweepSpec::new(cfg, StrategySpec::dgl())
+    }
+
+    #[test]
+    fn report_renders_every_axis_value() {
+        let r = servebench(tiny_scale()).expect("quick serve bench runs");
+        let s = r.render();
+        for wl in workload_specs(tiny_scale()) {
+            assert!(s.contains(&wl.name()), "{s}");
+        }
+        for stack in serve_stacks(tiny_scale()) {
+            assert!(s.contains(&stack.name()), "{s}");
+        }
+        for fabric in SWEEP_FABRICS {
+            assert!(s.contains(&fabric.name()), "{s}");
+        }
+        assert!(s.contains("p99"), "{s}");
+        assert!(s.contains("qps"), "{s}");
+        assert!(s.contains("latency decomposition"), "{s}");
+    }
+
+    #[test]
+    fn grid_cell_matches_direct_serve() {
+        let spec = tiny_spec("poisson:rate=300,dur=0.1,seed=5", "dram:8m:lru+remote");
+        let (expanded, reports) =
+            run_serve_grid(&spec, &ServeOpts::default()).unwrap();
+        assert_eq!(expanded.len(), 1);
+        let direct = serve_cell(
+            &expanded[0].2,
+            expanded[0].1,
+            &ServeOpts::default(),
+        );
+        assert_eq!(reports[0].metrics.digest(), direct.metrics.digest());
+        assert!(reports[0].metrics.served > 0);
+    }
+
+    #[test]
+    fn jobs_budget_does_not_change_the_grid() {
+        let spec = |jobs: usize| {
+            tiny_spec("bursty:rate=400,mult=4,dwell=0.02,dur=0.1", "remote")
+                .axis(Axis::strategies(&SERVE_STRATEGIES))
+                .jobs(jobs)
+        };
+        let (_, a) = run_serve_grid(&spec(1), &ServeOpts::default()).unwrap();
+        let (_, b) = run_serve_grid(&spec(4), &ServeOpts::default()).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.metrics.digest(), rb.metrics.digest());
+        }
+    }
+
+    #[test]
+    fn cells_without_a_workload_fail_fast() {
+        let mut cfg = cfg_for(tiny_scale(), "arxiv-s");
+        cfg.tiers = Some(TierSpec::remote_only());
+        let spec = SweepSpec::new(cfg, StrategySpec::dgl());
+        let e = run_serve_grid(&spec, &ServeOpts::default()).unwrap_err();
+        assert!(e.contains("workload"), "{e}");
+    }
+
+    #[test]
+    fn placement_changes_what_serving_pays() {
+        // same stream, hash vs locality partition: byte movement differs
+        let spec = tiny_spec("poisson:rate=300,dur=0.1,seed=9", "remote")
+            .axis(Axis::strategies(&SERVE_STRATEGIES));
+        let (_, reports) =
+            run_serve_grid(&spec, &ServeOpts::default()).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_ne!(
+            reports[0].metrics.transport.total_bytes(),
+            reports[1].metrics.transport.total_bytes(),
+            "hash placement must price differently from locality placement"
+        );
+    }
+}

@@ -410,8 +410,14 @@ impl SweepGrid {
             headers.push("strategy".to_string());
         }
         headers.extend(self.axes.iter().map(|a| a.name.clone()));
-        for h in ["epoch", "feat moved", "total moved", "hit rate", "steps/iter"]
-        {
+        for h in [
+            "epoch",
+            "feat moved",
+            "total moved",
+            "hit rate",
+            "steps/iter",
+            "dropped roots",
+        ] {
             headers.push(h.to_string());
         }
         let mut t = Table::new(headers);
@@ -431,6 +437,7 @@ impl SweepGrid {
             row.push(fmt_bytes(m.total_bytes()));
             row.push(format!("{:.1}%", m.cache_hit_rate() * 100.0));
             row.push(format!("{:.1}", m.time_steps_per_iter));
+            row.push(m.dropped_roots.to_string());
             t.row(row);
         }
         t
@@ -572,6 +579,8 @@ mod tests {
         assert!(s.contains("straggler:0"), "{s}");
         // no strategy axis: the default strategy column is prepended
         assert!(s.contains("DGL"), "{s}");
+        // dropped-root accounting is always surfaced, even when zero
+        assert!(s.contains("dropped roots"), "{s}");
     }
 
     #[test]

@@ -13,10 +13,11 @@ use crate::featstore::cache::CachePolicy;
 use crate::featstore::tier::TierSpec;
 use crate::partition::PartitionAlgo;
 use crate::sampler::{SampleConfig, SamplerKind};
+use crate::serve::workload::WorkloadSpec;
 
 /// Every key [`RunConfig::set`] accepts (primary spellings), listed in
 /// unknown-key errors so a config-file typo names its alternatives.
-pub const VALID_KEYS: [&str; 27] = [
+pub const VALID_KEYS: [&str; 28] = [
     "dataset",
     "model",
     "layers",
@@ -44,6 +45,7 @@ pub const VALID_KEYS: [&str; 27] = [
     "cache_mb",
     "cache_persist",
     "tiers",
+    "workload",
 ];
 
 #[derive(Clone, Debug)]
@@ -107,6 +109,12 @@ pub struct RunConfig {
     /// `CacheFetch` path active, so `--tiers remote` reproduces the
     /// capacity-0 cache metrics, not the uncached gather path.
     pub tiers: Option<TierSpec>,
+    /// Serving workload (`--workload` / `workload` key), e.g.
+    /// `poisson:rate=500,dur=1,seed=42`. Ignored by training runs; the
+    /// `sim serve` subcommand and the serve sweep cells read it. Kept
+    /// on the config so sweep axes can patch it per cell with the same
+    /// fail-fast validation every other key gets.
+    pub workload: Option<WorkloadSpec>,
     /// Strategy pinned by the config file (`strategy = hopgnn+fa-pg`,
     /// spec grammar or legacy alias). `None` leaves the choice to the
     /// caller (`sim --strategy` / the harness); an explicit CLI
@@ -149,6 +157,7 @@ impl Default for RunConfig {
             cache_mb: 64,
             cache_persist: false,
             tiers: None,
+            workload: None,
             strategy: None,
             memo_samples: false,
         }
@@ -303,6 +312,7 @@ impl RunConfig {
             "cache_mb" => self.cache_mb = us(val)?,
             "cache_persist" => self.cache_persist = bl(val)?,
             "tiers" => self.tiers = Some(TierSpec::parse(val)?),
+            "workload" => self.workload = Some(WorkloadSpec::parse(val)?),
             _ => {
                 return Err(format!(
                     "unknown config key '{key}'; valid keys: {}",
@@ -432,6 +442,19 @@ mod tests {
         // tier errors surface the shared spec grammar's messages
         let e = RunConfig::from_kv("tiers = dram:64m").unwrap_err();
         assert!(e.contains("remote"), "{e}");
+    }
+
+    #[test]
+    fn workload_knob_parses_through_the_spec_grammar() {
+        let cfg =
+            RunConfig::from_kv("workload = poisson:rate=500,dur=2").unwrap();
+        let w = cfg.workload.expect("workload set");
+        assert_eq!(w.rate, 500.0);
+        assert_eq!(w.duration, 2.0);
+        assert_eq!(RunConfig::default().workload, None);
+        // grammar errors surface through `set` like tiers/fabric do
+        let e = RunConfig::from_kv("workload = zipf:rate=5").unwrap_err();
+        assert!(e.contains("unknown workload"), "{e}");
     }
 
     #[test]

@@ -36,5 +36,6 @@ pub mod metrics;
 pub mod partition;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod train;
 pub mod util;

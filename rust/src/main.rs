@@ -10,6 +10,9 @@
 //!   calibrate  measure real PJRT step time, report effective FLOP/s
 //!   info       list datasets, artifacts, experiments
 
+use hopgnn::bench::servebench::{
+    cell_label, run_serve_grid, serve_table, workload_axis,
+};
 use hopgnn::bench::sweep::{Axis, SweepSpec};
 use hopgnn::bench::{
     resolve_experiment_ids, run_experiment, Report, Scale, ALL_EXPERIMENTS,
@@ -23,6 +26,7 @@ use hopgnn::graph::datasets::{load, ALL_SPECS};
 use hopgnn::partition::{partition, PartitionAlgo};
 use hopgnn::runtime::{Engine, Manifest};
 use hopgnn::sampler::{sample_micrograph, SampleConfig, SamplerKind};
+use hopgnn::serve::{serve, ServeOpts, WorkloadSpec};
 use hopgnn::train::{OrderPolicy, Trainer};
 use hopgnn::util::cli::Cli;
 use hopgnn::util::pool::set_thread_budget;
@@ -65,7 +69,8 @@ fn usage() -> String {
        reproduce   regenerate paper tables/figures (--exp <id|all>, --quick)\n  \
        bench       run experiments by id (positional), md + JSON reports;\n  \
                    'bench sweep' runs a declarative strategy/config grid\n  \
-       sim         simulate one strategy (--dataset, --model, --strategy, ...)\n  \
+       sim         simulate one strategy (--dataset, --model, --strategy, ...);\n  \
+                   'sim serve' streams an inference workload instead\n  \
        train       real PJRT training (--dataset-size, --model, --epochs)\n  \
        partition   partition quality report (--dataset, --algo, --servers)\n  \
        calibrate   measure PJRT step time and effective FLOP/s\n  \
@@ -246,6 +251,14 @@ fn cmd_bench_sweep(args: Vec<String>) -> i32 {
     )
     .opt("overlap", "", "overlap axis: off|on|both")
     .opt(
+        "workload",
+        "",
+        "semicolon-separated workload axis (kind:rate=..[,dur=..,seed=..]; \
+         params use commas, so items split on ';'); when set, every cell \
+         streams its workload through the serving engine instead of the \
+         epoch runner",
+    )
+    .opt(
         "set",
         "",
         "base config patches 'key=val[,key=val...]'; 'strategy=<spec>' \
@@ -397,6 +410,73 @@ fn cmd_bench_sweep(args: Vec<String>) -> i32 {
     set_thread_budget(a.get_usize("jobs", 1));
     sweep = sweep.jobs(a.get_usize("jobs", 1));
     let t0 = std::time::Instant::now();
+
+    // a workload axis re-routes the whole grid through the serving
+    // engine: same declarative axes and --jobs budget split, but each
+    // cell streams requests (`sim serve` semantics) instead of running
+    // training epochs
+    let workloads_raw = a.get_or("workload", "");
+    if !workloads_raw.is_empty() {
+        let mut workloads: Vec<WorkloadSpec> = Vec::new();
+        for item in workloads_raw.split(';') {
+            match WorkloadSpec::parse(item.trim()) {
+                Ok(w) => workloads.push(w),
+                Err(e) => {
+                    eprintln!("--workload: {e}");
+                    return 2;
+                }
+            }
+        }
+        shape.push(format!("{} workloads", workloads.len()));
+        sweep = sweep.axis(workload_axis(&workloads));
+        let (expanded, reports) =
+            match run_serve_grid(&sweep, &ServeOpts::default()) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("serve sweep failed validation: {e}");
+                    return 2;
+                }
+            };
+        let mut failed = 0;
+        for ((index, _, _), rep) in expanded.iter().zip(&reports) {
+            if let Err(e) = rep.metrics.validate() {
+                eprintln!(
+                    "serve cell {}: {e}",
+                    cell_label(&sweep.axes, index)
+                );
+                failed += 1;
+            }
+        }
+        let mut report =
+            Report::new("serve_sweep", "declarative serving sweep grid");
+        report.section(
+            format!("{} cells ({})", expanded.len(), shape.join(" x ")),
+            serve_table(&sweep.axes, &expanded, &reports),
+        );
+        report.note(
+            "each cell streams its workload through the serving engine \
+             (`sim serve` semantics): latency = queue + gather + \
+             compute, p50/p95/p99 are streaming P2 estimates, qps is \
+             served requests over the stream makespan",
+        );
+        println!("{}", report.render());
+        eprintln!(
+            "[serve sweep: {} cells in {}]",
+            expanded.len(),
+            fmt_secs(t0.elapsed().as_secs_f64())
+        );
+        let out = a.get_or("out", "reports");
+        if let Err(e) = report.save(&out) {
+            eprintln!("warning: could not save serve_sweep.md: {e}");
+            failed += 1;
+        }
+        if let Err(e) = report.save_json(&out) {
+            eprintln!("warning: could not save serve_sweep.json: {e}");
+            failed += 1;
+        }
+        return failed;
+    }
+
     let grid = match sweep.run() {
         Ok(g) => g,
         Err(e) => {
@@ -434,6 +514,20 @@ fn cmd_bench_sweep(args: Vec<String>) -> i32 {
 }
 
 fn cmd_sim(args: Vec<String>) -> i32 {
+    // positional subcommands route before flag parsing; an unknown one
+    // fails fast with the valid list instead of being silently ignored
+    if let Some(first) = args.first() {
+        if !first.starts_with('-') {
+            if first == "serve" {
+                return cmd_sim_serve(args[1..].to_vec());
+            }
+            eprintln!(
+                "unknown sim subcommand '{first}'; known subcommands: \
+                 serve (or pass flags directly for a training simulation)"
+            );
+            return 2;
+        }
+    }
     let cli = Cli::new("hopgnn sim", "simulate one training strategy")
         .opt("dataset", "products-s",
              "dataset (arxiv-s|products-s|uk-s|in-s|it-s|synth:v=..,e=..)")
@@ -580,6 +674,116 @@ fn cmd_sim(args: Vec<String>) -> i32 {
             fmt_bytes(m.cache_hit_bytes),
             fmt_bytes(m.cache_evict_bytes),
         );
+    }
+    0
+}
+
+/// `hopgnn sim serve` — stream an inference workload through one
+/// simulated cluster and report the latency decomposition, tail
+/// quantiles, and sustained QPS (the single-run face of the serving
+/// subsystem; `bench serve` runs the full grid).
+fn cmd_sim_serve(args: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "hopgnn sim serve",
+        "stream an inference workload through the simulator",
+    )
+    .opt("dataset", "products-s",
+         "dataset (arxiv-s|products-s|uk-s|in-s|it-s|synth:v=..,e=..)")
+    .opt("workload", "poisson:rate=500,dur=1",
+         "arrival process kind:rate=..[,dur=..,seed=..] \
+          (poisson | bursty:..,mult=..,dwell=.. | \
+          diurnal:..,period=..,depth=..)")
+    .opt("strategy", "dgl",
+         "strategy base whose placement the fleet inherited from \
+          training (p3 forces hash partitioning)")
+    .opt("model", "gcn", "gcn|sage|gat|deepgcn|film")
+    .opt("servers", "4", "number of simulated GPU servers")
+    .opt("fabric", "uniform",
+         "cluster topology (uniform|rack:<k>|hetero-mix|straggler:<s>)")
+    .opt("fanout", "10", "neighbor sampling fanout")
+    .opt("partition", "metis", "metis|heuristic|hash")
+    .opt("tiers", "dram:64m:lru+remote",
+         "feature tier stack kind:cap[:policy]+..+remote")
+    .opt("seed", "42", "random seed")
+    .opt("window-us", "2000",
+         "micro-batch coalescing window in microseconds (0 = serve \
+          each batch as soon as the lane is free)")
+    .opt("queue-cap", "1024",
+         "bounded admission queue per server lane (overflow drops \
+          fail the run)")
+    .opt("max-batch", "32", "max requests coalesced into one gather")
+    .opt("jobs", "0", "thread budget for parallel serve lanes \
+          (0 = all cores)");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    set_thread_budget(a.get_usize("jobs", 0));
+    let mut cfg = RunConfig::default();
+    for key in ["dataset", "model", "servers", "fanout", "partition",
+                "seed", "fabric", "tiers", "workload"] {
+        if let Some(v) = a.get(key) {
+            if let Err(e) = cfg.set(key, v) {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    if let Err(e) = cfg.fabric.validate(cfg.num_servers) {
+        eprintln!("{e}");
+        return 2;
+    }
+    cfg.vmax = RunConfig::full_sim_vmax(cfg.layers, cfg.fanout);
+    let spec = match a.get_or("strategy", "dgl").parse::<StrategySpec>() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if let Some(pa) = spec.preferred_partition() {
+        cfg.partition_algo = pa;
+    }
+    let wl = cfg.workload.expect("--workload has a default");
+    let opts = ServeOpts {
+        window: a.get_f64("window-us", 2000.0) * 1e-6,
+        queue_cap: a.get_usize("queue-cap", 1024),
+        max_batch: a.get_usize("max-batch", 32),
+    };
+    let d = load(&cfg.dataset);
+    println!(
+        "dataset {}: {} vertices, {} edges, feat {}, Vol_F {}",
+        d.name,
+        d.graph.num_vertices(),
+        d.graph.num_edges(),
+        d.feat_dim,
+        fmt_bytes(d.feature_volume_bytes())
+    );
+    println!(
+        "workload {} (~{} arrivals expected)",
+        wl.name(),
+        wl.expected_arrivals().round() as u64
+    );
+    let env = hopgnn::coordinator::SimEnv::new(&d, cfg);
+    let rep = serve(&env, &wl, &opts);
+    println!("serve {} ({spec}): {}", spec.name(), rep.metrics.summary());
+    println!("{}", rep.metrics.latency_table().render());
+    if env.cfg.cache_enabled() {
+        println!(
+            "tiers {} (per server): {:.1}% hit rate, {} served from \
+             warm tiers, {} evicted",
+            env.cfg.effective_tiers().name(),
+            rep.metrics.transport.cache_hit_rate() * 100.0,
+            fmt_bytes(rep.metrics.transport.cache_hit_bytes),
+            fmt_bytes(rep.metrics.transport.cache_evict_bytes),
+        );
+    }
+    if let Err(e) = rep.metrics.validate() {
+        eprintln!("{e}");
+        return 1;
     }
     0
 }
@@ -838,6 +1042,11 @@ fn cmd_info(_args: Vec<String>) -> i32 {
     println!(
         "tiers: kind:cap[:policy]+..+remote over hbm|dram|ssd|remote \
          (e.g. hbm:2g+dram:16g+remote, dram:64m:lru+remote, remote)"
+    );
+    println!(
+        "workloads: poisson:rate=<r>[,dur=..,seed=..], \
+         bursty:rate=..,mult=..,dwell=.., diurnal:rate=..,period=..,\
+         depth=.. (sim serve / bench sweep --workload)"
     );
     println!("experiments: {}", ALL_EXPERIMENTS.join(", "));
     match Manifest::load_default() {

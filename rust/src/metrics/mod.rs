@@ -235,9 +235,11 @@ impl EpochMetrics {
         out
     }
 
-    /// Pretty one-line summary.
+    /// Pretty one-line summary. Dropped roots are appended when any
+    /// were discarded — the counter exists to be *seen*, not just
+    /// accumulated.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "epoch {} | gather {} ({:.0}%) compute {} | {} moved (feat {}) | miss {:.1}% | busy {:.0}%",
             fmt_secs(self.epoch_time),
             fmt_secs(self.time_gather),
@@ -247,7 +249,11 @@ impl EpochMetrics {
             fmt_bytes(self.bytes(TransferKind::Feature)),
             self.miss_rate() * 100.0,
             self.gpu_busy_fraction * 100.0,
-        )
+        );
+        if self.dropped_roots > 0 {
+            s.push_str(&format!(" | dropped {} roots", self.dropped_roots));
+        }
+        s
     }
 
     /// Render the Fig-4-style phase breakdown.
@@ -375,6 +381,21 @@ mod tests {
         let avg = EpochMetrics::average_of(&[a, b]);
         assert!((avg.epoch_time - 3.0).abs() < 1e-12);
         assert_eq!(avg.remote_vertices, 150);
+    }
+
+    #[test]
+    fn summary_surfaces_dropped_roots() {
+        let clean = EpochMetrics::default();
+        assert!(!clean.summary().contains("dropped"), "{}", clean.summary());
+        let m = EpochMetrics {
+            dropped_roots: 3,
+            ..Default::default()
+        };
+        assert!(
+            m.summary().contains("dropped 3 roots"),
+            "{}",
+            m.summary()
+        );
     }
 
     #[test]

@@ -1,0 +1,529 @@
+//! The online serving engine: streams sampled ego-graph requests
+//! through the training substrate and accounts per-request latency.
+//!
+//! Serving **reuses** the offline layers rather than forking them:
+//! each request's ego-graph is drawn by the scratch-based sampler,
+//! planned through [`FeatureStore`]/[`GatherPlan`], resolved against
+//! the lane's warm [`TierStack`] (same pricing as the epoch driver's
+//! `CacheFetch` op — hbm free, dram staged, ssd staged + flash read,
+//! residual fetches priced per link by the [`crate::cluster::Fabric`]),
+//! and computed forward-only on the destination server's compute-speed
+//! multiplier.
+//!
+//! ## Queueing model
+//!
+//! One [`ServeLane`] per server owns a bounded admission queue
+//! ([`ServeOpts::queue_cap`]; overflow is *dropped and reported* — a
+//! serve report fails validation on drops). A micro-batch opens at the
+//! first queued request, stays open for [`ServeOpts::window`] seconds
+//! of stragglers (coalesced into **one** gather — the dedup the
+//! training path gets from [`PregatherPlan`]), then serves up to
+//! [`ServeOpts::max_batch`] requests. Per request:
+//! `latency = queue (service start - arrival) + gather + compute`.
+//!
+//! ## Determinism
+//!
+//! Requests are routed to their root's home server up front, every
+//! lane owns a seeded RNG derived from `(seed, server)`, and lanes
+//! never communicate — so `--jobs N` execution is bit-identical to
+//! serial by construction, locked by `tests/serve_parity.rs`. Tier
+//! stacks persist across the whole run (the `--cache-persist`
+//! semantics): early requests warm the tiers the tail is served from.
+//! After warm-up a lane's request loop is allocation-free
+//! (`tests/alloc_budget.rs`).
+
+use super::metrics::ServeMetrics;
+use super::workload::WorkloadSpec;
+use crate::cluster::NetStats;
+use crate::coordinator::SimEnv;
+use crate::featstore::pregather::{PlanScratch, PregatherPlan};
+use crate::featstore::tier::{TierKind, TierStack, NUM_TIER_KINDS};
+use crate::featstore::{FeatureStore, GatherPlan};
+use crate::metrics::EpochMetrics;
+use crate::sampler::{sample_batch_into, SampleConfig, SampleScratch};
+use crate::util::pool;
+use crate::util::rng::Rng;
+use crate::util::stamp::StampedSet;
+
+/// Serving knobs orthogonal to the workload and cluster config.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Micro-batching window (seconds): a batch opens at the first
+    /// queued request and admits stragglers for this long. `0.0`
+    /// serves immediately (no coalescing delay).
+    pub window: f64,
+    /// Bounded admission queue per server lane; arrivals past this
+    /// are dropped (and fail the report's `validate()`).
+    pub queue_cap: usize,
+    /// Most requests coalesced into one micro-batch gather.
+    pub max_batch: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        Self {
+            window: 2e-3,
+            queue_cap: 1024,
+            max_batch: 32,
+        }
+    }
+}
+
+/// One inference request: an arrival time and the ego-graph root.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub time: f64,
+    pub root: u32,
+}
+
+/// The full request stream, generated once up front (serially) so the
+/// arrival process is independent of how many workers replay it.
+pub struct ServeSchedule {
+    /// All requests in arrival order.
+    pub requests: Vec<Request>,
+    /// Per home-server request indices (ascending in time) — the unit
+    /// of lane-parallel execution.
+    pub per_server: Vec<Vec<u32>>,
+}
+
+impl ServeSchedule {
+    /// Draw the stream: arrival times from the workload spec, roots
+    /// uniformly from the train set (the vertices a deployed model
+    /// would be queried on), routed to each root's home server.
+    pub fn generate(env: &SimEnv, wl: &WorkloadSpec) -> Self {
+        let times = wl.arrival_times();
+        let roots_pool = &env.dataset.train_vertices;
+        assert!(
+            !roots_pool.is_empty(),
+            "dataset '{}' has no train vertices to serve",
+            env.dataset.name
+        );
+        let mut rng =
+            Rng::new(wl.seed ^ env.cfg.seed.rotate_left(17) ^ 0x5EED_0001);
+        let mut requests = Vec::with_capacity(times.len());
+        let mut per_server = vec![Vec::new(); env.num_servers()];
+        for t in times {
+            let root = roots_pool[rng.below(roots_pool.len())];
+            per_server[env.partition.home(root) as usize]
+                .push(requests.len() as u32);
+            requests.push(Request { time: t, root });
+        }
+        Self {
+            requests,
+            per_server,
+        }
+    }
+}
+
+/// One served request's accounting (all times in simulated seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Completion {
+    pub arrival: f64,
+    /// Wait from arrival to service start (admission + batch window).
+    pub queue: f64,
+    /// Sampling + feature collection (tier walk, transfers, staging).
+    pub gather: f64,
+    /// Forward pass on the home server's speed multiplier.
+    pub compute: f64,
+    /// Absolute completion time.
+    pub done: f64,
+}
+
+/// A lane's reusable output buffers: completions in service order plus
+/// the transport-layer accounting. Reset keeps every capacity, so a
+/// warmed (lane, out) pair replays allocation-free.
+pub struct LaneOut {
+    pub completions: Vec<Completion>,
+    pub dropped: u64,
+    pub batches: u64,
+    pub stats: NetStats,
+    pub metrics: EpochMetrics,
+}
+
+impl LaneOut {
+    pub fn new(num_servers: usize, capacity: usize) -> Self {
+        Self {
+            completions: Vec::with_capacity(capacity),
+            dropped: 0,
+            batches: 0,
+            stats: NetStats::new(num_servers),
+            metrics: EpochMetrics::default(),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.completions.clear();
+        self.dropped = 0;
+        self.batches = 0;
+        self.stats.reset();
+        self.metrics.reset();
+    }
+}
+
+/// Per-server serving state: the warm tier stack, sampler scratch, and
+/// plan buffers one lane reuses across every request it serves.
+pub struct ServeLane<'a> {
+    env: &'a SimEnv<'a>,
+    store: FeatureStore<'a>,
+    stack: TierStack,
+    /// Tier walk configured? (`remote`-only stacks skip it and price
+    /// through the merged-gather path instead.)
+    cached: bool,
+    server: usize,
+    opts: ServeOpts,
+    scratch: SampleScratch,
+    /// Single-step batch buffer feeding the tier walk / pre-gather.
+    steps: Vec<Vec<u32>>,
+    seen: StampedSet,
+    plan: GatherPlan,
+    ps: PlanScratch,
+    pre: PregatherPlan,
+    /// Admission queue: request indices waiting for service.
+    pending: Vec<u32>,
+    batch_roots: Vec<u32>,
+}
+
+impl<'a> ServeLane<'a> {
+    pub fn new(env: &'a SimEnv<'a>, server: usize, opts: &ServeOpts) -> Self {
+        let stack = env.build_tiers().swap_remove(server);
+        Self {
+            env,
+            store: env.store(),
+            cached: !stack.levels().is_empty(),
+            stack,
+            server,
+            opts: *opts,
+            scratch: SampleScratch::new(),
+            steps: vec![Vec::new()],
+            seen: StampedSet::default(),
+            plan: GatherPlan::default(),
+            ps: PlanScratch::default(),
+            pre: PregatherPlan::default(),
+            pending: Vec::with_capacity(opts.queue_cap),
+            batch_roots: Vec::with_capacity(opts.max_batch),
+        }
+    }
+
+    /// Serve this lane's share of the schedule into `out`. Replaying
+    /// the same schedule on a warmed lane is bit-identical (the lane
+    /// RNG is re-derived per run) and allocation-free.
+    pub fn run(&mut self, schedule: &ServeSchedule, out: &mut LaneOut) {
+        out.reset();
+        self.pending.clear();
+        let mine = &schedule.per_server[self.server];
+        let reqs = &schedule.requests;
+        let scfg = self.env.cfg.sample_config();
+        let speed = self.env.fabric.compute_speed(self.server);
+        let mut rng = Rng::new(
+            self.env.cfg.seed
+                ^ (self.server as u64 + 1)
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let mut next = 0usize;
+        let mut clock = 0.0f64;
+        while next < mine.len() || !self.pending.is_empty() {
+            // admit everything that has arrived by now; overflow drops
+            while next < mine.len()
+                && reqs[mine[next] as usize].time <= clock
+            {
+                if self.pending.len() < self.opts.queue_cap {
+                    self.pending.push(mine[next]);
+                } else {
+                    out.dropped += 1;
+                }
+                next += 1;
+            }
+            if self.pending.is_empty() {
+                clock = reqs[mine[next] as usize].time;
+                continue;
+            }
+            // batch opens now; stragglers inside the window coalesce
+            let open = clock;
+            let close = open + self.opts.window;
+            while next < mine.len()
+                && reqs[mine[next] as usize].time <= close
+                && self.pending.len() < self.opts.queue_cap
+            {
+                self.pending.push(mine[next]);
+                next += 1;
+            }
+            let start = if self.opts.window > 0.0 { close } else { open };
+            let take = self.pending.len().min(self.opts.max_batch);
+            self.batch_roots.clear();
+            for &ri in &self.pending[..take] {
+                self.batch_roots.push(reqs[ri as usize].root);
+            }
+            let (gather, compute) = self.price_batch(&scfg, speed, &mut rng, out);
+            let done = start + gather + compute;
+            for &ri in &self.pending[..take] {
+                let r = &reqs[ri as usize];
+                out.completions.push(Completion {
+                    arrival: r.time,
+                    queue: start - r.time,
+                    gather,
+                    compute,
+                    done,
+                });
+            }
+            out.batches += 1;
+            self.pending.drain(..take);
+            clock = done;
+        }
+    }
+
+    /// Price one coalesced micro-batch: sample the batch's ego graphs,
+    /// collect features through the warm tier stack (identical
+    /// accounting to the epoch driver's `CacheFetch`) or the merged
+    /// pre-gather path, and run the forward pass.
+    fn price_batch(
+        &mut self,
+        scfg: &SampleConfig,
+        speed: f64,
+        rng: &mut Rng,
+        out: &mut LaneOut,
+    ) -> (f64, f64) {
+        let cost = &self.env.cfg.cost;
+        let step = &mut self.steps[0];
+        step.clear();
+        let sstats = sample_batch_into(
+            &self.env.dataset.graph,
+            &self.batch_roots,
+            scfg,
+            rng,
+            &mut self.scratch,
+            step,
+        );
+        let sample = cost.sample_time(sstats.vertices);
+        let fetch = if self.cached {
+            let deltas = self.stack.resolve_into(
+                &self.store,
+                self.server,
+                &self.steps,
+                &mut self.seen,
+                &mut self.plan,
+            );
+            let fb = self.store.feat_bytes;
+            let hits = deltas.cache_hits();
+            let remote = self.plan.remote_count();
+            let mut dt = self.store.sim_cost_cached(
+                &self.plan,
+                deltas.staged_hit_rows,
+                &self.env.fabric,
+                cost,
+                &mut out.stats,
+                &mut out.metrics,
+            );
+            let ssd = deltas.ssd_seconds(fb);
+            if ssd > 0.0 {
+                dt += ssd;
+            }
+            let m = &mut out.metrics;
+            m.cache_hits += hits;
+            m.cache_misses += remote;
+            m.cache_hit_bytes += hits * fb;
+            m.cache_miss_bytes += remote * fb;
+            m.cache_evict_bytes += deltas.evicted_bytes;
+            for k in 0..NUM_TIER_KINDS {
+                m.tier_hits[k] += deltas.hits_at[k];
+                m.tier_hit_bytes[k] += deltas.hits_at[k] * fb;
+                m.tier_miss_bytes[k] += deltas.misses_at[k] * fb;
+                m.tier_promote_bytes[k] += deltas.promote_bytes_at[k];
+                m.tier_demote_bytes[k] += deltas.demote_bytes_at[k];
+            }
+            // residual fetches are remote-tier hits in the per-tier view
+            let ri = TierKind::Remote.index();
+            m.tier_hits[ri] += remote;
+            m.tier_hit_bytes[ri] += remote * fb;
+            dt
+        } else {
+            PregatherPlan::build_into(
+                &self.store,
+                self.server,
+                &self.steps,
+                &mut self.ps,
+                &mut self.pre,
+            );
+            self.store.sim_cost(
+                &self.pre.merged,
+                &self.env.fabric,
+                cost,
+                &mut out.stats,
+                &mut out.metrics,
+            )
+        };
+        out.metrics.time_sample += sample;
+        out.metrics.time_gather += fetch;
+        // forward-only inference: train_flops is fwd + ~2x bwd, so the
+        // forward pass is a third of the training FLOPs (the launch
+        // overhead is per-dispatch, not per-FLOP, and stays whole)
+        let launch = cost.launch_overhead(&self.env.shape);
+        let train = cost.train_time(&self.env.shape, sstats.vertices, sstats.edges);
+        let compute = ((train - launch) / 3.0 + launch) / speed;
+        out.metrics.time_compute += compute;
+        (sample + fetch, compute)
+    }
+}
+
+/// A finished serving run: the workload served and its aggregates.
+pub struct ServeReport {
+    pub workload: WorkloadSpec,
+    pub metrics: ServeMetrics,
+}
+
+/// Serve one workload end to end: generate the schedule, run every
+/// lane (parallel up to the thread budget — bit-identical to serial),
+/// and merge in deterministic server order.
+pub fn serve(env: &SimEnv, wl: &WorkloadSpec, opts: &ServeOpts) -> ServeReport {
+    let schedule = ServeSchedule::generate(env, wl);
+    serve_schedule(env, wl, &schedule, opts)
+}
+
+/// [`serve`] over a pre-generated schedule (the bench harness reuses
+/// one schedule across measured iterations).
+pub fn serve_schedule(
+    env: &SimEnv,
+    wl: &WorkloadSpec,
+    schedule: &ServeSchedule,
+    opts: &ServeOpts,
+) -> ServeReport {
+    let n = env.num_servers();
+    let workers = pool::lane_allowance().min(n);
+    let outs = pool::run_indexed(n, workers, |s| {
+        let mut lane = ServeLane::new(env, s, opts);
+        let mut out = LaneOut::new(n, schedule.per_server[s].len());
+        lane.run(schedule, &mut out);
+        out
+    });
+    let mut sm = ServeMetrics::new();
+    sm.offered = schedule.requests.len() as u64;
+    let mut stats = NetStats::new(n);
+    for out in &outs {
+        for c in &out.completions {
+            sm.observe(c.queue, c.gather, c.compute);
+            sm.makespan = sm.makespan.max(c.done);
+        }
+        sm.dropped += out.dropped;
+        sm.batches += out.batches;
+        sm.transport.accumulate(&out.metrics);
+        stats.merge(&out.stats);
+    }
+    sm.transport.absorb_net(&stats);
+    sm.transport.epoch_time = sm.makespan;
+    ServeReport {
+        workload: *wl,
+        metrics: sm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::featstore::tier::TierSpec;
+    use crate::graph::datasets::tiny_test_dataset;
+
+    fn tiny_cfg(tiers: &str) -> RunConfig {
+        RunConfig {
+            num_servers: 2,
+            layers: 2,
+            fanout: 4,
+            vmax: 32,
+            tiers: Some(TierSpec::parse(tiers).expect("tier spec parses")),
+            ..Default::default()
+        }
+    }
+
+    fn wl(s: &str) -> WorkloadSpec {
+        WorkloadSpec::parse(s).expect("workload spec parses")
+    }
+
+    #[test]
+    fn serves_every_request_and_validates() {
+        let d = tiny_test_dataset(31);
+        let env = SimEnv::new(&d, tiny_cfg("dram:1m:lru+remote"));
+        let r = serve(&env, &wl("poisson:rate=500,dur=0.2,seed=3"), &ServeOpts::default());
+        let m = &r.metrics;
+        assert!(m.offered > 0);
+        m.validate().expect("unloaded run serves everything");
+        assert_eq!(m.served, m.offered);
+        assert!(m.makespan > 0.0);
+        assert!(m.qps() > 0.0);
+        assert!(m.p50() > 0.0 && m.p50() <= m.p99());
+        assert!(m.sum_gather > 0.0 && m.sum_compute > 0.0);
+        assert!(m.transport.total_bytes() > 0, "requests moved features");
+    }
+
+    #[test]
+    fn warm_tiers_serve_the_tail_from_cache() {
+        let d = tiny_test_dataset(32);
+        let env = SimEnv::new(&d, tiny_cfg("dram:4m:lru+remote"));
+        let r = serve(&env, &wl("poisson:rate=2000,dur=0.3,seed=5"), &ServeOpts::default());
+        let t = &r.metrics.transport;
+        assert!(
+            t.cache_hits > 0,
+            "persistent stacks must warm across the run"
+        );
+        // per-tier contribution: dram slot carries the hits
+        assert_eq!(t.tier_hits[1], t.cache_hits);
+    }
+
+    #[test]
+    fn batch_window_coalesces_requests() {
+        let d = tiny_test_dataset(33);
+        let env = SimEnv::new(&d, tiny_cfg("remote"));
+        let spec = wl("poisson:rate=4000,dur=0.1,seed=7");
+        let eager = serve(
+            &env,
+            &spec,
+            &ServeOpts {
+                window: 0.0,
+                ..Default::default()
+            },
+        );
+        let windowed = serve(
+            &env,
+            &spec,
+            &ServeOpts {
+                window: 5e-3,
+                ..Default::default()
+            },
+        );
+        assert!(
+            windowed.metrics.batches < eager.metrics.batches,
+            "a 5ms window must coalesce more than no window ({} !< {})",
+            windowed.metrics.batches,
+            eager.metrics.batches
+        );
+        assert!(windowed.metrics.mean_batch() > eager.metrics.mean_batch());
+    }
+
+    #[test]
+    fn bounded_queue_drops_and_fails_validation() {
+        let d = tiny_test_dataset(34);
+        let env = SimEnv::new(&d, tiny_cfg("remote"));
+        let r = serve(
+            &env,
+            &wl("bursty:rate=20000,mult=10,dwell=0.02,dur=0.2,seed=9"),
+            &ServeOpts {
+                window: 0.0,
+                queue_cap: 1,
+                max_batch: 1,
+            },
+        );
+        let m = &r.metrics;
+        assert!(m.dropped > 0, "an overloaded 1-deep queue must drop");
+        assert_eq!(m.served + m.dropped, m.offered);
+        let e = m.validate().unwrap_err();
+        assert!(e.contains("dropped"), "{e}");
+    }
+
+    #[test]
+    fn replays_are_bit_identical() {
+        let d = tiny_test_dataset(35);
+        let env = SimEnv::new(&d, tiny_cfg("dram:1m:lru+remote"));
+        let spec = wl("diurnal:rate=800,period=0.1,depth=0.7,dur=0.2,seed=11");
+        let a = serve(&env, &spec, &ServeOpts::default());
+        let b = serve(&env, &spec, &ServeOpts::default());
+        assert_eq!(a.metrics.digest(), b.metrics.digest());
+    }
+}

@@ -1,0 +1,278 @@
+//! Per-request latency accounting for the serving engine.
+//!
+//! [`ServeMetrics`] folds every completed request into streaming
+//! aggregates: end-to-end latency decomposed into queue / gather /
+//! compute, tail quantiles via the P² estimator
+//! ([`crate::util::stats::P2Quantile`] — O(1) space, allocation-free,
+//! validated against exact sort-based quantiles by
+//! `tests/serve_parity.rs`), sustained QPS over the stream makespan,
+//! and the transport-layer [`EpochMetrics`] (bytes moved, per-tier hit
+//! contribution) the request batches accumulated on the way.
+//!
+//! A serve report is only *valid* if every offered request was served:
+//! [`ServeMetrics::validate`] fails on dropped or unaccounted requests
+//! instead of letting a truncated run masquerade as a fast one.
+
+use crate::metrics::EpochMetrics;
+use crate::util::stats::P2Quantile;
+use crate::util::table::{fmt_secs, Table};
+
+/// Streaming aggregates over one serving run.
+#[derive(Clone, Debug)]
+pub struct ServeMetrics {
+    /// Requests the workload generator offered.
+    pub offered: u64,
+    /// Requests that completed service.
+    pub served: u64,
+    /// Requests rejected by the bounded admission queue.
+    pub dropped: u64,
+    /// Micro-batches executed (served / batches = mean batch size).
+    pub batches: u64,
+    /// Component latency sums across served requests (seconds).
+    pub sum_queue: f64,
+    pub sum_gather: f64,
+    pub sum_compute: f64,
+    pub sum_total: f64,
+    /// Worst end-to-end latency observed.
+    pub max_total: f64,
+    /// Completion time of the last request (run wall time in simulated
+    /// seconds) — the denominator of sustained QPS.
+    pub makespan: f64,
+    /// Transport-layer accounting accumulated by the request batches
+    /// (bytes by kind, cache/tier hits — the per-tier hit contribution).
+    pub transport: EpochMetrics,
+    p50: P2Quantile,
+    p95: P2Quantile,
+    p99: P2Quantile,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self {
+            offered: 0,
+            served: 0,
+            dropped: 0,
+            batches: 0,
+            sum_queue: 0.0,
+            sum_gather: 0.0,
+            sum_compute: 0.0,
+            sum_total: 0.0,
+            max_total: 0.0,
+            makespan: 0.0,
+            transport: EpochMetrics::default(),
+            p50: P2Quantile::new(0.50),
+            p95: P2Quantile::new(0.95),
+            p99: P2Quantile::new(0.99),
+        }
+    }
+
+    /// Fold one served request in (allocation-free).
+    pub fn observe(&mut self, queue: f64, gather: f64, compute: f64) {
+        let total = queue + gather + compute;
+        self.served += 1;
+        self.sum_queue += queue;
+        self.sum_gather += gather;
+        self.sum_compute += compute;
+        self.sum_total += total;
+        self.max_total = self.max_total.max(total);
+        self.p50.observe(total);
+        self.p95.observe(total);
+        self.p99.observe(total);
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.p50.value()
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.p95.value()
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.p99.value()
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.sum_total / self.served as f64
+        }
+    }
+
+    /// Sustained throughput: served requests over the stream makespan.
+    pub fn qps(&self) -> f64 {
+        if self.makespan > 0.0 {
+            self.served as f64 / self.makespan
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean requests coalesced per micro-batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+
+    /// A report is valid only if every offered request was served —
+    /// dropped or unaccounted requests fail instead of silently
+    /// truncating the latency distribution.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dropped > 0 {
+            return Err(format!(
+                "serve run dropped {} of {} requests at the admission \
+                 queue — raise --queue-cap or lower the arrival rate \
+                 (a truncated run would under-report tail latency)",
+                self.dropped, self.offered
+            ));
+        }
+        if self.served != self.offered {
+            return Err(format!(
+                "serve run unaccounted: {} served + {} dropped != {} \
+                 offered",
+                self.served, self.dropped, self.offered
+            ));
+        }
+        Ok(())
+    }
+
+    /// Order-sensitive FNV-style digest over every aggregate (counters,
+    /// float bit patterns, quantile estimates). Two runs digest equal
+    /// iff their accounting is bit-identical — the parity tests compare
+    /// serial vs `--jobs N` runs through this.
+    pub fn digest(&self) -> u64 {
+        let words = [
+            self.offered,
+            self.served,
+            self.dropped,
+            self.batches,
+            self.sum_queue.to_bits(),
+            self.sum_gather.to_bits(),
+            self.sum_compute.to_bits(),
+            self.sum_total.to_bits(),
+            self.max_total.to_bits(),
+            self.makespan.to_bits(),
+            self.p50.value().to_bits(),
+            self.p95.value().to_bits(),
+            self.p99.value().to_bits(),
+            self.transport.total_bytes(),
+            self.transport.cache_hits,
+            self.transport.cache_misses,
+            self.transport.remote_vertices,
+            self.transport.time_gather.to_bits(),
+            self.transport.time_compute.to_bits(),
+        ];
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for w in words {
+            h ^= w;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// One-line report in the style of [`EpochMetrics::summary`].
+    pub fn summary(&self) -> String {
+        format!(
+            "served {}/{} in {} | p50 {} p95 {} p99 {} | mean {} max {} | {:.0} qps | {:.1} req/batch",
+            self.served,
+            self.offered,
+            fmt_secs(self.makespan),
+            fmt_secs(self.p50()),
+            fmt_secs(self.p95()),
+            fmt_secs(self.p99()),
+            fmt_secs(self.mean_latency()),
+            fmt_secs(self.max_total),
+            self.qps(),
+            self.mean_batch(),
+        )
+    }
+
+    /// The latency decomposition as a rendered table: where an average
+    /// request's time goes, plus the tail quantiles.
+    pub fn latency_table(&self) -> Table {
+        let n = self.served.max(1) as f64;
+        let total = self.sum_total.max(1e-12);
+        let mut t = Table::new(["component", "mean", "fraction"]);
+        for (name, v) in [
+            ("queue", self.sum_queue),
+            ("gather", self.sum_gather),
+            ("compute", self.sum_compute),
+        ] {
+            t.row([
+                name.to_string(),
+                fmt_secs(v / n),
+                format!("{:.1}%", v / total * 100.0),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_decomposes_and_validates() {
+        let mut m = ServeMetrics::new();
+        m.offered = 2;
+        m.batches = 1;
+        m.observe(1e-3, 2e-3, 3e-3);
+        m.observe(2e-3, 2e-3, 3e-3);
+        m.makespan = 0.5;
+        assert_eq!(m.served, 2);
+        assert!((m.mean_latency() - 6.5e-3).abs() < 1e-12);
+        assert!((m.qps() - 4.0).abs() < 1e-12);
+        assert_eq!(m.mean_batch(), 2.0);
+        m.validate().expect("fully served run validates");
+        let s = m.summary();
+        assert!(s.contains("qps"), "{s}");
+    }
+
+    #[test]
+    fn validate_rejects_dropped_and_unserved() {
+        let mut m = ServeMetrics::new();
+        m.offered = 10;
+        m.observe(0.0, 1e-3, 1e-3);
+        m.dropped = 9;
+        let e = m.validate().unwrap_err();
+        assert!(e.contains("dropped 9 of 10"), "{e}");
+        assert!(e.contains("queue-cap"), "{e}");
+        m.dropped = 0;
+        let e = m.validate().unwrap_err();
+        assert!(e.contains("unaccounted"), "{e}");
+    }
+
+    #[test]
+    fn digest_separates_distinct_runs() {
+        let mut a = ServeMetrics::new();
+        let mut b = ServeMetrics::new();
+        for m in [&mut a, &mut b] {
+            m.offered = 1;
+            m.observe(1e-3, 2e-3, 3e-3);
+            m.makespan = 0.1;
+        }
+        assert_eq!(a.digest(), b.digest());
+        b.observe(1e-3, 2e-3, 3.0001e-3);
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn latency_table_fractions_sum() {
+        let mut m = ServeMetrics::new();
+        m.observe(1.0, 2.0, 1.0);
+        let s = m.latency_table().render();
+        assert!(s.contains("50.0%"), "{s}");
+        assert!(s.contains("queue"), "{s}");
+    }
+}

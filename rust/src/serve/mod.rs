@@ -1,0 +1,32 @@
+//! Online inference serving: streaming request workloads over the
+//! training substrate, with tail-latency and QPS accounting.
+//!
+//! The training side of this repo asks "how fast is an epoch?"; this
+//! subsystem asks the deployed-system question — "what latency does a
+//! request see at a given arrival rate?" — using the *same* sampler,
+//! feature store, tier stacks, fabric pricing, and thread pool (reuse,
+//! not a fork; the ROADMAP's serving item).
+//!
+//! * [`workload`] — seeded deterministic arrival processes (Poisson,
+//!   bursty MMPP, diurnal sinusoid) behind the `--workload` spec
+//!   grammar;
+//! * [`engine`] — per-server serve lanes with bounded admission
+//!   queues, micro-batch coalescing, and warm tier stacks persisting
+//!   across the run;
+//! * [`metrics`] — per-request queue/gather/compute decomposition,
+//!   streaming p50/p95/p99 (P² estimator), sustained QPS, per-tier
+//!   hit contribution, and fail-on-drop validation.
+//!
+//! Surfaced as `sim serve`, the `serve` bench experiment, and the
+//! `bench sweep --workload` axis.
+
+pub mod engine;
+pub mod metrics;
+pub mod workload;
+
+pub use engine::{
+    serve, serve_schedule, Completion, LaneOut, Request, ServeLane, ServeOpts,
+    ServeReport, ServeSchedule,
+};
+pub use metrics::ServeMetrics;
+pub use workload::{ArrivalKind, WorkloadSpec, WORKLOAD_FORMS};

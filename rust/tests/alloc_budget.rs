@@ -31,6 +31,7 @@ use hopgnn::coordinator::{EpochDriver, Op, ProgramBuilder, SimEnv};
 use hopgnn::featstore::tier::TierSpec;
 use hopgnn::graph::datasets::tiny_test_dataset;
 use hopgnn::sampler::{sample_batch_into, SampleScratch};
+use hopgnn::serve::{LaneOut, ServeLane, ServeOpts, ServeSchedule, WorkloadSpec};
 use hopgnn::util::alloc::{allocation_count, CountingAlloc};
 use hopgnn::util::rng::Rng;
 
@@ -166,4 +167,34 @@ fn steady_state_iterations_allocate_nothing() {
     let m = driver.finish();
     assert!(m.epoch_time > 0.0);
     assert!(m.total_bytes() > 0);
+
+    // --- the serving request loop shares the envelope: a warmed
+    // (ServeLane, LaneOut) pair replays a schedule with zero heap
+    // allocations. Same static degree hierarchy as above (LRU tiers
+    // are excluded for the same tree-backed-recency reason); the lane
+    // RNG is re-derived per run, so every replay touches the same
+    // sampled keys and the stamped scratch stays at steady capacity.
+    let wl = WorkloadSpec::parse("poisson:rate=400,dur=0.2,seed=19")
+        .expect("workload spec parses");
+    let schedule = ServeSchedule::generate(&env, &wl);
+    let opts = ServeOpts::default();
+    let mut lane = ServeLane::new(&env, 0, &opts);
+    let mut out = LaneOut::new(n, schedule.per_server[0].len());
+    for _ in 0..3 {
+        lane.run(&schedule, &mut out);
+    }
+    let before = allocation_count();
+    for _ in 0..5 {
+        lane.run(&schedule, &mut out);
+    }
+    let after = allocation_count();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state serve-lane replays must not allocate \
+         ({} events across 5 replays)",
+        after - before
+    );
+    assert!(!out.completions.is_empty(), "lane 0 served its share");
+    assert_eq!(out.dropped, 0, "an unloaded lane drops nothing");
 }

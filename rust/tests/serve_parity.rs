@@ -1,0 +1,207 @@
+//! Serving-subsystem parity locks:
+//!
+//! 1. a seeded workload spec generates the bit-identical arrival
+//!    stream on every replay, and a full serve run over it digests
+//!    identically;
+//! 2. `--jobs 1` vs `--jobs N` lane execution produce bit-identical
+//!    serve metrics (the lane split is deterministic by construction —
+//!    requests are routed serially, lanes never communicate, results
+//!    merge in server order);
+//! 3. the streaming P² quantile estimator stays within tolerance of
+//!    exact sort-based quantiles on adversarial inputs (bimodal with a
+//!    100x mode gap, heavy-tailed Pareto), not just on smooth uniform
+//!    streams;
+//! 4. overloaded runs fail `validate()` instead of reporting a
+//!    truncated latency distribution.
+
+use hopgnn::config::RunConfig;
+use hopgnn::coordinator::SimEnv;
+use hopgnn::featstore::tier::TierSpec;
+use hopgnn::graph::datasets::tiny_test_dataset;
+use hopgnn::serve::{serve, ServeOpts, WorkloadSpec};
+use hopgnn::util::pool::LaneAllowanceGuard;
+use hopgnn::util::rng::Rng;
+use hopgnn::util::stats::P2Quantile;
+
+fn serve_cfg(seed: u64, tiers: &str) -> RunConfig {
+    RunConfig {
+        num_servers: 4,
+        layers: 2,
+        fanout: 4,
+        vmax: 64,
+        seed,
+        tiers: Some(TierSpec::parse(tiers).expect("tier spec parses")),
+        ..Default::default()
+    }
+}
+
+fn wl(s: &str) -> WorkloadSpec {
+    WorkloadSpec::parse(s).expect("workload spec parses")
+}
+
+const ALL_KINDS: [&str; 3] = [
+    "poisson:rate=600,dur=0.2,seed=13",
+    "bursty:rate=300,mult=6,dwell=0.03,dur=0.2,seed=13",
+    "diurnal:rate=600,period=0.1,depth=0.8,dur=0.2,seed=13",
+];
+
+#[test]
+fn seeded_streams_replay_bit_identical() {
+    for s in ALL_KINDS {
+        let spec = wl(s);
+        let a = spec.arrival_times();
+        let b = spec.arrival_times();
+        assert_eq!(a.len(), b.len(), "{s}");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{s}: stream diverged");
+        }
+    }
+}
+
+#[test]
+fn serve_replays_digest_identically_for_every_arrival_kind() {
+    let d = tiny_test_dataset(41);
+    let env = SimEnv::new(&d, serve_cfg(7, "dram:2m:lru+remote"));
+    for s in ALL_KINDS {
+        let spec = wl(s);
+        let a = serve(&env, &spec, &ServeOpts::default());
+        let b = serve(&env, &spec, &ServeOpts::default());
+        assert_eq!(
+            a.metrics.digest(),
+            b.metrics.digest(),
+            "{s}: replay must be bit-identical"
+        );
+        a.metrics.validate().unwrap_or_else(|e| panic!("{s}: {e}"));
+    }
+}
+
+#[test]
+fn lane_parallelism_is_bit_identical_to_serial() {
+    let d = tiny_test_dataset(42);
+    let env = SimEnv::new(&d, serve_cfg(11, "dram:2m:lru+remote"));
+    let spec = wl("bursty:rate=500,mult=5,dwell=0.02,dur=0.3,seed=21");
+    let serial = {
+        let _g = LaneAllowanceGuard::set(1);
+        serve(&env, &spec, &ServeOpts::default())
+    };
+    let parallel = {
+        let _g = LaneAllowanceGuard::set(4);
+        serve(&env, &spec, &ServeOpts::default())
+    };
+    let (a, b) = (&serial.metrics, &parallel.metrics);
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.batches, b.batches);
+    assert_eq!(a.sum_total.to_bits(), b.sum_total.to_bits());
+    assert_eq!(a.sum_queue.to_bits(), b.sum_queue.to_bits());
+    assert_eq!(a.sum_gather.to_bits(), b.sum_gather.to_bits());
+    assert_eq!(a.sum_compute.to_bits(), b.sum_compute.to_bits());
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.p50().to_bits(), b.p50().to_bits());
+    assert_eq!(a.p95().to_bits(), b.p95().to_bits());
+    assert_eq!(a.p99().to_bits(), b.p99().to_bits());
+    assert_eq!(a.transport.total_bytes(), b.transport.total_bytes());
+    assert_eq!(
+        a.digest(),
+        b.digest(),
+        "serial vs parallel lanes must agree bit for bit"
+    );
+}
+
+/// Fraction of `sorted` at or below `x` — the realized rank of an
+/// estimate. Rank error is the right yardstick for adversarial
+/// distributions: a bimodal gap makes *value* error meaningless (any
+/// point in the gap has the same rank), while a correct estimator must
+/// still land at the right position in the sample.
+fn rank_of(sorted: &[f64], x: f64) -> f64 {
+    sorted.partition_point(|&v| v <= x) as f64 / sorted.len() as f64
+}
+
+fn check_ranks(label: &str, samples: &[f64], tol: f64) {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for p in [0.50, 0.95, 0.99] {
+        let mut q = P2Quantile::new(p);
+        for &x in samples {
+            q.observe(x);
+        }
+        let rank = rank_of(&sorted, q.value());
+        assert!(
+            (rank - p).abs() <= tol,
+            "{label}: p{:.0} estimate {} lands at rank {rank:.4} \
+             (tolerance {tol})",
+            p * 100.0,
+            q.value()
+        );
+    }
+}
+
+#[test]
+fn p2_tracks_exact_quantiles_on_adversarial_streams() {
+    let n = 20_000usize;
+    // bimodal with a 100x gap: 90% around 10, 10% around 1000 — the
+    // p95 marker sits right at the mode boundary
+    let mut rng = Rng::new(51);
+    let bimodal: Vec<f64> = (0..n)
+        .map(|_| {
+            if rng.f64() < 0.9 {
+                10.0 + rng.normal()
+            } else {
+                1000.0 + 50.0 * rng.normal()
+            }
+        })
+        .collect();
+    check_ranks("bimodal", &bimodal, 0.03);
+    // heavy tail: Pareto(alpha=1.5) by inverse transform — infinite
+    // variance, so the tail markers see occasional enormous jumps
+    let mut rng = Rng::new(52);
+    let pareto: Vec<f64> = (0..n)
+        .map(|_| (1.0 - rng.f64()).max(1e-12).powf(-1.0 / 1.5))
+        .collect();
+    check_ranks("pareto", &pareto, 0.03);
+}
+
+#[test]
+fn p2_is_tight_on_uniform_streams() {
+    let n = 20_000usize;
+    let mut rng = Rng::new(53);
+    let uniform: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+    let mut sorted = uniform.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for p in [0.50, 0.95, 0.99] {
+        let mut q = P2Quantile::new(p);
+        for &x in &uniform {
+            q.observe(x);
+        }
+        let exact = sorted[((n - 1) as f64 * p).round() as usize];
+        assert!(
+            (q.value() - exact).abs() < 0.02,
+            "uniform p{:.0}: estimate {} vs exact {exact}",
+            p * 100.0,
+            q.value()
+        );
+    }
+}
+
+#[test]
+fn overload_fails_validation_instead_of_truncating() {
+    let d = tiny_test_dataset(43);
+    let env = SimEnv::new(&d, serve_cfg(17, "remote"));
+    let r = serve(
+        &env,
+        &wl("bursty:rate=30000,mult=10,dwell=0.02,dur=0.1,seed=29"),
+        &ServeOpts {
+            window: 0.0,
+            queue_cap: 1,
+            max_batch: 1,
+        },
+    );
+    assert!(r.metrics.dropped > 0, "overload must drop at cap 1");
+    assert_eq!(
+        r.metrics.served + r.metrics.dropped,
+        r.metrics.offered,
+        "every request is accounted, served or dropped"
+    );
+    let e = r.metrics.validate().unwrap_err();
+    assert!(e.contains("dropped"), "{e}");
+    assert!(e.contains("queue-cap"), "{e}");
+}
